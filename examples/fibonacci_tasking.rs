@@ -1,0 +1,37 @@
+//! Test Case 3 demo: Fibonacci task DAG on both tasking engines with
+//! OVNI-style traces rendered as ASCII timelines (the Fig. 9 visual).
+//!
+//! Run: `cargo run --release --example fibonacci_tasking [-- n [workers]]`
+
+use hicr::apps::fibonacci;
+use hicr::frontends::tasking::{TaskSystem, TaskSystemKind};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    println!(
+        "computing F({n}) = {} with {} tasks on {workers} workers\n",
+        fibonacci::fib_value(n),
+        fibonacci::expected_tasks(n)
+    );
+
+    for kind in [TaskSystemKind::Coro, TaskSystemKind::Nosv] {
+        let sys = TaskSystem::new(kind, workers, true);
+        let run = fibonacci::run(&sys, n)?;
+        sys.shutdown()?;
+        assert_eq!(run.value, fibonacci::fib_value(n));
+        assert_eq!(run.tasks_executed, fibonacci::expected_tasks(n));
+        println!(
+            "[{kind:?}] F({n}) = {} in {:.3}s ({} tasks, {:.1} µs/task)",
+            run.value,
+            run.elapsed_s,
+            run.tasks_executed,
+            run.elapsed_s * 1e6 / run.tasks_executed as f64
+        );
+        println!("{}", sys.trace().render_ascii(workers, 72));
+    }
+    println!("fibonacci_tasking OK");
+    Ok(())
+}

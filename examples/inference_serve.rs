@@ -1,0 +1,161 @@
+//! End-to-end serving driver (the mandated full-system workload).
+//!
+//! Composes every layer: the AOT Pallas/JAX MLP artifact (L1+L2) is loaded
+//! through the PJRT runtime into the `xlacomp` backend, a dynamic batcher
+//! packs requests onto the `mlp_b32` kernel, a router thread feeds
+//! requests through a HiCR MPSC channel (threads backend), and the worker
+//! drains the channel into the batcher. Reports accuracy over the full
+//! synthetic-MNIST test set plus latency percentiles and throughput.
+//!
+//! Run after `make artifacts`:
+//!   `cargo run --release --example inference_serve [-- n_requests]`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hicr::apps::inference::{evaluate, KernelProvider, XlaKernels};
+use hicr::backends::threads::ThreadsCommunicationManager;
+use hicr::core::memory::LocalMemorySlot;
+use hicr::frontends::channels::spsc::{SpscConsumer, SpscProducer};
+use hicr::runtime::{ArtifactBundle, Batcher, BatcherConfig, XlaRuntime};
+use hicr::util::stats::Summary;
+use hicr::{CommunicationManager, MemorySpaceId, Tag};
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+
+    // --- Load artifacts + compile the kernels once (no Python here). ---
+    let bundle = Arc::new(ArtifactBundle::load(&ArtifactBundle::default_dir())?);
+    let runtime = Arc::new(XlaRuntime::cpu()?);
+    println!(
+        "loaded artifact bundle: dims {:?}, {} test images, PJRT '{}'",
+        bundle.layer_dims,
+        bundle.test_count(),
+        runtime.platform_name()
+    );
+    let provider = Arc::new(XlaKernels::new(Arc::clone(&runtime), &bundle)?);
+
+    // --- Accuracy over the full test set (Table 2 sanity). ---
+    let report = evaluate(provider.as_ref(), &bundle, bundle.test_count())?;
+    println!(
+        "accuracy {:.2}% over {} images (img0 score {:.9}, pred {}), {:.2}s",
+        report.accuracy * 100.0,
+        report.images,
+        report.img0_score,
+        report.img0_pred,
+        report.elapsed_s
+    );
+
+    // --- Serving path: router -> HiCR channel -> worker -> batcher. ---
+    let in_dim = bundle.layer_dims[0];
+    let out_dim = *bundle.layer_dims.last().unwrap();
+    let exe = {
+        let p = Arc::clone(&provider);
+        Arc::new(move |x: &[f32]| p.forward(x, 32))
+    };
+    let batcher = Batcher::start(
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            input_dim: in_dim,
+            output_dim: out_dim,
+        },
+        exe,
+    );
+
+    // The request channel carries image indices (u32) router -> worker.
+    let cmm: Arc<dyn CommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
+    let alloc = |len| LocalMemorySlot::alloc(MemorySpaceId(1), len);
+    let mut consumer = SpscConsumer::create(
+        cmm.as_ref(),
+        alloc(4 * 1024)?,
+        alloc(16)?,
+        Tag(42),
+        0,
+        4,
+        1024,
+    )?;
+    let mut producer = SpscProducer::create(Arc::clone(&cmm), Tag(42), 0, 4, 1024, alloc(8)?)?;
+
+    let router = std::thread::spawn(move || -> hicr::Result<()> {
+        for i in 0..n_requests {
+            let idx = (i % 10_000) as u32;
+            producer.push_blocking(&idx.to_le_bytes())?;
+        }
+        Ok(())
+    });
+
+    let t0 = std::time::Instant::now();
+    let mut latencies = Vec::with_capacity(n_requests);
+    let mut correct = 0usize;
+    let mut receivers = Vec::new();
+    let mut labels = Vec::new();
+    let mut buf = [0u8; 4];
+    for _ in 0..n_requests {
+        consumer.pop_blocking(&mut buf)?;
+        let idx = u32::from_le_bytes(buf) as usize % bundle.test_count();
+        let rx = batcher.submit(bundle.test_image(idx).to_vec())?;
+        receivers.push(rx);
+        labels.push(bundle.test_labels[idx]);
+        // Drain completions opportunistically to bound memory.
+        while receivers.len() > 256 {
+            let rx = receivers.remove(0);
+            let label = labels.remove(0);
+            let (logits, latency) = rx.recv().expect("batch result");
+            record(&logits, label, latency, &mut correct, &mut latencies);
+        }
+    }
+    for (rx, label) in receivers.into_iter().zip(labels) {
+        let (logits, latency) = rx.recv().expect("batch result");
+        record(&logits, label, latency, &mut correct, &mut latencies);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    router.join().unwrap()?;
+    let stats = batcher.stats();
+    batcher.shutdown();
+
+    let lat = Summary::of(&latencies).unwrap();
+    println!("\n== serving report ==");
+    println!("requests          : {n_requests}");
+    println!("throughput        : {:.1} req/s", n_requests as f64 / wall);
+    println!(
+        "latency p50/p95/p99: {:.2} / {:.2} / {:.2} ms",
+        lat.p50 * 1e3,
+        lat.p95 * 1e3,
+        lat.p99 * 1e3
+    );
+    println!(
+        "serving accuracy  : {:.2}%",
+        correct as f64 / n_requests as f64 * 100.0
+    );
+    println!(
+        "batches           : {} ({:.1} req/batch, {} padded slots)",
+        stats.batches,
+        stats.requests as f64 / stats.batches.max(1) as f64,
+        stats.padded_slots
+    );
+    println!("inference_serve OK");
+    Ok(())
+}
+
+fn record(
+    logits: &[f32],
+    label: u8,
+    latency: Duration,
+    correct: &mut usize,
+    latencies: &mut Vec<f64>,
+) {
+    let pred = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    if pred == label as usize {
+        *correct += 1;
+    }
+    latencies.push(latency.as_secs_f64());
+}

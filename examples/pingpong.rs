@@ -1,0 +1,62 @@
+//! Test Case 1 demo: bidirectional channel ping-pong.
+//!
+//! Prints the *modeled* Fig. 8 goodput series for the LPF and MPI
+//! backends (the paper's Infiniband testbed is simulated; DESIGN.md §2),
+//! then runs a *real* two-thread ping-pong over the threads backend to
+//! validate the channel protocol end to end.
+//!
+//! Run: `cargo run --release --example pingpong`
+
+use std::sync::Arc;
+
+use hicr::apps::pingpong::{
+    build_channels, goodput_from_rtts, modeled_series, paper_sizes, run_pinger,
+    run_ponger, Side,
+};
+use hicr::backends::threads::ThreadsCommunicationManager;
+use hicr::netsim::fabric::{LPF_IBVERBS_EDR, MPI_RMA_EDR};
+use hicr::util::stats::fmt_bps;
+use hicr::CommunicationManager;
+
+fn main() -> anyhow::Result<()> {
+    // Modeled Fig. 8 series.
+    let sizes = paper_sizes();
+    let lpf = modeled_series(&LPF_IBVERBS_EDR, &sizes);
+    let mpi = modeled_series(&MPI_RMA_EDR, &sizes);
+    println!("{:>14} {:>18} {:>18} {:>8}", "size (B)", "LPF goodput", "MPI goodput", "ratio");
+    for (l, m) in lpf.iter().zip(&mpi) {
+        println!(
+            "{:>14} {:>18} {:>18} {:>8.1}",
+            l.bytes,
+            fmt_bps(l.goodput_bps),
+            fmt_bps(m.goodput_bps),
+            l.goodput_bps / m.goodput_bps
+        );
+    }
+
+    // Measured intra-process validation run.
+    println!("\nmeasured (threads backend, loopback):");
+    let msg_sizes = [1usize, 256, 4096, 65536, 1 << 20];
+    for (i, &size) in msg_sizes.iter().enumerate() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let tag = 5000 + i as u64 * 4;
+        let cmm2 = Arc::clone(&cmm);
+        let ponger = std::thread::spawn(move || -> hicr::Result<()> {
+            let (mut p, mut c) = build_channels(cmm2, tag, size, Side::Ponger)?;
+            run_ponger(&mut p, &mut c, size, 50)
+        });
+        let (mut p, mut c) = build_channels(cmm, tag, size, Side::Pinger)?;
+        let rtts = run_pinger(&mut p, &mut c, size, 50)?;
+        ponger.join().unwrap()?;
+        let point = goodput_from_rtts(size as u64, &rtts);
+        println!(
+            "{:>10} B  {:>18} (+- {})",
+            size,
+            fmt_bps(point.goodput_bps),
+            fmt_bps(point.stddev_bps)
+        );
+    }
+    println!("pingpong OK");
+    Ok(())
+}

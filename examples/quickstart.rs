@@ -1,0 +1,120 @@
+//! Quickstart: the paper's Figs. 4–7 as one runnable program.
+//!
+//! 1. Instantiate backends (Fig. 4) — hostmem topology+memory, threads
+//!    communication+compute, xlacomp accelerator discovery.
+//! 2. Query + merge topologies and broadcast a message into a slot on
+//!    every memory space (Fig. 5).
+//! 3. Run one execution unit on every compute resource (Fig. 6).
+//! 4. Ensure a desired instance count (Fig. 7 idiom; single-instance
+//!    deployment, so detection suffices).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use hicr::backends::hostmem::{HostMemoryManager, HostTopologyManager};
+use hicr::backends::threads::{ThreadsCommunicationManager, ThreadsComputeManager};
+use hicr::backends::xlacomp::XlaTopologyManager;
+use hicr::core::communication::DataEndpoint;
+use hicr::core::compute::{ExecutionUnit, FnExecutionUnit};
+use hicr::core::memory::LocalMemorySlot;
+use hicr::core::topology::MemorySpaceKind;
+use hicr::runtime::XlaRuntime;
+use hicr::{CommunicationManager, ComputeManager, MemoryManager, Tag, TopologyManager};
+
+fn main() -> anyhow::Result<()> {
+    // ------------------------------------------------------------------
+    // Fig. 4: backend instantiation. The application below only ever sees
+    // the abstract manager traits.
+    // ------------------------------------------------------------------
+    let tm = HostTopologyManager::new();
+    let mm = HostMemoryManager::new();
+    let cmm = ThreadsCommunicationManager::new();
+    let cpm = ThreadsComputeManager::new();
+
+    // ------------------------------------------------------------------
+    // Fig. 5: obtain the topology and broadcast a message to a new slot
+    // in every (host) memory space of every device.
+    // ------------------------------------------------------------------
+    let mut topology = tm.query_topology()?;
+    if let Ok(rt) = XlaRuntime::cpu() {
+        // Combine managers covering different technologies (§3.1.2).
+        let xtm = XlaTopologyManager::new(Arc::new(rt));
+        topology.merge(xtm.query_topology()?)?;
+    }
+    println!(
+        "discovered {} device(s), {} compute resource(s), {} total memory",
+        topology.devices.len(),
+        topology.compute_resources().count(),
+        hicr::util::stats::fmt_bytes(topology.total_memory())
+    );
+
+    let message = b"HiCR says hello to every memory space!";
+    let src = LocalMemorySlot::register_vec(
+        topology.memory_spaces().next().unwrap().id,
+        message.to_vec(),
+    )?;
+    let mut destinations = Vec::new();
+    for device in &topology.devices {
+        for space in &device.memory_spaces {
+            if space.kind != MemorySpaceKind::HostRam {
+                continue; // hostmem manager only operates on host RAM
+            }
+            let dst = mm.allocate(space, message.len())?;
+            cmm.memcpy(
+                &DataEndpoint::Local(dst.clone()),
+                0,
+                &DataEndpoint::Local(src.clone()),
+                0,
+                message.len(),
+            )?;
+            destinations.push(dst);
+        }
+    }
+    cmm.fence(Tag(0))?; // wait for all operations to finish
+    for (i, d) in destinations.iter().enumerate() {
+        assert_eq!(d.to_vec(), message);
+        println!("memory space copy {i}: verified {} bytes", message.len());
+    }
+
+    // ------------------------------------------------------------------
+    // Fig. 6: initialize a processing unit per compute resource and run
+    // the same execution unit everywhere, then await + finalize.
+    // ------------------------------------------------------------------
+    let counter = Arc::new(AtomicUsize::new(0));
+    let c2 = Arc::clone(&counter);
+    let unit = FnExecutionUnit::new("greet", move |_ctx| {
+        c2.fetch_add(1, Ordering::SeqCst);
+    });
+    let mut processing_units = Vec::new();
+    for resource in topology.compute_resources() {
+        if resource.kind != "cpu-core" {
+            continue; // threads backend initializes CPU cores
+        }
+        let pu = cpm.create_processing_unit(resource)?;
+        let state = cpm.create_execution_state(unit.clone() as Arc<dyn ExecutionUnit>)?;
+        pu.start(state)?;
+        processing_units.push(pu);
+    }
+    for pu in &processing_units {
+        pu.await_all()?;
+    }
+    for pu in &processing_units {
+        pu.terminate()?;
+    }
+    println!(
+        "parallel execution: {} compute resource(s) each ran the unit",
+        counter.load(Ordering::SeqCst)
+    );
+
+    // ------------------------------------------------------------------
+    // Fig. 7 idiom: this single-process deployment already satisfies
+    // desired = 1 launch-time instance, so creation is a no-op. (The
+    // distributed variant runs under `hicr launch` — see `hicr worker`'s
+    // spawntest app.)
+    // ------------------------------------------------------------------
+    println!("instance check: single-instance deployment is root; desired count satisfied");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,130 @@
+"""AOT export: train the MLP once and lower the Pallas-backed forward pass
+to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT jax .serialize(): the xla crate's
+bundled xla_extension 0.5.1 rejects jax>=0.5 serialized HloModuleProto
+(64-bit instruction ids); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  mlp_b{B}.hlo.txt   lowered forward pass per batch size B (tuple output)
+  weights.bin        little-endian f32 concat of w1,b1,w2,b2,w3,b3
+  testset.bin        f32 images (n,784) followed by u8 labels (n,)
+  meta.json          shapes/offsets/batch sizes/expected scores
+
+Run via `make artifacts`; it is a no-op if artifacts are newer than the
+python/compile sources.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .model import LAYER_DIMS, flat_forward, forward_ref
+from .train import train
+
+BATCH_SIZES = (1, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forward(flat_params, batch: int) -> str:
+    """Lower flat_forward for a fixed batch size to HLO text."""
+    x_spec = jax.ShapeDtypeStruct((batch, LAYER_DIMS[0]), jnp.float32)
+    p_specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in flat_params]
+
+    def fn(x, *ps):
+        return (flat_forward(x, *ps),)
+
+    lowered = jax.jit(fn).lower(x_spec, *p_specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=12)
+    ap.add_argument("--n-train", type=int, default=12000)
+    ap.add_argument("--n-test", type=int, default=10000)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    # 1. Train (build-time only).
+    params, test_acc, _ = train(
+        n_train=args.n_train, n_test=args.n_test, epochs=args.epochs, seed=args.seed
+    )
+    flat = [np.asarray(t) for wb in params for t in wb]
+
+    # 2. Weights blob.
+    weights_path = os.path.join(args.out_dir, "weights.bin")
+    offsets = []
+    with open(weights_path, "wb") as f:
+        for t in flat:
+            offsets.append({"shape": list(t.shape), "offset": f.tell()})
+            f.write(np.ascontiguousarray(t, dtype="<f4").tobytes())
+
+    # 3. Test set blob (same one the Rust benches score — Table 2).
+    _, _, x_te, y_te = data.train_test_split(args.n_train, args.n_test, args.seed)
+    testset_path = os.path.join(args.out_dir, "testset.bin")
+    with open(testset_path, "wb") as f:
+        f.write(np.ascontiguousarray(x_te, dtype="<f4").tobytes())
+        f.write(np.ascontiguousarray(y_te, dtype=np.uint8).tobytes())
+
+    # 4. HLO artifacts per batch size.
+    hlo_files = {}
+    for b in BATCH_SIZES:
+        text = lower_forward(flat, b)
+        name = f"mlp_b{b}.hlo.txt"
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        hlo_files[str(b)] = name
+        print(f"[aot] wrote {name} ({len(text)} chars)")
+
+    # 5. Reference img-0 score (Table 2's precision-comparison column),
+    #    computed with the plain-jnp oracle.
+    logits0 = np.asarray(forward_ref(params, x_te[:1]))[0]
+    img0_score = float(np.max(logits0))
+    img0_pred = int(np.argmax(logits0))
+
+    meta = {
+        "layer_dims": list(LAYER_DIMS),
+        "batch_sizes": list(BATCH_SIZES),
+        "hlo": hlo_files,
+        "weights": {"file": "weights.bin", "tensors": offsets},
+        "testset": {
+            "file": "testset.bin",
+            "n": int(x_te.shape[0]),
+            "img_dim": int(x_te.shape[1]),
+        },
+        "train": {
+            "n_train": args.n_train,
+            "epochs": args.epochs,
+            "seed": args.seed,
+            "ref_test_accuracy": test_acc,
+        },
+        "img0": {"score": img0_score, "pred": img0_pred},
+    }
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[aot] ref accuracy {test_acc * 100:.2f}%, img0 score {img0_score:.9f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from .dense import dense, vmem_footprint  # noqa: F401
+from .ref import dense_ref, mlp_ref  # noqa: F401

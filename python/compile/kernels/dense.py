@@ -1,0 +1,138 @@
+"""L1 Pallas kernel: tiled dense layer (matmul + bias + activation).
+
+This is the compute hot-spot of the paper's Test Case 2 inference pipeline
+(the ACL / OpenCL device kernels of the original), re-thought for a TPU-
+class device per the hardware-adaptation rule:
+
+- The grid tiles (M, N, K) into MXU-friendly blocks. BlockSpec expresses
+  the HBM -> VMEM schedule that the paper's GPU/NPU kernels expressed with
+  threadblocks/streams.
+- Accumulation happens in float32 directly in the output block (the output
+  block for a given (i, j) stays resident in VMEM across the K grid
+  dimension), mirroring an MXU fp32 accumulator.
+- Bias add + activation are fused into the final K step, so the activation
+  never round-trips through HBM.
+
+The kernel MUST run with interpret=True in this environment: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+Structure (tile sizes, VMEM footprint) is still chosen as if for a real
+TPU; see DESIGN.md §Perf for the footprint analysis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128x128 matches the MXU systolic array; the K tile is
+# chosen so one (bm x bk) + (bk x bn) + (bm x bn) working set stays well
+# under a 16 MiB VMEM budget (see vmem_footprint()).
+BM, BN, BK = 128, 128, 128
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """Grid point (i, j, k): o[i,j] += x[i,k] @ w[k,j]; finalize at k==nk-1."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        y = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y
+
+
+def _pad_to(a, axis: int, mult: int):
+    """Zero-pad `a` along `axis` up to the next multiple of `mult`."""
+    size = a.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bm", "bn", "bk", "interpret")
+)
+def dense(
+    x,
+    w,
+    b,
+    activation: str = "none",
+    *,
+    bm: int = BM,
+    bn: int = BN,
+    bk: int = BK,
+    interpret: bool = True,
+):
+    """Pallas tiled dense layer: activation(x @ w + b).
+
+    x: (M, K), w: (K, N), b: (N,). Arbitrary M/K/N are supported by
+    zero-padding each dimension up to the tile multiple and slicing the
+    result; zero padding is exact for matmul + bias and for relu.
+    Accumulates in float32 and casts back to x.dtype.
+    """
+    if activation not in ("none", "relu"):
+        raise ValueError(f"unknown activation {activation!r}")
+    m, kdim = x.shape
+    k2, n = w.shape
+    if kdim != k2 or b.shape != (n,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    out_dtype = x.dtype
+
+    # Clamp tiles to the (padded) problem so tiny layers don't blow up the
+    # grid with fully-padded blocks.
+    bm = min(bm, _ceil_mult(m, 8))
+    bn = min(bn, _ceil_mult(n, 8))
+    bk = min(bk, _ceil_mult(kdim, 8))
+
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, bk), 1, bn)
+    bp = _pad_to(b.astype(jnp.float32).reshape(1, n), 1, bn)
+
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, nk=grid[2], activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+
+    return out[:m, :n].astype(out_dtype)
+
+
+def _ceil_mult(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def vmem_footprint(bm: int = BM, bn: int = BN, bk: int = BK) -> int:
+    """Bytes of VMEM resident per grid point (f32): x, w, bias, out blocks.
+
+    With the defaults: (128*128 + 128*128 + 128 + 128*128) * 4 B ~= 197 KiB,
+    i.e. <2% of a 16 MiB VMEM — leaving ample room for double buffering of
+    the x/w streams (the interpreter does not model this, a real Mosaic
+    lowering would).
+    """
+    return 4 * (bm * bk + bk * bn + bn + bm * bn)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. pytest (python/tests/test_kernel.py)
+sweeps shapes/dtypes with hypothesis and asserts the kernel matches the
+oracle — this is the core L1 correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, activation: str = "none"):
+    """Reference dense layer: activation(x @ w + b).
+
+    x: (M, K), w: (K, N), b: (N,). Accumulation in float32 regardless of
+    input dtype, output cast back to x.dtype — mirroring the kernel's
+    MXU-style fp32 accumulate.
+    """
+    y = jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32), preferred_element_type=jnp.float32
+    ) + b.astype(jnp.float32)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y.astype(x.dtype)
+
+
+def mlp_ref(params, x):
+    """Reference MLP forward: relu-dense layers with a linear head."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        act = "none" if i == len(params) - 1 else "relu"
+        h = dense_ref(h, w, b, act)
+    return h

@@ -1,0 +1,67 @@
+"""L2 JAX model: the Test Case 2 MLP classifier (784 -> 256 -> 128 -> 10).
+
+The forward pass calls the L1 Pallas dense kernel for every layer, so the
+whole network lowers into a single HLO module that the Rust runtime
+executes via PJRT. Weights are *arguments* of the lowered function (not
+baked-in constants): the Rust side loads artifacts/weights.bin and passes
+them per call — the serving path can hot-swap weights without recompiling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense, mlp_ref
+
+LAYER_DIMS = (784, 256, 128, 10)
+
+
+def init_params(seed: int, dims=LAYER_DIMS):
+    """He-initialized MLP parameters as a list of (w, b) pairs (float32)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (din, dout), jnp.float32) * jnp.sqrt(2.0 / din)
+        params.append((w, jnp.zeros((dout,), jnp.float32)))
+    return params
+
+
+def forward(params, x, *, interpret: bool = True):
+    """Pallas-backed forward pass: relu hidden layers, linear head.
+
+    x: (batch, 784) float32 -> logits (batch, 10) float32.
+    """
+    h = x
+    for i, (w, b) in enumerate(params):
+        act = "none" if i == len(params) - 1 else "relu"
+        h = dense(h, w, b, act, interpret=interpret)
+    return h
+
+
+def forward_ref(params, x):
+    """Oracle forward pass (plain jnp) — used in tests and for Table 2's
+    'ad-hoc non-HiCR baseline' score verification."""
+    return mlp_ref(params, x)
+
+
+def flat_forward(x, *flat_params, interpret: bool = True):
+    """forward() with params flattened to (w1, b1, w2, b2, ...) — the
+    signature that aot.py lowers, matching the Rust runtime's calling
+    convention: [input, w1, b1, w2, b2, w3, b3]."""
+    assert len(flat_params) % 2 == 0
+    params = [
+        (flat_params[i], flat_params[i + 1]) for i in range(0, len(flat_params), 2)
+    ]
+    return forward(params, x, interpret=interpret)
+
+
+def predict(params, x):
+    """Class predictions via the Pallas forward pass."""
+    return jnp.argmax(forward(params, x), axis=-1)
+
+
+def accuracy(params, x, y) -> float:
+    """Mean accuracy of the Pallas forward pass on (x, y)."""
+    return float(jnp.mean((predict(params, x) == y).astype(jnp.float32)))

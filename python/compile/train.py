@@ -1,0 +1,79 @@
+"""Build-time training of the Test Case 2 MLP (pure JAX, never shipped).
+
+Trains on the synthetic MNIST-like dataset with mini-batch SGD + momentum.
+Training uses the *reference* forward pass (fast XLA path); the Pallas
+kernel path is what gets AOT-exported for inference — tests assert the two
+agree, mirroring the paper's setup where training happened offline and
+only inference runs through HiCR backends.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import LAYER_DIMS, accuracy, forward_ref, init_params
+
+
+def _loss(params, x, y):
+    logits = forward_ref(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1))
+
+
+@jax.jit
+def _step(params, velocity, x, y, lr, momentum):
+    loss, grads = jax.value_and_grad(_loss)(params, x, y)
+    new_v = jax.tree_util.tree_map(lambda v, g: momentum * v - lr * g, velocity, grads)
+    new_p = jax.tree_util.tree_map(lambda p, v: p + v, params, new_v)
+    return new_p, new_v, loss
+
+
+def train(
+    n_train: int = 12000,
+    n_test: int = 10000,
+    epochs: int = 12,
+    batch: int = 128,
+    lr: float = 0.08,
+    momentum: float = 0.9,
+    seed: int = 7,
+    verbose: bool = True,
+):
+    """Train the MLP; returns (params, test_accuracy, history)."""
+    x_tr, y_tr, x_te, y_te = data.train_test_split(n_train, n_test, seed)
+    params = init_params(seed, LAYER_DIMS)
+    velocity = jax.tree_util.tree_map(jnp.zeros_like, params)
+    rng = np.random.default_rng(seed)
+    history = []
+    t0 = time.time()
+    for epoch in range(epochs):
+        perm = rng.permutation(n_train)
+        losses = []
+        for i in range(0, n_train - batch + 1, batch):
+            idx = perm[i : i + batch]
+            params, velocity, loss = _step(
+                params, velocity, x_tr[idx], y_tr[idx], lr, momentum
+            )
+            losses.append(float(loss))
+        epoch_loss = float(np.mean(losses))
+        history.append(epoch_loss)
+        if verbose:
+            print(
+                f"[train] epoch {epoch + 1:2d}/{epochs} "
+                f"loss={epoch_loss:.4f} ({time.time() - t0:.1f}s)"
+            )
+    # Final held-out accuracy through the *reference* path; the Pallas path
+    # is asserted equal in tests and re-measured by the Rust benches.
+    logits = forward_ref(params, x_te)
+    test_acc = float(jnp.mean((jnp.argmax(logits, axis=-1) == y_te).astype(jnp.float32)))
+    if verbose:
+        print(f"[train] test accuracy (ref path) = {test_acc * 100:.2f}%")
+    return params, test_acc, history
+
+
+if __name__ == "__main__":
+    train()

@@ -1,0 +1,89 @@
+"""AOT path smoke: HLO text emission, parseability markers, weight blob
+layout — everything the Rust runtime depends on."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.aot import lower_forward, to_hlo_text
+from compile.model import LAYER_DIMS, init_params
+
+
+def _flat_params(seed=0):
+    return [np.asarray(t) for wb in init_params(seed) for t in wb]
+
+
+def test_hlo_text_structure():
+    flat = _flat_params()
+    text = lower_forward(flat, batch=1)
+    # The Rust loader requires parseable HLO text with an ENTRY computation.
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # One parameter per weight tensor + the input — counted in the ENTRY
+    # computation only (pallas_call sub-computations re-declare their own).
+    entry = text[text.index("ENTRY") :]
+    entry_block = entry.split("\n\n")[0]
+    n_params = entry_block.count("parameter(")
+    assert n_params == len(flat) + 1, f"expected {len(flat) + 1} params, got {n_params}"
+
+
+def test_hlo_text_batch32_differs():
+    flat = _flat_params()
+    t1 = lower_forward(flat, batch=1)
+    t32 = lower_forward(flat, batch=32)
+    assert "f32[32,784]" in t32
+    assert "f32[1,784]" in t1
+
+
+def test_to_hlo_text_return_tuple():
+    """Outputs must be a 1-tuple (Rust unwraps with to_tuple1)."""
+
+    def fn(x):
+        return (x * 2.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "tuple" in text.lower() or "(f32[2,2]" in text
+
+
+def test_end_to_end_aot_tiny(tmp_path):
+    """Full aot.py run with a tiny config; validates every artifact file."""
+    env = dict(os.environ)
+    repo_py = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(tmp_path),
+            "--epochs",
+            "1",
+            "--n-train",
+            "600",
+            "--n-test",
+            "200",
+        ],
+        cwd=repo_py,
+        env=env,
+        check=True,
+        timeout=600,
+    )
+    meta = json.loads((tmp_path / "meta.json").read_text())
+    assert meta["layer_dims"] == list(LAYER_DIMS)
+    # Weights blob size == sum of tensor sizes.
+    total = sum(
+        int(np.prod(t["shape"])) for t in meta["weights"]["tensors"]
+    )
+    assert (tmp_path / "weights.bin").stat().st_size == total * 4
+    # Test set blob: n*(784*4 + 1) bytes.
+    n = meta["testset"]["n"]
+    assert (tmp_path / "testset.bin").stat().st_size == n * (784 * 4 + 1)
+    for name in meta["hlo"].values():
+        assert (tmp_path / name).stat().st_size > 1000
+    assert 0.0 <= meta["train"]["ref_test_accuracy"] <= 1.0

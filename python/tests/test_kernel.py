@@ -1,0 +1,113 @@
+"""L1 correctness: Pallas dense kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/activations/tile sizes; every case asserts
+allclose against ref.dense_ref. This is the core kernel signal required
+before anything is AOT-exported.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import dense, dense_ref, vmem_footprint
+
+hypothesis.settings.register_profile(
+    "kernel", deadline=None, max_examples=40, derandomize=True
+)
+hypothesis.settings.load_profile("kernel")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _case(m, k, n, dtype, act, bm=128, bn=128, bk=128, rtol=None):
+    key = jax.random.PRNGKey(m * 10007 + k * 101 + n)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = _rand(k1, (m, k), dtype)
+    w = _rand(k2, (k, n), dtype)
+    b = _rand(k3, (n,), dtype)
+    got = dense(x, w, b, act, bm=bm, bn=bn, bk=bk)
+    want = dense_ref(x, w, b, act)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    if rtol is None:
+        rtol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=rtol, atol=1e-4
+    )
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    act=st.sampled_from(["none", "relu"]),
+)
+def test_small_shapes_f32(m, k, n, act):
+    """Arbitrary small shapes (exercises the padding path heavily)."""
+    _case(m, k, n, jnp.float32, act)
+
+
+@given(
+    m=st.sampled_from([1, 32, 128, 256]),
+    k=st.sampled_from([128, 256, 384, 784]),
+    n=st.sampled_from([10, 128, 256]),
+)
+def test_tile_multiples_and_model_shapes(m, k, n):
+    """The shapes the MLP actually uses, plus exact tile multiples."""
+    _case(m, k, n, jnp.float32, "relu")
+
+
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 64, 128]),
+    bk=st.sampled_from([8, 16, 128]),
+)
+def test_tile_size_sweep(bm, bn, bk):
+    """Result must be independent of the BlockSpec tiling."""
+    _case(48, 100, 36, jnp.float32, "relu", bm=bm, bn=bn, bk=bk)
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 64),
+    n=st.integers(1, 40),
+)
+def test_bfloat16(m, k, n):
+    """bf16 inputs, fp32 accumulate — the MXU-native dtype path."""
+    _case(m, k, n, jnp.bfloat16, "relu", rtol=8e-2)
+
+
+def test_activation_validation():
+    x = jnp.zeros((4, 4))
+    with pytest.raises(ValueError):
+        dense(x, jnp.zeros((4, 4)), jnp.zeros((4,)), "gelu")
+
+
+def test_shape_validation():
+    with pytest.raises(ValueError):
+        dense(jnp.zeros((4, 5)), jnp.zeros((4, 4)), jnp.zeros((4,)))
+
+
+def test_zero_inputs_relu_boundary():
+    """relu at exactly zero: padding must not flip signs."""
+    x = jnp.zeros((3, 7))
+    w = jnp.zeros((7, 5))
+    b = jnp.array([-1.0, 0.0, 1.0, -0.5, 0.5])
+    got = np.asarray(dense(x, w, b, "relu"))
+    want = np.maximum(np.asarray(b), 0.0)
+    np.testing.assert_allclose(got, np.tile(want, (3, 1)))
+
+
+def test_vmem_footprint_budget():
+    """Default tiling stays far below a 16 MiB VMEM budget."""
+    assert vmem_footprint() < 16 * 1024 * 1024 // 8
+
+
+def test_large_single_tile_exceeds_naive_but_fits_blocked():
+    """A 1024-wide layer still evaluates correctly with default 128 tiles."""
+    _case(8, 1024, 512, jnp.float32, "relu")

@@ -1,0 +1,143 @@
+//! Ablation — the Channels frontend's MPSC design choice (paper §4.3):
+//! *locking* (one shared ring + collective exclusive access, minimal
+//! memory) vs *non-locking* (a dedicated ring per producer, no exclusion,
+//! n× memory). Measures end-to-end message throughput as producer count
+//! grows, plus the memory cost of each mode.
+
+use std::sync::Arc;
+
+use hicr::backends::threads::ThreadsCommunicationManager;
+use hicr::core::memory::LocalMemorySlot;
+use hicr::frontends::channels::mpsc::{
+    LockingMpscConsumer, LockingMpscProducer, NonLockingMpscConsumer,
+};
+use hicr::util::bench::{BenchArgs, Measurement, Report};
+use hicr::{CommunicationManager, MemorySpaceId, Tag};
+
+const MSG: usize = 32;
+const CAP: u64 = 256;
+
+fn slot(len: usize) -> LocalMemorySlot {
+    LocalMemorySlot::alloc(MemorySpaceId(1), len).unwrap()
+}
+
+fn run_locking(n_producers: usize, per_producer: u64, tag: u64) -> f64 {
+    let cmm: Arc<ThreadsCommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
+    let mut consumer = LockingMpscConsumer::create(
+        cmm.as_ref(),
+        slot(MSG * CAP as usize),
+        slot(16),
+        Tag(tag),
+        0,
+        MSG,
+        CAP,
+    )
+    .unwrap();
+    let producer = LockingMpscProducer::create(
+        Arc::clone(&cmm) as Arc<dyn CommunicationManager>,
+        Tag(tag),
+        0,
+        MSG,
+        CAP,
+        slot(8),
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for pid in 0..n_producers {
+        let p = producer.clone();
+        handles.push(std::thread::spawn(move || {
+            let msg = [pid as u8; MSG];
+            for _ in 0..per_producer {
+                p.push_blocking(&msg).unwrap();
+            }
+        }));
+    }
+    let mut out = [0u8; MSG];
+    for _ in 0..(n_producers as u64 * per_producer) {
+        consumer.pop_blocking(&mut out).unwrap();
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn run_nonlocking(n_producers: usize, per_producer: u64, tag: u64) -> f64 {
+    let cmm: Arc<ThreadsCommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
+    let mut consumer = NonLockingMpscConsumer::create(
+        cmm.as_ref(),
+        n_producers,
+        tag,
+        0,
+        MSG,
+        CAP,
+        |data_len, coord_len| Ok((slot(data_len), slot(coord_len))),
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for pid in 0..n_producers {
+        let cmm = Arc::clone(&cmm);
+        handles.push(std::thread::spawn(move || {
+            let mut p = NonLockingMpscConsumer::producer(
+                cmm as Arc<dyn CommunicationManager>,
+                pid,
+                tag,
+                0,
+                MSG,
+                CAP,
+                slot(8),
+            )
+            .unwrap();
+            let msg = [pid as u8; MSG];
+            for _ in 0..per_producer {
+                p.push_blocking(&msg).unwrap();
+            }
+        }));
+    }
+    let mut out = [0u8; MSG];
+    for _ in 0..(n_producers as u64 * per_producer) {
+        consumer.pop_blocking(&mut out).unwrap();
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let args = BenchArgs::parse(3);
+    let per_producer: u64 = if args.quick { 2_000 } else { 20_000 };
+    let mut report = Report::new("Ablation: MPSC locking vs non-locking");
+    for n_producers in [1usize, 2, 4, 8] {
+        for mode in ["locking", "nonlocking"] {
+            let mut samples = Vec::new();
+            for rep in 0..args.reps {
+                let tag = 10_000 + n_producers as u64 * 100 + rep as u64 * 10;
+                let t = match mode {
+                    "locking" => run_locking(n_producers, per_producer, tag),
+                    _ => run_nonlocking(n_producers, per_producer, tag + 5),
+                };
+                samples.push(t);
+            }
+            let total_msgs = n_producers as f64 * per_producer as f64;
+            report.push(Measurement {
+                label: format!("{mode}/p{n_producers}"),
+                derived: samples.iter().map(|t| total_msgs / t).collect(),
+                samples_s: samples,
+                derived_unit: "msg/s",
+            });
+        }
+        // Memory cost comparison (the paper's stated trade-off).
+        let locking_mem = MSG * CAP as usize + 16;
+        let nonlocking_mem = n_producers * (MSG * CAP as usize + 16);
+        println!(
+            "p={n_producers}: ring memory locking {} B vs non-locking {} B ({}x)",
+            locking_mem,
+            nonlocking_mem,
+            n_producers
+        );
+    }
+    report.print();
+}

@@ -1,0 +1,73 @@
+//! Fig. 10 — coarse-grained tasking: 3-D Jacobi, 13-point stencil,
+//! nOS-V vs Pthreads+Boost engines on one instance.
+//!
+//! Paper: 704³ grid, 500 iterations, 44 threads — 40.5 s (nOS-V) vs
+//! 39.9 s (Boost): parity, because coarse tasks amortize scheduling.
+//! Scaled for the 1-core sandbox: 128³ × 50 iterations by default
+//! (JACOBI_N / JACOBI_ITERS env to override); the shape under test is the
+//! near-parity of the two engines (contrast with Fig. 9).
+
+use hicr::apps::jacobi::{run_local, run_sequential, Grid};
+use hicr::frontends::tasking::{TaskSystem, TaskSystemKind};
+use hicr::util::bench::{BenchArgs, Measurement, Report};
+
+fn main() {
+    let args = BenchArgs::parse(3);
+    let n: usize = std::env::var("JACOBI_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if args.quick { 64 } else { 128 });
+    let iters: usize = std::env::var("JACOBI_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if args.quick { 10 } else { 50 });
+    let mesh = (1, 2, 2); // paper: 1 x 2 x 22; scaled to the box
+    let workers = mesh.0 * mesh.1 * mesh.2;
+
+    let mut ref_grid = Grid::new(n);
+    let want = run_sequential(&mut ref_grid, iters);
+    println!(
+        "== Fig 10: jacobi {n}^3, {iters} iters, mesh {mesh:?} ({workers} workers); \
+         ref checksum {want:.6} =="
+    );
+
+    let mut report = Report::new("Fig 10: coarse-grained tasking");
+    let mut best = Vec::new();
+    for kind in [TaskSystemKind::Nosv, TaskSystemKind::Coro] {
+        let mut samples = Vec::new();
+        let mut gflops = Vec::new();
+        for _ in 0..args.reps {
+            let sys = TaskSystem::new(kind, workers, false);
+            let mut grid = Grid::new(n);
+            let run = run_local(&sys, &mut grid, iters, mesh).expect("jacobi");
+            sys.shutdown().expect("shutdown");
+            assert!(
+                (run.checksum - want).abs() < 1e-9,
+                "{kind:?} checksum {} != {want}",
+                run.checksum
+            );
+            samples.push(run.elapsed_s);
+            gflops.push(run.gflops);
+        }
+        best.push((kind, samples.iter().cloned().fold(f64::INFINITY, f64::min)));
+        report.push(Measurement {
+            label: format!("{kind:?}"),
+            samples_s: samples,
+            derived: gflops,
+            derived_unit: "GFlop/s",
+        });
+    }
+    report.print();
+
+    let nosv = best[0].1;
+    let coro = best[1].1;
+    let ratio = nosv / coro;
+    println!(
+        "\nshape: nosv/coro best-time ratio = {ratio:.3} \
+         (paper: 40.5/39.9 = 1.015 — near parity for coarse tasks)"
+    );
+    assert!(
+        (0.8..=1.6).contains(&ratio),
+        "coarse-grained engines should be near parity, got {ratio}"
+    );
+}

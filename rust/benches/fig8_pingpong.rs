@@ -1,0 +1,84 @@
+//! Fig. 8 — ping-pong goodput, LPF vs MPI backends, 1 B → ~2.14 GB.
+//!
+//! Reproduces the paper's two series with the calibrated interconnect
+//! models (the sandbox has no Infiniband — DESIGN.md §2): per size, the
+//! modeled goodput G(s) plus the LPF/MPI ratio. The paper's headline
+//! shape: ~70× LPF advantage at small sizes, convergence to ~80% of the
+//! 100 Gbps line rate at ~2.14 GB.
+//!
+//! A measured loopback series (real channel protocol over the threads
+//! backend) validates the transfer path; `hicr launch --np 2 -- pingpong`
+//! runs the true two-process variant.
+
+use std::sync::Arc;
+
+use hicr::apps::pingpong::{
+    build_channels, goodput_from_rtts, modeled_series, paper_sizes, run_pinger,
+    run_ponger, Side,
+};
+use hicr::backends::threads::ThreadsCommunicationManager;
+use hicr::netsim::fabric::{LPF_IBVERBS_EDR, MPI_RMA_EDR};
+use hicr::util::bench::{BenchArgs, Measurement, Report};
+use hicr::util::stats::fmt_bps;
+use hicr::CommunicationManager;
+
+fn main() {
+    let args = BenchArgs::parse(10);
+    let sizes = paper_sizes();
+    let lpf = modeled_series(&LPF_IBVERBS_EDR, &sizes);
+    let mpi = modeled_series(&MPI_RMA_EDR, &sizes);
+
+    println!("== Fig 8: ping-pong goodput (modeled EDR fabric) ==");
+    println!(
+        "{:>14} {:>20} {:>20} {:>9}",
+        "size (B)", "LPF (ibverbs)", "MPI (RMA)", "LPF/MPI"
+    );
+    for (l, m) in lpf.iter().zip(&mpi) {
+        println!(
+            "{:>14} {:>20} {:>20} {:>9.2}",
+            l.bytes,
+            fmt_bps(l.goodput_bps),
+            fmt_bps(m.goodput_bps),
+            l.goodput_bps / m.goodput_bps
+        );
+    }
+    // Paper-shape assertions (who wins, by how much, where they meet).
+    let small_ratio = lpf[0].goodput_bps / mpi[0].goodput_bps;
+    let big = sizes.len() - 1;
+    let big_frac = lpf[big].goodput_bps / 100.0e9;
+    println!(
+        "\nshape: small-message LPF/MPI = {small_ratio:.1}x (paper ~70x); \
+         large-message line-rate fraction = {:.2} (paper ~0.8)",
+        big_frac
+    );
+    assert!((40.0..=90.0).contains(&small_ratio));
+    assert!((0.7..=0.85).contains(&big_frac));
+
+    // Measured loopback series over the real channel protocol.
+    let mut report = Report::new("Fig 8 (measured loopback validation)");
+    let reps = args.reps.max(3);
+    for (i, &size) in [1usize, 4096, 65536, 1 << 20, 8 << 20]
+        .iter()
+        .enumerate()
+    {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let tag = 8800 + i as u64 * 4;
+        let cmm2 = Arc::clone(&cmm);
+        let ponger = std::thread::spawn(move || {
+            let (mut p, mut c) = build_channels(cmm2, tag, size, Side::Ponger).unwrap();
+            run_ponger(&mut p, &mut c, size, reps).unwrap();
+        });
+        let (mut p, mut c) = build_channels(cmm, tag, size, Side::Pinger).unwrap();
+        let rtts = run_pinger(&mut p, &mut c, size, reps).unwrap();
+        ponger.join().unwrap();
+        let point = goodput_from_rtts(size as u64, &rtts);
+        report.push(Measurement {
+            label: format!("loopback/{size}B"),
+            samples_s: rtts,
+            derived: vec![point.goodput_bps],
+            derived_unit: "bit/s",
+        });
+    }
+    report.print();
+}

@@ -1,0 +1,71 @@
+//! Fig. 9 — fine-grained tasking: naive Fibonacci F(24), 150 049 tasks on
+//! 8 workers, nOS-V (thread-per-task) vs Pthreads+Boost (fiber) engines.
+//!
+//! Paper: coro-style user-level switching finished in 0.21 s vs 1.34 s for
+//! nOS-V (~6.4×). The box here has 1 core (vs 2×22), so absolute times
+//! differ; the *shape* under test is the coro advantage driven by kernel-
+//! thread-per-task overhead. Default is the paper's full F(24) = 150 049
+//! tasks (override with FIB_N).
+
+use hicr::apps::fibonacci;
+use hicr::backends::coro::CoroComputeManager;
+use hicr::backends::nosv::NosvComputeManager;
+use hicr::frontends::tasking::{TaskSystem, TaskSystemKind};
+use hicr::util::bench::{BenchArgs, Measurement, Report};
+
+fn main() {
+    let args = BenchArgs::parse(3);
+    let n: u64 = std::env::var("FIB_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if args.quick { 16 } else { 24 });
+    let workers = 8;
+    let tasks = fibonacci::expected_tasks(n);
+    println!(
+        "== Fig 9: F({n}) = {} via {tasks} tasks, {workers} workers ==",
+        fibonacci::fib_value(n)
+    );
+
+    let mut report = Report::new("Fig 9: fine-grained tasking");
+    let mut best: Vec<(TaskSystemKind, f64)> = Vec::new();
+    for kind in [TaskSystemKind::Coro, TaskSystemKind::Nosv] {
+        let mut samples = Vec::new();
+        for _ in 0..args.reps {
+            let sys = TaskSystem::new(kind, workers, false);
+            let run = fibonacci::run(&sys, n).expect("fib run");
+            sys.shutdown().expect("shutdown");
+            assert_eq!(run.value, fibonacci::fib_value(n));
+            assert_eq!(run.tasks_executed, tasks);
+            samples.push(run.elapsed_s);
+        }
+        let best_t = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        best.push((kind, best_t));
+        report.push(Measurement {
+            label: format!("{kind:?}"),
+            samples_s: samples.clone(),
+            derived: samples
+                .iter()
+                .map(|s| tasks as f64 / s) // tasks per second
+                .collect(),
+            derived_unit: "tasks/s",
+        });
+    }
+    report.print();
+
+    let coro = best[0].1;
+    let nosv = best[1].1;
+    println!(
+        "\nshape: nosv/coro best-time ratio = {:.2}x (paper: 1.34s/0.21s = 6.4x)",
+        nosv / coro
+    );
+    println!(
+        "mechanism: coro pooled-fiber threads spawned = few; nosv kernel threads \
+         spawned so far = {} (thread-per-task)",
+        NosvComputeManager::threads_spawned()
+    );
+    let _ = CoroComputeManager::new(); // silence unused-import pattern
+    assert!(
+        nosv > coro,
+        "coro (user-level switching) must beat thread-per-task: {coro} vs {nosv}"
+    );
+}

@@ -1,0 +1,115 @@
+//! Test Case 3 (paper §5.3): naive recursive Fibonacci as a fine-grained
+//! task DAG — F(n-1) and F(n-2) as independent child tasks down to the
+//! F(1)/F(0) leaves. Measures scheduling/context-switch overhead; the
+//! computation itself is negligible.
+//!
+//! F(24) = 46368 requires exactly 150 049 tasks, matching the paper.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::core::error::Result;
+use crate::frontends::tasking::{TaskCtx, TaskSystem};
+
+/// Number of tasks the naive recursion creates for F(n):
+/// `T(n) = T(n-1) + T(n-2) + 1`, `T(0) = T(1) = 1` (= 2·F(n+1) − 1; the
+/// top-level call is itself a task — T(24) = 150 049, as in the paper).
+pub fn expected_tasks(n: u64) -> u64 {
+    fn t(n: u64) -> u64 {
+        if n < 2 {
+            1
+        } else {
+            1 + t(n - 1) + t(n - 2)
+        }
+    }
+    t(n)
+}
+
+/// Reference value (iterative).
+pub fn fib_value(n: u64) -> u64 {
+    let (mut a, mut b) = (0u64, 1u64);
+    for _ in 0..n {
+        let c = a + b;
+        a = b;
+        b = c;
+    }
+    a
+}
+
+fn fib_task(ctx: &TaskCtx, n: u64) -> u64 {
+    if n < 2 {
+        return n;
+    }
+    let left = Arc::new(AtomicU64::new(0));
+    let right = Arc::new(AtomicU64::new(0));
+    let (l2, r2) = (Arc::clone(&left), Arc::clone(&right));
+    ctx.spawn("fib", move |c| {
+        let v = fib_task(c, n - 1);
+        l2.store(v, Ordering::Relaxed);
+    });
+    ctx.spawn("fib", move |c| {
+        let v = fib_task(c, n - 2);
+        r2.store(v, Ordering::Relaxed);
+    });
+    ctx.wait_children();
+    left.load(Ordering::Relaxed) + right.load(Ordering::Relaxed)
+}
+
+/// Outcome of one Fibonacci run.
+#[derive(Debug, Clone)]
+pub struct FibonacciRun {
+    pub n: u64,
+    pub value: u64,
+    pub tasks_executed: u64,
+    pub elapsed_s: f64,
+}
+
+/// Compute F(n) on `system`, returning the result and task count.
+pub fn run(system: &TaskSystem, n: u64) -> Result<FibonacciRun> {
+    let before = system.tasks_executed();
+    let result = Arc::new(AtomicU64::new(0));
+    let r = Arc::clone(&result);
+    let t0 = std::time::Instant::now();
+    system.run("fib-root", move |ctx| {
+        let v = fib_task(ctx, n);
+        r.store(v, Ordering::Relaxed);
+    })?;
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    Ok(FibonacciRun {
+        n,
+        value: result.load(Ordering::Relaxed),
+        tasks_executed: system.tasks_executed() - before,
+        elapsed_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontends::tasking::TaskSystemKind;
+
+    #[test]
+    fn task_count_formula_matches_paper() {
+        // The paper: F(24) requires 150 049 tasks in total.
+        assert_eq!(expected_tasks(24), 150_049);
+        assert_eq!(fib_value(24), 46_368);
+    }
+
+    #[test]
+    fn coro_fib_correct_and_counts() {
+        let sys = TaskSystem::new(TaskSystemKind::Coro, 4, false);
+        let run = run(&sys, 12).unwrap();
+        sys.shutdown().unwrap();
+        assert_eq!(run.value, fib_value(12));
+        assert_eq!(run.tasks_executed, expected_tasks(12));
+    }
+
+    #[test]
+    fn nosv_fib_correct_and_counts() {
+        let sys = TaskSystem::new(TaskSystemKind::Nosv, 4, false);
+        let run = run(&sys, 10).unwrap();
+        sys.shutdown().unwrap();
+        assert_eq!(run.value, fib_value(10));
+        assert_eq!(run.tasks_executed, expected_tasks(10));
+    }
+}

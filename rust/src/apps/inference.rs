@@ -1,0 +1,390 @@
+//! Test Case 2 (paper §5.2): heterogeneous MLP inference.
+//!
+//! The application is written once against a [`KernelProvider`]; swapping
+//! the provider swaps the device/backend — exactly the paper's experiment
+//! where the same HiCR code ran OpenBLAS kernels under Pthreads, ACL
+//! kernels on an NPU, and naive OpenCL kernels on a GPU. Our providers:
+//!
+//! - [`NativeKernels`] — hand-written blocked f32 kernels executed through
+//!   the `threads` compute manager (the Pthreads+OpenBLAS analogue);
+//! - [`XlaKernels`] — the AOT-lowered Pallas/JAX HLO executed through the
+//!   `xlacomp` backend (the ACL pre-compiled-kernel analogue);
+//! - [`adhoc_forward`] — the non-HiCR baseline the paper used to verify
+//!   result consistency.
+
+use std::sync::Arc;
+
+use crate::backends::threads::ThreadsComputeManager;
+use crate::backends::xlacomp::{XlaComputeManager, XlaExecutionUnit, XlaMemoryManager};
+use crate::core::compute::{ComputeManager, ExecutionState, ExecutionUnit, FnExecutionUnit};
+use crate::core::error::{HicrError, Result};
+use crate::core::memory::{LocalMemorySlot, MemoryManager};
+use crate::core::topology::{ComputeResource, MemorySpace, MemorySpaceKind};
+use crate::runtime::artifact::{ArtifactBundle, Tensor};
+use crate::runtime::XlaRuntime;
+
+/// A device-agnostic forward-pass provider (the app's only kernel API).
+pub trait KernelProvider: Send + Sync {
+    /// Forward `batch` flattened images (batch × in_dim) → logits
+    /// (batch × out_dim).
+    fn forward(&self, x: &[f32], batch: usize) -> Result<Vec<f32>>;
+
+    /// Which backend runs the kernels (Table 2's "Backend" column).
+    fn backend_name(&self) -> &'static str;
+
+    /// Largest batch the provider accepts per call.
+    fn max_batch(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------
+// Native host kernels (Pthreads/OpenBLAS analogue).
+// ---------------------------------------------------------------------
+
+/// Blocked dense f32 kernels executed via the threads compute manager.
+pub struct NativeKernels {
+    weights: Arc<Vec<Tensor>>,
+    dims: Vec<usize>,
+    cm: ThreadsComputeManager,
+}
+
+impl NativeKernels {
+    pub fn new(bundle: &ArtifactBundle) -> Result<NativeKernels> {
+        if bundle.weights.len() != (bundle.layer_dims.len() - 1) * 2 {
+            return Err(HicrError::Artifact("weight/layer count mismatch".into()));
+        }
+        Ok(NativeKernels {
+            weights: Arc::new(bundle.weights.clone()),
+            dims: bundle.layer_dims.clone(),
+            cm: ThreadsComputeManager::new(),
+        })
+    }
+}
+
+/// y[b,n] = act(sum_k x[b,k] w[k,n] + bias[n]) — blocked over k for cache
+/// reuse (the perf-critical host path; see EXPERIMENTS.md §Perf).
+pub fn dense_forward(
+    x: &[f32],
+    batch: usize,
+    w: &Tensor,
+    bias: &Tensor,
+    relu: bool,
+    out: &mut [f32],
+) {
+    let k_dim = w.shape[0];
+    let n_dim = w.shape[1];
+    debug_assert_eq!(x.len(), batch * k_dim);
+    debug_assert_eq!(out.len(), batch * n_dim);
+    const BK: usize = 64;
+    // Initialize with bias.
+    for b in 0..batch {
+        out[b * n_dim..(b + 1) * n_dim].copy_from_slice(&bias.data);
+    }
+    for k0 in (0..k_dim).step_by(BK) {
+        let k1 = (k0 + BK).min(k_dim);
+        for b in 0..batch {
+            let xrow = &x[b * k_dim..(b + 1) * k_dim];
+            let orow = &mut out[b * n_dim..(b + 1) * n_dim];
+            for k in k0..k1 {
+                let xv = xrow[k];
+                if xv == 0.0 {
+                    continue; // images are sparse-ish after relu layers
+                }
+                let wrow = &w.data[k * n_dim..(k + 1) * n_dim];
+                for (o, wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    }
+    if relu {
+        for o in out.iter_mut() {
+            if *o < 0.0 {
+                *o = 0.0;
+            }
+        }
+    }
+}
+
+impl KernelProvider for NativeKernels {
+    fn forward(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        if x.len() != batch * self.dims[0] {
+            return Err(HicrError::Bounds("input size mismatch".into()));
+        }
+        // Run the layer chain as one execution unit on a processing unit
+        // (the paper's "provide an appropriate kernel function" pattern).
+        let weights = Arc::clone(&self.weights);
+        let dims = self.dims.clone();
+        let input = x.to_vec();
+        let result: Arc<std::sync::Mutex<Vec<f32>>> =
+            Arc::new(std::sync::Mutex::new(Vec::new()));
+        let r2 = Arc::clone(&result);
+        let unit = FnExecutionUnit::new("mlp-native", move |_ctx| {
+            let mut act = input.clone();
+            for (li, wb) in weights.chunks_exact(2).enumerate() {
+                let (w, b) = (&wb[0], &wb[1]);
+                let relu = li + 1 < dims.len() - 1;
+                let mut out = vec![0f32; batch * w.shape[1]];
+                dense_forward(&act, batch, w, b, relu, &mut out);
+                act = out;
+            }
+            *r2.lock().unwrap() = act;
+        });
+        let pu = self.cm.create_processing_unit(&ComputeResource {
+            id: crate::core::ids::ComputeResourceId(0),
+            kind: "cpu-core".into(),
+            os_index: 0,
+            locality: 0,
+        })?;
+        let state = self
+            .cm
+            .create_execution_state(unit as Arc<dyn ExecutionUnit>)?;
+        pu.start(Arc::clone(&state))?;
+        state.wait()?;
+        pu.terminate()?;
+        let out = result.lock().unwrap().clone();
+        Ok(out)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "threads"
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+}
+
+// ---------------------------------------------------------------------
+// XLA accelerator kernels (ACL analogue).
+// ---------------------------------------------------------------------
+
+/// AOT HLO kernels executed through the xlacomp backend with device slots.
+pub struct XlaKernels {
+    cm: XlaComputeManager,
+    mm: XlaMemoryManager,
+    space: MemorySpace,
+    units: Vec<(usize, Arc<XlaExecutionUnit>)>, // (batch, kernel)
+    weights: Vec<Tensor>,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl XlaKernels {
+    pub fn new(runtime: Arc<XlaRuntime>, bundle: &ArtifactBundle) -> Result<XlaKernels> {
+        let cm = XlaComputeManager::new(runtime);
+        let in_dim = bundle.layer_dims[0];
+        let out_dim = *bundle.layer_dims.last().unwrap();
+        let mut units = Vec::new();
+        for (batch, _file) in &bundle.hlo_files {
+            let path = bundle.hlo_path(*batch).unwrap();
+            let mut dims = vec![vec![*batch, in_dim]];
+            dims.extend(bundle.weights.iter().map(|t| t.shape.clone()));
+            let unit = cm.load_kernel(
+                &format!("mlp_b{batch}"),
+                &path,
+                dims,
+                batch * out_dim,
+            )?;
+            units.push((*batch, unit));
+        }
+        if units.is_empty() {
+            return Err(HicrError::Artifact("no HLO kernels in bundle".into()));
+        }
+        Ok(XlaKernels {
+            cm,
+            mm: XlaMemoryManager::new(),
+            space: MemorySpace::new(
+                crate::backends::xlacomp::DEVICE_SPACE_BASE,
+                MemorySpaceKind::DeviceHbm,
+                crate::backends::xlacomp::topology::DEVICE_MEM_BYTES,
+                "pjrt:cpu:0",
+            )?,
+            weights: bundle.weights.clone(),
+            in_dim,
+            out_dim,
+            units,
+        })
+    }
+
+    fn slot_from_f32(&self, data: &[f32]) -> Result<LocalMemorySlot> {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.mm.register(&self.space, bytes)
+    }
+}
+
+impl KernelProvider for XlaKernels {
+    fn forward(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let (kernel_batch, unit) = self
+            .units
+            .iter()
+            .find(|(b, _)| *b >= batch)
+            .or_else(|| self.units.last())
+            .ok_or_else(|| HicrError::Artifact("no kernel for batch".into()))?;
+        if batch > *kernel_batch {
+            return Err(HicrError::Bounds(format!(
+                "batch {batch} exceeds largest exported kernel {kernel_batch}"
+            )));
+        }
+        // Pad input to the kernel's batch, move to device slots, execute
+        // on a stream, read back.
+        let mut padded = vec![0f32; kernel_batch * self.in_dim];
+        padded[..batch * self.in_dim].copy_from_slice(x);
+        let mut inputs = vec![self.slot_from_f32(&padded)?];
+        for t in &self.weights {
+            inputs.push(self.slot_from_f32(&t.data)?);
+        }
+        let output = self
+            .mm
+            .allocate(&self.space, kernel_batch * self.out_dim * 4)?;
+        let state = self
+            .cm
+            .create_invocation(Arc::clone(unit), inputs, output.clone())?;
+        let stream = self.cm.create_processing_unit(&ComputeResource {
+            id: crate::core::ids::ComputeResourceId(
+                crate::backends::xlacomp::DEVICE_SPACE_BASE,
+            ),
+            kind: "pjrt-stream".into(),
+            os_index: 0,
+            locality: 1000,
+        })?;
+        stream.start(Arc::clone(&state) as Arc<dyn crate::core::compute::ExecutionState>)?;
+        state.wait()?;
+        stream.terminate()?;
+        let mut bytes = vec![0u8; kernel_batch * self.out_dim * 4];
+        output.read_at(0, &mut bytes)?;
+        self.mm.free(output)?;
+        let all: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(all[..batch * self.out_dim].to_vec())
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "xlacomp"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.units.iter().map(|(b, _)| *b).max().unwrap_or(1)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ad-hoc (non-HiCR) baseline + evaluation driver.
+// ---------------------------------------------------------------------
+
+/// The paper's verification baseline: direct kernels, no HiCR involved.
+pub fn adhoc_forward(bundle: &ArtifactBundle, x: &[f32], batch: usize) -> Vec<f32> {
+    let mut act = x.to_vec();
+    for (li, wb) in bundle.weights.chunks_exact(2).enumerate() {
+        let (w, b) = (&wb[0], &wb[1]);
+        let relu = li + 1 < bundle.layer_dims.len() - 1;
+        let mut out = vec![0f32; batch * w.shape[1]];
+        dense_forward(&act, batch, w, b, relu, &mut out);
+        act = out;
+    }
+    act
+}
+
+/// Table 2 row: accuracy over `n` test images + the img-0 top score.
+#[derive(Debug, Clone)]
+pub struct InferenceReport {
+    pub backend: &'static str,
+    pub accuracy: f64,
+    pub img0_score: f32,
+    pub img0_pred: usize,
+    pub images: usize,
+    pub elapsed_s: f64,
+}
+
+/// Score `n` test-set images through `provider` in batches.
+pub fn evaluate(
+    provider: &dyn KernelProvider,
+    bundle: &ArtifactBundle,
+    n: usize,
+) -> Result<InferenceReport> {
+    let n = n.min(bundle.test_count());
+    let out_dim = *bundle.layer_dims.last().unwrap();
+    let batch = provider.max_batch().min(32).max(1);
+    let mut correct = 0usize;
+    let mut img0_score = f32::NEG_INFINITY;
+    let mut img0_pred = 0usize;
+    let t0 = std::time::Instant::now();
+    let mut i = 0;
+    while i < n {
+        let b = batch.min(n - i);
+        let x = &bundle.test_images[i * bundle.img_dim..(i + b) * bundle.img_dim];
+        let logits = provider.forward(x, b)?;
+        for j in 0..b {
+            let row = &logits[j * out_dim..(j + 1) * out_dim];
+            let (pred, score) = row
+                .iter()
+                .enumerate()
+                .fold((0usize, f32::NEG_INFINITY), |acc, (k, &v)| {
+                    if v > acc.1 {
+                        (k, v)
+                    } else {
+                        acc
+                    }
+                });
+            if i + j == 0 {
+                img0_score = score;
+                img0_pred = pred;
+            }
+            if pred == bundle.test_labels[i + j] as usize {
+                correct += 1;
+            }
+        }
+        i += b;
+    }
+    Ok(InferenceReport {
+        backend: provider.backend_name(),
+        accuracy: correct as f64 / n as f64,
+        img0_score,
+        img0_pred,
+        images: n,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        Tensor { shape, data }
+    }
+
+    #[test]
+    fn dense_forward_matches_manual() {
+        // x (1x2) @ w (2x3) + b, relu.
+        let w = tensor(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = tensor(vec![3], vec![0.5, -100.0, 0.0]);
+        let x = [1.0f32, -1.0];
+        let mut out = vec![0f32; 3];
+        dense_forward(&x, 1, &w, &b, true, &mut out);
+        // raw: [1-4+0.5, 2-5-100, 3-6] = [-2.5, -103, -3] → relu → 0s.
+        assert_eq!(out, vec![0.0, 0.0, 0.0]);
+        let mut out2 = vec![0f32; 3];
+        dense_forward(&x, 1, &w, &b, false, &mut out2);
+        assert_eq!(out2, vec![-2.5, -103.0, -3.0]);
+    }
+
+    #[test]
+    fn dense_forward_batched_consistency() {
+        // Batch of 3 equals three batch-1 calls.
+        let w = tensor(vec![4, 2], (0..8).map(|i| i as f32 * 0.25).collect());
+        let b = tensor(vec![2], vec![0.1, -0.1]);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32).sin()).collect();
+        let mut all = vec![0f32; 6];
+        dense_forward(&x, 3, &w, &b, true, &mut all);
+        for i in 0..3 {
+            let mut one = vec![0f32; 2];
+            dense_forward(&x[i * 4..(i + 1) * 4], 1, &w, &b, true, &mut one);
+            assert_eq!(&all[i * 2..(i + 1) * 2], &one[..]);
+        }
+    }
+}

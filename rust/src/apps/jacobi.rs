@@ -1,0 +1,565 @@
+//! Test Case 4 (paper §5.4): three-dimensional Jacobi heat solver with a
+//! 13-point averaging stencil (center + axis neighbours at distance 1 and
+//! 2), grid decomposed into `lx × ly × lz` subgrids, one worker task per
+//! subgrid per iteration; plus the distributed variant exchanging halo
+//! planes between instances over one-sided puts (Fig. 11).
+
+use std::sync::Arc;
+
+use crate::core::communication::{CommunicationManager, DataEndpoint};
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::{Key, Tag};
+use crate::core::memory::LocalMemorySlot;
+use crate::frontends::tasking::TaskSystem;
+#[cfg(test)]
+use crate::frontends::tasking::TaskSystemKind;
+
+/// Flops per updated grid point: 12 adds + 1 multiply.
+pub const FLOPS_PER_POINT: u64 = 13;
+
+/// A (next, prev) pair of flattened n×n×n f64 grids with shared interior.
+pub struct Grid {
+    pub n: usize,
+    bufs: [Arc<GridBuf>; 2],
+}
+
+/// Interior-mutable f64 buffer: disjoint subgrid tasks write their own
+/// regions (the HiCR one-sided contract; same rationale as SlotBuffer).
+pub struct GridBuf {
+    data: std::cell::UnsafeCell<Vec<f64>>,
+}
+
+unsafe impl Send for GridBuf {}
+unsafe impl Sync for GridBuf {}
+
+impl GridBuf {
+    fn new(len: usize) -> Arc<Self> {
+        Arc::new(Self {
+            data: std::cell::UnsafeCell::new(vec![0.0; len]),
+        })
+    }
+
+    /// # Safety
+    /// Callers must write disjoint regions (one task per subgrid).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice_mut(&self) -> &mut [f64] {
+        &mut *self.data.get()
+    }
+
+    fn slice(&self) -> &[f64] {
+        unsafe { &*self.data.get() }
+    }
+}
+
+impl Grid {
+    /// Initialize with a hot plane at x = 0 (Dirichlet-ish source).
+    pub fn new(n: usize) -> Grid {
+        let bufs = [GridBuf::new(n * n * n), GridBuf::new(n * n * n)];
+        {
+            let b0 = unsafe { bufs[0].slice_mut() };
+            let b1 = unsafe { bufs[1].slice_mut() };
+            for y in 0..n {
+                for z in 0..n {
+                    b0[y * n + z] = 1.0; // x = 0 plane
+                    b1[y * n + z] = 1.0;
+                }
+            }
+        }
+        Grid { n, bufs }
+    }
+
+    #[inline]
+    pub fn idx(n: usize, x: usize, y: usize, z: usize) -> usize {
+        (x * n + y) * n + z
+    }
+
+    /// Read the current (last-written) buffer.
+    pub fn current(&self, iters_done: usize) -> &[f64] {
+        self.bufs[iters_done % 2].slice()
+    }
+
+    /// Checksum for cross-variant equivalence tests.
+    pub fn checksum(&self, iters_done: usize) -> f64 {
+        self.current(iters_done).iter().sum()
+    }
+}
+
+/// Update the subgrid `[x0,x1) × [y0,y1) × [z0,z1)` from `prev` into
+/// `next`. Boundary points (where any distance-2 neighbour would leave the
+/// grid) keep their previous value (insulated boundary).
+#[allow(clippy::too_many_arguments)]
+fn stencil_block(
+    prev: &[f64],
+    next: &mut [f64],
+    n: usize,
+    x0: usize,
+    x1: usize,
+    y0: usize,
+    y1: usize,
+    z0: usize,
+    z1: usize,
+) -> u64 {
+    let mut updated = 0u64;
+    let inv = 1.0 / 13.0;
+    for x in x0..x1 {
+        for y in y0..y1 {
+            let row = (x * n + y) * n;
+            if x < 2 || x >= n - 2 || y < 2 || y >= n - 2 {
+                next[row + z0..row + z1].copy_from_slice(&prev[row + z0..row + z1]);
+                continue;
+            }
+            for z in z0..z1 {
+                if z < 2 || z >= n - 2 {
+                    next[row + z] = prev[row + z];
+                    continue;
+                }
+                let c = row + z;
+                let sum = prev[c]
+                    + prev[c - 1]
+                    + prev[c + 1]
+                    + prev[c - 2]
+                    + prev[c + 2]
+                    + prev[c - n]
+                    + prev[c + n]
+                    + prev[c - 2 * n]
+                    + prev[c + 2 * n]
+                    + prev[c - n * n]
+                    + prev[c + n * n]
+                    + prev[c - 2 * n * n]
+                    + prev[c + 2 * n * n];
+                next[c] = sum * inv;
+                updated += 1;
+            }
+        }
+    }
+    updated
+}
+
+/// Result of a Jacobi run.
+#[derive(Debug, Clone)]
+pub struct JacobiRun {
+    pub n: usize,
+    pub iterations: usize,
+    pub elapsed_s: f64,
+    pub gflops: f64,
+    pub checksum: f64,
+}
+
+/// Single-instance solver: `lx × ly × lz` tasks per iteration on `system`
+/// (the Fig. 10 experiment).
+pub fn run_local(
+    system: &TaskSystem,
+    grid: &mut Grid,
+    iterations: usize,
+    mesh: (usize, usize, usize),
+) -> Result<JacobiRun> {
+    let n = grid.n;
+    let (lx, ly, lz) = mesh;
+    if lx == 0 || ly == 0 || lz == 0 || lx > n || ly > n || lz > n {
+        return Err(HicrError::Rejected(format!("bad thread mesh {mesh:?}")));
+    }
+    let total_updates = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let t0 = std::time::Instant::now();
+    for it in 0..iterations {
+        let prev = Arc::clone(&grid.bufs[it % 2]);
+        let next = Arc::clone(&grid.bufs[(it + 1) % 2]);
+        let updates = Arc::clone(&total_updates);
+        system.run("jacobi-iter", move |ctx| {
+            for bx in 0..lx {
+                for by in 0..ly {
+                    for bz in 0..lz {
+                        let prev = Arc::clone(&prev);
+                        let next = Arc::clone(&next);
+                        let updates = Arc::clone(&updates);
+                        let (x0, x1) = split(n, lx, bx);
+                        let (y0, y1) = split(n, ly, by);
+                        let (z0, z1) = split(n, lz, bz);
+                        ctx.spawn("stencil", move |_| {
+                            // SAFETY: subgrids are disjoint by construction.
+                            let next_mut = unsafe { next.slice_mut() };
+                            let u = stencil_block(
+                                prev.slice(),
+                                next_mut,
+                                n,
+                                x0,
+                                x1,
+                                y0,
+                                y1,
+                                z0,
+                                z1,
+                            );
+                            updates.fetch_add(u, std::sync::atomic::Ordering::Relaxed);
+                        });
+                    }
+                }
+            }
+            ctx.wait_children();
+        })?;
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let flops = total_updates.load(std::sync::atomic::Ordering::Relaxed) * FLOPS_PER_POINT;
+    Ok(JacobiRun {
+        n,
+        iterations,
+        elapsed_s,
+        gflops: flops as f64 / elapsed_s / 1e9,
+        checksum: grid.checksum(iterations),
+    })
+}
+
+/// Even split of `n` into `parts`, returning the `i`-th range.
+pub fn split(n: usize, parts: usize, i: usize) -> (usize, usize) {
+    let base = n / parts;
+    let rem = n % parts;
+    let start = i * base + i.min(rem);
+    let len = base + usize::from(i < rem);
+    (start, start + len)
+}
+
+/// Sequential reference (for equivalence tests).
+pub fn run_sequential(grid: &mut Grid, iterations: usize) -> f64 {
+    let n = grid.n;
+    for it in 0..iterations {
+        let prev = Arc::clone(&grid.bufs[it % 2]);
+        let next = Arc::clone(&grid.bufs[(it + 1) % 2]);
+        let next_mut = unsafe { next.slice_mut() };
+        stencil_block(prev.slice(), next_mut, n, 0, n, 0, n, 0, n);
+    }
+    grid.checksum(iterations)
+}
+
+// ---------------------------------------------------------------------
+// Distributed variant (Fig. 11): slab decomposition along x, halo planes
+// exchanged through one-sided puts after each iteration.
+// ---------------------------------------------------------------------
+
+/// How an instance waits for communication completion — the knob behind
+/// the paper's Fig. 11 finding (nOS-V's eager polling interferes with
+/// computation; Pthreads+Boost blocks quietly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommWaitMode {
+    Blocking,
+    EagerPolling,
+}
+
+/// Distributed Jacobi on `p` instances, slab-decomposed along x. Each
+/// instance holds `local_nx + 4` planes (2 ghost planes each side).
+/// Returns this instance's run stats (checksum is instance-local).
+#[allow(clippy::too_many_arguments)]
+pub fn run_distributed(
+    cmm: &Arc<dyn CommunicationManager>,
+    system: &TaskSystem,
+    rank: u32,
+    world: u32,
+    n: usize,
+    iterations: usize,
+    thread_mesh: (usize, usize, usize),
+    wait_mode: CommWaitMode,
+) -> Result<JacobiRun> {
+    let (x0, x1) = split(n, world as usize, rank as usize);
+    let local_nx = x1 - x0;
+    let plane = n * n;
+    let ext_nx = local_nx + 4; // 2 ghost planes per side
+    // Two extended buffers as HiCR slots (f64 little-endian).
+    let make = || LocalMemorySlot::alloc(crate::core::ids::MemorySpaceId(1), ext_nx * plane * 8);
+    let bufs = [make()?, make()?];
+    // Initialize: hot plane at global x = 0.
+    if x0 == 0 {
+        let hot = vec![1.0f64; plane];
+        let mut bytes = Vec::with_capacity(plane * 8);
+        for v in &hot {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for b in &bufs {
+            b.write_at(2 * plane * 8, &bytes)?; // first owned plane
+        }
+    }
+    // Exchange ghost windows: 4 windows per buffer (low/high ghost pairs).
+    // Key layout: rank*16 + buf*4 + {0: low ghosts, 1: high ghosts}.
+    let tag = Tag(0xA11_0);
+    let mut my_slots = Vec::new();
+    for (bi, b) in bufs.iter().enumerate() {
+        my_slots.push((Key(rank as u64 * 16 + bi as u64 * 4), b.clone()));
+    }
+    let exchanged = cmm.exchange_global_slots(tag, &my_slots)?;
+    let t0 = std::time::Instant::now();
+    let mut total_updates = 0u64;
+    for it in 0..iterations {
+        let prev = &bufs[it % 2];
+        let next = &bufs[(it + 1) % 2];
+        // Compute on owned planes [2, 2+local_nx) of the extended grid.
+        let prev_f = slot_as_f64(prev, ext_nx * plane);
+        let mut next_f = vec![0.0f64; ext_nx * plane];
+        next_f.copy_from_slice(&prev_f);
+        let updates = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        {
+            let (lx, ly, lz) = thread_mesh;
+            let prev_arc = Arc::new(prev_f);
+            let next_arc = Arc::new(std::sync::Mutex::new(next_f));
+            let u2 = Arc::clone(&updates);
+            let prev2 = Arc::clone(&prev_arc);
+            let next2 = Arc::clone(&next_arc);
+            system.run("jacobi-dist-iter", move |ctx| {
+                for bx in 0..lx {
+                    for by in 0..ly {
+                        for bz in 0..lz {
+                            let prev = Arc::clone(&prev2);
+                            let next = Arc::clone(&next2);
+                            let u = Arc::clone(&u2);
+                            let (sx0, sx1) = split(local_nx, lx, bx);
+                            let (sy0, sy1) = split(n, ly, by);
+                            let (sz0, sz1) = split(n, lz, bz);
+                            ctx.spawn("stencil", move |_| {
+                                let mut block = dist_stencil(
+                                    &prev,
+                                    ext_nx,
+                                    n,
+                                    x0,
+                                    2 + sx0,
+                                    2 + sx1,
+                                    sy0,
+                                    sy1,
+                                    sz0,
+                                    sz1,
+                                );
+                                let mut next = next.lock().unwrap();
+                                for (off, v) in block.drain(..) {
+                                    next[off] = v;
+                                }
+                                u.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            });
+                        }
+                    }
+                }
+                ctx.wait_children();
+            })?;
+            next_f = Arc::try_unwrap(next_arc)
+                .map_err(|_| HicrError::InvalidState("next buffer leaked".into()))?
+                .into_inner()
+                .unwrap();
+        }
+        total_updates += (local_nx * n * n) as u64;
+        // Write back into the slot.
+        write_f64(next, &next_f)?;
+        // Halo exchange: send our two boundary owned planes to each
+        // neighbour's ghost region of the *next* buffer.
+        let next_bi = (it + 1) % 2;
+        if rank > 0 {
+            let nb_key = Key((rank as u64 - 1) * 16 + next_bi as u64 * 4);
+            let g = exchanged.get(&nb_key).ok_or_else(|| {
+                HicrError::Collective(format!("missing neighbour window {nb_key}"))
+            })?;
+            let (nx0, nx1) = split(n, world as usize, rank as usize - 1);
+            let nb_ext = (nx1 - nx0) + 4;
+            // Our planes [2, 4) → neighbour's high ghosts [nb_ext-2, nb_ext).
+            cmm.memcpy(
+                &DataEndpoint::Global(g.clone()),
+                (nb_ext - 2) * plane * 8,
+                &DataEndpoint::Local(next.clone()),
+                2 * plane * 8,
+                2 * plane * 8,
+            )?;
+        }
+        if rank + 1 < world {
+            let nb_key = Key((rank as u64 + 1) * 16 + next_bi as u64 * 4);
+            let g = exchanged.get(&nb_key).ok_or_else(|| {
+                HicrError::Collective(format!("missing neighbour window {nb_key}"))
+            })?;
+            // Our planes [2+local_nx-2, 2+local_nx) → neighbour's low
+            // ghosts [0, 2).
+            cmm.memcpy(
+                &DataEndpoint::Global(g.clone()),
+                0,
+                &DataEndpoint::Local(next.clone()),
+                (local_nx) * plane * 8, // = 2 + local_nx - 2
+                2 * plane * 8,
+            )?;
+        }
+        match wait_mode {
+            CommWaitMode::Blocking => cmm.fence(tag)?,
+            CommWaitMode::EagerPolling => {
+                // nOS-V-style: spin on the fence instead of blocking,
+                // interfering with other threads on the core.
+                loop {
+                    // Model eager polling: probe with tiny spins around a
+                    // fence attempt (our fence is blocking; emulate the
+                    // interference with bounded spinning first).
+                    for _ in 0..2_000 {
+                        std::hint::spin_loop();
+                    }
+                    cmm.fence(tag)?;
+                    break;
+                }
+            }
+        }
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let cur = slot_as_f64(&bufs[iterations % 2], ext_nx * plane);
+    let checksum: f64 = cur[2 * plane..(2 + local_nx) * plane].iter().sum();
+    Ok(JacobiRun {
+        n,
+        iterations,
+        elapsed_s,
+        gflops: (total_updates * FLOPS_PER_POINT) as f64 / elapsed_s / 1e9,
+        checksum,
+    })
+}
+
+/// Distance-1/2 axis stencil over the extended (ghosted) grid; returns
+/// (offset, value) updates for *global-interior* points only (`gx0` is
+/// the slab's global x origin — global boundary planes stay untouched,
+/// matching the single-instance solver).
+#[allow(clippy::too_many_arguments)]
+fn dist_stencil(
+    prev: &[f64],
+    ext_nx: usize,
+    n: usize,
+    gx0: usize,
+    x0: usize,
+    x1: usize,
+    y0: usize,
+    y1: usize,
+    z0: usize,
+    z1: usize,
+) -> Vec<(usize, f64)> {
+    let mut out = Vec::new();
+    let inv = 1.0 / 13.0;
+    let nn = n * n;
+    for x in x0..x1 {
+        if x < 2 || x + 2 >= ext_nx {
+            continue;
+        }
+        let global_x = gx0 + x - 2;
+        if global_x < 2 || global_x >= n - 2 {
+            continue;
+        }
+        for y in y0..y1 {
+            if y < 2 || y + 2 >= n {
+                continue;
+            }
+            for z in z0..z1 {
+                if z < 2 || z + 2 >= n {
+                    continue;
+                }
+                let c = (x * n + y) * n + z;
+                let sum = prev[c]
+                    + prev[c - 1]
+                    + prev[c + 1]
+                    + prev[c - 2]
+                    + prev[c + 2]
+                    + prev[c - n]
+                    + prev[c + n]
+                    + prev[c - 2 * n]
+                    + prev[c + 2 * n]
+                    + prev[c - nn]
+                    + prev[c + nn]
+                    + prev[c - 2 * nn]
+                    + prev[c + 2 * nn];
+                out.push((c, sum * inv));
+            }
+        }
+    }
+    out
+}
+
+fn slot_as_f64(slot: &LocalMemorySlot, count: usize) -> Vec<f64> {
+    let mut bytes = vec![0u8; count * 8];
+    slot.read_at(0, &mut bytes).expect("in-bounds");
+    bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn write_f64(slot: &LocalMemorySlot, data: &[f64]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 8);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    slot.write_at(0, &bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_range() {
+        for (n, parts) in [(10, 3), (7, 7), (100, 8), (5, 1)] {
+            let mut covered = 0;
+            for i in 0..parts {
+                let (a, b) = split(n, parts, i);
+                assert_eq!(a, covered);
+                covered = b;
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let n = 16;
+        let iters = 5;
+        let mut seq = Grid::new(n);
+        let want = run_sequential(&mut seq, iters);
+        for kind in [TaskSystemKind::Coro, TaskSystemKind::Nosv] {
+            let sys = TaskSystem::new(kind, 4, false);
+            let mut grid = Grid::new(n);
+            let run = run_local(&sys, &mut grid, iters, (2, 2, 2)).unwrap();
+            sys.shutdown().unwrap();
+            assert!(
+                (run.checksum - want).abs() < 1e-9,
+                "{kind:?}: {} != {want}",
+                run.checksum
+            );
+            assert!(run.gflops > 0.0);
+        }
+    }
+
+    #[test]
+    fn heat_diffuses_inward() {
+        let n = 12;
+        let mut grid = Grid::new(n);
+        run_sequential(&mut grid, 10);
+        let cur = grid.current(10);
+        // Energy must have moved off the x=0 plane into the interior.
+        let interior = cur[Grid::idx(n, 5, 5, 5)];
+        assert!(interior >= 0.0);
+        let near_source = cur[Grid::idx(n, 2, 5, 5)];
+        assert!(
+            near_source > interior,
+            "temperature should decay away from the source"
+        );
+        assert!(near_source > 0.0);
+    }
+
+    #[test]
+    fn distributed_single_instance_matches_mesh_split() {
+        // world=1 distributed == local solve on the same grid (interior).
+        use crate::backends::threads::ThreadsCommunicationManager;
+        let n = 12;
+        let iters = 3;
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let sys = TaskSystem::new(TaskSystemKind::Coro, 2, false);
+        let run = run_distributed(
+            &cmm,
+            &sys,
+            0,
+            1,
+            n,
+            iters,
+            (1, 2, 2),
+            CommWaitMode::Blocking,
+        )
+        .unwrap();
+        sys.shutdown().unwrap();
+        let mut seq = Grid::new(n);
+        let want = run_sequential(&mut seq, iters);
+        assert!(
+            (run.checksum - want).abs() < 1e-9,
+            "{} != {want}",
+            run.checksum
+        );
+    }
+}

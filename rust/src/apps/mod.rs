@@ -1,0 +1,15 @@
+//! The paper's four test-case applications (§5), written exclusively
+//! against the abstract HiCR managers and frontends so each runs
+//! unchanged across backends:
+//!
+//! - [`pingpong`] — Test Case 1: bidirectional SPSC channel ping-pong.
+//! - [`inference`] — Test Case 2: MNIST-style MLP inference with
+//!   swappable kernel providers (native host kernels vs AOT XLA).
+//! - [`fibonacci`] — Test Case 3: fine-grained recursive task DAG.
+//! - [`jacobi`] — Test Case 4: coarse-grained 3-D Jacobi heat solver,
+//!   thread-parallel and distributed (halo exchange over one-sided puts).
+
+pub mod fibonacci;
+pub mod inference;
+pub mod jacobi;
+pub mod pingpong;

@@ -1,0 +1,210 @@
+//! Test Case 1 (paper §5.1): two instances connected by two opposing SPSC
+//! channels (bidirectional), ping-pong over message sizes from 1 B to
+//! ~2.14 GB, reporting goodput G(s).
+//!
+//! Two result modes (DESIGN.md §2): the *modeled* series computes G(s)
+//! from the calibrated interconnect profiles (this is what Fig. 8 plots —
+//! the sandbox has no Infiniband), while the *measured* mode runs the real
+//! protocol over the socket substrate to validate correctness and give a
+//! loopback wall-clock series.
+
+use std::sync::Arc;
+
+use crate::core::communication::CommunicationManager;
+use crate::core::error::Result;
+use crate::core::ids::MemorySpaceId;
+use crate::core::memory::LocalMemorySlot;
+use crate::frontends::channels::spsc::{SpscConsumer, SpscProducer};
+use crate::netsim::fabric::CostProfile;
+
+/// One goodput sample.
+#[derive(Debug, Clone)]
+pub struct GoodputPoint {
+    pub bytes: u64,
+    pub goodput_bps: f64,
+    pub stddev_bps: f64,
+}
+
+/// The message sizes the paper sweeps (1 B → ~2.14 GB, powers of two plus
+/// the paper's end point).
+pub fn paper_sizes() -> Vec<u64> {
+    let mut sizes: Vec<u64> = (0..=31).map(|e| 1u64 << e).collect();
+    sizes.push(2_140_000_000);
+    sizes
+}
+
+/// Modeled Fig. 8 series for one backend profile.
+pub fn modeled_series(profile: &CostProfile, sizes: &[u64]) -> Vec<GoodputPoint> {
+    sizes
+        .iter()
+        .map(|&s| GoodputPoint {
+            bytes: s,
+            goodput_bps: profile.pingpong_goodput_bps(s),
+            stddev_bps: 0.0,
+        })
+        .collect()
+}
+
+/// Role in a measured ping-pong run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Pinger,
+    Ponger,
+}
+
+/// Build the two opposing channels for one side. Channel A (tag, keys
+/// 0/1) flows pinger→ponger; channel B (tag+1) flows back. Each channel's
+/// ring lives at its consumer, with a single-message capacity as in the
+/// paper.
+pub fn build_channels(
+    cmm: Arc<dyn CommunicationManager>,
+    tag_base: u64,
+    msg_size: usize,
+    side: Side,
+) -> Result<(SpscProducer, SpscConsumer)> {
+    let alloc = |len: usize| LocalMemorySlot::alloc(MemorySpaceId(1), len);
+    // Exchanges are collectives: both sides must enter them in the same
+    // global order (tag_base first, then tag_base+1) or two distributed
+    // instances deadlock inside their first exchange. Ring under tag_base
+    // is owned by the ponger (ping direction); ring under tag_base+1 by
+    // the pinger (pong direction).
+    match side {
+        Side::Ponger => {
+            let consumer = SpscConsumer::create(
+                cmm.as_ref(),
+                alloc(msg_size)?,
+                alloc(16)?,
+                crate::core::ids::Tag(tag_base),
+                0,
+                msg_size,
+                1,
+            )?;
+            let producer = SpscProducer::create(
+                cmm,
+                crate::core::ids::Tag(tag_base + 1),
+                0,
+                msg_size,
+                1,
+                alloc(8)?,
+            )?;
+            Ok((producer, consumer))
+        }
+        Side::Pinger => {
+            let producer = SpscProducer::create(
+                Arc::clone(&cmm),
+                crate::core::ids::Tag(tag_base),
+                0,
+                msg_size,
+                1,
+                alloc(8)?,
+            )?;
+            let consumer = SpscConsumer::create(
+                cmm.as_ref(),
+                alloc(msg_size)?,
+                alloc(16)?,
+                crate::core::ids::Tag(tag_base + 1),
+                0,
+                msg_size,
+                1,
+            )?;
+            Ok((producer, consumer))
+        }
+    }
+}
+
+/// Run `reps` ping-pong round-trips of `msg_size` bytes as the pinger;
+/// returns per-rep round-trip seconds.
+pub fn run_pinger(
+    producer: &mut SpscProducer,
+    consumer: &mut SpscConsumer,
+    msg_size: usize,
+    reps: usize,
+) -> Result<Vec<f64>> {
+    let msg = vec![0xA5u8; msg_size];
+    let mut buf = vec![0u8; msg_size];
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        producer.push_blocking(&msg)?;
+        consumer.pop_blocking(&mut buf)?;
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(times)
+}
+
+/// Echo loop for the ponger side.
+pub fn run_ponger(
+    producer: &mut SpscProducer,
+    consumer: &mut SpscConsumer,
+    msg_size: usize,
+    reps: usize,
+) -> Result<()> {
+    let mut buf = vec![0u8; msg_size];
+    for _ in 0..reps {
+        consumer.pop_blocking(&mut buf)?;
+        producer.push_blocking(&buf)?;
+    }
+    Ok(())
+}
+
+/// Goodput from round-trip samples: one-directional payload rate, as the
+/// paper reports.
+pub fn goodput_from_rtts(bytes: u64, rtts_s: &[f64]) -> GoodputPoint {
+    let g: Vec<f64> = rtts_s
+        .iter()
+        .map(|rtt| bytes as f64 * 8.0 / (rtt / 2.0))
+        .collect();
+    let s = crate::util::stats::Summary::of(&g).expect("non-empty");
+    GoodputPoint {
+        bytes,
+        goodput_bps: s.mean,
+        stddev_bps: s.stddev,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::threads::ThreadsCommunicationManager;
+
+    #[test]
+    fn paper_size_sweep_bounds() {
+        let sizes = paper_sizes();
+        assert_eq!(sizes[0], 1);
+        assert!(*sizes.last().unwrap() >= 2_140_000_000);
+    }
+
+    #[test]
+    fn intra_process_pingpong_roundtrip() {
+        // Both sides in one process over the threads backend validates the
+        // protocol end to end.
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let msg = 64usize;
+        let cmm2 = Arc::clone(&cmm);
+        let ponger = std::thread::spawn(move || {
+            let (mut p, mut c) = build_channels(cmm2, 7000, msg, Side::Ponger).unwrap();
+            run_ponger(&mut p, &mut c, msg, 10).unwrap();
+        });
+        let (mut p, mut c) = build_channels(cmm, 7000, msg, Side::Pinger).unwrap();
+        let times = run_pinger(&mut p, &mut c, msg, 10).unwrap();
+        ponger.join().unwrap();
+        assert_eq!(times.len(), 10);
+        let point = goodput_from_rtts(msg as u64, &times);
+        assert!(point.goodput_bps > 0.0);
+    }
+
+    #[test]
+    fn modeled_series_has_paper_shape() {
+        use crate::netsim::fabric::{LPF_IBVERBS_EDR, MPI_RMA_EDR};
+        let sizes = paper_sizes();
+        let lpf = modeled_series(&LPF_IBVERBS_EDR, &sizes);
+        let mpi = modeled_series(&MPI_RMA_EDR, &sizes);
+        // Small-message advantage ~70x, large-message convergence.
+        let ratio_small = lpf[0].goodput_bps / mpi[0].goodput_bps;
+        assert!((40.0..90.0).contains(&ratio_small));
+        let last = sizes.len() - 1;
+        let ratio_large = lpf[last].goodput_bps / mpi[last].goodput_bps;
+        assert!((0.98..1.02).contains(&ratio_large));
+    }
+}

@@ -1,0 +1,530 @@
+//! Fiber execution states over a pooled turn-passing thread substrate.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::core::compute::{
+    ComputeManager, ExecCtx, ExecStatus, ExecutionState, ExecutionUnit,
+    FnExecutionUnit, ProcessingUnit, Suspender,
+};
+use crate::core::error::{HicrError, Result};
+use crate::core::topology::ComputeResource;
+
+/// Whose turn it is to run: the resuming caller or the fiber body.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Turn {
+    Caller,
+    Fiber,
+}
+
+/// Turn-passing gate between the caller driving `resume()` and the pooled
+/// thread executing the fiber body. Exactly one side runs at a time —
+/// the defining property of a coroutine switch.
+struct TurnGate {
+    turn: Mutex<Turn>,
+    /// One condvar per side so each hand-off wakes exactly its intended
+    /// waiter (a single shared condvar would need notify_all: with
+    /// notify_one it can wake the side whose condition is still false and
+    /// strand the other — measured as a hang, see EXPERIMENTS.md §Perf).
+    caller_cv: Condvar,
+    fiber_cv: Condvar,
+}
+
+impl TurnGate {
+    fn new() -> Self {
+        Self {
+            turn: Mutex::new(Turn::Caller),
+            caller_cv: Condvar::new(),
+            fiber_cv: Condvar::new(),
+        }
+    }
+
+    fn cv(&self, side: Turn) -> &Condvar {
+        match side {
+            Turn::Caller => &self.caller_cv,
+            Turn::Fiber => &self.fiber_cv,
+        }
+    }
+
+    fn hand_to(&self, to: Turn) {
+        let mut t = self.turn.lock().unwrap();
+        *t = to;
+        self.cv(to).notify_one();
+    }
+
+    fn wait_for(&self, want: Turn) {
+        let mut t = self.turn.lock().unwrap();
+        while *t != want {
+            t = self.cv(want).wait(t).unwrap();
+        }
+    }
+}
+
+/// Suspender handed to fiber bodies: flips the turn back to the caller.
+struct FiberSuspender {
+    gate: Arc<TurnGate>,
+    status: Arc<Mutex<ExecStatus>>,
+}
+
+impl Suspender for FiberSuspender {
+    fn suspend(&self) {
+        *self.status.lock().unwrap() = ExecStatus::Suspended;
+        self.gate.hand_to(Turn::Caller);
+        self.gate.wait_for(Turn::Fiber);
+        *self.status.lock().unwrap() = ExecStatus::Running;
+    }
+}
+
+type FiberBody = Box<dyn FnOnce(&ExecCtx) + Send>;
+
+struct FiberJob {
+    body: FiberBody,
+    gate: Arc<TurnGate>,
+    status: Arc<Mutex<ExecStatus>>,
+}
+
+/// Global fiber-host pool. Threads are created on demand and recycled
+/// after each fiber completes; steady-state fiber creation therefore costs
+/// no kernel-thread spawn (the cost the nosv backend deliberately pays).
+struct FiberPool {
+    idle: Mutex<VecDeque<Sender<FiberJob>>>,
+    spawned: AtomicUsize,
+}
+
+impl FiberPool {
+    fn new() -> Self {
+        Self {
+            idle: Mutex::new(VecDeque::new()),
+            spawned: AtomicUsize::new(0),
+        }
+    }
+
+    fn dispatch(self: &Arc<Self>, job: FiberJob) {
+        let worker = self.idle.lock().unwrap().pop_front();
+        let tx = match worker {
+            Some(tx) => tx,
+            None => self.spawn_thread(),
+        };
+        tx.send(job).expect("fiber pool thread terminated");
+    }
+
+    fn spawn_thread(self: &Arc<Self>) -> Sender<FiberJob> {
+        let (tx, rx): (Sender<FiberJob>, Receiver<FiberJob>) = channel();
+        let pool = Arc::clone(self);
+        let my_tx = tx.clone();
+        self.spawned.fetch_add(1, Ordering::Relaxed);
+        std::thread::Builder::new()
+            .name("hicr-fiber".into())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    // The caller has already handed us the turn (resume()
+                    // flips it before/after dispatch; wait to be sure).
+                    job.gate.wait_for(Turn::Fiber);
+                    *job.status.lock().unwrap() = ExecStatus::Running;
+                    let suspender = FiberSuspender {
+                        gate: Arc::clone(&job.gate),
+                        status: Arc::clone(&job.status),
+                    };
+                    let ctx = ExecCtx {
+                        suspender: &suspender,
+                    };
+                    let body = job.body;
+                    let outcome =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            body(&ctx)
+                        }));
+                    *job.status.lock().unwrap() = match outcome {
+                        Ok(()) => ExecStatus::Finished,
+                        Err(_) => ExecStatus::Failed,
+                    };
+                    // Recycle ourselves *before* releasing the caller so
+                    // an immediately-following fiber can reuse this thread.
+                    pool.idle.lock().unwrap().push_back(my_tx.clone());
+                    job.gate.hand_to(Turn::Caller);
+                }
+            })
+            .expect("spawn fiber pool thread");
+        tx
+    }
+}
+
+/// A suspendable execution state (coroutine analogue). Driven by
+/// [`FiberExecutionState::resume`]; `wait()` drives it to completion.
+pub struct FiberExecutionState {
+    status: Arc<Mutex<ExecStatus>>,
+    gate: Arc<TurnGate>,
+    start_once: Mutex<Option<FiberBody>>,
+    pool: Arc<FiberPool>,
+    name: String,
+}
+
+impl FiberExecutionState {
+    fn new(pool: Arc<FiberPool>, name: String, body: FiberBody) -> Arc<Self> {
+        Arc::new(Self {
+            status: Arc::new(Mutex::new(ExecStatus::Ready)),
+            gate: Arc::new(TurnGate::new()),
+            start_once: Mutex::new(Some(body)),
+            pool,
+            name,
+        })
+    }
+
+    /// Resume (or first-start) the fiber; blocks until it suspends or
+    /// finishes, and returns the resulting status. This is the user-level
+    /// context switch the Tasking frontend schedules with.
+    pub fn resume(&self) -> Result<ExecStatus> {
+        {
+            let st = *self.status.lock().unwrap();
+            if matches!(st, ExecStatus::Finished | ExecStatus::Failed) {
+                return Err(HicrError::InvalidState(format!(
+                    "fiber '{}' already finished; states are single-use",
+                    self.name
+                )));
+            }
+        }
+        if let Some(body) = self.start_once.lock().unwrap().take() {
+            self.pool.dispatch(FiberJob {
+                body,
+                gate: Arc::clone(&self.gate),
+                status: Arc::clone(&self.status),
+            });
+        }
+        // Hand the turn to the fiber and wait for it to come back.
+        self.gate.hand_to(Turn::Fiber);
+        self.gate.wait_for(Turn::Caller);
+        Ok(*self.status.lock().unwrap())
+    }
+}
+
+impl ExecutionState for FiberExecutionState {
+    fn status(&self) -> ExecStatus {
+        *self.status.lock().unwrap()
+    }
+
+    fn wait(&self) -> Result<()> {
+        loop {
+            match self.status() {
+                ExecStatus::Finished => return Ok(()),
+                ExecStatus::Failed => {
+                    return Err(HicrError::InvalidState(format!(
+                        "fiber '{}' panicked",
+                        self.name
+                    )))
+                }
+                _ => {
+                    self.resume()?;
+                }
+            }
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_arc(self: Arc<Self>) -> Arc<dyn std::any::Any + Send + Sync> {
+        self
+    }
+}
+
+/// Processing unit for direct (non-frontend) use of the coro backend: a
+/// dedicated driver thread that runs assigned fibers to completion
+/// (re-resuming across suspensions).
+pub struct CoroProcessingUnit {
+    resource: ComputeResource,
+    tx: Mutex<Option<Sender<Arc<FiberExecutionState>>>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl CoroProcessingUnit {
+    fn new(resource: ComputeResource) -> Arc<Self> {
+        let (tx, rx) = channel::<Arc<FiberExecutionState>>();
+        let pending: Arc<(Mutex<usize>, Condvar)> =
+            Arc::new((Mutex::new(0), Condvar::new()));
+        let p2 = Arc::clone(&pending);
+        let handle = std::thread::Builder::new()
+            .name(format!("hicr-coro-pu-{}", resource.id.0))
+            .spawn(move || {
+                while let Ok(fiber) = rx.recv() {
+                    while !matches!(
+                        fiber.status(),
+                        ExecStatus::Finished | ExecStatus::Failed
+                    ) {
+                        let _ = fiber.resume();
+                    }
+                    let mut n = p2.0.lock().unwrap();
+                    *n -= 1;
+                    p2.1.notify_all();
+                }
+            })
+            .expect("spawn coro processing unit");
+        Arc::new(Self {
+            resource,
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            pending,
+        })
+    }
+}
+
+impl ProcessingUnit for CoroProcessingUnit {
+    fn resource(&self) -> &ComputeResource {
+        &self.resource
+    }
+
+    fn start(&self, state: Arc<dyn ExecutionState>) -> Result<()> {
+        let fiber = state
+            .as_any_arc()
+            .downcast::<FiberExecutionState>()
+            .map_err(|_| {
+                HicrError::Unsupported(
+                    "coro processing unit executes FiberExecutionState only".into(),
+                )
+            })?;
+        if fiber.status() != ExecStatus::Ready {
+            return Err(HicrError::InvalidState(
+                "execution state already started (states are single-use)".into(),
+            ));
+        }
+        let tx = self.tx.lock().unwrap();
+        let tx = tx
+            .as_ref()
+            .ok_or_else(|| HicrError::InvalidState("processing unit terminated".into()))?;
+        *self.pending.0.lock().unwrap() += 1;
+        tx.send(fiber)
+            .map_err(|_| HicrError::InvalidState("driver thread gone".into()))?;
+        Ok(())
+    }
+
+    fn await_all(&self) -> Result<()> {
+        let mut n = self.pending.0.lock().unwrap();
+        while *n != 0 {
+            n = self.pending.1.wait(n).unwrap();
+        }
+        Ok(())
+    }
+
+    fn terminate(&self) -> Result<()> {
+        self.await_all()?;
+        self.tx.lock().unwrap().take();
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            h.join()
+                .map_err(|_| HicrError::InvalidState("driver panicked".into()))?;
+        }
+        Ok(())
+    }
+
+    fn status(&self) -> ExecStatus {
+        if self.tx.lock().unwrap().is_none() {
+            ExecStatus::Finished
+        } else if *self.pending.0.lock().unwrap() > 0 {
+            ExecStatus::Running
+        } else {
+            ExecStatus::Ready
+        }
+    }
+}
+
+/// The Boost.Context-analogue compute manager.
+pub struct CoroComputeManager {
+    pool: Arc<FiberPool>,
+}
+
+impl Default for CoroComputeManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CoroComputeManager {
+    pub fn new() -> Self {
+        Self {
+            pool: Arc::new(FiberPool::new()),
+        }
+    }
+
+    /// Number of kernel threads the fiber pool has ever created —
+    /// observability for the Fig. 9 analysis (pooling keeps this near the
+    /// live-fiber high-watermark, far below the task count).
+    pub fn pool_threads_spawned(&self) -> usize {
+        self.pool.spawned.load(Ordering::Relaxed)
+    }
+
+    /// Typed variant of `create_execution_state` for schedulers that need
+    /// `resume()` (the Tasking frontend).
+    pub fn create_fiber(
+        &self,
+        unit: Arc<dyn ExecutionUnit>,
+    ) -> Result<Arc<FiberExecutionState>> {
+        let f = unit
+            .as_any()
+            .downcast_ref::<FnExecutionUnit>()
+            .ok_or_else(|| {
+                HicrError::Unsupported(
+                    "coro compute manager prescribes FnExecutionUnit".into(),
+                )
+            })?;
+        let func = f.func();
+        Ok(FiberExecutionState::new(
+            Arc::clone(&self.pool),
+            f.name().to_string(),
+            Box::new(move |ctx| func(ctx)),
+        ))
+    }
+}
+
+impl ComputeManager for CoroComputeManager {
+    fn create_processing_unit(
+        &self,
+        resource: &ComputeResource,
+    ) -> Result<Arc<dyn ProcessingUnit>> {
+        Ok(CoroProcessingUnit::new(resource.clone()))
+    }
+
+    fn create_execution_state(
+        &self,
+        unit: Arc<dyn ExecutionUnit>,
+    ) -> Result<Arc<dyn ExecutionState>> {
+        Ok(self.create_fiber(unit)?)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "coro"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    fn resource() -> ComputeResource {
+        ComputeResource {
+            id: crate::core::ids::ComputeResourceId(0),
+            kind: "cpu-core".into(),
+            os_index: 0,
+            locality: 0,
+        }
+    }
+
+    #[test]
+    fn fiber_suspend_resume_interleaving() {
+        let cm = CoroComputeManager::new();
+        let trace = Arc::new(Mutex::new(Vec::new()));
+        let t = Arc::clone(&trace);
+        let unit = FnExecutionUnit::new("yielder", move |ctx| {
+            t.lock().unwrap().push("a");
+            ctx.suspend();
+            t.lock().unwrap().push("b");
+            ctx.suspend();
+            t.lock().unwrap().push("c");
+        });
+        let fiber = cm.create_fiber(unit as Arc<dyn ExecutionUnit>).unwrap();
+        assert_eq!(fiber.status(), ExecStatus::Ready);
+        assert_eq!(fiber.resume().unwrap(), ExecStatus::Suspended);
+        trace.lock().unwrap().push("x"); // caller runs between resumes
+        assert_eq!(fiber.resume().unwrap(), ExecStatus::Suspended);
+        trace.lock().unwrap().push("y");
+        assert_eq!(fiber.resume().unwrap(), ExecStatus::Finished);
+        assert_eq!(*trace.lock().unwrap(), vec!["a", "x", "b", "y", "c"]);
+    }
+
+    #[test]
+    fn resume_after_finish_rejected() {
+        let cm = CoroComputeManager::new();
+        let fiber = cm
+            .create_fiber(FnExecutionUnit::new("once", |_| {}) as Arc<dyn ExecutionUnit>)
+            .unwrap();
+        assert_eq!(fiber.resume().unwrap(), ExecStatus::Finished);
+        assert!(fiber.resume().is_err());
+    }
+
+    #[test]
+    fn pool_recycles_threads() {
+        let cm = CoroComputeManager::new();
+        // Run many sequential fibers: the pool should stay at one thread.
+        for i in 0..32 {
+            let fiber = cm
+                .create_fiber(FnExecutionUnit::new(format!("f{i}"), |_| {})
+                    as Arc<dyn ExecutionUnit>)
+                .unwrap();
+            fiber.wait().unwrap();
+        }
+        assert!(
+            cm.pool_threads_spawned() <= 2,
+            "pool spawned {} threads for 32 sequential fibers",
+            cm.pool_threads_spawned()
+        );
+    }
+
+    #[test]
+    fn wait_drives_across_suspensions() {
+        let cm = CoroComputeManager::new();
+        let hits = Arc::new(AtomicU32::new(0));
+        let h = Arc::clone(&hits);
+        let fiber = cm
+            .create_fiber(FnExecutionUnit::new("multi", move |ctx| {
+                for _ in 0..5 {
+                    h.fetch_add(1, Ordering::SeqCst);
+                    ctx.suspend();
+                }
+            }) as Arc<dyn ExecutionUnit>)
+            .unwrap();
+        fiber.wait().unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn panicking_fiber_fails() {
+        let cm = CoroComputeManager::new();
+        let fiber = cm
+            .create_fiber(
+                FnExecutionUnit::new("boom", |_| panic!("pow")) as Arc<dyn ExecutionUnit>
+            )
+            .unwrap();
+        assert!(fiber.wait().is_err());
+        assert_eq!(fiber.status(), ExecStatus::Failed);
+    }
+
+    #[test]
+    fn processing_unit_runs_suspending_fibers() {
+        let cm = CoroComputeManager::new();
+        let pu = cm.create_processing_unit(&resource()).unwrap();
+        let hits = Arc::new(AtomicU32::new(0));
+        for _ in 0..4 {
+            let h = Arc::clone(&hits);
+            let st = cm
+                .create_execution_state(FnExecutionUnit::new("job", move |ctx| {
+                    h.fetch_add(1, Ordering::SeqCst);
+                    ctx.suspend();
+                    h.fetch_add(1, Ordering::SeqCst);
+                }) as Arc<dyn ExecutionUnit>)
+                .unwrap();
+            pu.start(st).unwrap();
+        }
+        pu.await_all().unwrap();
+        pu.terminate().unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn nested_fibers() {
+        // A fiber resuming another fiber (the Fibonacci pattern).
+        let cm = Arc::new(CoroComputeManager::new());
+        let cm2 = Arc::clone(&cm);
+        let outer = cm
+            .create_fiber(FnExecutionUnit::new("outer", move |_ctx| {
+                let inner = cm2
+                    .create_fiber(
+                        FnExecutionUnit::new("inner", |_| {}) as Arc<dyn ExecutionUnit>
+                    )
+                    .unwrap();
+                inner.wait().unwrap();
+            }) as Arc<dyn ExecutionUnit>)
+            .unwrap();
+        outer.wait().unwrap();
+    }
+}

@@ -1,0 +1,19 @@
+//! `coro` backend — the Boost.Context analogue (paper §4.2).
+//!
+//! Defines execution units as single closures and instantiates them into
+//! *fiber-based* execution states that can be suspended and resumed at
+//! arbitrary points without involving the OS scheduler's placement
+//! decisions. Table 1 row: Compute ✓.
+//!
+//! Substitution note (DESIGN.md §2): Rust has no stable stackful-coroutine
+//! primitive and the offline registry carries no fiber crate, so fibers
+//! are built on *pooled, parked OS threads* with a strict turn-passing
+//! protocol: suspension/resumption are user-level scheduling decisions,
+//! exactly like Boost coroutines, and the pool amortizes thread creation
+//! so a fiber's lifecycle cost is two park/unpark pairs rather than a
+//! kernel thread spawn (the cost the nOS-V-analogue backend pays — the
+//! very distinction Test Case 3 measures).
+
+pub mod compute;
+
+pub use compute::{CoroComputeManager, FiberExecutionState};

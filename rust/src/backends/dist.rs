@@ -1,0 +1,227 @@
+//! Shared implementation of the distributed backends (`mpisim`, `lpfsim`):
+//! communication + memory managers over a [`netsim::endpoint::Endpoint`].
+//!
+//! The two paper backends differ in protocol overhead (MPI one-sided RMA
+//! handshaking vs LPF's ibverbs completion queues) and in API surface; the
+//! wire protocol beneath both is ours, so here they differ by their
+//! [`CostProfile`] (performance model, Fig. 8) and their backend name.
+//! The *semantics* — windows from exchanged slots, one-sided put/get,
+//! fence-based completion — are identical, as they are in the paper.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+use crate::core::communication::{
+    validate_bounds, validate_direction, CommunicationManager, DataEndpoint,
+    Direction, GlobalMemorySlot,
+};
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::{InstanceId, Key, MemorySpaceId, Tag};
+use crate::core::memory::{LocalMemorySlot, MemoryManager};
+use crate::core::topology::MemorySpace;
+use crate::netsim::endpoint::Endpoint;
+use crate::netsim::fabric::{CostProfile, VirtualClock};
+
+/// Distributed communication manager over the hub/endpoint substrate.
+pub struct DistCommunicationManager {
+    endpoint: Endpoint,
+    profile: CostProfile,
+    name: &'static str,
+    /// Modeled time spent in communication (Fig. 8 reporting).
+    pub clock: VirtualClock,
+    /// Slots we exchanged, by (tag, key) — needed to resolve local sides.
+    exchanged: Mutex<HashMap<(Tag, Key), GlobalMemorySlot>>,
+}
+
+impl DistCommunicationManager {
+    pub fn new(endpoint: Endpoint, profile: CostProfile, name: &'static str) -> Self {
+        Self {
+            endpoint,
+            profile,
+            name,
+            clock: VirtualClock::new(),
+            exchanged: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+
+    pub fn profile(&self) -> CostProfile {
+        self.profile
+    }
+
+    fn my_rank(&self) -> u32 {
+        self.endpoint.rank()
+    }
+
+    /// Read `len` bytes out of a local endpoint slot.
+    fn read_local(src: &LocalMemorySlot, offset: usize, len: usize) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; len];
+        src.read_at(offset, &mut buf)?;
+        Ok(buf)
+    }
+}
+
+impl CommunicationManager for DistCommunicationManager {
+    fn exchange_global_slots(
+        &self,
+        tag: Tag,
+        local_slots: &[(Key, LocalMemorySlot)],
+    ) -> Result<BTreeMap<Key, GlobalMemorySlot>> {
+        // Bind our windows first so inbound puts racing the exchange
+        // result still land.
+        let mut entries = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for (key, slot) in local_slots {
+            if !seen.insert(*key) {
+                return Err(HicrError::Collective(format!(
+                    "duplicate key {key} in exchange under tag {tag}"
+                )));
+            }
+            self.endpoint.bind_window(tag, *key, slot.clone());
+            entries.push((key.0, slot.len() as u64));
+        }
+        let result = self.endpoint.exchange(tag, entries)?;
+        self.clock.advance(self.profile.fence_s); // collective cost
+        let mut map = BTreeMap::new();
+        let mut exchanged = self.exchanged.lock().unwrap();
+        for (key, owner, len) in result {
+            let key = Key(key);
+            let local = local_slots
+                .iter()
+                .find(|(k, _)| *k == key && owner == self.my_rank())
+                .map(|(_, s)| s.clone());
+            let gslot = GlobalMemorySlot {
+                tag,
+                key,
+                owner: InstanceId(owner),
+                len: len as usize,
+                local,
+            };
+            exchanged.insert((tag, key), gslot.clone());
+            map.insert(key, gslot);
+        }
+        Ok(map)
+    }
+
+    fn memcpy(
+        &self,
+        dst: &DataEndpoint,
+        dst_offset: usize,
+        src: &DataEndpoint,
+        src_offset: usize,
+        len: usize,
+    ) -> Result<()> {
+        let dir = validate_direction(dst, src)?;
+        validate_bounds(dst, dst_offset, len)?;
+        validate_bounds(src, src_offset, len)?;
+        match dir {
+            Direction::LocalToLocal => {
+                let (DataEndpoint::Local(d), DataEndpoint::Local(s)) = (dst, src) else {
+                    unreachable!()
+                };
+                d.copy_from(dst_offset, s, src_offset, len)?;
+            }
+            Direction::LocalToGlobal => {
+                let (DataEndpoint::Global(g), DataEndpoint::Local(_)) = (dst, src) else {
+                    unreachable!()
+                };
+                self.clock.advance(self.profile.transfer_time_s(len as u64));
+                if g.owner.0 == self.my_rank() {
+                    // Window we own: apply directly (loopback put).
+                    let local = g.local.clone().ok_or_else(|| {
+                        HicrError::InvalidState("own window without local slot".into())
+                    })?;
+                    local.copy_from(dst_offset, &self.resolve_local(src)?, src_offset, len)?;
+                } else {
+                    let data = Self::read_local(&self.resolve_local(src)?, src_offset, len)?;
+                    self.endpoint
+                        .put(g.owner.0, g.tag, g.key, dst_offset, data)?;
+                }
+            }
+            Direction::GlobalToLocal => {
+                let (DataEndpoint::Local(d), DataEndpoint::Global(g)) = (dst, src) else {
+                    unreachable!()
+                };
+                self.clock.advance(self.profile.transfer_time_s(len as u64));
+                if g.owner.0 == self.my_rank() {
+                    let local = g.local.clone().ok_or_else(|| {
+                        HicrError::InvalidState("own window without local slot".into())
+                    })?;
+                    d.copy_from(dst_offset, &local, src_offset, len)?;
+                } else {
+                    let data = self.endpoint.get(g.owner.0, g.tag, g.key, src_offset, len)?;
+                    d.write_at(dst_offset, &data)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn fence(&self, tag: Tag) -> Result<()> {
+        self.clock.advance(self.profile.fence_s);
+        self.endpoint.fence(tag)
+    }
+
+    fn destroy_global_slot(&self, slot: GlobalMemorySlot) -> Result<()> {
+        self.exchanged.lock().unwrap().remove(&(slot.tag, slot.key));
+        Ok(())
+    }
+
+    fn backend_name(&self) -> &'static str {
+        self.name
+    }
+}
+
+impl DistCommunicationManager {
+    /// A local endpoint must be backed by a real local slot.
+    fn resolve_local(&self, ep: &DataEndpoint) -> Result<LocalMemorySlot> {
+        match ep {
+            DataEndpoint::Local(s) => Ok(s.clone()),
+            DataEndpoint::Global(_) => Err(HicrError::Rejected(
+                "expected local endpoint".into(),
+            )),
+        }
+    }
+}
+
+/// Memory manager of the distributed backends: host allocations whose
+/// slots become windows when exchanged (MPI: `MPI_Win`; LPF: registered
+/// memory). Accounting matches the hostmem manager.
+pub struct DistMemoryManager {
+    inner: crate::backends::hostmem::HostMemoryManager,
+    name: &'static str,
+}
+
+impl DistMemoryManager {
+    pub fn new(name: &'static str) -> Self {
+        Self {
+            inner: crate::backends::hostmem::HostMemoryManager::new(),
+            name,
+        }
+    }
+}
+
+impl MemoryManager for DistMemoryManager {
+    fn allocate(&self, space: &MemorySpace, len: usize) -> Result<LocalMemorySlot> {
+        self.inner.allocate(space, len)
+    }
+
+    fn register(&self, space: &MemorySpace, data: Vec<u8>) -> Result<LocalMemorySlot> {
+        self.inner.register(space, data)
+    }
+
+    fn free(&self, slot: LocalMemorySlot) -> Result<()> {
+        self.inner.free(slot)
+    }
+
+    fn used_bytes(&self, space: MemorySpaceId) -> u64 {
+        self.inner.used_bytes(space)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        self.name
+    }
+}

@@ -1,0 +1,216 @@
+//! Host memory manager: malloc/free-style slot allocation with explicit
+//! memory-space targeting and per-space capacity accounting.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::MemorySpaceId;
+use crate::core::memory::{LocalMemorySlot, MemoryManager};
+use crate::core::topology::{MemorySpace, MemorySpaceKind};
+
+#[derive(Default)]
+struct SpaceAccount {
+    used: u64,
+    live_slots: HashMap<u64, usize>, // slot id -> len
+}
+
+/// Memory manager over host RAM. Accepts any `HostRam` memory space and
+/// enforces its physical capacity; rejects device spaces (those belong to
+/// the accelerator backend, mirroring the paper's "as long as the memory
+/// manager recognizes the specified memory space" rule).
+pub struct HostMemoryManager {
+    accounts: Mutex<HashMap<MemorySpaceId, SpaceAccount>>,
+}
+
+impl Default for HostMemoryManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HostMemoryManager {
+    pub fn new() -> Self {
+        Self {
+            accounts: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn check_space(space: &MemorySpace) -> Result<()> {
+        if space.kind != MemorySpaceKind::HostRam {
+            return Err(HicrError::Unsupported(format!(
+                "hostmem memory manager cannot operate on {:?} space '{}'",
+                space.kind, space.label
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl MemoryManager for HostMemoryManager {
+    fn allocate(&self, space: &MemorySpace, len: usize) -> Result<LocalMemorySlot> {
+        Self::check_space(space)?;
+        let mut accounts = self.accounts.lock().unwrap();
+        let account = accounts.entry(space.id).or_default();
+        if account.used.saturating_add(len as u64) > space.size_bytes {
+            return Err(HicrError::Allocation(format!(
+                "memory space '{}' exhausted: {} used + {} requested > {} capacity",
+                space.label, account.used, len, space.size_bytes
+            )));
+        }
+        let slot = LocalMemorySlot::alloc(space.id, len)?;
+        account.used += len as u64;
+        account.live_slots.insert(slot.id(), len);
+        Ok(slot)
+    }
+
+    fn register(&self, space: &MemorySpace, data: Vec<u8>) -> Result<LocalMemorySlot> {
+        Self::check_space(space)?;
+        let len = data.len();
+        let slot = LocalMemorySlot::register_vec(space.id, data)?;
+        let mut accounts = self.accounts.lock().unwrap();
+        let account = accounts.entry(space.id).or_default();
+        // Registered memory was allocated externally: tracked for free()
+        // symmetry but not counted against the space capacity.
+        account.live_slots.insert(slot.id(), len);
+        Ok(slot)
+    }
+
+    fn free(&self, slot: LocalMemorySlot) -> Result<()> {
+        let mut accounts = self.accounts.lock().unwrap();
+        let account = accounts.get_mut(&slot.memory_space()).ok_or_else(|| {
+            HicrError::InvalidState(format!(
+                "free of slot {} from unknown space {}",
+                slot.id(),
+                slot.memory_space()
+            ))
+        })?;
+        match account.live_slots.remove(&slot.id()) {
+            Some(len) => {
+                // Registered slots were never counted; saturating keeps
+                // the invariant used >= 0 for both classes.
+                account.used = account.used.saturating_sub(len as u64);
+                Ok(())
+            }
+            None => Err(HicrError::InvalidState(format!(
+                "double free or foreign slot {}",
+                slot.id()
+            ))),
+        }
+    }
+
+    fn used_bytes(&self, space: MemorySpaceId) -> u64 {
+        self.accounts
+            .lock()
+            .unwrap()
+            .get(&space)
+            .map(|a| a.used)
+            .unwrap_or(0)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "hostmem"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space(id: u64, size: u64) -> MemorySpace {
+        MemorySpace::new(id, MemorySpaceKind::HostRam, size, format!("ram{id}")).unwrap()
+    }
+
+    fn device_space() -> MemorySpace {
+        MemorySpace::new(99u64, MemorySpaceKind::DeviceHbm, 1 << 30, "hbm").unwrap()
+    }
+
+    #[test]
+    fn allocate_and_account() {
+        let mm = HostMemoryManager::new();
+        let sp = space(1, 100);
+        let a = mm.allocate(&sp, 60).unwrap();
+        assert_eq!(mm.used_bytes(sp.id), 60);
+        assert!(mm.allocate(&sp, 50).is_err(), "over-capacity must fail");
+        mm.free(a).unwrap();
+        assert_eq!(mm.used_bytes(sp.id), 0);
+        assert!(mm.allocate(&sp, 100).is_ok());
+    }
+
+    #[test]
+    fn rejects_foreign_space_kind() {
+        let mm = HostMemoryManager::new();
+        let err = mm.allocate(&device_space(), 16).unwrap_err();
+        assert!(err.is_rejection());
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mm = HostMemoryManager::new();
+        let sp = space(1, 100);
+        let a = mm.allocate(&sp, 10).unwrap();
+        let dup = a.clone();
+        mm.free(a).unwrap();
+        assert!(mm.free(dup).is_err());
+    }
+
+    #[test]
+    fn register_tracked_but_not_counted() {
+        let mm = HostMemoryManager::new();
+        let sp = space(2, 8); // tiny capacity
+        let r = mm.register(&sp, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]).unwrap();
+        assert_eq!(mm.used_bytes(sp.id), 0, "registered memory is external");
+        assert_eq!(r.to_vec()[8], 9);
+        mm.free(r).unwrap();
+    }
+
+    #[test]
+    fn free_from_unknown_space_fails() {
+        let mm = HostMemoryManager::new();
+        let slot = LocalMemorySlot::alloc(MemorySpaceId(77), 4).unwrap();
+        assert!(mm.free(slot).is_err());
+    }
+
+    #[test]
+    fn allocator_state_machine_property() {
+        // Random alloc/free sequences: accounting never exceeds capacity,
+        // used_bytes equals the sum of live allocation sizes.
+        crate::prop_check!("hostmem-accounting", |g| {
+            let capacity = g.sized(64, 4096) as u64;
+            let sp = space(1, capacity);
+            let mm = HostMemoryManager::new();
+            let mut live: Vec<(LocalMemorySlot, usize)> = Vec::new();
+            let mut model_used = 0u64;
+            for _ in 0..g.sized(1, 40) {
+                if g.rng.bool() || live.is_empty() {
+                    let len = g.sized(1, 256);
+                    match mm.allocate(&sp, len) {
+                        Ok(s) => {
+                            model_used += len as u64;
+                            live.push((s, len));
+                        }
+                        Err(_) => {
+                            if model_used + len as u64 <= capacity {
+                                return Err(format!(
+                                    "alloc({len}) failed with {model_used}/{capacity} used"
+                                ));
+                            }
+                        }
+                    }
+                } else {
+                    let idx = g.rng.range_usize(0, live.len() - 1);
+                    let (slot, len) = live.swap_remove(idx);
+                    mm.free(slot).map_err(|e| e.to_string())?;
+                    model_used -= len as u64;
+                }
+                if mm.used_bytes(sp.id) != model_used {
+                    return Err(format!(
+                        "accounting drift: {} != model {model_used}",
+                        mm.used_bytes(sp.id)
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! `hostmem` backend — the HWLoc analogue (paper §4.2).
+//!
+//! Implements topology discovery for CPU hosts (sockets/cores/SMT, NUMA
+//! domains and their DRAM) by parsing `/proc/cpuinfo`, `/proc/meminfo` and
+//! `/sys/devices/system/node`, and a memory manager allocating host RAM
+//! with per-memory-space accounting. Table 1 row: Topology ✓, Memory ✓,
+//! Instance ✓ (single-process detection).
+
+pub mod memory;
+pub mod topology;
+
+pub use memory::HostMemoryManager;
+pub use topology::HostTopologyManager;

@@ -1,0 +1,291 @@
+//! Host topology discovery from procfs/sysfs (the hwloc library is not
+//! available offline; we parse the same kernel sources hwloc does).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use crate::core::error::Result;
+use crate::core::ids::{ComputeResourceId, DeviceId};
+use crate::core::topology::{
+    ComputeResource, Device, DeviceKind, MemorySpace, MemorySpaceKind, Topology,
+    TopologyManager,
+};
+
+/// Topology manager for CPU hosts: one [`Device`] per NUMA node (or a
+/// single UMA device when the kernel exposes no NUMA information), each
+/// carrying its DRAM memory space and its logical CPUs.
+pub struct HostTopologyManager {
+    /// Root paths, overridable for testing.
+    proc_root: String,
+    sys_root: String,
+}
+
+impl Default for HostTopologyManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HostTopologyManager {
+    pub fn new() -> Self {
+        Self {
+            proc_root: "/proc".into(),
+            sys_root: "/sys".into(),
+        }
+    }
+
+    /// Test/bench constructor with fake proc/sys roots.
+    pub fn with_roots(proc_root: impl Into<String>, sys_root: impl Into<String>) -> Self {
+        Self {
+            proc_root: proc_root.into(),
+            sys_root: sys_root.into(),
+        }
+    }
+
+    fn cpu_count(&self) -> usize {
+        // Count "processor" stanzas in /proc/cpuinfo; fall back to 1.
+        fs::read_to_string(format!("{}/cpuinfo", self.proc_root))
+            .map(|text| {
+                text.lines()
+                    .filter(|l| l.starts_with("processor"))
+                    .count()
+                    .max(1)
+            })
+            .unwrap_or(1)
+    }
+
+    fn total_memory_bytes(&self) -> u64 {
+        // MemTotal is in kB.
+        fs::read_to_string(format!("{}/meminfo", self.proc_root))
+            .ok()
+            .and_then(|text| {
+                text.lines().find_map(|l| {
+                    l.strip_prefix("MemTotal:").map(|rest| {
+                        rest.trim()
+                            .trim_end_matches(" kB")
+                            .trim()
+                            .parse::<u64>()
+                            .unwrap_or(0)
+                            * 1024
+                    })
+                })
+            })
+            .filter(|&b| b > 0)
+            .unwrap_or(1 << 30)
+    }
+
+    /// NUMA node → cpu list from sysfs, if present.
+    fn numa_nodes(&self) -> BTreeMap<u32, Vec<u32>> {
+        let mut nodes = BTreeMap::new();
+        let base = format!("{}/devices/system/node", self.sys_root);
+        if let Ok(entries) = fs::read_dir(&base) {
+            for e in entries.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                if let Some(idx) = name.strip_prefix("node") {
+                    if let Ok(node_id) = idx.parse::<u32>() {
+                        let cpulist =
+                            fs::read_to_string(e.path().join("cpulist")).unwrap_or_default();
+                        let cpus = parse_cpulist(cpulist.trim());
+                        if !cpus.is_empty() {
+                            nodes.insert(node_id, cpus);
+                        }
+                    }
+                }
+            }
+        }
+        nodes
+    }
+
+    fn numa_mem_bytes(&self, node: u32) -> Option<u64> {
+        let path = format!(
+            "{}/devices/system/node/node{node}/meminfo",
+            self.sys_root
+        );
+        let text = fs::read_to_string(Path::new(&path)).ok()?;
+        text.lines().find_map(|l| {
+            // "Node 0 MemTotal:       65831244 kB"
+            let l = l.trim();
+            if l.contains("MemTotal:") {
+                l.rsplit_once("MemTotal:").and_then(|(_, rest)| {
+                    rest.trim()
+                        .trim_end_matches(" kB")
+                        .trim()
+                        .parse::<u64>()
+                        .ok()
+                        .map(|kb| kb * 1024)
+                })
+            } else {
+                None
+            }
+        })
+    }
+}
+
+/// Parse a kernel cpulist such as "0-3,8,10-11".
+pub fn parse_cpulist(s: &str) -> Vec<u32> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = part.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.parse::<u32>(), hi.parse::<u32>()) {
+                out.extend(lo..=hi);
+            }
+        } else if let Ok(v) = part.parse::<u32>() {
+            out.push(v);
+        }
+    }
+    out
+}
+
+impl TopologyManager for HostTopologyManager {
+    fn query_topology(&self) -> Result<Topology> {
+        let mut topo = Topology::new();
+        let numa = self.numa_nodes();
+        if numa.is_empty() {
+            // UMA: one device with all CPUs and all memory.
+            let n_cpus = self.cpu_count();
+            let mem = self.total_memory_bytes();
+            topo.devices.push(Device {
+                id: DeviceId(0),
+                kind: DeviceKind::NumaDomain,
+                name: "uma0".into(),
+                memory_spaces: vec![MemorySpace::new(
+                    1u64,
+                    MemorySpaceKind::HostRam,
+                    mem,
+                    "host-dram",
+                )?],
+                compute_resources: (0..n_cpus)
+                    .map(|i| ComputeResource {
+                        id: ComputeResourceId(i as u64),
+                        kind: "cpu-core".into(),
+                        os_index: i as u32,
+                        locality: 0,
+                    })
+                    .collect(),
+            });
+        } else {
+            let total = self.total_memory_bytes();
+            let per_node_fallback = total / numa.len() as u64;
+            for (node, cpus) in &numa {
+                let mem = self.numa_mem_bytes(*node).unwrap_or(per_node_fallback);
+                topo.devices.push(Device {
+                    id: DeviceId(*node),
+                    kind: DeviceKind::NumaDomain,
+                    name: format!("numa{node}"),
+                    memory_spaces: vec![MemorySpace::new(
+                        1 + *node as u64,
+                        MemorySpaceKind::HostRam,
+                        mem.max(1),
+                        format!("numa{node}-dram"),
+                    )?],
+                    compute_resources: cpus
+                        .iter()
+                        .map(|&cpu| ComputeResource {
+                            id: ComputeResourceId(cpu as u64),
+                            kind: "cpu-core".into(),
+                            os_index: cpu,
+                            locality: *node,
+                        })
+                        .collect(),
+                });
+            }
+        }
+        Ok(topo)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "hostmem"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3,8,10-11"), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist(""), Vec::<u32>::new());
+        assert_eq!(parse_cpulist(" 1 , 2 "), vec![1, 2]);
+        assert_eq!(parse_cpulist("bogus"), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn real_host_discovery() {
+        let tm = HostTopologyManager::new();
+        let topo = tm.query_topology().unwrap();
+        assert!(!topo.devices.is_empty());
+        assert!(topo.compute_resources().count() >= 1);
+        assert!(topo.total_memory() > 0);
+        // Every compute resource carries its NUMA locality.
+        for d in &topo.devices {
+            for c in &d.compute_resources {
+                assert_eq!(c.locality, d.id.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fake_numa_roots() {
+        let dir = std::env::temp_dir().join(format!("hicr-topo-{}", std::process::id()));
+        let node_dir = dir.join("sys/devices/system/node");
+        std::fs::create_dir_all(node_dir.join("node0")).unwrap();
+        std::fs::create_dir_all(node_dir.join("node1")).unwrap();
+        std::fs::create_dir_all(dir.join("proc")).unwrap();
+        std::fs::write(node_dir.join("node0/cpulist"), "0-1\n").unwrap();
+        std::fs::write(node_dir.join("node1/cpulist"), "2-3\n").unwrap();
+        std::fs::write(
+            node_dir.join("node0/meminfo"),
+            "Node 0 MemTotal:       1024 kB\n",
+        )
+        .unwrap();
+        std::fs::write(
+            node_dir.join("node1/meminfo"),
+            "Node 1 MemTotal:       2048 kB\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("proc/cpuinfo"),
+            "processor\t: 0\nprocessor\t: 1\nprocessor\t: 2\nprocessor\t: 3\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("proc/meminfo"), "MemTotal: 4096 kB\n").unwrap();
+
+        let tm = HostTopologyManager::with_roots(
+            dir.join("proc").to_string_lossy(),
+            dir.join("sys").to_string_lossy(),
+        );
+        let topo = tm.query_topology().unwrap();
+        assert_eq!(topo.devices.len(), 2);
+        assert_eq!(topo.devices[0].compute_resources.len(), 2);
+        assert_eq!(topo.devices[0].memory_spaces[0].size_bytes, 1024 * 1024);
+        assert_eq!(topo.devices[1].memory_spaces[0].size_bytes, 2048 * 1024);
+        // Serialization broadcast path works on discovered topologies.
+        let rt = Topology::deserialize(&topo.serialize()).unwrap();
+        assert_eq!(rt, topo);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn uma_fallback_without_sysfs() {
+        let dir = std::env::temp_dir().join(format!("hicr-uma-{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("proc")).unwrap();
+        std::fs::write(dir.join("proc/cpuinfo"), "processor\t: 0\n").unwrap();
+        std::fs::write(dir.join("proc/meminfo"), "MemTotal: 8192 kB\n").unwrap();
+        let tm = HostTopologyManager::with_roots(
+            dir.join("proc").to_string_lossy(),
+            dir.join("nosys").to_string_lossy(),
+        );
+        let topo = tm.query_topology().unwrap();
+        assert_eq!(topo.devices.len(), 1);
+        assert_eq!(topo.devices[0].name, "uma0");
+        assert_eq!(topo.total_memory(), 8192 * 1024);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

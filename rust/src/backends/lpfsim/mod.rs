@@ -1,0 +1,23 @@
+//! `lpfsim` backend — the LPF (Lightweight Parallel Foundations) analogue
+//! (paper §4.2): BSP-style one-sided puts/gets whose completion is
+//! realized through lightweight synchronization, modeled after LPF's
+//! ibverbs "zero" engine with hardware completion queues (the top series
+//! of Fig. 8). Table 1 row: Communication ✓, Memory ✓.
+//!
+//! Semantics are shared with `mpisim` (see `backends::dist`); the
+//! difference the paper measures — minimal per-message handshaking — is
+//! carried by the `LPF_IBVERBS_EDR` cost profile.
+
+use crate::backends::dist::{DistCommunicationManager, DistMemoryManager};
+use crate::netsim::endpoint::Endpoint;
+use crate::netsim::fabric::LPF_IBVERBS_EDR;
+
+/// LPF-analogue communication manager.
+pub fn communication_manager(endpoint: Endpoint) -> DistCommunicationManager {
+    DistCommunicationManager::new(endpoint, LPF_IBVERBS_EDR, "lpfsim")
+}
+
+/// LPF-analogue memory manager.
+pub fn memory_manager() -> DistMemoryManager {
+    DistMemoryManager::new("lpfsim")
+}

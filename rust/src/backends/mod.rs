@@ -1,0 +1,99 @@
+//! Built-in backends (paper §4.2, Table 1): plugins translating subsets of
+//! the HiCR model into technology-specific operations.
+//!
+//! | Backend   | Topology | Instance | Communication | Memory | Compute |
+//! |-----------|----------|----------|---------------|--------|---------|
+//! | `mpisim`  |          | ✓        | ✓             | ✓      |         |
+//! | `lpfsim`  |          |          | ✓             | ✓      |         |
+//! | `hostmem` | ✓        | ✓        |               | ✓      |         |
+//! | `xlacomp` | ✓        |          | ✓             | ✓      | ✓       |
+//! | `threads` |          |          | ✓             |        | ✓       |
+//! | `coro`    |          |          |               |        | ✓       |
+//! | `nosv`    |          |          |               |        | ✓       |
+//!
+//! (`mpisim`/`lpfsim` stand in for the paper's MPI/LPF backends, `xlacomp`
+//! for ACL/OpenCL, `coro` for Boost.Context, `nosv` for nOS-V — see
+//! DESIGN.md §2 for the substitution rationale.)
+
+pub mod coro;
+pub mod dist;
+pub mod hostmem;
+pub mod lpfsim;
+pub mod mpisim;
+pub mod nosv;
+pub mod threads;
+pub mod xlacomp;
+
+/// Backend-coverage matrix row (printed by `hicr backends`, asserted by
+/// the Table 1 integration test).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackendCoverage {
+    pub name: &'static str,
+    pub topology: bool,
+    pub instance: bool,
+    pub communication: bool,
+    pub memory: bool,
+    pub compute: bool,
+}
+
+/// The built-in coverage matrix (our Table 1).
+pub fn coverage_matrix() -> Vec<BackendCoverage> {
+    vec![
+        BackendCoverage {
+            name: "mpisim",
+            topology: false,
+            instance: true,
+            communication: true,
+            memory: true,
+            compute: false,
+        },
+        BackendCoverage {
+            name: "lpfsim",
+            topology: false,
+            instance: false,
+            communication: true,
+            memory: true,
+            compute: false,
+        },
+        BackendCoverage {
+            name: "hostmem",
+            topology: true,
+            instance: true,
+            communication: false,
+            memory: true,
+            compute: false,
+        },
+        BackendCoverage {
+            name: "xlacomp",
+            topology: true,
+            instance: false,
+            communication: true,
+            memory: true,
+            compute: true,
+        },
+        BackendCoverage {
+            name: "threads",
+            topology: false,
+            instance: false,
+            communication: true,
+            memory: false,
+            compute: true,
+        },
+        BackendCoverage {
+            name: "coro",
+            topology: false,
+            instance: false,
+            communication: false,
+            memory: false,
+            compute: true,
+        },
+        BackendCoverage {
+            name: "nosv",
+            topology: false,
+            instance: false,
+            communication: false,
+            memory: false,
+            compute: true,
+        },
+    ]
+}

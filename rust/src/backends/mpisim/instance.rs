@@ -1,0 +1,88 @@
+//! MPI-analogue instance manager: detects launch-time instances (the
+//! `mpirun -np N` pattern — here `hicr launch --np N`) and creates new
+//! ones at runtime through the hub (the cloud ramp-up pattern, which the
+//! paper assigns to its YuanRong backend; the hub plays the provider).
+
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::InstanceId;
+use crate::core::instance::{Instance, InstanceManager, InstanceTemplate};
+use crate::netsim::endpoint::Endpoint;
+
+/// Environment variables the launcher sets for every instance process.
+pub const ENV_RANK: &str = "HICR_RANK";
+pub const ENV_WORLD: &str = "HICR_WORLD";
+pub const ENV_HUB: &str = "HICR_HUB";
+
+/// Instance manager over the hub/endpoint substrate.
+pub struct MpiInstanceManager {
+    endpoint: Endpoint,
+}
+
+impl MpiInstanceManager {
+    pub fn new(endpoint: Endpoint) -> Self {
+        Self { endpoint }
+    }
+
+    /// Construct from the launcher environment (rank + hub socket).
+    pub fn from_env() -> Result<Self> {
+        let rank: u32 = std::env::var(ENV_RANK)
+            .map_err(|_| HicrError::Instance(format!("{ENV_RANK} not set")))?
+            .parse()
+            .map_err(|e| HicrError::Instance(format!("bad {ENV_RANK}: {e}")))?;
+        let hub = std::env::var(ENV_HUB)
+            .map_err(|_| HicrError::Instance(format!("{ENV_HUB} not set")))?;
+        let endpoint = Endpoint::connect(std::path::Path::new(&hub), rank)?;
+        Ok(Self::new(endpoint))
+    }
+
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+}
+
+impl InstanceManager for MpiInstanceManager {
+    fn current_instance(&self) -> Instance {
+        Instance {
+            id: InstanceId(self.endpoint.rank()),
+            // Root = rank 0 of the launch-time group (tie-breaking only).
+            is_root: self.endpoint.rank() == 0,
+        }
+    }
+
+    fn instances(&self) -> Result<Vec<Instance>> {
+        Ok(self
+            .endpoint
+            .list_instances()?
+            .into_iter()
+            .map(|r| Instance {
+                id: InstanceId(r),
+                is_root: r == 0,
+            })
+            .collect())
+    }
+
+    fn create_instances(
+        &self,
+        count: usize,
+        template: &InstanceTemplate,
+    ) -> Result<Vec<Instance>> {
+        let new_ranks = self
+            .endpoint
+            .spawn_instances(count as u32, &template.to_json().to_string_compact())?;
+        Ok(new_ranks
+            .into_iter()
+            .map(|r| Instance {
+                id: InstanceId(r),
+                is_root: false,
+            })
+            .collect())
+    }
+
+    fn barrier(&self) -> Result<()> {
+        self.endpoint.barrier()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "mpisim"
+    }
+}

@@ -1,0 +1,271 @@
+//! Thread-per-task compute manager with a global admission lock and
+//! eager-polling completion — the nOS-V execution model.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::backends::threads::compute::HostExecutionState;
+use crate::core::compute::{
+    ComputeManager, ExecStatus, ExecutionState, ExecutionUnit, FnExecutionUnit,
+    ProcessingUnit,
+};
+use crate::core::error::{HicrError, Result};
+use crate::core::topology::ComputeResource;
+
+/// System-wide scheduler state shared by all nosv processing units in the
+/// process (nOS-V's scheduler is shared across *processes*; one process is
+/// the closest in-sandbox equivalent).
+struct GlobalScheduler {
+    /// Admission lock: every task start and completion poll serializes
+    /// through it, mirroring nOS-V's centralized scheduling decisions.
+    admission: Mutex<()>,
+    tasks_started: AtomicUsize,
+    threads_spawned: AtomicUsize,
+}
+
+static SCHEDULER: once_cell::sync::Lazy<GlobalScheduler> =
+    once_cell::sync::Lazy::new(|| GlobalScheduler {
+        admission: Mutex::new(()),
+        tasks_started: AtomicUsize::new(0),
+        threads_spawned: AtomicUsize::new(0),
+    });
+
+/// A processing unit in the nosv model: a *slot* in the system-wide pool.
+/// Starting a state spawns a dedicated kernel thread for it (thread-per-
+/// task); awaiting eagerly polls completion.
+pub struct NosvProcessingUnit {
+    resource: ComputeResource,
+    live: Mutex<Vec<Arc<HostExecutionState>>>,
+    terminated: Mutex<bool>,
+    /// Spin-poll interval; eager polling = zero sleep, pure spinning.
+    eager_polling: bool,
+}
+
+impl NosvProcessingUnit {
+    fn new(resource: ComputeResource, eager_polling: bool) -> Arc<Self> {
+        Arc::new(Self {
+            resource,
+            live: Mutex::new(Vec::new()),
+            terminated: Mutex::new(false),
+            eager_polling,
+        })
+    }
+}
+
+impl ProcessingUnit for NosvProcessingUnit {
+    fn resource(&self) -> &ComputeResource {
+        &self.resource
+    }
+
+    fn start(&self, state: Arc<dyn ExecutionState>) -> Result<()> {
+        if *self.terminated.lock().unwrap() {
+            return Err(HicrError::InvalidState("processing unit terminated".into()));
+        }
+        let state = state
+            .as_any_arc()
+            .downcast::<HostExecutionState>()
+            .map_err(|_| {
+                HicrError::Unsupported(
+                    "nosv processing unit executes HostExecutionState only".into(),
+                )
+            })?;
+        if state.status() != ExecStatus::Ready {
+            return Err(HicrError::InvalidState(
+                "execution state already started (states are single-use)".into(),
+            ));
+        }
+        // Admission through the system-wide scheduler lock.
+        {
+            let _admit = SCHEDULER.admission.lock().unwrap();
+            SCHEDULER.tasks_started.fetch_add(1, Ordering::Relaxed);
+        }
+        // Thread-per-task: the defining (and deliberately expensive)
+        // property of this execution model.
+        let thread_state = Arc::clone(&state);
+        SCHEDULER.threads_spawned.fetch_add(1, Ordering::Relaxed);
+        std::thread::Builder::new()
+            .name("nosv-task".into())
+            .spawn(move || {
+                thread_state.run_to_completion();
+            })
+            .map_err(|e| HicrError::InvalidState(format!("task thread spawn: {e}")))?;
+        self.live.lock().unwrap().push(state);
+        Ok(())
+    }
+
+    fn await_all(&self) -> Result<()> {
+        // Eager polling: repeatedly probe completion under the global
+        // scheduler lock (nOS-V's communication-phase interference).
+        loop {
+            {
+                let _admit = SCHEDULER.admission.lock().unwrap();
+                let mut live = self.live.lock().unwrap();
+                live.retain(|s| !s.is_finished());
+                if live.is_empty() {
+                    return Ok(());
+                }
+            }
+            if self.eager_polling {
+                std::hint::spin_loop();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+    }
+
+    fn terminate(&self) -> Result<()> {
+        self.await_all()?;
+        *self.terminated.lock().unwrap() = true;
+        Ok(())
+    }
+
+    fn status(&self) -> ExecStatus {
+        if *self.terminated.lock().unwrap() {
+            ExecStatus::Finished
+        } else if self
+            .live
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|s| !s.is_finished())
+        {
+            ExecStatus::Running
+        } else {
+            ExecStatus::Ready
+        }
+    }
+}
+
+/// The nOS-V-analogue compute manager.
+pub struct NosvComputeManager {
+    /// Eager (spinning) completion polling — the paper's observed default.
+    pub eager_polling: bool,
+}
+
+impl Default for NosvComputeManager {
+    fn default() -> Self {
+        Self {
+            eager_polling: true,
+        }
+    }
+}
+
+impl NosvComputeManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total tasks admitted through the system-wide scheduler (metrics).
+    pub fn tasks_started() -> usize {
+        SCHEDULER.tasks_started.load(Ordering::Relaxed)
+    }
+
+    /// Total kernel threads spawned for tasks (contrast with the coro
+    /// backend's pooled count — the Fig. 9 mechanism).
+    pub fn threads_spawned() -> usize {
+        SCHEDULER.threads_spawned.load(Ordering::Relaxed)
+    }
+}
+
+impl ComputeManager for NosvComputeManager {
+    fn create_processing_unit(
+        &self,
+        resource: &ComputeResource,
+    ) -> Result<Arc<dyn ProcessingUnit>> {
+        Ok(NosvProcessingUnit::new(resource.clone(), self.eager_polling))
+    }
+
+    fn create_execution_state(
+        &self,
+        unit: Arc<dyn ExecutionUnit>,
+    ) -> Result<Arc<dyn ExecutionState>> {
+        let f = unit
+            .as_any()
+            .downcast_ref::<FnExecutionUnit>()
+            .ok_or_else(|| {
+                HicrError::Unsupported(
+                    "nosv compute manager prescribes FnExecutionUnit".into(),
+                )
+            })?;
+        let cloned = FnExecutionUnit::new(f.name().to_string(), {
+            let func = f.func();
+            move |ctx| func(ctx)
+        });
+        Ok(HostExecutionState::new(cloned))
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "nosv"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    fn resource() -> ComputeResource {
+        ComputeResource {
+            id: crate::core::ids::ComputeResourceId(0),
+            kind: "cpu-core".into(),
+            os_index: 0,
+            locality: 0,
+        }
+    }
+
+    #[test]
+    fn executes_tasks_thread_per_task() {
+        let cm = NosvComputeManager::new();
+        let before = NosvComputeManager::threads_spawned();
+        let pu = cm.create_processing_unit(&resource()).unwrap();
+        let hits = Arc::new(AtomicU32::new(0));
+        for _ in 0..8 {
+            let h = Arc::clone(&hits);
+            let st = cm
+                .create_execution_state(FnExecutionUnit::new("t", move |_| {
+                    h.fetch_add(1, Ordering::SeqCst);
+                }) as Arc<dyn ExecutionUnit>)
+                .unwrap();
+            pu.start(st).unwrap();
+        }
+        pu.await_all().unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+        // One kernel thread per task: the signature cost of this model.
+        assert_eq!(NosvComputeManager::threads_spawned() - before, 8);
+        pu.terminate().unwrap();
+    }
+
+    #[test]
+    fn start_after_terminate_rejected() {
+        let cm = NosvComputeManager::new();
+        let pu = cm.create_processing_unit(&resource()).unwrap();
+        pu.terminate().unwrap();
+        let st = cm
+            .create_execution_state(FnExecutionUnit::new("x", |_| {}) as Arc<dyn ExecutionUnit>)
+            .unwrap();
+        assert!(pu.start(st).is_err());
+    }
+
+    #[test]
+    fn state_wait_blocks_until_done() {
+        let cm = NosvComputeManager::new();
+        let pu = cm.create_processing_unit(&resource()).unwrap();
+        let st = cm
+            .create_execution_state(FnExecutionUnit::new("sleepy", |_| {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }) as Arc<dyn ExecutionUnit>)
+            .unwrap();
+        pu.start(Arc::clone(&st)).unwrap();
+        st.wait().unwrap();
+        assert_eq!(st.status(), ExecStatus::Finished);
+        pu.terminate().unwrap();
+    }
+}
+
+/// Admit one task through the system-wide scheduler (used by the Tasking
+/// frontend's nosv engine, which spawns its own task threads).
+pub fn admit_task() {
+    let _admit = SCHEDULER.admission.lock().unwrap();
+    SCHEDULER.tasks_started.fetch_add(1, Ordering::Relaxed);
+    SCHEDULER.threads_spawned.fetch_add(1, Ordering::Relaxed);
+}

@@ -1,0 +1,13 @@
+//! `nosv` backend — the nOS-V analogue (paper §4.2).
+//!
+//! nOS-V assigns each task to its own *kernel-level thread* drawn from a
+//! system-wide scheduler pool shared across processes. This backend
+//! reproduces that execution model: every execution state runs on a
+//! freshly spawned kernel thread admitted through a global scheduler lock,
+//! and completion is observed by *eager polling* (the behaviour the paper
+//! identifies as the cause of nOS-V's distributed-phase interference in
+//! Test Case 4). Table 1 row: Compute ✓.
+
+pub mod compute;
+
+pub use compute::NosvComputeManager;

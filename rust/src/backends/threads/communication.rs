@@ -1,0 +1,376 @@
+//! Thread-based communication manager: intra-instance transfers via plain
+//! memcpy with mutex-guarded fencing, plus an in-process global-slot
+//! registry so shared-memory "instances" (threads) can exchange slots.
+//!
+//! This mirrors the paper's Pthreads backend: "the communication manager
+//! employs the standard C memcpy operation, and guarantees correct fencing
+//! using mutual exclusion mechanisms".
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Condvar, Mutex};
+
+use crate::core::communication::{
+    validate_bounds, validate_direction, CommunicationManager, DataEndpoint,
+    GlobalMemorySlot,
+};
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::{InstanceId, Key, Tag};
+use crate::core::memory::LocalMemorySlot;
+
+#[derive(Default)]
+struct Registry {
+    /// (tag, key) -> exchanged slot.
+    slots: HashMap<(Tag, Key), GlobalMemorySlot>,
+    /// Transfers initiated but not yet fenced, per tag.
+    pending: HashMap<Tag, usize>,
+}
+
+/// Intra-instance communication manager (Pthreads analogue).
+pub struct ThreadsCommunicationManager {
+    registry: Mutex<Registry>,
+    fence_cv: Condvar,
+    /// Copies are synchronous; `defer_completion` exists to let tests and
+    /// property checks exercise the pending/fence accounting honestly.
+    defer_completion: bool,
+}
+
+impl Default for ThreadsCommunicationManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThreadsCommunicationManager {
+    pub fn new() -> Self {
+        Self {
+            registry: Mutex::new(Registry::default()),
+            fence_cv: Condvar::new(),
+            defer_completion: false,
+        }
+    }
+
+    /// Resolve an endpoint to its local backing slot (all global slots in
+    /// this backend are process-local by construction).
+    fn resolve(&self, ep: &DataEndpoint) -> Result<LocalMemorySlot> {
+        match ep {
+            DataEndpoint::Local(s) => Ok(s.clone()),
+            DataEndpoint::Global(g) => {
+                if let Some(local) = &g.local {
+                    return Ok(local.clone());
+                }
+                let reg = self.registry.lock().unwrap();
+                reg.slots
+                    .get(&(g.tag, g.key))
+                    .and_then(|s| s.local.clone())
+                    .ok_or_else(|| {
+                        HicrError::Unsupported(format!(
+                            "global slot (tag {}, key {}) not registered with this \
+                             intra-process communication manager",
+                            g.tag, g.key
+                        ))
+                    })
+            }
+        }
+    }
+
+    fn tag_of(ep: &DataEndpoint) -> Option<Tag> {
+        match ep {
+            DataEndpoint::Global(g) => Some(g.tag),
+            DataEndpoint::Local(_) => None,
+        }
+    }
+}
+
+impl CommunicationManager for ThreadsCommunicationManager {
+    fn exchange_global_slots(
+        &self,
+        tag: Tag,
+        local_slots: &[(Key, LocalMemorySlot)],
+    ) -> Result<BTreeMap<Key, GlobalMemorySlot>> {
+        let mut reg = self.registry.lock().unwrap();
+        // Keys must be unique within the exchange.
+        let mut seen = std::collections::BTreeSet::new();
+        for (key, slot) in local_slots {
+            if !seen.insert(*key) {
+                return Err(HicrError::Collective(format!(
+                    "duplicate key {key} in exchange under tag {tag}"
+                )));
+            }
+            let gslot = GlobalMemorySlot {
+                tag,
+                key: *key,
+                owner: InstanceId(0),
+                len: slot.len(),
+                local: Some(slot.clone()),
+            };
+            reg.slots.insert((tag, *key), gslot.clone());
+        }
+        // Single-instance backend: "participants" are threads of this
+        // process calling exchange at their own pace, so the collective
+        // result is the union of everything registered under the tag so
+        // far (late joiners see earlier contributions).
+        let out: BTreeMap<Key, GlobalMemorySlot> = reg
+            .slots
+            .iter()
+            .filter(|((t, _), _)| *t == tag)
+            .map(|((_, k), v)| (*k, v.clone()))
+            .collect();
+        Ok(out)
+    }
+
+    fn memcpy(
+        &self,
+        dst: &DataEndpoint,
+        dst_offset: usize,
+        src: &DataEndpoint,
+        src_offset: usize,
+        len: usize,
+    ) -> Result<()> {
+        validate_direction(dst, src)?;
+        validate_bounds(dst, dst_offset, len)?;
+        validate_bounds(src, src_offset, len)?;
+        let dst_slot = self.resolve(dst)?;
+        let src_slot = self.resolve(src)?;
+        // Count the op as pending on any involved tag, then complete it
+        // synchronously (memcpy) and retire it. The lock is *not* held
+        // across the copy: fencing only needs the counter.
+        let tags: Vec<Tag> = [Self::tag_of(dst), Self::tag_of(src)]
+            .into_iter()
+            .flatten()
+            .collect();
+        {
+            let mut reg = self.registry.lock().unwrap();
+            for t in &tags {
+                *reg.pending.entry(*t).or_insert(0) += 1;
+            }
+        }
+        let copy_result = dst_slot.copy_from(dst_offset, &src_slot, src_offset, len);
+        if !self.defer_completion {
+            let mut reg = self.registry.lock().unwrap();
+            for t in &tags {
+                if let Some(n) = reg.pending.get_mut(t) {
+                    *n -= 1;
+                }
+            }
+            drop(reg);
+            self.fence_cv.notify_all();
+        }
+        copy_result
+    }
+
+    fn fence(&self, tag: Tag) -> Result<()> {
+        let mut reg = self.registry.lock().unwrap();
+        while reg.pending.get(&tag).copied().unwrap_or(0) > 0 {
+            reg = self.fence_cv.wait(reg).unwrap();
+        }
+        Ok(())
+    }
+
+    fn destroy_global_slot(&self, slot: GlobalMemorySlot) -> Result<()> {
+        let mut reg = self.registry.lock().unwrap();
+        reg.slots.remove(&(slot.tag, slot.key));
+        Ok(())
+    }
+
+    fn lookup_global_slot(&self, tag: Tag, key: Key) -> Option<GlobalMemorySlot> {
+        self.registry.lock().unwrap().slots.get(&(tag, key)).cloned()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "threads"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ids::MemorySpaceId;
+
+    fn slot(len: usize) -> LocalMemorySlot {
+        LocalMemorySlot::alloc(MemorySpaceId(1), len).unwrap()
+    }
+
+    #[test]
+    fn local_to_local_copy() {
+        let cmm = ThreadsCommunicationManager::new();
+        let a = slot(8);
+        let b = slot(8);
+        a.write_at(0, &[1, 2, 3, 4]).unwrap();
+        cmm.memcpy(
+            &DataEndpoint::Local(b.clone()),
+            2,
+            &DataEndpoint::Local(a),
+            0,
+            4,
+        )
+        .unwrap();
+        cmm.fence(Tag(0)).unwrap();
+        assert_eq!(b.to_vec(), vec![0, 0, 1, 2, 3, 4, 0, 0]);
+    }
+
+    #[test]
+    fn exchange_then_global_transfers() {
+        let cmm = ThreadsCommunicationManager::new();
+        let src = slot(4);
+        src.write_at(0, &[7, 7, 7, 7]).unwrap();
+        let dst = slot(4);
+        let exchanged = cmm
+            .exchange_global_slots(Tag(1), &[(Key(0), dst.clone())])
+            .unwrap();
+        let gdst = exchanged.get(&Key(0)).unwrap().clone();
+        // Local -> Global.
+        cmm.memcpy(
+            &DataEndpoint::Global(gdst.clone()),
+            0,
+            &DataEndpoint::Local(src),
+            0,
+            4,
+        )
+        .unwrap();
+        cmm.fence(Tag(1)).unwrap();
+        assert_eq!(dst.to_vec(), vec![7; 4]);
+        // Global -> Local.
+        let back = slot(4);
+        cmm.memcpy(
+            &DataEndpoint::Local(back.clone()),
+            0,
+            &DataEndpoint::Global(gdst),
+            0,
+            4,
+        )
+        .unwrap();
+        cmm.fence(Tag(1)).unwrap();
+        assert_eq!(back.to_vec(), vec![7; 4]);
+    }
+
+    #[test]
+    fn g2g_rejected() {
+        let cmm = ThreadsCommunicationManager::new();
+        let a = slot(4);
+        let b = slot(4);
+        let ga = cmm
+            .exchange_global_slots(Tag(2), &[(Key(0), a)])
+            .unwrap()
+            .remove(&Key(0))
+            .unwrap();
+        let gb = cmm
+            .exchange_global_slots(Tag(2), &[(Key(1), b)])
+            .unwrap()
+            .remove(&Key(1))
+            .unwrap();
+        let err = cmm
+            .memcpy(&DataEndpoint::Global(ga), 0, &DataEndpoint::Global(gb), 0, 4)
+            .unwrap_err();
+        assert!(err.is_rejection());
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let cmm = ThreadsCommunicationManager::new();
+        let err = cmm
+            .exchange_global_slots(Tag(3), &[(Key(5), slot(1)), (Key(5), slot(1))])
+            .unwrap_err();
+        assert!(matches!(err, HicrError::Collective(_)));
+    }
+
+    #[test]
+    fn unregistered_global_slot_rejected() {
+        let cmm = ThreadsCommunicationManager::new();
+        let ghost = GlobalMemorySlot {
+            tag: Tag(9),
+            key: Key(9),
+            owner: InstanceId(1),
+            len: 4,
+            local: None,
+        };
+        let err = cmm
+            .memcpy(
+                &DataEndpoint::Local(slot(4)),
+                0,
+                &DataEndpoint::Global(ghost),
+                0,
+                4,
+            )
+            .unwrap_err();
+        assert!(err.is_rejection());
+    }
+
+    #[test]
+    fn destroy_removes_visibility() {
+        let cmm = ThreadsCommunicationManager::new();
+        let a = slot(4);
+        let ga = cmm
+            .exchange_global_slots(Tag(4), &[(Key(0), a)])
+            .unwrap()
+            .remove(&Key(0))
+            .unwrap();
+        // Strip the local handle to force registry resolution.
+        let mut remote_view = ga.clone();
+        remote_view.local = None;
+        cmm.destroy_global_slot(ga).unwrap();
+        let err = cmm
+            .memcpy(
+                &DataEndpoint::Local(slot(4)),
+                0,
+                &DataEndpoint::Global(remote_view),
+                0,
+                4,
+            )
+            .unwrap_err();
+        assert!(err.is_rejection());
+    }
+
+    #[test]
+    fn broadcast_fig5_idiom() {
+        // Paper Fig. 5: copy one message into a slot per memory space.
+        let cmm = ThreadsCommunicationManager::new();
+        let message = slot(16);
+        message.write_at(0, b"hello, spaces!!!").unwrap();
+        let destinations: Vec<LocalMemorySlot> = (0..5).map(|_| slot(16)).collect();
+        for d in &destinations {
+            cmm.memcpy(
+                &DataEndpoint::Local(d.clone()),
+                0,
+                &DataEndpoint::Local(message.clone()),
+                0,
+                16,
+            )
+            .unwrap();
+        }
+        cmm.fence(Tag(0)).unwrap();
+        for d in &destinations {
+            assert_eq!(d.to_vec(), b"hello, spaces!!!");
+        }
+    }
+
+    #[test]
+    fn memcpy_under_concurrency() {
+        // Many threads copying through one manager: all copies land.
+        let cmm = std::sync::Arc::new(ThreadsCommunicationManager::new());
+        let src = slot(8);
+        src.write_at(0, &[42; 8]).unwrap();
+        let dsts: Vec<LocalMemorySlot> = (0..8).map(|_| slot(8)).collect();
+        let mut handles = Vec::new();
+        for d in dsts.clone() {
+            let cmm = std::sync::Arc::clone(&cmm);
+            let s = src.clone();
+            handles.push(std::thread::spawn(move || {
+                cmm.memcpy(
+                    &DataEndpoint::Local(d),
+                    0,
+                    &DataEndpoint::Local(s),
+                    0,
+                    8,
+                )
+                .unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        cmm.fence(Tag(0)).unwrap();
+        for d in &dsts {
+            assert_eq!(d.to_vec(), vec![42; 8]);
+        }
+    }
+}

@@ -1,0 +1,371 @@
+//! Thread-based compute manager: each processing unit is a persistent OS
+//! worker thread (optionally pinned to its compute resource's core) that
+//! executes host-closure execution states from a queue.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::core::compute::{
+    ComputeManager, ExecCtx, ExecStatus, ExecutionState, ExecutionUnit,
+    FnExecutionUnit, NoSuspend, ProcessingUnit,
+};
+use crate::core::error::{HicrError, Result};
+use crate::core::topology::ComputeResource;
+
+/// Best-effort pin of the calling thread to one CPU (Linux only). With
+/// fewer physical cores than requested (this sandbox has one) failures are
+/// silently ignored — placement is a performance hint, not a semantic.
+pub fn pin_to_core(core: u32) {
+    #[cfg(target_os = "linux")]
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        libc::CPU_SET(core as usize, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+    }
+    #[cfg(not(target_os = "linux"))]
+    let _ = core;
+}
+
+/// Execution state over a host closure: tracks Ready → Running → Finished
+/// (or Failed on panic) with condvar-based blocking waits.
+pub struct HostExecutionState {
+    unit: Arc<FnExecutionUnit>,
+    status: Mutex<ExecStatus>,
+    cv: Condvar,
+}
+
+impl HostExecutionState {
+    pub fn new(unit: Arc<FnExecutionUnit>) -> Arc<Self> {
+        Arc::new(Self {
+            unit,
+            status: Mutex::new(ExecStatus::Ready),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn set_status(&self, s: ExecStatus) {
+        *self.status.lock().unwrap() = s;
+        self.cv.notify_all();
+    }
+
+    /// Execute the closure on the calling thread, updating lifecycle.
+    /// Used by the threads and nosv backends (run-to-completion).
+    pub fn run_to_completion(&self) {
+        self.set_status(ExecStatus::Running);
+        let ctx = ExecCtx {
+            suspender: &NoSuspend,
+        };
+        let f = self.unit.func();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&ctx)));
+        self.set_status(match outcome {
+            Ok(()) => ExecStatus::Finished,
+            Err(_) => ExecStatus::Failed,
+        });
+    }
+}
+
+impl ExecutionState for HostExecutionState {
+    fn status(&self) -> ExecStatus {
+        *self.status.lock().unwrap()
+    }
+
+    fn wait(&self) -> Result<()> {
+        let mut st = self.status.lock().unwrap();
+        while !matches!(*st, ExecStatus::Finished | ExecStatus::Failed) {
+            st = self.cv.wait(st).unwrap();
+        }
+        if *st == ExecStatus::Failed {
+            return Err(HicrError::InvalidState(format!(
+                "execution unit '{}' panicked",
+                self.unit.name()
+            )));
+        }
+        Ok(())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_arc(self: Arc<Self>) -> Arc<dyn std::any::Any + Send + Sync> {
+        self
+    }
+}
+
+enum Job {
+    Run(Arc<HostExecutionState>),
+    Shutdown,
+}
+
+struct PuShared {
+    pending: AtomicUsize,
+    idle_cv: Condvar,
+    idle_mx: Mutex<()>,
+}
+
+/// A persistent worker thread bound (best effort) to one compute resource.
+pub struct ThreadProcessingUnit {
+    resource: ComputeResource,
+    tx: Mutex<Option<Sender<Job>>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+    shared: Arc<PuShared>,
+}
+
+impl ThreadProcessingUnit {
+    fn new(resource: ComputeResource, pin: bool) -> Arc<Self> {
+        let (tx, rx) = channel::<Job>();
+        let shared = Arc::new(PuShared {
+            pending: AtomicUsize::new(0),
+            idle_cv: Condvar::new(),
+            idle_mx: Mutex::new(()),
+        });
+        let worker_shared = Arc::clone(&shared);
+        let core = resource.os_index;
+        let handle = std::thread::Builder::new()
+            .name(format!("hicr-pu-{}", resource.id.0))
+            .spawn(move || {
+                if pin {
+                    pin_to_core(core);
+                }
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Run(state) => {
+                            state.run_to_completion();
+                            if worker_shared.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                let _g = worker_shared.idle_mx.lock().unwrap();
+                                worker_shared.idle_cv.notify_all();
+                            }
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn processing unit thread");
+        Arc::new(Self {
+            resource,
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            shared,
+        })
+    }
+}
+
+impl ProcessingUnit for ThreadProcessingUnit {
+    fn resource(&self) -> &ComputeResource {
+        &self.resource
+    }
+
+    fn start(&self, state: Arc<dyn ExecutionState>) -> Result<()> {
+        let state = state
+            .as_any_arc()
+            .downcast::<HostExecutionState>()
+            .map_err(|_| {
+                HicrError::Unsupported(
+                    "threads processing unit executes HostExecutionState only".into(),
+                )
+            })?;
+        if state.status() != ExecStatus::Ready {
+            return Err(HicrError::InvalidState(
+                "execution state already started (states are single-use)".into(),
+            ));
+        }
+        let tx = self.tx.lock().unwrap();
+        let tx = tx
+            .as_ref()
+            .ok_or_else(|| HicrError::InvalidState("processing unit terminated".into()))?;
+        self.shared.pending.fetch_add(1, Ordering::AcqRel);
+        tx.send(Job::Run(state))
+            .map_err(|_| HicrError::InvalidState("worker thread gone".into()))?;
+        Ok(())
+    }
+
+    fn await_all(&self) -> Result<()> {
+        let mut guard = self.shared.idle_mx.lock().unwrap();
+        while self.shared.pending.load(Ordering::Acquire) != 0 {
+            guard = self.shared.idle_cv.wait(guard).unwrap();
+        }
+        Ok(())
+    }
+
+    fn terminate(&self) -> Result<()> {
+        self.await_all()?;
+        if let Some(tx) = self.tx.lock().unwrap().take() {
+            let _ = tx.send(Job::Shutdown);
+        }
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            h.join()
+                .map_err(|_| HicrError::InvalidState("worker panicked".into()))?;
+        }
+        Ok(())
+    }
+
+    fn status(&self) -> ExecStatus {
+        if self.tx.lock().unwrap().is_none() {
+            ExecStatus::Finished
+        } else if self.shared.pending.load(Ordering::Acquire) > 0 {
+            ExecStatus::Running
+        } else {
+            ExecStatus::Ready
+        }
+    }
+}
+
+/// The Pthreads-analogue compute manager.
+pub struct ThreadsComputeManager {
+    /// Pin worker threads to their resource's os_index.
+    pub pin_threads: bool,
+}
+
+impl Default for ThreadsComputeManager {
+    fn default() -> Self {
+        Self { pin_threads: true }
+    }
+}
+
+impl ThreadsComputeManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ComputeManager for ThreadsComputeManager {
+    fn create_processing_unit(
+        &self,
+        resource: &ComputeResource,
+    ) -> Result<Arc<dyn ProcessingUnit>> {
+        Ok(ThreadProcessingUnit::new(resource.clone(), self.pin_threads))
+    }
+
+    fn create_execution_state(
+        &self,
+        unit: Arc<dyn ExecutionUnit>,
+    ) -> Result<Arc<dyn ExecutionState>> {
+        let f = unit
+            .as_any()
+            .downcast_ref::<FnExecutionUnit>()
+            .ok_or_else(|| {
+                HicrError::Unsupported(
+                    "threads compute manager prescribes FnExecutionUnit".into(),
+                )
+            })?;
+        // Re-wrap the same closure: the unit is stateless and shareable.
+        let cloned = FnExecutionUnit::new(f.name().to_string(), {
+            let func = f.func();
+            move |ctx| func(ctx)
+        });
+        Ok(HostExecutionState::new(cloned))
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "threads"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    fn resource(i: u64) -> ComputeResource {
+        ComputeResource {
+            id: crate::core::ids::ComputeResourceId(i),
+            kind: "cpu-core".into(),
+            os_index: 0,
+            locality: 0,
+        }
+    }
+
+    #[test]
+    fn parallel_execution_fig6() {
+        // The paper's Fig. 6 idiom: run one execution unit on every
+        // compute resource, await, finalize.
+        let cpm = ThreadsComputeManager::new();
+        let counter = Arc::new(AtomicU32::new(0));
+        let c = Arc::clone(&counter);
+        let unit = FnExecutionUnit::new("bump", move |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        let mut pus = Vec::new();
+        for i in 0..4u64 {
+            let pu = cpm.create_processing_unit(&resource(i)).unwrap();
+            let st = cpm
+                .create_execution_state(unit.clone() as Arc<dyn ExecutionUnit>)
+                .unwrap();
+            pu.start(st).unwrap();
+            pus.push(pu);
+        }
+        for pu in &pus {
+            pu.await_all().unwrap();
+        }
+        for pu in &pus {
+            pu.terminate().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn state_lifecycle_and_single_use() {
+        let cpm = ThreadsComputeManager::new();
+        let unit = FnExecutionUnit::new("noop", |_| {});
+        let st = cpm
+            .create_execution_state(unit as Arc<dyn ExecutionUnit>)
+            .unwrap();
+        assert_eq!(st.status(), ExecStatus::Ready);
+        let pu = cpm.create_processing_unit(&resource(0)).unwrap();
+        pu.start(Arc::clone(&st)).unwrap();
+        st.wait().unwrap();
+        assert_eq!(st.status(), ExecStatus::Finished);
+        // Finished states cannot be re-used (paper §3.1.5).
+        assert!(pu.start(st).is_err());
+        pu.terminate().unwrap();
+    }
+
+    #[test]
+    fn panic_marks_failed() {
+        let cpm = ThreadsComputeManager::new();
+        let unit = FnExecutionUnit::new("boom", |_| panic!("kaboom"));
+        let st = cpm
+            .create_execution_state(unit as Arc<dyn ExecutionUnit>)
+            .unwrap();
+        let pu = cpm.create_processing_unit(&resource(0)).unwrap();
+        pu.start(Arc::clone(&st)).unwrap();
+        assert!(st.wait().is_err());
+        assert_eq!(st.status(), ExecStatus::Failed);
+        pu.terminate().unwrap();
+    }
+
+    #[test]
+    fn many_states_one_unit_fifo() {
+        let cpm = ThreadsComputeManager::new();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let pu = cpm.create_processing_unit(&resource(0)).unwrap();
+        for i in 0..16 {
+            let o = Arc::clone(&order);
+            let unit = FnExecutionUnit::new(format!("t{i}"), move |_| {
+                o.lock().unwrap().push(i);
+            });
+            let st = cpm
+                .create_execution_state(unit as Arc<dyn ExecutionUnit>)
+                .unwrap();
+            pu.start(st).unwrap();
+        }
+        pu.await_all().unwrap();
+        assert_eq!(*order.lock().unwrap(), (0..16).collect::<Vec<_>>());
+        pu.terminate().unwrap();
+    }
+
+    #[test]
+    fn start_after_terminate_rejected() {
+        let cpm = ThreadsComputeManager::new();
+        let pu = cpm.create_processing_unit(&resource(0)).unwrap();
+        pu.terminate().unwrap();
+        let st = cpm
+            .create_execution_state(FnExecutionUnit::new("x", |_| {}) as Arc<dyn ExecutionUnit>)
+            .unwrap();
+        assert!(pu.start(st).is_err());
+        assert_eq!(pu.status(), ExecStatus::Finished);
+    }
+}

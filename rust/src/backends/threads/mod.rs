@@ -1,0 +1,13 @@
+//! `threads` backend — the POSIX Threads analogue (paper §4.2).
+//!
+//! Its compute manager creates processing units as system-scheduled
+//! threads mapped 1:1 (best effort) to the CPU cores detected by the
+//! hostmem backend; its communication manager implements intra-instance
+//! memcpy with mutex-based fencing. Table 1 row: Communication ✓,
+//! Compute ✓.
+
+pub mod communication;
+pub mod compute;
+
+pub use communication::ThreadsCommunicationManager;
+pub use compute::ThreadsComputeManager;

@@ -1,0 +1,445 @@
+//! Accelerator compute manager: execution units are *pre-compiled kernels*
+//! (PJRT executables from AOT HLO artifacts), execution states bind them
+//! to input/output device slots, and processing units are stream-like
+//! workers executing states asynchronously in submission order.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::core::compute::{
+    ComputeManager, ExecStatus, ExecutionState, ExecutionUnit, ProcessingUnit,
+};
+use crate::core::error::{HicrError, Result};
+use crate::core::memory::LocalMemorySlot;
+use crate::core::topology::ComputeResource;
+use crate::runtime::client::Executable;
+use crate::runtime::XlaRuntime;
+
+/// The execution-unit format this backend prescribes: a compiled HLO
+/// executable plus its input signature (dims per argument, f32).
+pub struct XlaExecutionUnit {
+    name: String,
+    exe: Arc<Executable>,
+    /// Dims of every input tensor, in calling order.
+    pub input_dims: Vec<Vec<usize>>,
+    /// Number of f32 elements the (single) output produces.
+    pub output_len: usize,
+}
+
+impl XlaExecutionUnit {
+    pub fn new(
+        name: impl Into<String>,
+        exe: Arc<Executable>,
+        input_dims: Vec<Vec<usize>>,
+        output_len: usize,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            name: name.into(),
+            exe,
+            input_dims,
+            output_len,
+        })
+    }
+}
+
+impl ExecutionUnit for XlaExecutionUnit {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// An execution state binding a kernel to concrete input slots (device
+/// memory, f32 little-endian) and an output slot.
+pub struct XlaInvocationState {
+    unit: Arc<XlaExecutionUnit>,
+    inputs: Vec<LocalMemorySlot>,
+    output: LocalMemorySlot,
+    status: Mutex<ExecStatus>,
+    cv: Condvar,
+    error: Mutex<Option<String>>,
+}
+
+impl XlaInvocationState {
+    fn set_status(&self, s: ExecStatus) {
+        *self.status.lock().unwrap() = s;
+        self.cv.notify_all();
+    }
+
+    /// Execute synchronously on the calling (stream) thread.
+    fn run(&self) {
+        self.set_status(ExecStatus::Running);
+        let result = (|| -> Result<()> {
+            // Gather inputs out of the slots.
+            let mut buffers: Vec<Vec<f32>> = Vec::with_capacity(self.inputs.len());
+            for (slot, dims) in self.inputs.iter().zip(&self.unit.input_dims) {
+                let count: usize = dims.iter().product();
+                if slot.len() < count * 4 {
+                    return Err(HicrError::Bounds(format!(
+                        "input slot too small: {} < {}",
+                        slot.len(),
+                        count * 4
+                    )));
+                }
+                let mut bytes = vec![0u8; count * 4];
+                slot.read_at(0, &mut bytes)?;
+                buffers.push(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                );
+            }
+            let args: Vec<(&[f32], &[usize])> = buffers
+                .iter()
+                .zip(&self.unit.input_dims)
+                .map(|(b, d)| (b.as_slice(), d.as_slice()))
+                .collect();
+            let out = self.unit.exe.run_f32(&args)?;
+            if out.len() != self.unit.output_len {
+                return Err(HicrError::Xla(format!(
+                    "output length {} != declared {}",
+                    out.len(),
+                    self.unit.output_len
+                )));
+            }
+            let mut bytes = Vec::with_capacity(out.len() * 4);
+            for v in &out {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            self.output.write_at(0, &bytes)?;
+            Ok(())
+        })();
+        match result {
+            Ok(()) => self.set_status(ExecStatus::Finished),
+            Err(e) => {
+                *self.error.lock().unwrap() = Some(e.to_string());
+                self.set_status(ExecStatus::Failed);
+            }
+        }
+    }
+}
+
+impl ExecutionState for XlaInvocationState {
+    fn status(&self) -> ExecStatus {
+        *self.status.lock().unwrap()
+    }
+
+    fn wait(&self) -> Result<()> {
+        let mut st = self.status.lock().unwrap();
+        while !matches!(*st, ExecStatus::Finished | ExecStatus::Failed) {
+            st = self.cv.wait(st).unwrap();
+        }
+        if *st == ExecStatus::Failed {
+            return Err(HicrError::Xla(
+                self.error
+                    .lock()
+                    .unwrap()
+                    .clone()
+                    .unwrap_or_else(|| "kernel failed".into()),
+            ));
+        }
+        Ok(())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_arc(self: Arc<Self>) -> Arc<dyn std::any::Any + Send + Sync> {
+        self
+    }
+}
+
+/// A stream: a worker thread executing invocation states in order.
+pub struct XlaStreamUnit {
+    resource: ComputeResource,
+    tx: Mutex<Option<Sender<Arc<XlaInvocationState>>>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl XlaStreamUnit {
+    fn new(resource: ComputeResource) -> Arc<Self> {
+        let (tx, rx) = channel::<Arc<XlaInvocationState>>();
+        let pending: Arc<(Mutex<usize>, Condvar)> =
+            Arc::new((Mutex::new(0), Condvar::new()));
+        let p = Arc::clone(&pending);
+        let handle = std::thread::Builder::new()
+            .name(format!("hicr-xla-stream-{}", resource.id.0))
+            .spawn(move || {
+                while let Ok(state) = rx.recv() {
+                    state.run();
+                    let mut n = p.0.lock().unwrap();
+                    *n -= 1;
+                    p.1.notify_all();
+                }
+            })
+            .expect("spawn xla stream");
+        Arc::new(Self {
+            resource,
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            pending,
+        })
+    }
+}
+
+impl ProcessingUnit for XlaStreamUnit {
+    fn resource(&self) -> &ComputeResource {
+        &self.resource
+    }
+
+    fn start(&self, state: Arc<dyn ExecutionState>) -> Result<()> {
+        let state = state
+            .as_any_arc()
+            .downcast::<XlaInvocationState>()
+            .map_err(|_| {
+                HicrError::Unsupported(
+                    "xla stream executes XlaInvocationState only".into(),
+                )
+            })?;
+        if state.status() != ExecStatus::Ready {
+            return Err(HicrError::InvalidState(
+                "invocation already started (states are single-use)".into(),
+            ));
+        }
+        let tx = self.tx.lock().unwrap();
+        let tx = tx
+            .as_ref()
+            .ok_or_else(|| HicrError::InvalidState("stream terminated".into()))?;
+        *self.pending.0.lock().unwrap() += 1;
+        tx.send(state)
+            .map_err(|_| HicrError::InvalidState("stream thread gone".into()))?;
+        Ok(())
+    }
+
+    fn await_all(&self) -> Result<()> {
+        let mut n = self.pending.0.lock().unwrap();
+        while *n != 0 {
+            n = self.pending.1.wait(n).unwrap();
+        }
+        Ok(())
+    }
+
+    fn terminate(&self) -> Result<()> {
+        self.await_all()?;
+        self.tx.lock().unwrap().take();
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            h.join()
+                .map_err(|_| HicrError::InvalidState("stream panicked".into()))?;
+        }
+        Ok(())
+    }
+
+    fn status(&self) -> ExecStatus {
+        if self.tx.lock().unwrap().is_none() {
+            ExecStatus::Finished
+        } else if *self.pending.0.lock().unwrap() > 0 {
+            ExecStatus::Running
+        } else {
+            ExecStatus::Ready
+        }
+    }
+}
+
+/// The accelerator compute manager.
+pub struct XlaComputeManager {
+    #[allow(dead_code)]
+    runtime: Arc<XlaRuntime>,
+}
+
+impl XlaComputeManager {
+    pub fn new(runtime: Arc<XlaRuntime>) -> Self {
+        Self { runtime }
+    }
+
+    /// Load a pre-compiled kernel from an HLO text artifact.
+    pub fn load_kernel(
+        &self,
+        name: &str,
+        path: &std::path::Path,
+        input_dims: Vec<Vec<usize>>,
+        output_len: usize,
+    ) -> Result<Arc<XlaExecutionUnit>> {
+        let exe = self.runtime.load_hlo_text(name, path)?;
+        Ok(XlaExecutionUnit::new(name, exe, input_dims, output_len))
+    }
+
+    /// Bind a kernel to input/output slots (typed state constructor —
+    /// the compute manager prescribes this format).
+    pub fn create_invocation(
+        &self,
+        unit: Arc<XlaExecutionUnit>,
+        inputs: Vec<LocalMemorySlot>,
+        output: LocalMemorySlot,
+    ) -> Result<Arc<XlaInvocationState>> {
+        if inputs.len() != unit.input_dims.len() {
+            return Err(HicrError::InvalidState(format!(
+                "kernel '{}' expects {} inputs, got {}",
+                unit.name(),
+                unit.input_dims.len(),
+                inputs.len()
+            )));
+        }
+        if output.len() < unit.output_len * 4 {
+            return Err(HicrError::Bounds(format!(
+                "output slot {} B too small for {} f32s",
+                output.len(),
+                unit.output_len
+            )));
+        }
+        Ok(Arc::new(XlaInvocationState {
+            unit,
+            inputs,
+            output,
+            status: Mutex::new(ExecStatus::Ready),
+            cv: Condvar::new(),
+            error: Mutex::new(None),
+        }))
+    }
+}
+
+impl ComputeManager for XlaComputeManager {
+    fn create_processing_unit(
+        &self,
+        resource: &ComputeResource,
+    ) -> Result<Arc<dyn ProcessingUnit>> {
+        if resource.kind != "pjrt-stream" {
+            return Err(HicrError::Unsupported(format!(
+                "xlacomp initializes pjrt-stream resources only, got '{}'",
+                resource.kind
+            )));
+        }
+        Ok(XlaStreamUnit::new(resource.clone()))
+    }
+
+    fn create_execution_state(
+        &self,
+        unit: Arc<dyn ExecutionUnit>,
+    ) -> Result<Arc<dyn ExecutionState>> {
+        let _ = unit.as_any().downcast_ref::<XlaExecutionUnit>().ok_or_else(|| {
+            HicrError::Unsupported("xlacomp prescribes XlaExecutionUnit".into())
+        })?;
+        Err(HicrError::Unsupported(
+            "xla kernels need bound i/o slots: use create_invocation(unit, inputs, output)"
+                .into(),
+        ))
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "xlacomp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ids::MemorySpaceId;
+
+    const ADD_HLO: &str = r#"
+HloModule tiny_add, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main {
+  p0 = f32[2,2]{1,0} parameter(0)
+  p1 = f32[2,2]{1,0} parameter(1)
+  sum = f32[2,2]{1,0} add(p0, p1)
+  ROOT out = (f32[2,2]{1,0}) tuple(sum)
+}
+"#;
+
+    fn f32_slot(values: &[f32]) -> LocalMemorySlot {
+        let slot = LocalMemorySlot::alloc(MemorySpaceId(0x1000), values.len() * 4).unwrap();
+        let mut bytes = Vec::new();
+        for v in values {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        slot.write_at(0, &bytes).unwrap();
+        slot
+    }
+
+    fn read_f32(slot: &LocalMemorySlot, n: usize) -> Vec<f32> {
+        let mut bytes = vec![0u8; n * 4];
+        slot.read_at(0, &mut bytes).unwrap();
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    fn setup() -> (XlaComputeManager, Arc<XlaExecutionUnit>) {
+        let rt = Arc::new(XlaRuntime::cpu().unwrap());
+        let cm = XlaComputeManager::new(Arc::clone(&rt));
+        let path = std::env::temp_dir().join(format!(
+            "hicr-xcm-{}-{:?}.hlo.txt",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::write(&path, ADD_HLO).unwrap();
+        let unit = cm
+            .load_kernel("add", &path, vec![vec![2, 2], vec![2, 2]], 4)
+            .unwrap();
+        std::fs::remove_file(&path).ok();
+        (cm, unit)
+    }
+
+    #[test]
+    fn kernel_execution_on_stream() {
+        let (cm, unit) = setup();
+        let a = f32_slot(&[1.0, 2.0, 3.0, 4.0]);
+        let b = f32_slot(&[0.5; 4]);
+        let out = LocalMemorySlot::alloc(MemorySpaceId(0x1000), 16).unwrap();
+        let state = cm
+            .create_invocation(unit, vec![a, b], out.clone())
+            .unwrap();
+        let stream = cm
+            .create_processing_unit(&ComputeResource {
+                id: crate::core::ids::ComputeResourceId(0x1000),
+                kind: "pjrt-stream".into(),
+                os_index: 0,
+                locality: 1000,
+            })
+            .unwrap();
+        stream.start(Arc::clone(&state) as Arc<dyn ExecutionState>).unwrap();
+        state.wait().unwrap();
+        assert_eq!(read_f32(&out, 4), vec![1.5, 2.5, 3.5, 4.5]);
+        stream.terminate().unwrap();
+    }
+
+    #[test]
+    fn io_arity_validated() {
+        let (cm, unit) = setup();
+        let a = f32_slot(&[0.0; 4]);
+        let out = LocalMemorySlot::alloc(MemorySpaceId(0x1000), 16).unwrap();
+        assert!(cm.create_invocation(Arc::clone(&unit), vec![a], out).is_err());
+        let a = f32_slot(&[0.0; 4]);
+        let b = f32_slot(&[0.0; 4]);
+        let tiny = LocalMemorySlot::alloc(MemorySpaceId(0x1000), 4).unwrap();
+        assert!(cm.create_invocation(unit, vec![a, b], tiny).is_err());
+    }
+
+    #[test]
+    fn generic_create_state_points_to_typed_api() {
+        let (cm, unit) = setup();
+        let Err(err) = cm.create_execution_state(unit as Arc<dyn ExecutionUnit>) else {
+            panic!("expected error");
+        };
+        assert!(err.to_string().contains("create_invocation"));
+    }
+
+    #[test]
+    fn wrong_resource_kind_rejected() {
+        let (cm, _unit) = setup();
+        assert!(cm
+            .create_processing_unit(&ComputeResource {
+                id: crate::core::ids::ComputeResourceId(1),
+                kind: "cpu-core".into(),
+                os_index: 0,
+                locality: 0,
+            })
+            .is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! `xlacomp` backend — the accelerator backend (ACL/OpenCL analogue,
+//! paper §4.2): exposes the XLA PJRT device as a HiCR accelerator with its
+//! own memory space, supports host↔device data motion, and executes
+//! *pre-compiled kernels* — AOT-lowered Pallas/JAX HLO artifacts — on
+//! stream-like processing units. Table 1 row: Topology ✓, Communication ✓,
+//! Memory ✓, Compute ✓.
+//!
+//! The mapping to the paper's ACL backend is direct: an ACL offline-
+//! compiled kernel ↔ a PJRT-compiled HLO executable; an ACL stream ↔ a
+//! stream processing unit; device HBM ↔ the PJRT device's memory space
+//! (host-backed in the CPU sandbox; see DESIGN.md §Hardware-Adaptation).
+
+pub mod compute;
+pub mod memory;
+pub mod topology;
+
+pub use compute::{XlaComputeManager, XlaExecutionUnit, XlaInvocationState};
+pub use memory::XlaMemoryManager;
+pub use topology::XlaTopologyManager;
+
+/// Memory-space id base for xlacomp device spaces (avoids collision with
+/// hostmem's NUMA-indexed ids).
+pub const DEVICE_SPACE_BASE: u64 = 0x1000;

@@ -1,0 +1,101 @@
+//! Accelerator topology discovery: one HiCR device per PJRT device, each
+//! with a device-memory space and stream compute resources.
+
+use std::sync::Arc;
+
+use crate::backends::xlacomp::DEVICE_SPACE_BASE;
+use crate::core::error::Result;
+use crate::core::ids::{ComputeResourceId, DeviceId};
+use crate::core::topology::{
+    ComputeResource, Device, DeviceKind, MemorySpace, MemorySpaceKind, Topology,
+    TopologyManager,
+};
+use crate::runtime::XlaRuntime;
+
+/// Streams exposed per PJRT device (ACL streams / CUDA streams analogue).
+pub const STREAMS_PER_DEVICE: usize = 2;
+
+/// Device memory reported per PJRT CPU device. The CPU plugin has no real
+/// HBM; 16 GiB mirrors an accelerator-class budget and bounds allocations.
+pub const DEVICE_MEM_BYTES: u64 = 16 << 30;
+
+/// Topology manager over a PJRT runtime.
+pub struct XlaTopologyManager {
+    runtime: Arc<XlaRuntime>,
+}
+
+impl XlaTopologyManager {
+    pub fn new(runtime: Arc<XlaRuntime>) -> Self {
+        Self { runtime }
+    }
+}
+
+impl TopologyManager for XlaTopologyManager {
+    fn query_topology(&self) -> Result<Topology> {
+        let mut topo = Topology::new();
+        let n = self.runtime.device_count();
+        let platform = self.runtime.platform_name();
+        for d in 0..n {
+            topo.devices.push(Device {
+                id: DeviceId(1000 + d as u32),
+                kind: DeviceKind::Accelerator,
+                name: format!("xla-{platform}-{d}"),
+                memory_spaces: vec![MemorySpace::new(
+                    DEVICE_SPACE_BASE + d as u64,
+                    MemorySpaceKind::DeviceHbm,
+                    DEVICE_MEM_BYTES,
+                    format!("pjrt:{platform}:{d}"),
+                )?],
+                compute_resources: (0..STREAMS_PER_DEVICE)
+                    .map(|s| ComputeResource {
+                        id: ComputeResourceId(
+                            DEVICE_SPACE_BASE + (d * STREAMS_PER_DEVICE + s) as u64,
+                        ),
+                        kind: "pjrt-stream".into(),
+                        os_index: s as u32,
+                        locality: 1000 + d as u32,
+                    })
+                    .collect(),
+            });
+        }
+        Ok(topo)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "xlacomp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discovers_pjrt_devices_as_accelerators() {
+        let rt = Arc::new(XlaRuntime::cpu().unwrap());
+        let tm = XlaTopologyManager::new(rt);
+        let topo = tm.query_topology().unwrap();
+        assert!(!topo.devices.is_empty());
+        for d in &topo.devices {
+            assert_eq!(d.kind, DeviceKind::Accelerator);
+            assert_eq!(d.memory_spaces.len(), 1);
+            assert_eq!(d.memory_spaces[0].kind, MemorySpaceKind::DeviceHbm);
+            assert_eq!(d.compute_resources.len(), STREAMS_PER_DEVICE);
+        }
+        // Merges cleanly with a host topology (paper's combined-manager
+        // pattern, Fig. 4).
+        let host = crate::backends::hostmem::HostTopologyManager::new()
+            .query_topology()
+            .unwrap();
+        let mut combined = host;
+        combined.merge(topo).unwrap();
+        assert!(combined
+            .devices
+            .iter()
+            .any(|d| d.kind == DeviceKind::Accelerator));
+        assert!(combined
+            .devices
+            .iter()
+            .any(|d| d.kind == DeviceKind::NumaDomain));
+    }
+}

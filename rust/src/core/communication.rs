@@ -1,0 +1,218 @@
+//! Communication management (paper §3.1.4): all data motion is mediated by
+//! a `CommunicationManager` through `memcpy` over memory slots, with
+//! completion established by `fence`, and distributed visibility through
+//! the collective exchange of *global memory slots*.
+//!
+//! The model admits exactly three memcpy directions: Local→Local,
+//! Local→Global and Global→Local. Global→Global is rejected — neither
+//! remote instance would orchestrate the operation. Direction legality is
+//! enforced here once, for every backend, by [`validate_direction`].
+
+use std::collections::BTreeMap;
+
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::{InstanceId, Key, Tag};
+use crate::core::memory::LocalMemorySlot;
+
+/// A local memory slot that has been made accessible to other HiCR
+/// instances via a collective exchange. Identified by its (tag, key) pair.
+#[derive(Debug, Clone)]
+pub struct GlobalMemorySlot {
+    pub tag: Tag,
+    pub key: Key,
+    /// The instance owning the backing memory.
+    pub owner: InstanceId,
+    /// Size of the exposed segment in bytes.
+    pub len: usize,
+    /// Present iff the slot's memory is owned by the current instance.
+    pub local: Option<LocalMemorySlot>,
+}
+
+impl GlobalMemorySlot {
+    /// True when the backing memory lives in this instance.
+    pub fn is_local(&self) -> bool {
+        self.local.is_some()
+    }
+}
+
+/// One endpoint of a memcpy: either a local slot or a global slot.
+#[derive(Debug, Clone)]
+pub enum DataEndpoint {
+    Local(LocalMemorySlot),
+    Global(GlobalMemorySlot),
+}
+
+impl DataEndpoint {
+    pub fn len(&self) -> usize {
+        match self {
+            DataEndpoint::Local(s) => s.len(),
+            DataEndpoint::Global(s) => s.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The three legal transfer directions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    LocalToLocal,
+    LocalToGlobal,
+    GlobalToLocal,
+}
+
+/// Classify (dst, src) into a legal direction, or reject Global→Global —
+/// the single model-level legality rule all backends share.
+pub fn validate_direction(dst: &DataEndpoint, src: &DataEndpoint) -> Result<Direction> {
+    match (dst, src) {
+        (DataEndpoint::Local(_), DataEndpoint::Local(_)) => Ok(Direction::LocalToLocal),
+        (DataEndpoint::Global(_), DataEndpoint::Local(_)) => Ok(Direction::LocalToGlobal),
+        (DataEndpoint::Local(_), DataEndpoint::Global(_)) => Ok(Direction::GlobalToLocal),
+        (DataEndpoint::Global(_), DataEndpoint::Global(_)) => Err(HicrError::Rejected(
+            "Global-to-Global memcpy is not permitted: neither remote instance \
+             orchestrates the operation"
+                .into(),
+        )),
+    }
+}
+
+/// Bounds-check a (offset, len) access against an endpoint.
+pub fn validate_bounds(ep: &DataEndpoint, offset: usize, len: usize) -> Result<()> {
+    if offset.checked_add(len).map(|e| e <= ep.len()) != Some(true) {
+        return Err(HicrError::Bounds(format!(
+            "endpoint access [{offset}, {offset}+{len}) exceeds size {}",
+            ep.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Mediates all communication (paper: MPI / LPF / Pthreads backends).
+///
+/// `memcpy` is asynchronous: completion is only guaranteed after a
+/// `fence` on the same tag. The exchange of global slots is collective:
+/// all instances participate, volunteering zero or more local slots, and
+/// every participant receives the full (tag, key)→slot map.
+pub trait CommunicationManager: Send + Sync {
+    /// Collectively exchange local slots under `tag`. Keys must be unique
+    /// per (instance, exchange); the returned map covers *all* instances'
+    /// contributions.
+    fn exchange_global_slots(
+        &self,
+        tag: Tag,
+        local_slots: &[(Key, LocalMemorySlot)],
+    ) -> Result<BTreeMap<Key, GlobalMemorySlot>>;
+
+    /// Asynchronous memcpy of `len` bytes between endpoints at the given
+    /// offsets. Returns after *initiating* the transfer; completion is
+    /// established by `fence`.
+    fn memcpy(
+        &self,
+        dst: &DataEndpoint,
+        dst_offset: usize,
+        src: &DataEndpoint,
+        src_offset: usize,
+        len: usize,
+    ) -> Result<()>;
+
+    /// Suspend until all transfers initiated under `tag` (both incoming
+    /// and outgoing, per the expected counts of the backend's protocol)
+    /// have completed.
+    fn fence(&self, tag: Tag) -> Result<()>;
+
+    /// Destroy a global slot's visibility (collective where required).
+    fn destroy_global_slot(&self, slot: GlobalMemorySlot) -> Result<()> {
+        drop(slot);
+        Ok(())
+    }
+
+    /// Non-collective query for a slot already exchanged under (tag, key).
+    ///
+    /// Backends whose `exchange_global_slots` is a blocking collective
+    /// (the distributed ones) never need this — the exchange result is
+    /// complete. The intra-process threads backend resolves exchanges
+    /// lazily (participants are threads arriving at their own pace), so
+    /// frontends use this to find counterparts registered after their own
+    /// exchange call.
+    fn lookup_global_slot(&self, tag: Tag, key: Key) -> Option<GlobalMemorySlot> {
+        let _ = (tag, key);
+        None
+    }
+
+    /// Human-readable backend name.
+    fn backend_name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ids::MemorySpaceId;
+
+    fn local(len: usize) -> DataEndpoint {
+        DataEndpoint::Local(LocalMemorySlot::alloc(MemorySpaceId(1), len).unwrap())
+    }
+
+    fn global(len: usize, owner: u32) -> DataEndpoint {
+        DataEndpoint::Global(GlobalMemorySlot {
+            tag: Tag(1),
+            key: Key(1),
+            owner: InstanceId(owner),
+            len,
+            local: None,
+        })
+    }
+
+    #[test]
+    fn directions() {
+        assert_eq!(
+            validate_direction(&local(4), &local(4)).unwrap(),
+            Direction::LocalToLocal
+        );
+        assert_eq!(
+            validate_direction(&global(4, 1), &local(4)).unwrap(),
+            Direction::LocalToGlobal
+        );
+        assert_eq!(
+            validate_direction(&local(4), &global(4, 1)).unwrap(),
+            Direction::GlobalToLocal
+        );
+    }
+
+    #[test]
+    fn global_to_global_always_rejected() {
+        let err = validate_direction(&global(4, 1), &global(4, 2)).unwrap_err();
+        assert!(err.is_rejection());
+        // Property: regardless of sizes/owners, G2G is rejected.
+        crate::prop_check!("g2g-rejected", |g| {
+            let a = global(g.sized(1, 1024), g.rng.range_u64(0, 16) as u32);
+            let b = global(g.sized(1, 1024), g.rng.range_u64(0, 16) as u32);
+            match validate_direction(&a, &b) {
+                Err(e) if e.is_rejection() => Ok(()),
+                other => Err(format!("expected rejection, got {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn bounds_validation() {
+        let ep = local(10);
+        assert!(validate_bounds(&ep, 0, 10).is_ok());
+        assert!(validate_bounds(&ep, 5, 5).is_ok());
+        assert!(validate_bounds(&ep, 5, 6).is_err());
+        assert!(validate_bounds(&ep, usize::MAX, 1).is_err());
+    }
+
+    #[test]
+    fn global_slot_locality() {
+        let s = GlobalMemorySlot {
+            tag: Tag(9),
+            key: Key(3),
+            owner: InstanceId(0),
+            len: 8,
+            local: Some(LocalMemorySlot::alloc(MemorySpaceId(1), 8).unwrap()),
+        };
+        assert!(s.is_local());
+    }
+}

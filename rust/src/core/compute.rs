@@ -1,0 +1,205 @@
+//! Compute management (paper §3.1.5): processing units (initialized
+//! compute resources), execution units (static function descriptions) and
+//! execution states (one asynchronous run of an execution unit).
+//!
+//! The `ComputeManager` prescribes the *format* of execution units — a
+//! host-closure format shared by the CPU backends lives here
+//! ([`FnExecutionUnit`]); the accelerator backend defines its own
+//! (an AOT-compiled PJRT executable, see `backends::xlacomp`).
+
+use std::any::Any;
+use std::sync::Arc;
+
+use crate::core::error::Result;
+use crate::core::topology::ComputeResource;
+
+/// Lifecycle of a processing unit or execution state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecStatus {
+    /// Initialized, not yet executing.
+    Ready,
+    /// Currently executing.
+    Running,
+    /// Suspended (only backends that support it, e.g. fibers).
+    Suspended,
+    /// Execution reached its end; the state cannot be re-used.
+    Finished,
+    /// Execution failed (panicked task, device error).
+    Failed,
+}
+
+/// Static description of a function — the *what* to execute. Stateless:
+/// can be shared and re-instantiated into many execution states.
+pub trait ExecutionUnit: Send + Sync {
+    /// Descriptive name (tracing, errors).
+    fn name(&self) -> &str;
+
+    /// Downcast hook: each compute manager accepts only the unit formats
+    /// it prescribes.
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// Yield interface available to host tasks: a task may call `suspend` to
+/// cooperatively return control to its scheduler (supported by the fiber
+/// backend; a no-op or error elsewhere).
+pub trait Suspender: Send + Sync {
+    /// Cooperatively yield. Returns when the scheduler resumes the task.
+    fn suspend(&self);
+
+    /// True if this context can actually suspend (fiber-backed).
+    fn can_suspend(&self) -> bool {
+        true
+    }
+}
+
+/// No-op suspender for run-to-completion backends (plain threads).
+pub struct NoSuspend;
+
+impl Suspender for NoSuspend {
+    fn suspend(&self) {
+        // Plain threads cannot user-level-yield; politely hint the OS.
+        std::thread::yield_now();
+    }
+
+    fn can_suspend(&self) -> bool {
+        false
+    }
+}
+
+/// Execution context handed to a running host task.
+pub struct ExecCtx<'a> {
+    pub suspender: &'a dyn Suspender,
+}
+
+impl<'a> ExecCtx<'a> {
+    /// Cooperatively yield to the scheduler, if supported.
+    pub fn suspend(&self) {
+        self.suspender.suspend();
+    }
+}
+
+/// The host-closure execution-unit format shared by the CPU compute
+/// managers (threads / fibers / thread-per-task): a C++-lambda analogue.
+pub struct FnExecutionUnit {
+    name: String,
+    f: Arc<dyn Fn(&ExecCtx) + Send + Sync>,
+}
+
+impl FnExecutionUnit {
+    pub fn new(
+        name: impl Into<String>,
+        f: impl Fn(&ExecCtx) + Send + Sync + 'static,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            name: name.into(),
+            f: Arc::new(f),
+        })
+    }
+
+    pub fn func(&self) -> Arc<dyn Fn(&ExecCtx) + Send + Sync> {
+        Arc::clone(&self.f)
+    }
+}
+
+impl ExecutionUnit for FnExecutionUnit {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// One run of an execution unit: holds all metadata needed to start,
+/// query, (optionally) suspend/resume, and finish the execution. Stateful
+/// and single-use — a finished state cannot be restarted.
+pub trait ExecutionState: Send + Sync {
+    fn status(&self) -> ExecStatus;
+
+    /// Block until the state reaches `Finished` (or `Failed`).
+    fn wait(&self) -> Result<()>;
+
+    /// Non-blocking completion probe.
+    fn is_finished(&self) -> bool {
+        matches!(self.status(), ExecStatus::Finished | ExecStatus::Failed)
+    }
+
+    fn as_any(&self) -> &dyn Any;
+
+    /// Owned downcast hook so processing units can take `Arc`s of their
+    /// own concrete state type.
+    fn as_any_arc(self: Arc<Self>) -> Arc<dyn Any + Send + Sync>;
+}
+
+/// A compute resource that has been initialized and is ready to execute
+/// (paper: a pinned POSIX thread, a device stream context, ...).
+pub trait ProcessingUnit: Send + Sync {
+    /// The compute resource this unit was initialized from.
+    fn resource(&self) -> &ComputeResource;
+
+    /// Load an execution state and start computing it asynchronously.
+    fn start(&self, state: Arc<dyn ExecutionState>) -> Result<()>;
+
+    /// Block until every state started on this unit has finished.
+    fn await_all(&self) -> Result<()>;
+
+    /// Tear the unit down (joins/releases the underlying executor).
+    fn terminate(&self) -> Result<()>;
+
+    fn status(&self) -> ExecStatus;
+}
+
+/// Carries out computing operations: manages processing-unit lifetimes,
+/// prescribes the execution-unit format, and oversees execution states.
+pub trait ComputeManager: Send + Sync {
+    /// Initialize a processing unit from a compute resource.
+    fn create_processing_unit(
+        &self,
+        resource: &ComputeResource,
+    ) -> Result<Arc<dyn ProcessingUnit>>;
+
+    /// Instantiate an execution state from an execution unit. Fails if the
+    /// unit's format is not one this manager prescribes.
+    fn create_execution_state(
+        &self,
+        unit: Arc<dyn ExecutionUnit>,
+    ) -> Result<Arc<dyn ExecutionState>>;
+
+    /// Human-readable backend name.
+    fn backend_name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fn_unit_construct_and_call() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        let unit = FnExecutionUnit::new("inc", move |_ctx| {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(unit.name(), "inc");
+        let ctx = ExecCtx {
+            suspender: &NoSuspend,
+        };
+        (unit.func())(&ctx);
+        (unit.func())(&ctx);
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn no_suspend_reports_capability() {
+        assert!(!NoSuspend.can_suspend());
+        NoSuspend.suspend(); // must not hang
+    }
+
+    #[test]
+    fn downcast_via_as_any() {
+        let unit: Arc<dyn ExecutionUnit> = FnExecutionUnit::new("x", |_| {});
+        assert!(unit.as_any().downcast_ref::<FnExecutionUnit>().is_some());
+    }
+}

@@ -1,0 +1,74 @@
+//! Error taxonomy for every HiCR operation.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, HicrError>;
+
+/// Errors produced by HiCR managers and frontends.
+///
+/// The model (paper §3.1) requires certain operations to be *rejected*
+/// rather than emulated — e.g. a memcpy between two memory spaces the
+/// communication manager does not bridge, or a Global-to-Global transfer.
+/// Those rejections are first-class variants here so callers can
+/// distinguish "illegal per the model" from "failed in the substrate".
+#[derive(Debug, Error)]
+pub enum HicrError {
+    /// The operation is illegal under the HiCR model (e.g. G2G memcpy).
+    #[error("operation rejected by the HiCR model: {0}")]
+    Rejected(String),
+
+    /// The manager does not support the requested memory space / resource.
+    #[error("unsupported by this backend: {0}")]
+    Unsupported(String),
+
+    /// Out-of-bounds slot access or size mismatch.
+    #[error("bounds error: {0}")]
+    Bounds(String),
+
+    /// Allocation failed (memory space exhausted or invalid size).
+    #[error("allocation failure: {0}")]
+    Allocation(String),
+
+    /// A stateful component was used in an invalid lifecycle state.
+    #[error("invalid state: {0}")]
+    InvalidState(String),
+
+    /// Collective operation mismatch (tag/key/cardinality).
+    #[error("collective mismatch: {0}")]
+    Collective(String),
+
+    /// Underlying transport / wire failure.
+    #[error("transport error: {0}")]
+    Transport(String),
+
+    /// Instance management failure (spawn, detection, template).
+    #[error("instance error: {0}")]
+    Instance(String),
+
+    /// XLA / PJRT runtime failure.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Artifact loading / parsing failure.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// I/O error from the OS.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for HicrError {
+    fn from(e: xla::Error) -> Self {
+        HicrError::Xla(e.to_string())
+    }
+}
+
+impl HicrError {
+    /// True when the error is a model-level rejection (not a substrate
+    /// failure) — used by property tests asserting legality rules.
+    pub fn is_rejection(&self) -> bool {
+        matches!(self, HicrError::Rejected(_) | HicrError::Unsupported(_))
+    }
+}

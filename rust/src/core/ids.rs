@@ -1,0 +1,73 @@
+//! Strongly-typed identifiers for HiCR components.
+
+use std::fmt;
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident, $inner:ty) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+        pub struct $name(pub $inner);
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{}({})", stringify!($name), self.0)
+            }
+        }
+
+        impl From<$inner> for $name {
+            fn from(v: $inner) -> Self {
+                Self(v)
+            }
+        }
+    };
+}
+
+id_type!(
+    /// Identifies one HiCR instance (a disjoint OS process; paper §3.1.1).
+    InstanceId,
+    u32
+);
+id_type!(
+    /// Identifies a device within an instance's topology.
+    DeviceId,
+    u32
+);
+id_type!(
+    /// Identifies a memory space, unique within an instance.
+    MemorySpaceId,
+    u64
+);
+id_type!(
+    /// Identifies a compute resource, unique within an instance.
+    ComputeResourceId,
+    u64
+);
+id_type!(
+    /// Differentiates global-memory-slot exchange operations (paper §3.1.4).
+    Tag,
+    u64
+);
+id_type!(
+    /// Distinguishes global memory slots within one exchange.
+    Key,
+    u64
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_eq() {
+        assert_eq!(InstanceId(3), InstanceId(3));
+        assert_ne!(Tag(1), Tag(2));
+        assert_eq!(format!("{}", Key(7)), "Key(7)");
+    }
+
+    #[test]
+    fn ordering_for_map_keys() {
+        let mut v = vec![Key(3), Key(1), Key(2)];
+        v.sort();
+        assert_eq!(v, vec![Key(1), Key(2), Key(3)]);
+    }
+}

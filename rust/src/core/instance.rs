@@ -1,0 +1,245 @@
+//! Instance management (paper §3.1.1): an *instance* is a disjoint subset
+//! of the distributed system's hardware executing independently — here, an
+//! OS process. Instances never share devices; their only contact point is
+//! distributed communication.
+
+use crate::core::error::Result;
+use crate::core::ids::InstanceId;
+use crate::core::topology::TopologyRequirements;
+use crate::util::json::Json;
+
+/// A running instance, as visible through an [`InstanceManager`].
+/// Stateful: it represents a live process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Instance {
+    pub id: InstanceId,
+    /// Exactly one instance in the system is root: the first created (or
+    /// one of the launch-time group), used solely for tie-breaking.
+    pub is_root: bool,
+}
+
+impl Instance {
+    pub fn is_root(&self) -> bool {
+        self.is_root
+    }
+}
+
+/// Template describing the minimal hardware a newly created instance must
+/// provide, plus free-form metadata the underlying technology accepts
+/// (paper: cloud host ramp-up requests).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct InstanceTemplate {
+    pub requirements: TopologyRequirements,
+    pub metadata: Option<Json>,
+}
+
+impl InstanceTemplate {
+    pub fn new(requirements: TopologyRequirements) -> Self {
+        Self {
+            requirements,
+            metadata: None,
+        }
+    }
+
+    pub fn with_metadata(mut self, metadata: Json) -> Self {
+        self.metadata = Some(metadata);
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("requirements", self.requirements.to_json()),
+            (
+                "metadata",
+                self.metadata.clone().unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Self {
+        Self {
+            requirements: TopologyRequirements::from_json(v.get("requirements")),
+            metadata: match v.get("metadata") {
+                Json::Null => None,
+                m => Some(m.clone()),
+            },
+        }
+    }
+}
+
+/// Handles all operations involving instances: detection of launch-time
+/// instances, runtime creation of new ones, and identity queries.
+pub trait InstanceManager: Send + Sync {
+    /// The instance this code is running in.
+    fn current_instance(&self) -> Instance;
+
+    /// All currently known instances (launch-time + runtime-created).
+    fn instances(&self) -> Result<Vec<Instance>>;
+
+    /// Create `count` new instances at runtime satisfying `template`.
+    /// Returns the new instances (visible to subsequent `instances()`
+    /// calls everywhere once the creation completes).
+    fn create_instances(
+        &self,
+        count: usize,
+        template: &InstanceTemplate,
+    ) -> Result<Vec<Instance>>;
+
+    /// Build a template (paper: `createInstanceTemplate`).
+    fn create_instance_template(
+        &self,
+        requirements: TopologyRequirements,
+    ) -> InstanceTemplate {
+        InstanceTemplate::new(requirements)
+    }
+
+    /// Convenience: is the current instance the root?
+    fn is_root(&self) -> bool {
+        self.current_instance().is_root()
+    }
+
+    /// Collective barrier across all instances (used for launch/teardown
+    /// coordination; backends may reject if unsupported).
+    fn barrier(&self) -> Result<()>;
+
+    /// Human-readable backend name.
+    fn backend_name(&self) -> &'static str;
+}
+
+/// The paper's Fig. 7 deployment idiom, as a reusable helper: ensure at
+/// least `desired` instances exist, creating the difference at runtime
+/// from `template` (root-only; non-root returns immediately).
+pub fn ensure_instances(
+    im: &dyn InstanceManager,
+    desired: usize,
+    template: &InstanceTemplate,
+) -> Result<Vec<Instance>> {
+    if !im.is_root() {
+        return Ok(Vec::new());
+    }
+    let current = im.instances()?.len();
+    if current >= desired {
+        return Ok(Vec::new());
+    }
+    im.create_instances(desired - current, template)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::error::HicrError;
+    use std::sync::Mutex;
+
+    /// Minimal in-memory instance manager for exercising the helper.
+    struct MockIm {
+        me: Instance,
+        all: Mutex<Vec<Instance>>,
+        can_create: bool,
+    }
+
+    impl InstanceManager for MockIm {
+        fn current_instance(&self) -> Instance {
+            self.me.clone()
+        }
+
+        fn instances(&self) -> Result<Vec<Instance>> {
+            Ok(self.all.lock().unwrap().clone())
+        }
+
+        fn create_instances(
+            &self,
+            count: usize,
+            _template: &InstanceTemplate,
+        ) -> Result<Vec<Instance>> {
+            if !self.can_create {
+                return Err(HicrError::Instance("backend cannot create".into()));
+            }
+            let mut all = self.all.lock().unwrap();
+            let mut created = Vec::new();
+            for _ in 0..count {
+                let id = InstanceId(all.len() as u32);
+                let inst = Instance { id, is_root: false };
+                all.push(inst.clone());
+                created.push(inst);
+            }
+            Ok(created)
+        }
+
+        fn barrier(&self) -> Result<()> {
+            Ok(())
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "mock"
+        }
+    }
+
+    fn mock(n: usize, root: bool, can_create: bool) -> MockIm {
+        MockIm {
+            me: Instance {
+                id: InstanceId(0),
+                is_root: root,
+            },
+            all: Mutex::new(
+                (0..n)
+                    .map(|i| Instance {
+                        id: InstanceId(i as u32),
+                        is_root: i == 0,
+                    })
+                    .collect(),
+            ),
+            can_create,
+        }
+    }
+
+    #[test]
+    fn ensure_creates_missing() {
+        let im = mock(2, true, true);
+        let template = InstanceTemplate::default();
+        let created = ensure_instances(&im, 5, &template).unwrap();
+        assert_eq!(created.len(), 3);
+        assert_eq!(im.instances().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn ensure_noop_when_satisfied() {
+        let im = mock(4, true, true);
+        assert!(ensure_instances(&im, 3, &InstanceTemplate::default())
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn ensure_noop_for_non_root() {
+        // Only root runs the creation snippet (paper Fig. 7, line 2).
+        let im = mock(1, false, true);
+        assert!(ensure_instances(&im, 8, &InstanceTemplate::default())
+            .unwrap()
+            .is_empty());
+        assert_eq!(im.instances().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn template_json_roundtrip() {
+        let t = InstanceTemplate::new(TopologyRequirements {
+            min_compute_resources: 2,
+            min_memory_bytes: 4096,
+            needs_accelerator: true,
+        })
+        .with_metadata(Json::obj([("cloud_flavor", "m5.large".into())]));
+        let back = InstanceTemplate::from_json(&t.to_json());
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn exactly_one_root() {
+        let im = mock(4, true, true);
+        let roots = im
+            .instances()
+            .unwrap()
+            .iter()
+            .filter(|i| i.is_root())
+            .count();
+        assert_eq!(roots, 1);
+    }
+}

@@ -1,0 +1,332 @@
+//! Memory management (paper §3.1.3): local memory slots — the source and
+//! destination buffers of all data transfers within one instance — and the
+//! `MemoryManager` trait that allocates, registers and frees them.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::MemorySpaceId;
+use crate::core::topology::MemorySpace;
+
+/// Interior storage of a slot.
+///
+/// One-sided communication semantics (MPI_Put/Get style) permit concurrent
+/// unsynchronized access to disjoint or even overlapping regions; ordering
+/// is established only by `fence`. We therefore expose *copy-in/copy-out*
+/// accessors implemented with raw pointer copies rather than `&mut`
+/// borrows. Races are the application's responsibility, exactly as in the
+/// RMA libraries the model abstracts (paper §3.1.4).
+struct SlotBuffer {
+    data: UnsafeCell<Box<[u8]>>,
+}
+
+// SAFETY: access is only through read_at/write_at which copy bytes via raw
+// pointers; the type itself holds no references out.
+unsafe impl Send for SlotBuffer {}
+unsafe impl Sync for SlotBuffer {}
+
+static NEXT_SLOT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A local memory slot: the minimum information required to describe a
+/// segment of memory (size, storage, owning memory space). Stateful —
+/// clones share the same underlying buffer (Arc), mirroring the C++
+/// implementation's shared_ptr slots.
+#[derive(Clone)]
+pub struct LocalMemorySlot {
+    id: u64,
+    space: MemorySpaceId,
+    buf: Arc<SlotBuffer>,
+    len: usize,
+}
+
+impl std::fmt::Debug for LocalMemorySlot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LocalMemorySlot")
+            .field("id", &self.id)
+            .field("space", &self.space)
+            .field("len", &self.len)
+            .finish()
+    }
+}
+
+impl LocalMemorySlot {
+    /// Create a zero-initialized slot of `len` bytes in `space`.
+    pub fn alloc(space: MemorySpaceId, len: usize) -> Result<Self> {
+        if len == 0 {
+            return Err(HicrError::Allocation("zero-size slot".into()));
+        }
+        Ok(Self {
+            id: NEXT_SLOT_ID.fetch_add(1, Ordering::Relaxed),
+            space,
+            buf: Arc::new(SlotBuffer {
+                data: UnsafeCell::new(vec![0u8; len].into_boxed_slice()),
+            }),
+            len,
+        })
+    }
+
+    /// Register an existing allocation (paper: "manual registration of an
+    /// existing memory allocation", e.g. a buffer received from a math
+    /// library). Takes ownership of the Vec's storage.
+    pub fn register_vec(space: MemorySpaceId, data: Vec<u8>) -> Result<Self> {
+        if data.is_empty() {
+            return Err(HicrError::Allocation("zero-size registration".into()));
+        }
+        let len = data.len();
+        Ok(Self {
+            id: NEXT_SLOT_ID.fetch_add(1, Ordering::Relaxed),
+            space,
+            buf: Arc::new(SlotBuffer {
+                data: UnsafeCell::new(data.into_boxed_slice()),
+            }),
+            len,
+        })
+    }
+
+    /// Unique slot id within this process.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The memory space this slot was allocated in.
+    pub fn memory_space(&self) -> MemorySpaceId {
+        self.space
+    }
+
+    /// Slot capacity in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn check_bounds(&self, offset: usize, len: usize) -> Result<()> {
+        if offset.checked_add(len).map(|end| end <= self.len) != Some(true) {
+            return Err(HicrError::Bounds(format!(
+                "slot {} access [{offset}, {offset}+{len}) exceeds size {}",
+                self.id, self.len
+            )));
+        }
+        Ok(())
+    }
+
+    /// Copy bytes out of the slot.
+    pub fn read_at(&self, offset: usize, dst: &mut [u8]) -> Result<()> {
+        self.check_bounds(offset, dst.len())?;
+        unsafe {
+            let src = (*self.buf.data.get()).as_ptr().add(offset);
+            std::ptr::copy_nonoverlapping(src, dst.as_mut_ptr(), dst.len());
+        }
+        Ok(())
+    }
+
+    /// Copy bytes into the slot.
+    pub fn write_at(&self, offset: usize, src: &[u8]) -> Result<()> {
+        self.check_bounds(offset, src.len())?;
+        unsafe {
+            let dst = (*self.buf.data.get()).as_mut_ptr().add(offset);
+            std::ptr::copy_nonoverlapping(src.as_ptr(), dst, src.len());
+        }
+        Ok(())
+    }
+
+    /// Copy `len` bytes from `src` (at `src_off`) into `self` (at
+    /// `dst_off`) without an intermediate buffer. Slots may be the same;
+    /// overlapping ranges use a memmove.
+    pub fn copy_from(
+        &self,
+        dst_off: usize,
+        src: &LocalMemorySlot,
+        src_off: usize,
+        len: usize,
+    ) -> Result<()> {
+        self.check_bounds(dst_off, len)?;
+        src.check_bounds(src_off, len)?;
+        unsafe {
+            let s = (*src.buf.data.get()).as_ptr().add(src_off);
+            let d = (*self.buf.data.get()).as_mut_ptr().add(dst_off);
+            if Arc::ptr_eq(&self.buf, &src.buf) {
+                std::ptr::copy(s, d, len); // may overlap
+            } else {
+                std::ptr::copy_nonoverlapping(s, d, len);
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot the whole slot into a Vec (convenience for tests/frontends).
+    pub fn to_vec(&self) -> Vec<u8> {
+        let mut v = vec![0u8; self.len];
+        self.read_at(0, &mut v).expect("in-bounds");
+        v
+    }
+
+    /// Read a little-endian u64 at `offset` (channel coordination words).
+    pub fn read_u64(&self, offset: usize) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_at(offset, &mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Write a little-endian u64 at `offset`.
+    pub fn write_u64(&self, offset: usize, v: u64) -> Result<()> {
+        self.write_at(offset, &v.to_le_bytes())
+    }
+
+    /// Borrow the underlying bytes for in-place compute (e.g. running a
+    /// kernel over a slot).
+    ///
+    /// # Safety
+    /// The caller must guarantee no concurrent writer exists for the
+    /// duration of the borrow (the usual one-sided-RMA contract).
+    pub unsafe fn as_slice(&self) -> &[u8] {
+        &*self.buf.data.get()
+    }
+
+    /// Mutable variant of [`Self::as_slice`].
+    ///
+    /// # Safety
+    /// The caller must guarantee exclusive access for the duration.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn as_mut_slice(&self) -> &mut [u8] {
+        &mut *self.buf.data.get()
+    }
+}
+
+/// Allocates, registers and frees local memory slots (paper: a malloc/free
+/// style interface extended with an explicit memory-space argument).
+pub trait MemoryManager: Send + Sync {
+    /// Allocate `len` bytes in `space`. Fails if the manager does not
+    /// operate on `space` or the space lacks capacity.
+    fn allocate(&self, space: &MemorySpace, len: usize) -> Result<LocalMemorySlot>;
+
+    /// Register an existing allocation as a slot in `space`.
+    fn register(&self, space: &MemorySpace, data: Vec<u8>) -> Result<LocalMemorySlot>;
+
+    /// Free a slot. Managers track outstanding allocations; freeing an
+    /// unknown or already-freed slot is an error.
+    fn free(&self, slot: LocalMemorySlot) -> Result<()>;
+
+    /// Bytes currently allocated through this manager in `space`.
+    fn used_bytes(&self, space: MemorySpaceId) -> u64;
+
+    /// Human-readable backend name.
+    fn backend_name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot(len: usize) -> LocalMemorySlot {
+        LocalMemorySlot::alloc(MemorySpaceId(1), len).unwrap()
+    }
+
+    #[test]
+    fn alloc_zeroed_and_sized() {
+        let s = slot(16);
+        assert_eq!(s.len(), 16);
+        assert_eq!(s.to_vec(), vec![0u8; 16]);
+        assert!(LocalMemorySlot::alloc(MemorySpaceId(1), 0).is_err());
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let s = slot(8);
+        s.write_at(2, &[1, 2, 3]).unwrap();
+        let mut out = [0u8; 3];
+        s.read_at(2, &mut out).unwrap();
+        assert_eq!(out, [1, 2, 3]);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let s = slot(4);
+        assert!(s.write_at(2, &[0; 3]).is_err());
+        assert!(s.read_at(4, &mut [0; 1]).is_err());
+        assert!(s.write_at(usize::MAX, &[0; 1]).is_err()); // overflow path
+        assert!(s.write_at(0, &[0; 4]).is_ok());
+    }
+
+    #[test]
+    fn copy_between_slots() {
+        let a = slot(8);
+        let b = slot(8);
+        a.write_at(0, &[9; 8]).unwrap();
+        b.copy_from(1, &a, 2, 4).unwrap();
+        assert_eq!(b.to_vec(), vec![0, 9, 9, 9, 9, 0, 0, 0]);
+    }
+
+    #[test]
+    fn copy_same_slot_overlapping() {
+        let a = slot(8);
+        a.write_at(0, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        let a2 = a.clone(); // same buffer
+        a.copy_from(2, &a2, 0, 4).unwrap();
+        assert_eq!(a.to_vec(), vec![1, 2, 1, 2, 3, 4, 7, 8]);
+    }
+
+    #[test]
+    fn register_vec_keeps_contents() {
+        let s = LocalMemorySlot::register_vec(MemorySpaceId(3), vec![5, 6, 7]).unwrap();
+        assert_eq!(s.to_vec(), vec![5, 6, 7]);
+        assert_eq!(s.memory_space(), MemorySpaceId(3));
+        assert!(LocalMemorySlot::register_vec(MemorySpaceId(3), vec![]).is_err());
+    }
+
+    #[test]
+    fn u64_coordination_words() {
+        let s = slot(16);
+        s.write_u64(8, 0xDEAD_BEEF_0000_0001).unwrap();
+        assert_eq!(s.read_u64(8).unwrap(), 0xDEAD_BEEF_0000_0001);
+    }
+
+    #[test]
+    fn clones_share_storage() {
+        let a = slot(4);
+        let b = a.clone();
+        a.write_at(0, &[42]).unwrap();
+        assert_eq!(b.to_vec()[0], 42);
+        assert_eq!(a.id(), b.id());
+    }
+
+    #[test]
+    fn ids_unique() {
+        assert_ne!(slot(1).id(), slot(1).id());
+    }
+
+    #[test]
+    fn slot_access_property() {
+        // Random in-bounds writes then reads must observe exactly the
+        // bytes written; out-of-bounds ops must error and leave data
+        // intact.
+        crate::prop_check!("slot-read-write", |g| {
+            let len = g.sized(1, 256);
+            let s = LocalMemorySlot::alloc(MemorySpaceId(1), len)
+                .map_err(|e| e.to_string())?;
+            let mut model = vec![0u8; len];
+            for _ in 0..g.sized(1, 32) {
+                let off = g.rng.range_usize(0, len - 1);
+                let maxw = len - off;
+                let data = g.bytes(maxw.min(32).max(1));
+                if data.is_empty() {
+                    continue;
+                }
+                if data.len() <= maxw {
+                    s.write_at(off, &data).map_err(|e| e.to_string())?;
+                    model[off..off + data.len()].copy_from_slice(&data);
+                } else if s.write_at(off, &data).is_ok() {
+                    return Err("oob write accepted".into());
+                }
+            }
+            if s.to_vec() != model {
+                return Err("slot contents diverged from model".into());
+            }
+            Ok(())
+        });
+    }
+}

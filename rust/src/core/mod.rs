@@ -1,0 +1,17 @@
+//! The HiCR model core: abstract manager traits plus the stateless and
+//! stateful component families (paper §3, Fig. 2).
+//!
+//! *Managers* are the only components whose operations have an effect on
+//! the system and the only ones that may create other components.
+//! *Stateless* components (topology pieces, execution units, instance
+//! templates) are plain serializable data. *Stateful* components (memory
+//! slots, processing units, execution states, instances) have a finite
+//! lifetime and cannot be replicated.
+
+pub mod communication;
+pub mod compute;
+pub mod error;
+pub mod ids;
+pub mod instance;
+pub mod memory;
+pub mod topology;

@@ -1,0 +1,495 @@
+//! Topology management (paper §3.1.2): stateless descriptions of an
+//! instance's hardware — devices containing memory spaces and compute
+//! resources — plus the `TopologyManager` trait that discovers them.
+//!
+//! Topologies are plain serializable data: they can be merged (several
+//! topology managers each covering one technology), serialized to JSON,
+//! broadcast to other instances, and deserialized — enabling a global
+//! picture of the distributed system.
+
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::{ComputeResourceId, DeviceId, MemorySpaceId};
+use crate::util::json::{self, Json};
+
+/// What kind of hardware a [`Device`] represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// A NUMA domain of a CPU host (cores + attached DRAM).
+    NumaDomain,
+    /// An accelerator (GPU/NPU/TPU-like; here: the XLA PJRT device).
+    Accelerator,
+    /// Anything else a third-party backend may expose.
+    Other,
+}
+
+impl DeviceKind {
+    fn as_str(&self) -> &'static str {
+        match self {
+            DeviceKind::NumaDomain => "numa",
+            DeviceKind::Accelerator => "accelerator",
+            DeviceKind::Other => "other",
+        }
+    }
+
+    fn from_str(s: &str) -> DeviceKind {
+        match s {
+            "numa" => DeviceKind::NumaDomain,
+            "accelerator" => DeviceKind::Accelerator,
+            _ => DeviceKind::Other,
+        }
+    }
+}
+
+/// What kind of memory a [`MemorySpace`] exposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemorySpaceKind {
+    /// Host DRAM (possibly one NUMA domain's share).
+    HostRam,
+    /// Accelerator device memory (HBM-class).
+    DeviceHbm,
+    /// Explicitly addressable scratchpad (VMEM-class).
+    Scratchpad,
+    Other,
+}
+
+impl MemorySpaceKind {
+    fn as_str(&self) -> &'static str {
+        match self {
+            MemorySpaceKind::HostRam => "host_ram",
+            MemorySpaceKind::DeviceHbm => "device_hbm",
+            MemorySpaceKind::Scratchpad => "scratchpad",
+            MemorySpaceKind::Other => "other",
+        }
+    }
+
+    fn from_str(s: &str) -> MemorySpaceKind {
+        match s {
+            "host_ram" => MemorySpaceKind::HostRam,
+            "device_hbm" => MemorySpaceKind::DeviceHbm,
+            "scratchpad" => MemorySpaceKind::Scratchpad,
+            _ => MemorySpaceKind::Other,
+        }
+    }
+}
+
+/// A hardware element exposing explicitly addressable memory of non-zero
+/// size. Reports the *physical* capacity, not virtual address space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemorySpace {
+    pub id: MemorySpaceId,
+    pub kind: MemorySpaceKind,
+    /// Physical capacity in bytes (must be non-zero per the model).
+    pub size_bytes: u64,
+    /// Free-form backend annotation (e.g. "numa0", "pjrt:cpu:0").
+    pub label: String,
+}
+
+impl MemorySpace {
+    pub fn new(
+        id: impl Into<MemorySpaceId>,
+        kind: MemorySpaceKind,
+        size_bytes: u64,
+        label: impl Into<String>,
+    ) -> Result<Self> {
+        if size_bytes == 0 {
+            return Err(HicrError::Rejected(
+                "memory spaces must have non-zero size".into(),
+            ));
+        }
+        Ok(Self {
+            id: id.into(),
+            kind,
+            size_bytes,
+            label: label.into(),
+        })
+    }
+}
+
+/// A hardware or logical element capable of performing computation: a CPU
+/// core/hyperthread, or an accelerator stream context.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComputeResource {
+    pub id: ComputeResourceId,
+    /// Free-form kind tag (e.g. "cpu-core", "pjrt-stream").
+    pub kind: String,
+    /// OS-level index used for affinity (core id) or stream ordinal.
+    pub os_index: u32,
+    /// NUMA domain / device locality hint.
+    pub locality: u32,
+}
+
+/// A single hardware element (e.g. a NUMA domain or an accelerator) with
+/// zero or more memory spaces and compute resources.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    pub id: DeviceId,
+    pub kind: DeviceKind,
+    pub name: String,
+    pub memory_spaces: Vec<MemorySpace>,
+    pub compute_resources: Vec<ComputeResource>,
+}
+
+/// Full or partial information about an instance's available hardware.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Topology {
+    pub devices: Vec<Device>,
+}
+
+impl Topology {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// All memory spaces across all devices.
+    pub fn memory_spaces(&self) -> impl Iterator<Item = &MemorySpace> {
+        self.devices.iter().flat_map(|d| d.memory_spaces.iter())
+    }
+
+    /// All compute resources across all devices.
+    pub fn compute_resources(&self) -> impl Iterator<Item = &ComputeResource> {
+        self.devices.iter().flat_map(|d| d.compute_resources.iter())
+    }
+
+    /// Find a memory space by id.
+    pub fn find_memory_space(&self, id: MemorySpaceId) -> Option<&MemorySpace> {
+        self.memory_spaces().find(|m| m.id == id)
+    }
+
+    /// Merge another topology into this one (the paper's "combination of
+    /// different topology managers" use case). Device ids are namespaced
+    /// by the caller via distinct id ranges; duplicates are rejected.
+    pub fn merge(&mut self, other: Topology) -> Result<()> {
+        for dev in other.devices {
+            if self.devices.iter().any(|d| d.id == dev.id) {
+                return Err(HicrError::Rejected(format!(
+                    "duplicate device id {} in topology merge",
+                    dev.id
+                )));
+            }
+            self.devices.push(dev);
+        }
+        Ok(())
+    }
+
+    /// Total bytes across all memory spaces.
+    pub fn total_memory(&self) -> u64 {
+        self.memory_spaces().map(|m| m.size_bytes).sum()
+    }
+
+    /// Serialize for broadcast to other instances.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            [(
+                "devices".to_string(),
+                Json::Arr(self.devices.iter().map(device_to_json).collect()),
+            )]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    pub fn serialize(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    /// Deserialize a broadcast topology.
+    pub fn deserialize(text: &str) -> Result<Topology> {
+        let v = json::parse(text)
+            .map_err(|e| HicrError::Rejected(format!("topology parse: {e}")))?;
+        topology_from_json(&v)
+    }
+
+    /// True when `self` satisfies `req` (used by instance templates): at
+    /// least the requested counts of compute resources and memory.
+    pub fn satisfies(&self, req: &TopologyRequirements) -> bool {
+        self.compute_resources().count() >= req.min_compute_resources
+            && self.total_memory() >= req.min_memory_bytes
+            && (!req.needs_accelerator
+                || self
+                    .devices
+                    .iter()
+                    .any(|d| d.kind == DeviceKind::Accelerator))
+    }
+}
+
+/// Minimal hardware requirements prescribed by an instance template.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TopologyRequirements {
+    pub min_compute_resources: usize,
+    pub min_memory_bytes: u64,
+    pub needs_accelerator: bool,
+}
+
+impl TopologyRequirements {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("min_compute_resources", self.min_compute_resources.into()),
+            ("min_memory_bytes", self.min_memory_bytes.into()),
+            ("needs_accelerator", self.needs_accelerator.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Self {
+        Self {
+            min_compute_resources: v.get("min_compute_resources").as_usize().unwrap_or(0),
+            min_memory_bytes: v.get("min_memory_bytes").as_u64().unwrap_or(0),
+            needs_accelerator: v.get("needs_accelerator").as_bool().unwrap_or(false),
+        }
+    }
+}
+
+fn device_to_json(d: &Device) -> Json {
+    Json::obj([
+        ("id", d.id.0.into()),
+        ("kind", d.kind.as_str().into()),
+        ("name", d.name.as_str().into()),
+        (
+            "memory_spaces",
+            Json::Arr(
+                d.memory_spaces
+                    .iter()
+                    .map(|m| {
+                        Json::obj([
+                            ("id", m.id.0.into()),
+                            ("kind", m.kind.as_str().into()),
+                            ("size_bytes", m.size_bytes.into()),
+                            ("label", m.label.as_str().into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "compute_resources",
+            Json::Arr(
+                d.compute_resources
+                    .iter()
+                    .map(|c| {
+                        Json::obj([
+                            ("id", c.id.0.into()),
+                            ("kind", c.kind.as_str().into()),
+                            ("os_index", c.os_index.into()),
+                            ("locality", c.locality.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn topology_from_json(v: &Json) -> Result<Topology> {
+    let mut topo = Topology::new();
+    let devices = v
+        .get("devices")
+        .as_arr()
+        .ok_or_else(|| HicrError::Rejected("topology missing 'devices'".into()))?;
+    for d in devices {
+        let mut memory_spaces = Vec::new();
+        for m in d.get("memory_spaces").as_arr().unwrap_or(&[]) {
+            memory_spaces.push(MemorySpace::new(
+                m.get("id")
+                    .as_u64()
+                    .ok_or_else(|| HicrError::Rejected("memspace missing id".into()))?,
+                MemorySpaceKind::from_str(m.get("kind").as_str().unwrap_or("other")),
+                m.get("size_bytes").as_u64().unwrap_or(0),
+                m.get("label").as_str().unwrap_or(""),
+            )?);
+        }
+        let mut compute_resources = Vec::new();
+        for c in d.get("compute_resources").as_arr().unwrap_or(&[]) {
+            compute_resources.push(ComputeResource {
+                id: ComputeResourceId(c.get("id").as_u64().ok_or_else(|| {
+                    HicrError::Rejected("compute resource missing id".into())
+                })?),
+                kind: c.get("kind").as_str().unwrap_or("").to_string(),
+                os_index: c.get("os_index").as_u64().unwrap_or(0) as u32,
+                locality: c.get("locality").as_u64().unwrap_or(0) as u32,
+            });
+        }
+        topo.devices.push(Device {
+            id: DeviceId(d.get("id").as_u64().unwrap_or(0) as u32),
+            kind: DeviceKind::from_str(d.get("kind").as_str().unwrap_or("other")),
+            name: d.get("name").as_str().unwrap_or("").to_string(),
+            memory_spaces,
+            compute_resources,
+        });
+    }
+    Ok(topo)
+}
+
+/// Discovers the local instance's hardware (paper: HWLoc/ACL/OpenCL
+/// topology managers; here: hostmem and xlacomp backends).
+pub trait TopologyManager: Send + Sync {
+    /// Query the (full or partial) topology this manager can see.
+    fn query_topology(&self) -> Result<Topology>;
+
+    /// Human-readable backend name (for `hicr backends` and Table 1).
+    fn backend_name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_topology() -> Topology {
+        Topology {
+            devices: vec![
+                Device {
+                    id: DeviceId(0),
+                    kind: DeviceKind::NumaDomain,
+                    name: "numa0".into(),
+                    memory_spaces: vec![MemorySpace::new(
+                        1u64,
+                        MemorySpaceKind::HostRam,
+                        64 << 30,
+                        "numa0-dram",
+                    )
+                    .unwrap()],
+                    compute_resources: (0..4)
+                        .map(|i| ComputeResource {
+                            id: ComputeResourceId(i),
+                            kind: "cpu-core".into(),
+                            os_index: i as u32,
+                            locality: 0,
+                        })
+                        .collect(),
+                },
+                Device {
+                    id: DeviceId(1),
+                    kind: DeviceKind::Accelerator,
+                    name: "xla-cpu".into(),
+                    memory_spaces: vec![MemorySpace::new(
+                        2u64,
+                        MemorySpaceKind::DeviceHbm,
+                        16 << 30,
+                        "pjrt:cpu:0",
+                    )
+                    .unwrap()],
+                    compute_resources: vec![ComputeResource {
+                        id: ComputeResourceId(100),
+                        kind: "pjrt-stream".into(),
+                        os_index: 0,
+                        locality: 1,
+                    }],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn zero_size_memory_space_rejected() {
+        assert!(MemorySpace::new(1u64, MemorySpaceKind::HostRam, 0, "x").is_err());
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let t = sample_topology();
+        let back = Topology::deserialize(&t.serialize()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        // Random topologies survive serialize/deserialize exactly.
+        crate::prop_check!("topology-roundtrip", |g| {
+            let n_dev = g.sized(0, 6);
+            let mut topo = Topology::new();
+            let mut next_ms = 0u64;
+            let mut next_cr = 0u64;
+            for di in 0..n_dev {
+                let n_ms = g.sized(0, 4);
+                let n_cr = g.sized(0, 8);
+                let mut memory_spaces = Vec::new();
+                for _ in 0..n_ms {
+                    next_ms += 1;
+                    memory_spaces.push(
+                        MemorySpace::new(
+                            next_ms,
+                            *g.rng.choose(&[
+                                MemorySpaceKind::HostRam,
+                                MemorySpaceKind::DeviceHbm,
+                                MemorySpaceKind::Scratchpad,
+                                MemorySpaceKind::Other,
+                            ]),
+                            g.rng.range_u64(1, 1 << 40),
+                            format!("ms-{next_ms}\"esc\\ape"),
+                        )
+                        .unwrap(),
+                    );
+                }
+                let mut compute_resources = Vec::new();
+                for _ in 0..n_cr {
+                    next_cr += 1;
+                    compute_resources.push(ComputeResource {
+                        id: ComputeResourceId(next_cr),
+                        kind: "cpu-core".into(),
+                        os_index: g.rng.range_u64(0, 255) as u32,
+                        locality: g.rng.range_u64(0, 8) as u32,
+                    });
+                }
+                topo.devices.push(Device {
+                    id: DeviceId(di as u32),
+                    kind: *g.rng.choose(&[
+                        DeviceKind::NumaDomain,
+                        DeviceKind::Accelerator,
+                        DeviceKind::Other,
+                    ]),
+                    name: format!("dev{di}"),
+                    memory_spaces,
+                    compute_resources,
+                });
+            }
+            let back = Topology::deserialize(&topo.serialize())
+                .map_err(|e| e.to_string())?;
+            if back != topo {
+                return Err("topology roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_rejects_duplicate_device_ids() {
+        let mut a = sample_topology();
+        let b = sample_topology();
+        assert!(a.merge(b).is_err());
+    }
+
+    #[test]
+    fn merge_combines_managers() {
+        let mut a = Topology::new();
+        a.merge(sample_topology()).unwrap();
+        assert_eq!(a.devices.len(), 2);
+        assert_eq!(a.compute_resources().count(), 5);
+        assert_eq!(a.total_memory(), (64u64 << 30) + (16 << 30));
+    }
+
+    #[test]
+    fn requirements_satisfaction() {
+        let t = sample_topology();
+        assert!(t.satisfies(&TopologyRequirements {
+            min_compute_resources: 5,
+            min_memory_bytes: 1 << 30,
+            needs_accelerator: true,
+        }));
+        assert!(!t.satisfies(&TopologyRequirements {
+            min_compute_resources: 6,
+            ..Default::default()
+        }));
+        assert!(!t.satisfies(&TopologyRequirements {
+            min_memory_bytes: u64::MAX,
+            ..Default::default()
+        }));
+    }
+
+    #[test]
+    fn requirements_json_roundtrip() {
+        let r = TopologyRequirements {
+            min_compute_resources: 3,
+            min_memory_bytes: 1024,
+            needs_accelerator: true,
+        };
+        assert_eq!(TopologyRequirements::from_json(&r.to_json()), r);
+    }
+}

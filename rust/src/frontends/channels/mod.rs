@@ -1,0 +1,28 @@
+//! Channels frontend (paper §4.3): persistent low-latency transfer of
+//! small fixed-size messages over pre-allocated circular buffers that were
+//! exchanged once between producer and consumer instances.
+//!
+//! The design decouples data movement from synchronization exactly as the
+//! paper describes: the producer knows where to push (its cached view of
+//! the ring) and only refreshes the consumer's head counter when the ring
+//! *looks* full; the consumer operates entirely on local memory. Built
+//! exclusively on abstract `CommunicationManager` + `LocalMemorySlot`
+//! operations, so it runs identically over the threads backend (shared
+//! memory) and the mpisim/lpfsim backends (distributed one-sided puts).
+//!
+//! Variants: [`spsc`] single-producer/single-consumer, and [`mpsc`]
+//! multiple-producer in *locking* (one shared ring + exclusive access) and
+//! *non-locking* (one dedicated ring per producer) modes.
+
+pub mod mpsc;
+pub mod spsc;
+
+pub use mpsc::{LockingMpscConsumer, LockingMpscProducer, MpscMode, NonLockingMpscConsumer};
+pub use spsc::{SpscConsumer, SpscProducer};
+
+/// Byte layout of the coordination window: two little-endian u64 counters.
+pub const COORD_BYTES: usize = 16;
+/// Offset of the producer-written tail counter (total pushes).
+pub const TAIL_OFF: usize = 0;
+/// Offset of the consumer-written head counter (total pops).
+pub const HEAD_OFF: usize = 8;

@@ -1,0 +1,371 @@
+//! Multiple-producer single-consumer channels, in the paper's two modes:
+//!
+//! - **locking** — one shared ring; producers serialize through exclusive
+//!   access before reserving a slot. Cheap in memory, pays the exclusion
+//!   cost on every push.
+//! - **non-locking** — one dedicated SPSC ring per producer; no exclusive
+//!   access at all, `n_producers ×` the memory. The consumer drains the
+//!   sub-channels round-robin.
+//!
+//! `bench ablation_channels` quantifies the trade-off.
+
+use std::sync::{Arc, Mutex};
+
+use crate::core::communication::CommunicationManager;
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::Tag;
+use crate::core::memory::LocalMemorySlot;
+use crate::frontends::channels::spsc::{SpscConsumer, SpscProducer};
+
+/// Which MPSC flavour to construct (ablation knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MpscMode {
+    Locking,
+    NonLocking,
+}
+
+/// Locking MPSC: a shared SPSC ring guarded by collective exclusive
+/// access. The lock generalizes the paper's "collective exclusive access";
+/// over shared-memory backends it is a process-wide mutex, which is the
+/// strongest-contention case the ablation measures.
+pub struct LockingMpscProducer {
+    inner: Arc<Mutex<SpscProducer>>,
+}
+
+impl Clone for LockingMpscProducer {
+    fn clone(&self) -> Self {
+        Self {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+/// Consumer of the locking MPSC (a plain SPSC consumer underneath).
+pub struct LockingMpscConsumer {
+    inner: SpscConsumer,
+}
+
+impl LockingMpscProducer {
+    /// Collective with [`LockingMpscConsumer::create`] under the same tag.
+    pub fn create(
+        cmm: Arc<dyn CommunicationManager>,
+        tag: Tag,
+        key_base: u64,
+        msg_size: usize,
+        capacity: u64,
+        scratch: LocalMemorySlot,
+    ) -> Result<LockingMpscProducer> {
+        Ok(LockingMpscProducer {
+            inner: Arc::new(Mutex::new(SpscProducer::create(
+                cmm, tag, key_base, msg_size, capacity, scratch,
+            )?)),
+        })
+    }
+
+    /// Push under exclusive access. Ok(false) when full.
+    pub fn push(&self, msg: &[u8]) -> Result<bool> {
+        self.inner.lock().unwrap().push(msg)
+    }
+
+    pub fn push_blocking(&self, msg: &[u8]) -> Result<()> {
+        loop {
+            if self.push(msg)? {
+                return Ok(());
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl LockingMpscConsumer {
+    pub fn create(
+        cmm: &dyn CommunicationManager,
+        data: LocalMemorySlot,
+        coord: LocalMemorySlot,
+        tag: Tag,
+        key_base: u64,
+        msg_size: usize,
+        capacity: u64,
+    ) -> Result<LockingMpscConsumer> {
+        Ok(LockingMpscConsumer {
+            inner: SpscConsumer::create(cmm, data, coord, tag, key_base, msg_size, capacity)?,
+        })
+    }
+
+    pub fn pop(&mut self, out: &mut [u8]) -> Result<bool> {
+        self.inner.pop(out)
+    }
+
+    pub fn pop_blocking(&mut self, out: &mut [u8]) -> Result<()> {
+        self.inner.pop_blocking(out)
+    }
+
+    pub fn depth(&self) -> Result<u64> {
+        self.inner.depth()
+    }
+}
+
+/// Non-locking MPSC consumer: one dedicated SPSC ring per producer,
+/// drained round-robin. Producers are plain [`SpscProducer`]s, each
+/// created with `key_base = base + 2*producer_index`.
+pub struct NonLockingMpscConsumer {
+    subs: Vec<SpscConsumer>,
+    next: usize,
+}
+
+impl NonLockingMpscConsumer {
+    /// Create `n_producers` sub-channels. `alloc` provides (data, coord)
+    /// slot pairs — called once per producer — so the frontend stays
+    /// memory-manager agnostic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn create(
+        cmm: &dyn CommunicationManager,
+        n_producers: usize,
+        tag_base: u64,
+        key_base: u64,
+        msg_size: usize,
+        capacity: u64,
+        mut alloc: impl FnMut(usize, usize) -> Result<(LocalMemorySlot, LocalMemorySlot)>,
+    ) -> Result<NonLockingMpscConsumer> {
+        if n_producers == 0 {
+            return Err(HicrError::Rejected("MPSC with zero producers".into()));
+        }
+        let mut subs = Vec::with_capacity(n_producers);
+        for i in 0..n_producers {
+            let (data, coord) = alloc(capacity as usize * msg_size, 16)?;
+            subs.push(SpscConsumer::create(
+                cmm,
+                data,
+                coord,
+                Tag(tag_base + i as u64),
+                key_base,
+                msg_size,
+                capacity,
+            )?);
+        }
+        Ok(NonLockingMpscConsumer { subs, next: 0 })
+    }
+
+    /// Producer-side constructor for producer `i` (collective with the
+    /// consumer's sub-channel `i`).
+    pub fn producer(
+        cmm: Arc<dyn CommunicationManager>,
+        i: usize,
+        tag_base: u64,
+        key_base: u64,
+        msg_size: usize,
+        capacity: u64,
+        scratch: LocalMemorySlot,
+    ) -> Result<SpscProducer> {
+        SpscProducer::create(
+            cmm,
+            Tag(tag_base + i as u64),
+            key_base,
+            msg_size,
+            capacity,
+            scratch,
+        )
+    }
+
+    /// Round-robin non-blocking pop across the sub-channels.
+    pub fn pop(&mut self, out: &mut [u8]) -> Result<bool> {
+        for _ in 0..self.subs.len() {
+            let i = self.next;
+            self.next = (self.next + 1) % self.subs.len();
+            if self.subs[i].pop(out)? {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    pub fn pop_blocking(&mut self, out: &mut [u8]) -> Result<()> {
+        loop {
+            if self.pop(out)? {
+                return Ok(());
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Total queued messages across sub-channels.
+    pub fn depth(&self) -> Result<u64> {
+        let mut total = 0;
+        for s in &self.subs {
+            total += s.depth()?;
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::threads::ThreadsCommunicationManager;
+    use crate::core::ids::MemorySpaceId;
+    use std::collections::BTreeSet;
+
+    fn slot(len: usize) -> LocalMemorySlot {
+        LocalMemorySlot::alloc(MemorySpaceId(1), len).unwrap()
+    }
+
+    #[test]
+    fn locking_many_producers_no_loss() {
+        let cmm: Arc<ThreadsCommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let mut consumer = LockingMpscConsumer::create(
+            cmm.as_ref(),
+            slot(8 * 32),
+            slot(16),
+            Tag(10),
+            0,
+            8,
+            32,
+        )
+        .unwrap();
+        let producer = LockingMpscProducer::create(
+            Arc::clone(&cmm) as Arc<dyn CommunicationManager>,
+            Tag(10),
+            0,
+            8,
+            32,
+            slot(8),
+        )
+        .unwrap();
+        let n_producers = 4u64;
+        let per = 200u64;
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let prod = producer.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    let v = p * 1_000_000 + i;
+                    prod.push_blocking(&v.to_le_bytes()).unwrap();
+                }
+            }));
+        }
+        let mut seen = BTreeSet::new();
+        let mut out = [0u8; 8];
+        for _ in 0..n_producers * per {
+            consumer.pop_blocking(&mut out).unwrap();
+            assert!(seen.insert(u64::from_le_bytes(out)), "duplicate message");
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(seen.len() as u64, n_producers * per);
+        // Per-producer FIFO: within each producer's values, order held —
+        // check by verifying the set contains exactly the expected values.
+        for p in 0..n_producers {
+            for i in 0..per {
+                assert!(seen.contains(&(p * 1_000_000 + i)));
+            }
+        }
+    }
+
+    #[test]
+    fn nonlocking_dedicated_rings() {
+        let cmm: Arc<ThreadsCommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let n = 3usize;
+        let mut consumer = NonLockingMpscConsumer::create(
+            cmm.as_ref(),
+            n,
+            100,
+            0,
+            8,
+            4,
+            |data_len, coord_len| Ok((slot(data_len), slot(coord_len))),
+        )
+        .unwrap();
+        let mut producers: Vec<SpscProducer> = (0..n)
+            .map(|i| {
+                NonLockingMpscConsumer::producer(
+                    Arc::clone(&cmm) as Arc<dyn CommunicationManager>,
+                    i,
+                    100,
+                    0,
+                    8,
+                    4,
+                    slot(8),
+                )
+                .unwrap()
+            })
+            .collect();
+        for (i, p) in producers.iter_mut().enumerate() {
+            for k in 0..3u64 {
+                assert!(p.push(&((i as u64) * 10 + k).to_le_bytes()).unwrap());
+            }
+        }
+        assert_eq!(consumer.depth().unwrap(), 9);
+        let mut seen = BTreeSet::new();
+        let mut out = [0u8; 8];
+        while consumer.pop(&mut out).unwrap() {
+            seen.insert(u64::from_le_bytes(out));
+        }
+        assert_eq!(seen.len(), 9);
+    }
+
+    #[test]
+    fn zero_producers_rejected() {
+        let cmm = ThreadsCommunicationManager::new();
+        assert!(NonLockingMpscConsumer::create(&cmm, 0, 1, 0, 8, 4, |a, b| {
+            Ok((slot(a), slot(b)))
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn per_producer_fifo_in_nonlocking_mode() {
+        // Each sub-channel preserves its producer's order even when the
+        // consumer drains round-robin.
+        let cmm: Arc<ThreadsCommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let n = 2usize;
+        let mut consumer = NonLockingMpscConsumer::create(
+            cmm.as_ref(),
+            n,
+            200,
+            0,
+            8,
+            64,
+            |a, b| Ok((slot(a), slot(b))),
+        )
+        .unwrap();
+        let mut handles = Vec::new();
+        for i in 0..n {
+            let cmm = Arc::clone(&cmm);
+            handles.push(std::thread::spawn(move || {
+                let mut p = NonLockingMpscConsumer::producer(
+                    cmm as Arc<dyn CommunicationManager>,
+                    i,
+                    200,
+                    0,
+                    8,
+                    64,
+                    slot(8),
+                )
+                .unwrap();
+                for k in 0..50u64 {
+                    p.push_blocking(&((i as u64) << 32 | k).to_le_bytes())
+                        .unwrap();
+                }
+            }));
+        }
+        let mut last_seen = vec![None::<u64>; n];
+        let mut out = [0u8; 8];
+        for _ in 0..(n * 50) {
+            consumer.pop_blocking(&mut out).unwrap();
+            let v = u64::from_le_bytes(out);
+            let producer = (v >> 32) as usize;
+            let seq = v & 0xFFFF_FFFF;
+            if let Some(prev) = last_seen[producer] {
+                assert!(seq > prev, "producer {producer} order violated");
+            }
+            last_seen[producer] = Some(seq);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

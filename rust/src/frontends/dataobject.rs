@@ -1,0 +1,176 @@
+//! Data Object frontend (paper §4.3): sporadic communication of large
+//! blocks (e.g. tensors) without pre-exchanged ring buffers.
+//!
+//! A `publish` makes a local slot remotely reachable under a user-chosen
+//! 64-bit object id and returns immediately; remote instances obtain a
+//! [`DataObjectHandle`] (metadata only) via `get_handle`, and fetch the
+//! payload with `get` — an asynchronous transfer fenced like any other
+//! HiCR memcpy (paper Fig. 5 mechanism).
+//!
+//! On the exchange-based substrate, visibility itself is a collective:
+//! `publish` and `get_handle` pair up on a per-object tag (namespaced
+//! under [`DATAOBJECT_TAG_BASE`]), which every participating instance
+//! enters — publishers volunteering the slot, consumers volunteering
+//! nothing.
+
+use std::sync::Arc;
+
+use crate::core::communication::{CommunicationManager, DataEndpoint, GlobalMemorySlot};
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::{Key, Tag};
+use crate::core::memory::LocalMemorySlot;
+
+/// Tag namespace reserved for data objects.
+pub const DATAOBJECT_TAG_BASE: u64 = 0x0D0B_0000_0000;
+
+fn tag_for(id: u64) -> Tag {
+    Tag(DATAOBJECT_TAG_BASE ^ id)
+}
+
+/// A published local data object (publisher side).
+pub struct DataObject {
+    pub id: u64,
+    slot: LocalMemorySlot,
+}
+
+impl DataObject {
+    /// Publish `slot` under `id`. Collective with all `get_handle(id)` /
+    /// `participate(id)` calls on the other instances.
+    pub fn publish(
+        cmm: &dyn CommunicationManager,
+        id: u64,
+        slot: LocalMemorySlot,
+    ) -> Result<DataObject> {
+        cmm.exchange_global_slots(tag_for(id), &[(Key(id), slot.clone())])?;
+        Ok(DataObject { id, slot })
+    }
+
+    pub fn len(&self) -> usize {
+        self.slot.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slot.is_empty()
+    }
+}
+
+/// Remote-side handle: the metadata required to fetch the object.
+#[derive(Debug, Clone)]
+pub struct DataObjectHandle {
+    pub id: u64,
+    global: GlobalMemorySlot,
+}
+
+impl DataObjectHandle {
+    /// Obtain a handle for object `id` (collective counterpart of
+    /// `publish` — enters the same exchange volunteering nothing).
+    pub fn get_handle(cmm: &dyn CommunicationManager, id: u64) -> Result<DataObjectHandle> {
+        let map = cmm.exchange_global_slots(tag_for(id), &[])?;
+        let global = map.get(&Key(id)).cloned().ok_or_else(|| {
+            HicrError::Collective(format!("no instance published data object {id}"))
+        })?;
+        Ok(DataObjectHandle { id, global })
+    }
+
+    /// Size of the published payload in bytes.
+    pub fn len(&self) -> usize {
+        self.global.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.global.len == 0
+    }
+
+    /// Start an asynchronous fetch of the object into `dst` (which must be
+    /// at least `len()` bytes). Completion is established by
+    /// [`DataObjectHandle::fence`].
+    pub fn get(
+        &self,
+        cmm: &Arc<dyn CommunicationManager>,
+        dst: &LocalMemorySlot,
+    ) -> Result<()> {
+        if dst.len() < self.global.len {
+            return Err(HicrError::Bounds(format!(
+                "destination {} B < object {} B",
+                dst.len(),
+                self.global.len
+            )));
+        }
+        cmm.memcpy(
+            &DataEndpoint::Local(dst.clone()),
+            0,
+            &DataEndpoint::Global(self.global.clone()),
+            0,
+            self.global.len,
+        )
+    }
+
+    /// Fence the fetch (per the paper: completion checked like Fig. 5).
+    pub fn fence(&self, cmm: &Arc<dyn CommunicationManager>) -> Result<()> {
+        cmm.fence(tag_for(self.id))
+    }
+}
+
+/// Non-publishing participant for instances that neither publish nor
+/// consume object `id` but must take part in the collective.
+pub fn participate(cmm: &dyn CommunicationManager, id: u64) -> Result<()> {
+    cmm.exchange_global_slots(tag_for(id), &[])?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::threads::ThreadsCommunicationManager;
+    use crate::core::ids::MemorySpaceId;
+
+    fn slot_with(data: &[u8]) -> LocalMemorySlot {
+        LocalMemorySlot::register_vec(MemorySpaceId(1), data.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn publish_then_get() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let payload: Vec<u8> = (0..200).map(|i| (i % 251) as u8).collect();
+        let obj = DataObject::publish(cmm.as_ref(), 42, slot_with(&payload)).unwrap();
+        assert_eq!(obj.len(), 200);
+        let handle = DataObjectHandle::get_handle(cmm.as_ref(), 42).unwrap();
+        assert_eq!(handle.len(), 200);
+        let dst = LocalMemorySlot::alloc(MemorySpaceId(1), 200).unwrap();
+        handle.get(&cmm, &dst).unwrap();
+        handle.fence(&cmm).unwrap();
+        assert_eq!(dst.to_vec(), payload);
+    }
+
+    #[test]
+    fn missing_object_reports_collective_error() {
+        let cmm = ThreadsCommunicationManager::new();
+        assert!(matches!(
+            DataObjectHandle::get_handle(&cmm, 777),
+            Err(HicrError::Collective(_))
+        ));
+    }
+
+    #[test]
+    fn undersized_destination_rejected() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        DataObject::publish(cmm.as_ref(), 1, slot_with(&[0u8; 64])).unwrap();
+        let handle = DataObjectHandle::get_handle(cmm.as_ref(), 1).unwrap();
+        let tiny = LocalMemorySlot::alloc(MemorySpaceId(1), 8).unwrap();
+        assert!(handle.get(&cmm, &tiny).is_err());
+    }
+
+    #[test]
+    fn distinct_ids_do_not_collide() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        DataObject::publish(cmm.as_ref(), 5, slot_with(b"five!")).unwrap();
+        DataObject::publish(cmm.as_ref(), 6, slot_with(b"six!!!")).unwrap();
+        let h5 = DataObjectHandle::get_handle(cmm.as_ref(), 5).unwrap();
+        let h6 = DataObjectHandle::get_handle(cmm.as_ref(), 6).unwrap();
+        assert_eq!(h5.len(), 5);
+        assert_eq!(h6.len(), 6);
+    }
+}

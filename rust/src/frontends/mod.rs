@@ -1,0 +1,17 @@
+//! Built-in frontends (paper §4.3): ready-to-use libraries exposing
+//! higher-level communication, execution and distributed-computing
+//! features, written *exclusively* against the abstract core API — so they
+//! work over any combination of backends.
+//!
+//! - [`channels`] — circular-buffer channels for frequent small messages
+//!   (SPSC + MPSC in locking / non-locking modes).
+//! - [`dataobject`] — publish/get of sporadic large data blocks.
+//! - [`rpc`] — remote procedure registration, listening and execution.
+//! - [`tasking`] — building blocks for task-based runtime systems
+//!   (stateful tasks with callbacks, pull-scheduled workers, and an
+//!   OVNI-style execution tracer).
+
+pub mod channels;
+pub mod dataobject;
+pub mod rpc;
+pub mod tasking;

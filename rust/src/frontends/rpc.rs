@@ -1,0 +1,309 @@
+//! RPC frontend (paper §4.3): registration, listening, and execution of
+//! remote procedure calls — the coordination primitive for multi-instance
+//! deployment (topology exchange, channel setup, task orchestration).
+//!
+//! Built entirely on the Channels frontend: one SPSC request channel
+//! (caller → listener) and one SPSC response channel (listener → caller).
+//! Functions must be registered on the listening side before a call
+//! executes; the listener enters `serve_one`/`serve_forever`, and return
+//! values are delivered back to the caller automatically.
+//!
+//! Wire format inside the fixed-size ring message:
+//! `[u64 fn_id][u64 payload_len][payload .. padded]`; responses carry
+//! `[u64 status][u64 payload_len][payload ..]` (status 0 = ok, 1 =
+//! unknown function, 2 = handler error).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::core::communication::CommunicationManager;
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::Tag;
+use crate::core::memory::LocalMemorySlot;
+use crate::frontends::channels::spsc::{SpscConsumer, SpscProducer};
+
+/// Stable 64-bit id for a function name (FNV-1a).
+pub fn fn_id(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Header bytes inside each ring message.
+const HDR: usize = 16;
+
+/// Response status codes.
+const ST_OK: u64 = 0;
+const ST_UNKNOWN: u64 = 1;
+const ST_HANDLER_ERR: u64 = 2;
+
+/// A registered remote procedure.
+pub type RpcHandler = Box<dyn Fn(&[u8]) -> Result<Vec<u8>> + Send>;
+
+/// Listener (server) side of an RPC link.
+pub struct RpcListener {
+    requests: SpscConsumer,
+    responses: SpscProducer,
+    handlers: HashMap<u64, RpcHandler>,
+    names: HashMap<u64, String>,
+    max_payload: usize,
+}
+
+/// Caller (client) side of an RPC link.
+pub struct RpcCaller {
+    requests: SpscProducer,
+    responses: SpscConsumer,
+    max_payload: usize,
+}
+
+/// Create the listener side. Collective with [`RpcCaller::create`] under
+/// the same `tag` — the listener owns the request ring, the caller the
+/// response ring. `alloc` supplies (data, coord) slots for the ring this
+/// side owns.
+impl RpcListener {
+    pub fn create(
+        cmm: Arc<dyn CommunicationManager>,
+        tag: Tag,
+        max_payload: usize,
+        capacity: u64,
+        mut alloc: impl FnMut(usize) -> Result<LocalMemorySlot>,
+    ) -> Result<RpcListener> {
+        let msg = HDR + max_payload;
+        // Request ring: ours. Keys 0/1 under `tag`.
+        let requests = SpscConsumer::create(
+            cmm.as_ref(),
+            alloc(msg * capacity as usize)?,
+            alloc(16)?,
+            tag,
+            0,
+            msg,
+            capacity,
+        )?;
+        // Response ring: the caller's. Keys 0/1 under tag+1.
+        let responses = SpscProducer::create(
+            Arc::clone(&cmm),
+            Tag(tag.0 + 1),
+            0,
+            msg,
+            capacity,
+            alloc(8)?,
+        )?;
+        Ok(RpcListener {
+            requests,
+            responses,
+            handlers: HashMap::new(),
+            names: HashMap::new(),
+            max_payload,
+        })
+    }
+
+    /// Register `name` before callers invoke it (paper: "the function must
+    /// be pre-registered on the receiving instance").
+    pub fn register(
+        &mut self,
+        name: &str,
+        handler: impl Fn(&[u8]) -> Result<Vec<u8>> + Send + 'static,
+    ) {
+        let id = fn_id(name);
+        self.names.insert(id, name.to_string());
+        self.handlers.insert(id, Box::new(handler));
+    }
+
+    /// Serve exactly one request (blocking listen).
+    pub fn serve_one(&mut self) -> Result<()> {
+        let msg_size = HDR + self.max_payload;
+        let mut buf = vec![0u8; msg_size];
+        self.requests.pop_blocking(&mut buf)?;
+        let id = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+        let len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+        if len > self.max_payload {
+            return Err(HicrError::Bounds("request payload overflow".into()));
+        }
+        let (status, ret) = match self.handlers.get(&id) {
+            None => (ST_UNKNOWN, Vec::new()),
+            Some(h) => match h(&buf[HDR..HDR + len]) {
+                Ok(ret) if ret.len() <= self.max_payload => (ST_OK, ret),
+                Ok(_) => (ST_HANDLER_ERR, b"return value too large".to_vec()),
+                Err(e) => (ST_HANDLER_ERR, e.to_string().into_bytes()),
+            },
+        };
+        let mut resp = vec![0u8; msg_size];
+        resp[0..8].copy_from_slice(&status.to_le_bytes());
+        resp[8..16].copy_from_slice(&(ret.len() as u64).to_le_bytes());
+        resp[HDR..HDR + ret.len()].copy_from_slice(&ret);
+        self.responses.push_blocking(&resp)?;
+        Ok(())
+    }
+
+    /// Serve `n` requests.
+    pub fn serve(&mut self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            self.serve_one()?;
+        }
+        Ok(())
+    }
+}
+
+impl RpcCaller {
+    /// Create the caller side (collective with [`RpcListener::create`]).
+    pub fn create(
+        cmm: Arc<dyn CommunicationManager>,
+        tag: Tag,
+        max_payload: usize,
+        capacity: u64,
+        mut alloc: impl FnMut(usize) -> Result<LocalMemorySlot>,
+    ) -> Result<RpcCaller> {
+        let msg = HDR + max_payload;
+        let requests = SpscProducer::create(
+            Arc::clone(&cmm),
+            tag,
+            0,
+            msg,
+            capacity,
+            alloc(8)?,
+        )?;
+        let responses = SpscConsumer::create(
+            cmm.as_ref(),
+            alloc(msg * capacity as usize)?,
+            alloc(16)?,
+            Tag(tag.0 + 1),
+            0,
+            msg,
+            capacity,
+        )?;
+        Ok(RpcCaller {
+            requests,
+            responses,
+            max_payload,
+        })
+    }
+
+    /// Invoke `name` with `args`; blocks for the return value.
+    pub fn call(&mut self, name: &str, args: &[u8]) -> Result<Vec<u8>> {
+        if args.len() > self.max_payload {
+            return Err(HicrError::Bounds(format!(
+                "args {} B > max payload {}",
+                args.len(),
+                self.max_payload
+            )));
+        }
+        let msg_size = HDR + self.max_payload;
+        let mut req = vec![0u8; msg_size];
+        req[0..8].copy_from_slice(&fn_id(name).to_le_bytes());
+        req[8..16].copy_from_slice(&(args.len() as u64).to_le_bytes());
+        req[HDR..HDR + args.len()].copy_from_slice(args);
+        self.requests.push_blocking(&req)?;
+        let mut resp = vec![0u8; msg_size];
+        self.responses.pop_blocking(&mut resp)?;
+        let status = u64::from_le_bytes(resp[0..8].try_into().unwrap());
+        let len = u64::from_le_bytes(resp[8..16].try_into().unwrap()) as usize;
+        let payload = resp[HDR..HDR + len.min(self.max_payload)].to_vec();
+        match status {
+            ST_OK => Ok(payload),
+            ST_UNKNOWN => Err(HicrError::Rejected(format!(
+                "RPC '{name}' not registered on the listening instance"
+            ))),
+            _ => Err(HicrError::InvalidState(format!(
+                "RPC '{name}' handler failed: {}",
+                String::from_utf8_lossy(&payload)
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::threads::ThreadsCommunicationManager;
+    use crate::core::ids::MemorySpaceId;
+
+    fn alloc(len: usize) -> Result<LocalMemorySlot> {
+        LocalMemorySlot::alloc(MemorySpaceId(1), len)
+    }
+
+    fn link(tag: u64) -> (RpcListener, RpcCaller) {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let listener =
+            RpcListener::create(Arc::clone(&cmm), Tag(tag), 256, 4, alloc).unwrap();
+        let caller = RpcCaller::create(cmm, Tag(tag), 256, 4, alloc).unwrap();
+        (listener, caller)
+    }
+
+    #[test]
+    fn call_with_return_value() {
+        let (mut listener, mut caller) = link(1000);
+        listener.register("sum", |args| {
+            let total: u64 = args
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .sum();
+            Ok(total.to_le_bytes().to_vec())
+        });
+        let server = std::thread::spawn(move || {
+            listener.serve(1).unwrap();
+            listener
+        });
+        let mut args = Vec::new();
+        for v in [3u64, 4, 5] {
+            args.extend_from_slice(&v.to_le_bytes());
+        }
+        let ret = caller.call("sum", &args).unwrap();
+        assert_eq!(u64::from_le_bytes(ret.try_into().unwrap()), 12);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_function_rejected() {
+        let (mut listener, mut caller) = link(1010);
+        let server = std::thread::spawn(move || {
+            listener.serve(1).unwrap();
+        });
+        let err = caller.call("not-registered", b"").unwrap_err();
+        assert!(err.is_rejection());
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn handler_error_propagates() {
+        let (mut listener, mut caller) = link(1020);
+        listener.register("bad", |_| {
+            Err(HicrError::InvalidState("deliberate".into()))
+        });
+        let server = std::thread::spawn(move || {
+            listener.serve(1).unwrap();
+        });
+        let err = caller.call("bad", b"x").unwrap_err();
+        assert!(err.to_string().contains("deliberate"));
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn many_sequential_calls() {
+        let (mut listener, mut caller) = link(1030);
+        listener.register("echo", |args| Ok(args.to_vec()));
+        let server = std::thread::spawn(move || {
+            listener.serve(50).unwrap();
+        });
+        for i in 0..50u32 {
+            let ret = caller.call("echo", &i.to_le_bytes()).unwrap();
+            assert_eq!(u32::from_le_bytes(ret.try_into().unwrap()), i);
+        }
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_args_rejected_locally() {
+        let (_listener, mut caller) = link(1040);
+        assert!(caller.call("x", &vec![0u8; 300]).is_err());
+    }
+
+    #[test]
+    fn fn_id_stable_and_distinct() {
+        assert_eq!(fn_id("topology"), fn_id("topology"));
+        assert_ne!(fn_id("topology"), fn_id("topologia"));
+    }
+}

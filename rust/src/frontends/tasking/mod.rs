@@ -1,0 +1,23 @@
+//! Tasking frontend (paper §4.3): building blocks for task-based runtime
+//! systems — stateful tasks with state-change callbacks, pull-scheduled
+//! worker objects, and an OVNI-style execution tracer.
+//!
+//! Two execution engines reproduce the paper's Test Case 3/4 variants:
+//!
+//! - **coro** (Pthreads workers + Boost-like fibers): workers pull tasks
+//!   from a shared ready queue and drive them with user-level
+//!   suspend/resume; a task waiting on children parks *without* occupying
+//!   its worker.
+//! - **nosv** (thread-per-task, system-wide scheduler): every task gets a
+//!   kernel thread admitted through a global lock; waiting on children
+//!   blocks the kernel thread (releasing its concurrency slot), and
+//!   completion is eagerly polled.
+//!
+//! The same application code (a body receiving a [`TaskCtx`]) runs on
+//! both — the Fibonacci and Jacobi apps are written once.
+
+pub mod system;
+pub mod trace;
+
+pub use system::{TaskCtx, TaskSystem, TaskSystemKind};
+pub use trace::{EventKind, Trace, TraceEvent};

@@ -1,0 +1,643 @@
+//! The task system: stateful tasks, pull-scheduled workers, and the two
+//! execution engines (coro fibers vs nosv thread-per-task) the paper
+//! compares in Test Cases 3 and 4.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::backends::coro::compute::{CoroComputeManager, FiberExecutionState};
+use crate::backends::nosv;
+use crate::core::compute::{ExecStatus, ExecutionUnit, FnExecutionUnit};
+use crate::core::error::{HicrError, Result};
+use crate::frontends::tasking::trace::{EventKind, Trace};
+
+/// Which engine executes the tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskSystemKind {
+    /// Pthreads workers + fiber tasks (Boost.Context analogue).
+    Coro,
+    /// Kernel-thread-per-task with a slot-bounded system scheduler
+    /// (nOS-V analogue).
+    Nosv,
+}
+
+/// A task body: runs once, may spawn children and wait for them.
+pub type TaskBody = Box<dyn FnOnce(&TaskCtx) + Send + 'static>;
+
+/// Dependency/lifecycle bookkeeping shared by both engines.
+struct TaskSync {
+    pending_children: usize,
+    waiting: bool,
+    /// Set when a waiting parent became ready before it finished parking.
+    ready_now: bool,
+    /// Parked coro task awaiting child completion.
+    parked: Option<CoroTask>,
+}
+
+struct TaskNode {
+    #[allow(dead_code)]
+    id: u64,
+    label: String,
+    parent: Option<Arc<TaskNode>>,
+    sync: Mutex<TaskSync>,
+    /// nosv engine: parents block here awaiting children.
+    cv: Condvar,
+}
+
+#[derive(Clone)]
+struct CoroTask {
+    node: Arc<TaskNode>,
+    fiber: Arc<FiberExecutionState>,
+}
+
+/// Counting semaphore handing out stable slot ids (nosv worker slots).
+struct IdSemaphore {
+    free: Mutex<Vec<usize>>,
+    cv: Condvar,
+}
+
+impl IdSemaphore {
+    fn new(n: usize) -> Self {
+        Self {
+            free: Mutex::new((0..n).rev().collect()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn acquire(&self) -> usize {
+        let mut free = self.free.lock().unwrap();
+        loop {
+            if let Some(id) = free.pop() {
+                return id;
+            }
+            free = self.cv.wait(free).unwrap();
+        }
+    }
+
+    fn release(&self, id: usize) {
+        self.free.lock().unwrap().push(id);
+        self.cv.notify_one();
+    }
+}
+
+struct CoroEngine {
+    cm: CoroComputeManager,
+    ready: Mutex<VecDeque<CoroTask>>,
+    ready_cv: Condvar,
+    shutdown: AtomicBool,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+struct NosvEngine {
+    slots: IdSemaphore,
+    /// Submitted-but-unscheduled tasks. nOS-V materializes a task's
+    /// kernel thread when it is *scheduled*, not when submitted — eager
+    /// per-submission spawning would hold thousands of live threads on a
+    /// deep DAG (observed as EAGAIN at F(20); EXPERIMENTS.md §Perf).
+    queue: Mutex<VecDeque<(String, TaskBody, Arc<TaskNode>)>>,
+    queue_cv: Condvar,
+    shutdown: AtomicBool,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+struct Inner {
+    kind: TaskSystemKind,
+    trace: Arc<Trace>,
+    next_task_id: AtomicU64,
+    outstanding: AtomicUsize,
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+    tasks_executed: AtomicU64,
+    coro: Option<CoroEngine>,
+    nosv: Option<NosvEngine>,
+}
+
+/// Handle task bodies use to spawn children and synchronize (the only
+/// API the Fibonacci/Jacobi apps see — engine-independent).
+pub struct TaskCtx<'a> {
+    inner: &'a Arc<Inner>,
+    node: &'a Arc<TaskNode>,
+    exec: Option<&'a crate::core::compute::ExecCtx<'a>>,
+}
+
+impl<'a> TaskCtx<'a> {
+    /// Spawn a child task. The child may itself spawn and wait.
+    pub fn spawn(&self, label: impl Into<String>, body: impl FnOnce(&TaskCtx) + Send + 'static) {
+        {
+            let mut sync = self.node.sync.lock().unwrap();
+            sync.pending_children += 1;
+        }
+        spawn_task(
+            self.inner,
+            label.into(),
+            Box::new(body),
+            Some(Arc::clone(self.node)),
+        );
+    }
+
+    /// Wait until every child spawned by this task has finished.
+    pub fn wait_children(&self) {
+        match self.inner.kind {
+            TaskSystemKind::Coro => {
+                // Park the fiber; child completion re-enqueues us.
+                loop {
+                    {
+                        let mut sync = self.node.sync.lock().unwrap();
+                        if sync.pending_children == 0 {
+                            return;
+                        }
+                        sync.waiting = true;
+                    }
+                    self.exec
+                        .expect("coro task without exec ctx")
+                        .suspend();
+                }
+            }
+            TaskSystemKind::Nosv => {
+                // Release our scheduler slot and block the kernel thread.
+                let engine = self.inner.nosv.as_ref().expect("nosv engine");
+                let slot = current_nosv_slot();
+                if let Some(s) = slot {
+                    engine.slots.release(s);
+                }
+                {
+                    let mut sync = self.node.sync.lock().unwrap();
+                    while sync.pending_children > 0 {
+                        sync = self.node.cv.wait(sync).unwrap();
+                    }
+                }
+                if slot.is_some() {
+                    let s = engine.slots.acquire();
+                    set_nosv_slot(Some(s));
+                }
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// The nosv scheduler slot the current task thread holds.
+    static NOSV_SLOT: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
+}
+
+fn current_nosv_slot() -> Option<usize> {
+    NOSV_SLOT.with(|s| s.get())
+}
+
+fn set_nosv_slot(v: Option<usize>) {
+    NOSV_SLOT.with(|s| s.set(v));
+}
+
+/// The task system facade.
+pub struct TaskSystem {
+    inner: Arc<Inner>,
+    n_workers: usize,
+}
+
+impl TaskSystem {
+    /// Create a system with `n_workers` workers/slots.
+    pub fn new(kind: TaskSystemKind, n_workers: usize, trace_enabled: bool) -> Arc<TaskSystem> {
+        assert!(n_workers > 0, "need at least one worker");
+        let trace = Arc::new(Trace::new(trace_enabled));
+        let inner = Arc::new(Inner {
+            kind,
+            trace,
+            next_task_id: AtomicU64::new(1),
+            outstanding: AtomicUsize::new(0),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+            tasks_executed: AtomicU64::new(0),
+            coro: match kind {
+                TaskSystemKind::Coro => Some(CoroEngine {
+                    cm: CoroComputeManager::new(),
+                    ready: Mutex::new(VecDeque::new()),
+                    ready_cv: Condvar::new(),
+                    shutdown: AtomicBool::new(false),
+                    workers: Mutex::new(Vec::new()),
+                }),
+                TaskSystemKind::Nosv => None,
+            },
+            nosv: match kind {
+                TaskSystemKind::Nosv => Some(NosvEngine {
+                    slots: IdSemaphore::new(n_workers),
+                    queue: Mutex::new(VecDeque::new()),
+                    queue_cv: Condvar::new(),
+                    shutdown: AtomicBool::new(false),
+                    dispatcher: Mutex::new(None),
+                }),
+                TaskSystemKind::Coro => None,
+            },
+        });
+        if kind == TaskSystemKind::Nosv {
+            // The system-wide scheduler pump: admits queued tasks onto
+            // kernel threads as slots free up.
+            let inner2 = Arc::clone(&inner);
+            let handle = std::thread::Builder::new()
+                .name("hicr-nosv-sched".into())
+                .spawn(move || nosv_dispatcher_loop(inner2))
+                .expect("spawn nosv dispatcher");
+            *inner.nosv.as_ref().unwrap().dispatcher.lock().unwrap() = Some(handle);
+        }
+        if kind == TaskSystemKind::Coro {
+            // Start the pull-loop workers (paper: "a simple loop that
+            // calls a pull function").
+            let engine = inner.coro.as_ref().unwrap();
+            let mut workers = engine.workers.lock().unwrap();
+            for w in 0..n_workers {
+                let inner2 = Arc::clone(&inner);
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("hicr-task-worker-{w}"))
+                        .spawn(move || coro_worker_loop(inner2, w))
+                        .expect("spawn task worker"),
+                );
+            }
+        }
+        Arc::new(TaskSystem { inner, n_workers })
+    }
+
+    pub fn kind(&self) -> TaskSystemKind {
+        self.inner.kind
+    }
+
+    pub fn trace(&self) -> Arc<Trace> {
+        Arc::clone(&self.inner.trace)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Tasks executed to completion so far.
+    pub fn tasks_executed(&self) -> u64 {
+        self.inner.tasks_executed.load(Ordering::Relaxed)
+    }
+
+    /// Spawn a root task and block until the whole task graph quiesces.
+    pub fn run(&self, label: impl Into<String>, body: impl FnOnce(&TaskCtx) + Send + 'static) -> Result<()> {
+        spawn_task(&self.inner, label.into(), Box::new(body), None);
+        let mut guard = self.inner.done_mx.lock().unwrap();
+        while self.inner.outstanding.load(Ordering::Acquire) != 0 {
+            guard = self.inner.done_cv.wait(guard).unwrap();
+        }
+        Ok(())
+    }
+
+    /// Stop workers (coro) / the scheduler pump (nosv). Call after the
+    /// last `run`.
+    pub fn shutdown(&self) -> Result<()> {
+        if let Some(engine) = &self.inner.coro {
+            engine.shutdown.store(true, Ordering::SeqCst);
+            engine.ready_cv.notify_all();
+            let mut workers = engine.workers.lock().unwrap();
+            for w in workers.drain(..) {
+                w.join()
+                    .map_err(|_| HicrError::InvalidState("task worker panicked".into()))?;
+            }
+        }
+        if let Some(engine) = &self.inner.nosv {
+            engine.shutdown.store(true, Ordering::SeqCst);
+            engine.queue_cv.notify_all();
+            if let Some(d) = engine.dispatcher.lock().unwrap().take() {
+                d.join()
+                    .map_err(|_| HicrError::InvalidState("nosv dispatcher panicked".into()))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Engine-independent task spawn.
+fn spawn_task(inner: &Arc<Inner>, label: String, body: TaskBody, parent: Option<Arc<TaskNode>>) {
+    inner.outstanding.fetch_add(1, Ordering::AcqRel);
+    let node = Arc::new(TaskNode {
+        id: inner.next_task_id.fetch_add(1, Ordering::Relaxed),
+        label,
+        parent,
+        sync: Mutex::new(TaskSync {
+            pending_children: 0,
+            waiting: false,
+            ready_now: false,
+            parked: None,
+        }),
+        cv: Condvar::new(),
+    });
+    match inner.kind {
+        TaskSystemKind::Coro => {
+            let engine = inner.coro.as_ref().expect("coro engine");
+            let inner2 = Arc::clone(inner);
+            let node2 = Arc::clone(&node);
+            let body_cell = Mutex::new(Some(body));
+            let unit = FnExecutionUnit::new(node.label.clone(), move |ctx| {
+                let body = body_cell.lock().unwrap().take().expect("body runs once");
+                let tctx = TaskCtx {
+                    inner: &inner2,
+                    node: &node2,
+                    exec: Some(ctx),
+                };
+                body(&tctx);
+            });
+            let fiber = engine
+                .cm
+                .create_fiber(unit as Arc<dyn ExecutionUnit>)
+                .expect("fiber creation");
+            enqueue(engine, CoroTask { node, fiber });
+        }
+        TaskSystemKind::Nosv => {
+            // Submit to the system-wide scheduler; the dispatcher
+            // materializes a kernel thread when a slot frees up.
+            let engine = inner.nosv.as_ref().expect("nosv engine");
+            let label = node.label.clone();
+            engine.queue.lock().unwrap().push_back((label, body, node));
+            engine.queue_cv.notify_one();
+        }
+    }
+}
+
+/// The nOS-V scheduler pump: pop a submitted task, acquire a slot, and
+/// run it on a fresh kernel thread (thread-per-task at *schedule* time).
+fn nosv_dispatcher_loop(inner: Arc<Inner>) {
+    let engine = inner.nosv.as_ref().expect("nosv engine");
+    loop {
+        let next = {
+            let mut queue = engine.queue.lock().unwrap();
+            loop {
+                if let Some(t) = queue.pop_back() {
+                    break Some(t);
+                }
+                if engine.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                queue = engine.queue_cv.wait(queue).unwrap();
+            }
+        };
+        let Some((_label, body, node)) = next else { return };
+        // Admission through the system-wide scheduler lock, then a slot.
+        nosv::compute::admit_task();
+        let slot = engine.slots.acquire();
+        let inner2 = Arc::clone(&inner);
+        std::thread::Builder::new()
+            .name("hicr-nosv-task".into())
+            .spawn(move || {
+                let engine = inner2.nosv.as_ref().expect("nosv engine");
+                set_nosv_slot(Some(slot));
+                let t0 = inner2.trace.now_ns();
+                let tctx = TaskCtx {
+                    inner: &inner2,
+                    node: &node,
+                    exec: None,
+                };
+                body(&tctx);
+                inner2.trace.record(
+                    current_nosv_slot().unwrap_or(slot),
+                    EventKind::Run,
+                    &node.label,
+                    t0,
+                );
+                if let Some(s) = current_nosv_slot() {
+                    engine.slots.release(s);
+                    set_nosv_slot(None);
+                }
+                finish_task(&inner2, &node);
+            })
+            .expect("spawn nosv task thread");
+    }
+}
+
+fn enqueue(engine: &CoroEngine, task: CoroTask) {
+    engine.ready.lock().unwrap().push_back(task);
+    engine.ready_cv.notify_one();
+}
+
+/// Common completion path: notify the parent and the system.
+fn finish_task(inner: &Arc<Inner>, node: &Arc<TaskNode>) {
+    inner.tasks_executed.fetch_add(1, Ordering::Relaxed);
+    if let Some(parent) = &node.parent {
+        let to_enqueue = {
+            let mut sync = parent.sync.lock().unwrap();
+            sync.pending_children -= 1;
+            if sync.pending_children == 0 && sync.waiting {
+                sync.waiting = false;
+                match sync.parked.take() {
+                    Some(task) => Some(task),
+                    None => {
+                        // Parent not parked yet: flag it ready (coro) /
+                        // wake it (nosv).
+                        sync.ready_now = true;
+                        None
+                    }
+                }
+            } else {
+                None
+            }
+        };
+        parent.cv.notify_all();
+        if let Some(task) = to_enqueue {
+            let engine = inner.coro.as_ref().expect("parked implies coro");
+            enqueue(engine, task);
+        }
+    }
+    if inner.outstanding.fetch_sub(1, Ordering::AcqRel) == 1 {
+        let _g = inner.done_mx.lock().unwrap();
+        inner.done_cv.notify_all();
+    }
+}
+
+/// The coro worker pull loop (paper §4.3 Tasking: worker objects).
+fn coro_worker_loop(inner: Arc<Inner>, worker_id: usize) {
+    let engine = inner.coro.as_ref().expect("coro engine");
+    loop {
+        // Pull the next ready task.
+        let task = {
+            let mut ready = engine.ready.lock().unwrap();
+            loop {
+                if let Some(t) = ready.pop_back() {
+                    break Some(t);
+                }
+                if engine.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                ready = engine.ready_cv.wait(ready).unwrap();
+            }
+        };
+        let Some(task) = task else { return };
+        let t0 = inner.trace.now_ns();
+        let status = task.fiber.resume().unwrap_or(ExecStatus::Failed);
+        inner
+            .trace
+            .record(worker_id, EventKind::Run, &task.node.label, t0);
+        match status {
+            ExecStatus::Finished | ExecStatus::Failed => {
+                finish_task(&inner, &task.node);
+            }
+            ExecStatus::Suspended => {
+                let mut sync = task.node.sync.lock().unwrap();
+                if sync.ready_now {
+                    // Children finished before we could park.
+                    sync.ready_now = false;
+                    drop(sync);
+                    enqueue(engine, task);
+                } else if sync.waiting && sync.pending_children > 0 {
+                    // Park; child completion re-enqueues.
+                    sync.parked = Some(task.clone());
+                } else {
+                    // Voluntary yield.
+                    drop(sync);
+                    enqueue(engine, task);
+                }
+            }
+            other => {
+                debug_assert!(false, "unexpected fiber status {other:?}");
+                finish_task(&inner, &task.node);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_tree(kind: TaskSystemKind) -> u64 {
+        // Three-level tree: root -> 3 children -> 2 grandchildren each.
+        let sys = TaskSystem::new(kind, 4, false);
+        let total = Arc::new(AtomicU64::new(0));
+        let t = Arc::clone(&total);
+        sys.run("root", move |ctx| {
+            for _ in 0..3 {
+                let t = Arc::clone(&t);
+                ctx.spawn("child", move |cctx| {
+                    for _ in 0..2 {
+                        let t = Arc::clone(&t);
+                        cctx.spawn("grandchild", move |_| {
+                            t.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                    cctx.wait_children();
+                    t.fetch_add(10, Ordering::SeqCst);
+                });
+            }
+            ctx.wait_children();
+            t.fetch_add(100, Ordering::SeqCst);
+        })
+        .unwrap();
+        sys.shutdown().unwrap();
+        assert_eq!(sys.tasks_executed(), 10);
+        total.load(Ordering::SeqCst)
+    }
+
+    #[test]
+    fn coro_tree_dependencies() {
+        assert_eq!(run_tree(TaskSystemKind::Coro), 136);
+    }
+
+    #[test]
+    fn nosv_tree_dependencies() {
+        assert_eq!(run_tree(TaskSystemKind::Nosv), 136);
+    }
+
+    #[test]
+    fn coro_small_fibonacci() {
+        // fib(10) = 55 via the naive recursive task DAG.
+        let sys = TaskSystem::new(TaskSystemKind::Coro, 4, false);
+        let result = Arc::new(AtomicU64::new(0));
+        let r = Arc::clone(&result);
+        sys.run("fib", move |ctx| {
+            let v = fib_task(ctx, 10);
+            r.store(v, Ordering::SeqCst);
+        })
+        .unwrap();
+        sys.shutdown().unwrap();
+        assert_eq!(result.load(Ordering::SeqCst), 55);
+    }
+
+    /// The naive recursive Fibonacci as nested tasks (test-local copy of
+    /// the app pattern).
+    fn fib_task(ctx: &TaskCtx, n: u64) -> u64 {
+        if n < 2 {
+            return n;
+        }
+        let a = Arc::new(AtomicU64::new(0));
+        let b = Arc::new(AtomicU64::new(0));
+        let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+        ctx.spawn("fib-l", move |c| {
+            let v = fib_task(c, n - 1);
+            a2.store(v, Ordering::SeqCst);
+        });
+        ctx.spawn("fib-r", move |c| {
+            let v = fib_task(c, n - 2);
+            b2.store(v, Ordering::SeqCst);
+        });
+        ctx.wait_children();
+        a.load(Ordering::SeqCst) + b.load(Ordering::SeqCst)
+    }
+
+    #[test]
+    fn nosv_small_fibonacci() {
+        let sys = TaskSystem::new(TaskSystemKind::Nosv, 4, false);
+        let result = Arc::new(AtomicU64::new(0));
+        let r = Arc::clone(&result);
+        sys.run("fib", move |ctx| {
+            let v = fib_task(ctx, 9);
+            r.store(v, Ordering::SeqCst);
+        })
+        .unwrap();
+        sys.shutdown().unwrap();
+        assert_eq!(result.load(Ordering::SeqCst), 34);
+    }
+
+    #[test]
+    fn trace_collects_task_events() {
+        let sys = TaskSystem::new(TaskSystemKind::Coro, 2, true);
+        sys.run("traced", |ctx| {
+            for _ in 0..4 {
+                ctx.spawn("leaf", |_| {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                });
+            }
+            ctx.wait_children();
+        })
+        .unwrap();
+        sys.shutdown().unwrap();
+        let events = sys.trace().events();
+        assert!(events.len() >= 5, "root + 4 leaves, got {}", events.len());
+        assert!(events.iter().any(|e| e.label == "leaf"));
+    }
+
+    #[test]
+    fn sequential_runs_reuse_system() {
+        let sys = TaskSystem::new(TaskSystemKind::Coro, 2, false);
+        for _ in 0..3 {
+            sys.run("r", |ctx| {
+                ctx.spawn("c", |_| {});
+                ctx.wait_children();
+            })
+            .unwrap();
+        }
+        sys.shutdown().unwrap();
+        assert_eq!(sys.tasks_executed(), 6);
+    }
+
+    #[test]
+    fn deep_recursion_no_worker_starvation() {
+        // A chain of depth 50 where every level waits on its child: far
+        // deeper than the worker count — only user-level parking survives
+        // this without deadlock.
+        fn chain(ctx: &TaskCtx, depth: u32, hits: Arc<AtomicU64>) {
+            if depth == 0 {
+                hits.fetch_add(1, Ordering::SeqCst);
+                return;
+            }
+            let h = Arc::clone(&hits);
+            ctx.spawn("link", move |c| chain(c, depth - 1, h));
+            ctx.wait_children();
+        }
+        let sys = TaskSystem::new(TaskSystemKind::Coro, 2, false);
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = Arc::clone(&hits);
+        sys.run("chain", move |ctx| chain(ctx, 50, h)).unwrap();
+        sys.shutdown().unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,189 @@
+//! OVNI-analogue instrumentation: per-worker execution traces collected
+//! regardless of the computing backend, exportable as JSON and renderable
+//! as ASCII timelines (our Paraver stand-in for Figs. 9/10).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// What a trace interval represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Meaningful task work.
+    Run,
+    /// Scheduling overhead / idle gap (rendered as empty space).
+    Idle,
+}
+
+/// One closed interval on a worker's timeline.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub worker: usize,
+    pub kind: EventKind,
+    pub label: String,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+/// Thread-safe trace collector.
+pub struct Trace {
+    epoch: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+    enabled: bool,
+}
+
+impl Trace {
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            epoch: Instant::now(),
+            events: Mutex::new(Vec::new()),
+            enabled,
+        }
+    }
+
+    /// Nanoseconds since trace start.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record a closed interval.
+    pub fn record(&self, worker: usize, kind: EventKind, label: &str, start_ns: u64) {
+        if !self.enabled {
+            return;
+        }
+        let end_ns = self.now_ns();
+        self.events.lock().unwrap().push(TraceEvent {
+            worker,
+            kind,
+            label: label.to_string(),
+            start_ns,
+            end_ns,
+        });
+    }
+
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Total busy (Run) nanoseconds per worker.
+    pub fn busy_ns_per_worker(&self, n_workers: usize) -> Vec<u64> {
+        let mut busy = vec![0u64; n_workers];
+        for e in self.events.lock().unwrap().iter() {
+            if e.kind == EventKind::Run && e.worker < n_workers {
+                busy[e.worker] += e.end_ns - e.start_ns;
+            }
+        }
+        busy
+    }
+
+    /// Export as a JSON array (loadable by external analysis tools — the
+    /// paper's "can be loaded into any performance analysis tool").
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.events
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|e| {
+                    Json::obj([
+                        ("worker", e.worker.into()),
+                        (
+                            "kind",
+                            match e.kind {
+                                EventKind::Run => "run",
+                                EventKind::Idle => "idle",
+                            }
+                            .into(),
+                        ),
+                        ("label", e.label.as_str().into()),
+                        ("start_ns", e.start_ns.into()),
+                        ("end_ns", e.end_ns.into()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Render an ASCII timeline (one row per worker, `width` columns;
+    /// '#' = work, '.' = gap) — the Fig. 9/10 visual.
+    pub fn render_ascii(&self, n_workers: usize, width: usize) -> String {
+        let events = self.events.lock().unwrap();
+        let t_end = events.iter().map(|e| e.end_ns).max().unwrap_or(1).max(1);
+        let mut rows = vec![vec!['.'; width]; n_workers];
+        for e in events.iter() {
+            if e.kind != EventKind::Run || e.worker >= n_workers {
+                continue;
+            }
+            let c0 = (e.start_ns as u128 * width as u128 / t_end as u128) as usize;
+            let c1 = (e.end_ns as u128 * width as u128 / t_end as u128) as usize;
+            for c in c0..=c1.min(width - 1) {
+                rows[e.worker][c] = '#';
+            }
+        }
+        let mut out = String::new();
+        for (w, row) in rows.iter().enumerate() {
+            out.push_str(&format!("w{w:02} |"));
+            out.extend(row.iter());
+            out.push_str("|\n");
+        }
+        out.push_str(&format!(
+            "     total {:.3} ms, {} events\n",
+            t_end as f64 / 1e6,
+            events.len()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let t = Trace::new(true);
+        let s0 = t.now_ns();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.record(0, EventKind::Run, "task-a", s0);
+        let s1 = t.now_ns();
+        t.record(1, EventKind::Idle, "gap", s1);
+        let events = t.events();
+        assert_eq!(events.len(), 2);
+        let busy = t.busy_ns_per_worker(2);
+        assert!(busy[0] >= 2_000_000);
+        assert_eq!(busy[1], 0, "idle intervals are not busy time");
+    }
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let t = Trace::new(false);
+        t.record(0, EventKind::Run, "x", 0);
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn ascii_render_shape() {
+        let t = Trace::new(true);
+        let s = t.now_ns();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        t.record(0, EventKind::Run, "t", s);
+        let art = t.render_ascii(2, 40);
+        let lines: Vec<&str> = art.lines().collect();
+        assert_eq!(lines.len(), 3); // 2 workers + summary
+        assert!(lines[0].starts_with("w00 |"));
+        assert!(lines[0].contains('#'));
+        assert!(!lines[1].contains('#'));
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let t = Trace::new(true);
+        let s = t.now_ns();
+        t.record(3, EventKind::Run, "k", s);
+        let text = t.to_json().to_string_compact();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.at(0).get("worker").as_usize(), Some(3));
+        assert_eq!(v.at(0).get("kind").as_str(), Some("run"));
+    }
+}

@@ -1,0 +1,53 @@
+//! # HiCR — an abstract model for distributed heterogeneous programming
+//!
+//! This crate reproduces the HiCR paper (CS.DC 2025) as a Rust *Runtime
+//! Support Layer*: a minimal set of abstract operations — hardware topology
+//! discovery, kernel execution, memory management, communication, and
+//! instance management — behind which plugin *backends* hide every
+//! technology-specific detail. Applications written against the abstract
+//! managers in [`core`] run unchanged on any combination of backends.
+//!
+//! Layout mirrors the paper's architecture (Fig. 3):
+//!
+//! - [`core`] — the model: five manager traits plus the stateless
+//!   (Topology/Device/MemorySpace/ComputeResource/ExecutionUnit) and
+//!   stateful (Instance/ProcessingUnit/ExecutionState/memory slots)
+//!   component families.
+//! - [`backends`] — built-in plugins (Table 1): host topology & memory
+//!   (HWLoc-analogue), threads (Pthreads), fibers (Boost.Context),
+//!   thread-per-task (nOS-V), distributed one-sided comms (MPI / LPF
+//!   analogues over a socket substrate), and an XLA/PJRT accelerator
+//!   backend executing AOT-compiled Pallas/JAX kernels.
+//! - [`frontends`] — ready-to-use libraries built *only* on the core API:
+//!   Channels (SPSC/MPSC), DataObject, RPC, and Tasking.
+//! - [`netsim`] — the distributed substrate: instance launcher/rendezvous,
+//!   framed one-sided wire protocol, and calibrated interconnect cost
+//!   models (the sandbox has no Infiniband; see DESIGN.md §2).
+//! - [`runtime`] — the PJRT bridge loading `artifacts/*.hlo.txt`.
+//! - [`apps`] — the paper's four test cases written purely against the
+//!   abstract API.
+
+pub mod apps;
+pub mod backends;
+pub mod core;
+pub mod frontends;
+pub mod netsim;
+pub mod runtime;
+pub mod util;
+
+pub use crate::core::communication::{
+    CommunicationManager, DataEndpoint, GlobalMemorySlot,
+};
+pub use crate::core::compute::{
+    ComputeManager, ExecStatus, ExecutionState, ExecutionUnit, ProcessingUnit,
+};
+pub use crate::core::error::{HicrError, Result};
+pub use crate::core::ids::{
+    ComputeResourceId, DeviceId, InstanceId, Key, MemorySpaceId, Tag,
+};
+pub use crate::core::instance::{Instance, InstanceManager, InstanceTemplate};
+pub use crate::core::memory::{LocalMemorySlot, MemoryManager};
+pub use crate::core::topology::{
+    ComputeResource, Device, DeviceKind, MemorySpace, MemorySpaceKind, Topology,
+    TopologyManager,
+};

@@ -1,0 +1,252 @@
+//! `hicr` — the leader entrypoint and CLI.
+//!
+//! Subcommands:
+//! - `topology`            print the merged local topology (hostmem + xlacomp)
+//! - `backends`            print the backend coverage matrix (Table 1)
+//! - `launch --np N -- <app> [args]`
+//!                         start the hub, spawn N instance processes, run
+//!                         the named distributed app in each
+//! - `worker`              internal: instance-process entrypoint (spawned
+//!                         by `launch`; configured via HICR_* env vars)
+//!
+//! Distributed apps available under `launch`: `pingpong` (Test Case 1
+//! measured mode), `jacobi` (Fig. 11 halo-exchange solver), `spawntest`
+//! (Fig. 7 runtime instance creation).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use hicr::apps::{jacobi, pingpong};
+use hicr::backends::hostmem::HostTopologyManager;
+use hicr::backends::mpisim::instance::{ENV_HUB, ENV_RANK, ENV_WORLD};
+use hicr::backends::mpisim::MpiInstanceManager;
+use hicr::backends::xlacomp::XlaTopologyManager;
+use hicr::core::instance::{ensure_instances, InstanceManager, InstanceTemplate};
+use hicr::core::topology::{TopologyManager, TopologyRequirements};
+use hicr::frontends::tasking::{TaskSystem, TaskSystemKind};
+use hicr::netsim::hub::Hub;
+use hicr::runtime::XlaRuntime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    match args.get(1).map(String::as_str) {
+        Some("topology") => cmd_topology(),
+        Some("backends") => cmd_backends(),
+        Some("launch") => cmd_launch(&args[2..]),
+        Some("worker") => cmd_worker(),
+        _ => {
+            eprintln!(
+                "usage: hicr <topology|backends|launch --np N -- <app> [args]>\n\
+                 apps: pingpong | jacobi [n iters] | spawntest"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_topology() -> Result<()> {
+    let mut topo = HostTopologyManager::new().query_topology()?;
+    match XlaRuntime::cpu() {
+        Ok(rt) => {
+            let accel = XlaTopologyManager::new(Arc::new(rt)).query_topology()?;
+            topo.merge(accel).ok();
+        }
+        Err(e) => eprintln!("(xlacomp unavailable: {e})"),
+    }
+    for d in &topo.devices {
+        println!("device {} [{:?}] '{}'", d.id, d.kind, d.name);
+        for m in &d.memory_spaces {
+            println!(
+                "  memory space {} [{:?}] {}  '{}'",
+                m.id,
+                m.kind,
+                hicr::util::stats::fmt_bytes(m.size_bytes),
+                m.label
+            );
+        }
+        println!("  compute resources: {}", d.compute_resources.len());
+    }
+    println!("\nserialized: {} bytes", topo.serialize().len());
+    Ok(())
+}
+
+fn cmd_backends() -> Result<()> {
+    println!(
+        "{:<10} {:>9} {:>9} {:>14} {:>7} {:>8}",
+        "backend", "topology", "instance", "communication", "memory", "compute"
+    );
+    for row in hicr::backends::coverage_matrix() {
+        let mark = |b: bool| if b { "x" } else { "" };
+        println!(
+            "{:<10} {:>9} {:>9} {:>14} {:>7} {:>8}",
+            row.name,
+            mark(row.topology),
+            mark(row.instance),
+            mark(row.communication),
+            mark(row.memory),
+            mark(row.compute)
+        );
+    }
+    Ok(())
+}
+
+/// `hicr launch --np N -- <app> [args]`
+fn cmd_launch(args: &[String]) -> Result<()> {
+    let mut np = 2usize;
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--np" => {
+                np = args
+                    .get(i + 1)
+                    .context("--np needs a value")?
+                    .parse()
+                    .context("bad --np")?;
+                i += 1;
+            }
+            "--" => {
+                rest = args[i + 1..].to_vec();
+                break;
+            }
+            other => bail!("unknown launch flag {other}"),
+        }
+        i += 1;
+    }
+    if rest.is_empty() {
+        bail!("launch requires `-- <app> [args]`");
+    }
+    let sock = std::env::temp_dir().join(format!("hicr-hub-{}.sock", std::process::id()));
+    let exe = std::env::current_exe()?;
+    let sock2 = sock.clone();
+    let rest2 = rest.clone();
+    // Runtime spawns (Fig. 7) reuse the same worker entry.
+    let spawn_fn = move |rank: u32, _template: &str| {
+        std::process::Command::new(&exe)
+            .arg("worker")
+            .env(ENV_RANK, rank.to_string())
+            .env(ENV_WORLD, "0")
+            .env(ENV_HUB, &sock2)
+            .env("HICR_APP", rest2.join(" "))
+            .spawn()
+            .map_err(|e| hicr::HicrError::Instance(format!("spawn rank {rank}: {e}")))?;
+        Ok(())
+    };
+    let hub = Hub::bind(&sock, np, Some(Box::new(spawn_fn)))?;
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::new();
+    for rank in 0..np {
+        children.push(
+            std::process::Command::new(&exe)
+                .arg("worker")
+                .env(ENV_RANK, rank.to_string())
+                .env(ENV_WORLD, np.to_string())
+                .env(ENV_HUB, &sock)
+                .env("HICR_APP", rest.join(" "))
+                .spawn()
+                .with_context(|| format!("spawn rank {rank}"))?,
+        );
+    }
+    let hub_result = hub.run();
+    for mut c in children {
+        let status = c.wait()?;
+        if !status.success() {
+            eprintln!("instance exited with {status}");
+        }
+    }
+    hub_result?;
+    Ok(())
+}
+
+/// Instance-process entrypoint.
+fn cmd_worker() -> Result<()> {
+    let app = std::env::var("HICR_APP").unwrap_or_default();
+    let words: Vec<&str> = app.split_whitespace().collect();
+    let im = MpiInstanceManager::from_env().context("worker env")?;
+    let me = im.current_instance();
+    let endpoint = im.endpoint().clone();
+    let result = match words.first().copied() {
+        Some("pingpong") => worker_pingpong(&im),
+        Some("jacobi") => {
+            let n: usize = words.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+            let iters: usize = words.get(2).and_then(|s| s.parse().ok()).unwrap_or(20);
+            worker_jacobi(&im, n, iters)
+        }
+        Some("spawntest") => worker_spawntest(&im),
+        other => bail!("unknown app {other:?}"),
+    };
+    endpoint.bye();
+    result.map_err(|e| anyhow::anyhow!("rank {} app error: {e}", me.id))
+}
+
+/// Test Case 1, measured mode: rank 0 pings, rank 1 pongs.
+fn worker_pingpong(im: &MpiInstanceManager) -> Result<()> {
+    use hicr::apps::pingpong::Side;
+    let rank = im.current_instance().id.0;
+    let cmm: Arc<dyn hicr::CommunicationManager> = Arc::new(
+        hicr::backends::lpfsim::communication_manager(im.endpoint().clone()),
+    );
+    let sizes: Vec<usize> = vec![1, 64, 4096, 65536, 1 << 20];
+    let reps = 20;
+    for (si, &size) in sizes.iter().enumerate() {
+        let tag = 9000 + (si as u64) * 4;
+        let side = if rank == 0 { Side::Pinger } else { Side::Ponger };
+        let (mut p, mut c) = pingpong::build_channels(Arc::clone(&cmm), tag, size, side)?;
+        if rank == 0 {
+            let times = pingpong::run_pinger(&mut p, &mut c, size, reps)?;
+            let point = pingpong::goodput_from_rtts(size as u64, &times);
+            println!(
+                "pingpong size={size} goodput={} (+-{})",
+                hicr::util::stats::fmt_bps(point.goodput_bps),
+                hicr::util::stats::fmt_bps(point.stddev_bps),
+            );
+        } else {
+            pingpong::run_ponger(&mut p, &mut c, size, reps)?;
+        }
+        im.barrier()?;
+    }
+    Ok(())
+}
+
+/// Fig. 11 worker: distributed Jacobi over the LPF backend.
+fn worker_jacobi(im: &MpiInstanceManager, n: usize, iters: usize) -> Result<()> {
+    let rank = im.current_instance().id.0;
+    let world = im.instances()?.len() as u32;
+    let cmm: Arc<dyn hicr::CommunicationManager> = Arc::new(
+        hicr::backends::lpfsim::communication_manager(im.endpoint().clone()),
+    );
+    let sys = TaskSystem::new(TaskSystemKind::Coro, 2, false);
+    let run = jacobi::run_distributed(
+        &cmm,
+        &sys,
+        rank,
+        world,
+        n,
+        iters,
+        (1, 2, 2),
+        jacobi::CommWaitMode::Blocking,
+    )?;
+    sys.shutdown()?;
+    println!(
+        "rank {rank}: jacobi n={n} iters={iters} {:.3}s {:.3} GFlop/s checksum={:.6}",
+        run.elapsed_s, run.gflops, run.checksum
+    );
+    im.barrier()?;
+    Ok(())
+}
+
+/// Fig. 7 demo: root tops up the instance count at runtime.
+fn worker_spawntest(im: &MpiInstanceManager) -> Result<()> {
+    let desired = 3;
+    let template = InstanceTemplate::new(TopologyRequirements::default());
+    let created = ensure_instances(im, desired, &template)?;
+    if im.is_root() {
+        println!(
+            "root: created {} instance(s) at runtime; now {} total",
+            created.len(),
+            im.instances()?.len()
+        );
+    }
+    Ok(())
+}

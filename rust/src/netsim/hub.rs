@@ -1,0 +1,310 @@
+//! The rendezvous hub: routing and collective sequencing for instances.
+//!
+//! The launcher runs one hub; every instance holds one connection to it.
+//! The hub routes one-sided frames (Put/Get and their replies) to their
+//! destination rank and sequences the collectives (exchange, barrier) and
+//! runtime spawning. A hub-and-spoke topology is the honest equivalent of
+//! a single-host sandbox: on the paper's cluster, the fabric switch plays
+//! this role.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::Write;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::core::error::{HicrError, Result};
+use crate::netsim::wire::Frame;
+
+/// Callback invoked when a root instance requests runtime instance
+/// creation: receives (new_rank, template_json) and must start a process
+/// (or thread) that will connect and register as that rank.
+pub type SpawnFn = Box<dyn Fn(u32, &str) -> Result<()> + Send + Sync>;
+
+struct ExchangeState {
+    /// rank -> volunteered (key, len) entries.
+    arrived: BTreeMap<u32, Vec<(u64, u64)>>,
+    /// Participants expected (instance count at first arrival).
+    expected: usize,
+}
+
+struct HubState {
+    /// rank -> writer half of its connection.
+    writers: HashMap<u32, UnixStream>,
+    /// In-flight exchanges by tag.
+    exchanges: HashMap<u64, ExchangeState>,
+    /// In-flight barriers by epoch: ranks arrived.
+    barriers: HashMap<u64, (Vec<u32>, usize)>,
+    /// Next rank to assign to a spawned instance.
+    next_rank: u32,
+    /// Ranks that have said Bye.
+    departed: Vec<u32>,
+    /// Ranks that have registered at least once.
+    registered: Vec<u32>,
+    /// Set when the hub is shutting down (accept loop exits).
+    shutdown: bool,
+}
+
+/// The hub service. Bind, then `run()` (blocking) or `spawn()`.
+pub struct Hub {
+    listener: UnixListener,
+    path: PathBuf,
+    state: Arc<Mutex<HubState>>,
+    done_cv: Arc<std::sync::Condvar>,
+    spawn_fn: Option<Arc<SpawnFn>>,
+}
+
+impl Hub {
+    /// Bind a hub at `path` expecting `world` launch-time instances.
+    pub fn bind(path: &Path, world: usize, spawn_fn: Option<SpawnFn>) -> Result<Hub> {
+        let _ = std::fs::remove_file(path);
+        let listener = UnixListener::bind(path)
+            .map_err(|e| HicrError::Transport(format!("hub bind {path:?}: {e}")))?;
+        Ok(Hub {
+            listener,
+            path: path.to_path_buf(),
+            state: Arc::new(Mutex::new(HubState {
+                writers: HashMap::new(),
+                exchanges: HashMap::new(),
+                barriers: HashMap::new(),
+                next_rank: world as u32,
+                departed: Vec::new(),
+                registered: Vec::new(),
+                shutdown: false,
+            })),
+            done_cv: Arc::new(std::sync::Condvar::new()),
+            spawn_fn: spawn_fn.map(Arc::new),
+        })
+    }
+
+    pub fn socket_path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Serve until every instance (launch-time + runtime-spawned) has both
+    /// registered and departed. Spawns one thread per connection.
+    pub fn run(self) -> Result<()> {
+        let state = Arc::clone(&self.state);
+        let done_cv = Arc::clone(&self.done_cv);
+        let spawn_fn = self.spawn_fn.clone();
+        let listener = self.listener;
+        let accept_state = Arc::clone(&state);
+        let accept_cv = Arc::clone(&done_cv);
+        let accept_thread = std::thread::Builder::new()
+            .name("hicr-hub-accept".into())
+            .spawn(move || {
+                let mut conn_threads = Vec::new();
+                for conn in listener.incoming() {
+                    if accept_state.lock().unwrap().shutdown {
+                        break;
+                    }
+                    let Ok(stream) = conn else { break };
+                    let st = Arc::clone(&accept_state);
+                    let cv = Arc::clone(&accept_cv);
+                    let sf = spawn_fn.clone();
+                    conn_threads.push(std::thread::spawn(move || {
+                        let _ = serve_connection(stream, st, sf);
+                        cv.notify_all();
+                    }));
+                }
+                for t in conn_threads {
+                    let _ = t.join();
+                }
+            })
+            .expect("spawn hub accept thread");
+
+        // Wait until all expected instances registered and departed.
+        {
+            let mut st = state.lock().unwrap();
+            loop {
+                let expected = st.next_rank as usize;
+                if st.registered.len() >= expected && st.departed.len() >= expected {
+                    st.shutdown = true;
+                    break;
+                }
+                st = done_cv.wait(st).unwrap();
+            }
+        }
+        // Unblock the accept loop with a dummy connection.
+        let _ = UnixStream::connect(&self.path);
+        let _ = accept_thread.join();
+        let _ = std::fs::remove_file(&self.path);
+        Ok(())
+    }
+
+    /// Run the hub on a background thread; returns its join handle.
+    pub fn spawn(self) -> std::thread::JoinHandle<Result<()>> {
+        std::thread::Builder::new()
+            .name("hicr-hub".into())
+            .spawn(move || self.run())
+            .expect("spawn hub thread")
+    }
+}
+
+/// Send a frame to `rank` through the hub's routing table.
+fn route(state: &Mutex<HubState>, rank: u32, frame: &Frame) -> Result<()> {
+    let mut st = state.lock().unwrap();
+    let writer = st.writers.get_mut(&rank).ok_or_else(|| {
+        HicrError::Transport(format!("route to unknown rank {rank}"))
+    })?;
+    let bytes = frame.encode();
+    writer
+        .write_all(&bytes)
+        .map_err(|e| HicrError::Transport(format!("route to {rank}: {e}")))
+}
+
+fn broadcast(state: &Mutex<HubState>, frame: &Frame) -> Result<()> {
+    let mut st = state.lock().unwrap();
+    let bytes = frame.encode();
+    for (rank, writer) in st.writers.iter_mut() {
+        writer
+            .write_all(&bytes)
+            .map_err(|e| HicrError::Transport(format!("broadcast to {rank}: {e}")))?;
+    }
+    Ok(())
+}
+
+fn serve_connection(
+    stream: UnixStream,
+    state: Arc<Mutex<HubState>>,
+    spawn_fn: Option<Arc<SpawnFn>>,
+) -> Result<()> {
+    let mut reader = stream
+        .try_clone()
+        .map_err(|e| HicrError::Transport(format!("clone stream: {e}")))?;
+    let mut my_rank: Option<u32> = None;
+    while let Some(frame) = Frame::read_from(&mut reader)? {
+        match frame {
+            Frame::Register { rank } => {
+                my_rank = Some(rank);
+                let writer = stream
+                    .try_clone()
+                    .map_err(|e| HicrError::Transport(format!("clone: {e}")))?;
+                let mut st = state.lock().unwrap();
+                st.writers.insert(rank, writer);
+                if !st.registered.contains(&rank) {
+                    st.registered.push(rank);
+                }
+            }
+            // One-sided traffic: route to destination.
+            Frame::Put { dst, .. } => route(&state, dst, &frame)?,
+            Frame::Get { dst, .. } => route(&state, dst, &frame)?,
+            Frame::PutAck { to, .. } => route(&state, to, &frame)?,
+            Frame::GetData { to, .. } => route(&state, to, &frame)?,
+            // Collective: exchange.
+            Frame::Exchange { rank, tag, entries } => {
+                let complete = {
+                    let mut st = state.lock().unwrap();
+                    // Collectives involve every live instance (paper
+                    // §3.1.4): size by the known world, not by who has
+                    // happened to register yet (avoids a launch race).
+                    let n_instances =
+                        (st.next_rank as usize).saturating_sub(st.departed.len());
+                    let ex = st.exchanges.entry(tag).or_insert_with(|| ExchangeState {
+                        arrived: BTreeMap::new(),
+                        expected: n_instances,
+                    });
+                    ex.arrived.insert(rank, entries);
+                    if ex.arrived.len() >= ex.expected {
+                        st.exchanges.remove(&tag)
+                    } else {
+                        None
+                    }
+                };
+                if let Some(ex) = complete {
+                    let mut slots = Vec::new();
+                    for (owner, entries) in &ex.arrived {
+                        for (key, len) in entries {
+                            slots.push((*key, *owner, *len));
+                        }
+                    }
+                    broadcast(&state, &Frame::ExchangeResult { tag, slots })?;
+                }
+            }
+            // Collective: barrier.
+            Frame::Barrier { rank, epoch } => {
+                let release = {
+                    let mut st = state.lock().unwrap();
+                    let n_instances =
+                        (st.next_rank as usize).saturating_sub(st.departed.len());
+                    let entry = st
+                        .barriers
+                        .entry(epoch)
+                        .or_insert_with(|| (Vec::new(), n_instances));
+                    entry.0.push(rank);
+                    if entry.0.len() >= entry.1 {
+                        st.barriers.remove(&epoch);
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if release {
+                    broadcast(&state, &Frame::BarrierRelease { epoch })?;
+                }
+            }
+            // Runtime instance creation.
+            Frame::Spawn {
+                count,
+                template_json,
+            } => {
+                let from =
+                    my_rank.ok_or_else(|| HicrError::Transport("spawn before register".into()))?;
+                let new_ranks: Vec<u32> = {
+                    let mut st = state.lock().unwrap();
+                    (0..count)
+                        .map(|_| {
+                            let r = st.next_rank;
+                            st.next_rank += 1;
+                            r
+                        })
+                        .collect()
+                };
+                if let Some(f) = &spawn_fn {
+                    for r in &new_ranks {
+                        f(*r, &template_json)?;
+                    }
+                } else {
+                    return Err(HicrError::Instance(
+                        "this deployment cannot create instances at runtime".into(),
+                    ));
+                }
+                route(
+                    &state,
+                    from,
+                    &Frame::SpawnResult {
+                        new_ranks: new_ranks.clone(),
+                    },
+                )?;
+            }
+            Frame::ListInstances { rank } => {
+                let ranks: Vec<u32> = {
+                    let st = state.lock().unwrap();
+                    let mut r: Vec<u32> = st.writers.keys().copied().collect();
+                    // Include spawned-but-not-yet-connected ranks so the
+                    // creator can address them after SpawnResult.
+                    for extra in 0..st.next_rank {
+                        if !r.contains(&extra) {
+                            r.push(extra);
+                        }
+                    }
+                    r.sort();
+                    r
+                };
+                route(&state, rank, &Frame::InstanceList { ranks })?;
+            }
+            Frame::Bye { rank } => {
+                let mut st = state.lock().unwrap();
+                st.departed.push(rank);
+                st.writers.remove(&rank);
+                break;
+            }
+            other => {
+                return Err(HicrError::Transport(format!(
+                    "hub received unroutable frame {other:?}"
+                )))
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! The distributed substrate (DESIGN.md §2): everything the paper obtained
+//! from MPI + Infiniband, built from scratch for a no-network sandbox.
+//!
+//! - [`wire`] — framed one-sided wire protocol (PUT/GET/EXCHANGE/FENCE/
+//!   BARRIER/SPAWN) over Unix-domain sockets.
+//! - [`hub`] — the rendezvous/routing service run by the launcher: frame
+//!   routing between instances, collective sequencing, runtime spawning.
+//! - [`endpoint`] — the per-instance side: connection, receiver thread,
+//!   exchanged-slot registry, outstanding-op accounting for fences.
+//! - [`fabric`] — calibrated interconnect cost models (LPF-over-IBverbs
+//!   vs MPI-RMA-over-EDR) used to report paper-shaped performance while
+//!   the real byte movement runs over sockets for correctness.
+
+pub mod endpoint;
+pub mod fabric;
+pub mod hub;
+pub mod wire;

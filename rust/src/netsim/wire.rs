@@ -1,0 +1,519 @@
+//! Framed wire protocol for one-sided communication between instances.
+//!
+//! Frame layout: `[u32-le body_len][u8 opcode][body]`. All integers are
+//! little-endian. Blobs are `[u64-le len][bytes]`. The protocol carries
+//! the HiCR distributed operations: one-sided puts/gets over exchanged
+//! (tag, key) windows, collective exchange/barrier, and runtime spawn.
+
+use std::io::{Read, Write};
+
+use crate::core::error::{HicrError, Result};
+
+/// Maximum accepted frame body (2.5 GiB — above the paper's largest
+/// ping-pong message of ~2.14 GB).
+pub const MAX_FRAME: u64 = 2_684_354_560;
+
+/// A protocol frame. `src`/`dst` are instance ranks; the hub routes by
+/// `dst` (or by `to` for replies).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// First frame on a connection: who am I.
+    Register { rank: u32 },
+    /// One-sided write into (tag, key) at `offset` on instance `dst`.
+    Put {
+        src: u32,
+        dst: u32,
+        tag: u64,
+        key: u64,
+        offset: u64,
+        op_id: u64,
+        data: Vec<u8>,
+    },
+    /// Remote-completion acknowledgement for a Put (routed to `to`).
+    PutAck { to: u32, tag: u64, op_id: u64 },
+    /// One-sided read of `len` bytes from (tag, key) at `offset` on `dst`.
+    Get {
+        src: u32,
+        dst: u32,
+        tag: u64,
+        key: u64,
+        offset: u64,
+        len: u64,
+        op_id: u64,
+    },
+    /// Reply to a Get (routed to `to`).
+    GetData {
+        to: u32,
+        tag: u64,
+        op_id: u64,
+        data: Vec<u8>,
+    },
+    /// Collective: this rank volunteers `entries` (key, len) under `tag`.
+    Exchange {
+        rank: u32,
+        tag: u64,
+        entries: Vec<(u64, u64)>,
+    },
+    /// Broadcast result of a completed exchange: (key, owner, len).
+    ExchangeResult {
+        tag: u64,
+        slots: Vec<(u64, u32, u64)>,
+    },
+    /// Collective barrier arrival.
+    Barrier { rank: u32, epoch: u64 },
+    /// Barrier release broadcast.
+    BarrierRelease { epoch: u64 },
+    /// Root asks the hub to create `count` new instances.
+    Spawn { count: u32, template_json: String },
+    /// Reply: ranks of the newly created instances.
+    SpawnResult { new_ranks: Vec<u32> },
+    /// Ask for the current instance list.
+    ListInstances { rank: u32 },
+    /// Reply: all registered ranks (root is always rank 0).
+    InstanceList { ranks: Vec<u32> },
+    /// Orderly goodbye.
+    Bye { rank: u32 },
+}
+
+impl Frame {
+    fn opcode(&self) -> u8 {
+        match self {
+            Frame::Register { .. } => 1,
+            Frame::Put { .. } => 2,
+            Frame::PutAck { .. } => 3,
+            Frame::Get { .. } => 4,
+            Frame::GetData { .. } => 5,
+            Frame::Exchange { .. } => 6,
+            Frame::ExchangeResult { .. } => 7,
+            Frame::Barrier { .. } => 8,
+            Frame::BarrierRelease { .. } => 9,
+            Frame::Spawn { .. } => 10,
+            Frame::SpawnResult { .. } => 11,
+            Frame::ListInstances { .. } => 12,
+            Frame::InstanceList { .. } => 13,
+            Frame::Bye { .. } => 14,
+        }
+    }
+
+    /// Serialize to the wire format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            Frame::Register { rank } => put_u32(&mut body, *rank),
+            Frame::Put {
+                src,
+                dst,
+                tag,
+                key,
+                offset,
+                op_id,
+                data,
+            } => {
+                put_u32(&mut body, *src);
+                put_u32(&mut body, *dst);
+                put_u64(&mut body, *tag);
+                put_u64(&mut body, *key);
+                put_u64(&mut body, *offset);
+                put_u64(&mut body, *op_id);
+                put_blob(&mut body, data);
+            }
+            Frame::PutAck { to, tag, op_id } => {
+                put_u32(&mut body, *to);
+                put_u64(&mut body, *tag);
+                put_u64(&mut body, *op_id);
+            }
+            Frame::Get {
+                src,
+                dst,
+                tag,
+                key,
+                offset,
+                len,
+                op_id,
+            } => {
+                put_u32(&mut body, *src);
+                put_u32(&mut body, *dst);
+                put_u64(&mut body, *tag);
+                put_u64(&mut body, *key);
+                put_u64(&mut body, *offset);
+                put_u64(&mut body, *len);
+                put_u64(&mut body, *op_id);
+            }
+            Frame::GetData {
+                to,
+                tag,
+                op_id,
+                data,
+            } => {
+                put_u32(&mut body, *to);
+                put_u64(&mut body, *tag);
+                put_u64(&mut body, *op_id);
+                put_blob(&mut body, data);
+            }
+            Frame::Exchange { rank, tag, entries } => {
+                put_u32(&mut body, *rank);
+                put_u64(&mut body, *tag);
+                put_u64(&mut body, entries.len() as u64);
+                for (k, l) in entries {
+                    put_u64(&mut body, *k);
+                    put_u64(&mut body, *l);
+                }
+            }
+            Frame::ExchangeResult { tag, slots } => {
+                put_u64(&mut body, *tag);
+                put_u64(&mut body, slots.len() as u64);
+                for (k, owner, l) in slots {
+                    put_u64(&mut body, *k);
+                    put_u32(&mut body, *owner);
+                    put_u64(&mut body, *l);
+                }
+            }
+            Frame::Barrier { rank, epoch } => {
+                put_u32(&mut body, *rank);
+                put_u64(&mut body, *epoch);
+            }
+            Frame::BarrierRelease { epoch } => put_u64(&mut body, *epoch),
+            Frame::Spawn {
+                count,
+                template_json,
+            } => {
+                put_u32(&mut body, *count);
+                put_blob(&mut body, template_json.as_bytes());
+            }
+            Frame::SpawnResult { new_ranks } => {
+                put_u64(&mut body, new_ranks.len() as u64);
+                for r in new_ranks {
+                    put_u32(&mut body, *r);
+                }
+            }
+            Frame::ListInstances { rank } => put_u32(&mut body, *rank),
+            Frame::InstanceList { ranks } => {
+                put_u64(&mut body, ranks.len() as u64);
+                for r in ranks {
+                    put_u32(&mut body, *r);
+                }
+            }
+            Frame::Bye { rank } => put_u32(&mut body, *rank),
+        }
+        let mut out = Vec::with_capacity(body.len() + 5);
+        put_u32(&mut out, (body.len() + 1) as u32);
+        out.push(self.opcode());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode one frame body (opcode + payload, without the length prefix).
+    pub fn decode(buf: &[u8]) -> Result<Frame> {
+        let mut c = Cursor { buf, pos: 0 };
+        let op = c.u8()?;
+        let frame = match op {
+            1 => Frame::Register { rank: c.u32()? },
+            2 => Frame::Put {
+                src: c.u32()?,
+                dst: c.u32()?,
+                tag: c.u64()?,
+                key: c.u64()?,
+                offset: c.u64()?,
+                op_id: c.u64()?,
+                data: c.blob()?,
+            },
+            3 => Frame::PutAck {
+                to: c.u32()?,
+                tag: c.u64()?,
+                op_id: c.u64()?,
+            },
+            4 => Frame::Get {
+                src: c.u32()?,
+                dst: c.u32()?,
+                tag: c.u64()?,
+                key: c.u64()?,
+                offset: c.u64()?,
+                len: c.u64()?,
+                op_id: c.u64()?,
+            },
+            5 => Frame::GetData {
+                to: c.u32()?,
+                tag: c.u64()?,
+                op_id: c.u64()?,
+                data: c.blob()?,
+            },
+            6 => {
+                let rank = c.u32()?;
+                let tag = c.u64()?;
+                let n = c.u64()? as usize;
+                let mut entries = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    entries.push((c.u64()?, c.u64()?));
+                }
+                Frame::Exchange { rank, tag, entries }
+            }
+            7 => {
+                let tag = c.u64()?;
+                let n = c.u64()? as usize;
+                let mut slots = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    slots.push((c.u64()?, c.u32()?, c.u64()?));
+                }
+                Frame::ExchangeResult { tag, slots }
+            }
+            8 => Frame::Barrier {
+                rank: c.u32()?,
+                epoch: c.u64()?,
+            },
+            9 => Frame::BarrierRelease { epoch: c.u64()? },
+            10 => Frame::Spawn {
+                count: c.u32()?,
+                template_json: String::from_utf8(c.blob()?)
+                    .map_err(|e| HicrError::Transport(format!("bad template: {e}")))?,
+            },
+            11 => {
+                let n = c.u64()? as usize;
+                let mut new_ranks = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    new_ranks.push(c.u32()?);
+                }
+                Frame::SpawnResult { new_ranks }
+            }
+            12 => Frame::ListInstances { rank: c.u32()? },
+            13 => {
+                let n = c.u64()? as usize;
+                let mut ranks = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    ranks.push(c.u32()?);
+                }
+                Frame::InstanceList { ranks }
+            }
+            14 => Frame::Bye { rank: c.u32()? },
+            other => {
+                return Err(HicrError::Transport(format!("unknown opcode {other}")))
+            }
+        };
+        if c.pos != buf.len() {
+            return Err(HicrError::Transport(format!(
+                "trailing {} bytes after frame op {op}",
+                buf.len() - c.pos
+            )));
+        }
+        Ok(frame)
+    }
+
+    /// Write this frame to a stream (single write syscall for the header +
+    /// body where possible).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        let bytes = self.encode();
+        w.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Read one frame from a stream (blocking). Returns None on EOF.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+        let mut len_buf = [0u8; 4];
+        match r.read_exact(&mut len_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+            Err(e) => return Err(e.into()),
+        }
+        let len = u32::from_le_bytes(len_buf) as u64;
+        if len == 0 || len > MAX_FRAME {
+            return Err(HicrError::Transport(format!("bad frame length {len}")));
+        }
+        let mut body = vec![0u8; len as usize];
+        r.read_exact(&mut body)?;
+        Ok(Some(Frame::decode(&body)?))
+    }
+}
+
+fn put_u32(v: &mut Vec<u8>, x: u32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(v: &mut Vec<u8>, x: u64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_blob(v: &mut Vec<u8>, b: &[u8]) {
+    put_u64(v, b.len() as u64);
+    v.extend_from_slice(b);
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(HicrError::Transport("truncated frame".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn blob(&mut self) -> Result<Vec<u8>> {
+        let len = self.u64()?;
+        if len > MAX_FRAME {
+            return Err(HicrError::Transport(format!("blob too large: {len}")));
+        }
+        Ok(self.take(len as usize)?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let enc = f.encode();
+        // Strip the 4-byte length prefix for decode.
+        let body = &enc[4..];
+        assert_eq!(u32::from_le_bytes(enc[..4].try_into().unwrap()) as usize, body.len());
+        assert_eq!(Frame::decode(body).unwrap(), f);
+    }
+
+    #[test]
+    fn all_frames_roundtrip() {
+        roundtrip(Frame::Register { rank: 7 });
+        roundtrip(Frame::Put {
+            src: 1,
+            dst: 2,
+            tag: 3,
+            key: 4,
+            offset: 5,
+            op_id: 6,
+            data: vec![1, 2, 3, 4, 5],
+        });
+        roundtrip(Frame::PutAck {
+            to: 1,
+            tag: 3,
+            op_id: 6,
+        });
+        roundtrip(Frame::Get {
+            src: 1,
+            dst: 0,
+            tag: 9,
+            key: 8,
+            offset: 7,
+            len: 6,
+            op_id: 5,
+        });
+        roundtrip(Frame::GetData {
+            to: 1,
+            tag: 9,
+            op_id: 5,
+            data: vec![],
+        });
+        roundtrip(Frame::Exchange {
+            rank: 0,
+            tag: 42,
+            entries: vec![(1, 100), (2, 200)],
+        });
+        roundtrip(Frame::ExchangeResult {
+            tag: 42,
+            slots: vec![(1, 0, 100), (2, 1, 200)],
+        });
+        roundtrip(Frame::Barrier { rank: 3, epoch: 9 });
+        roundtrip(Frame::BarrierRelease { epoch: 9 });
+        roundtrip(Frame::Spawn {
+            count: 2,
+            template_json: "{\"requirements\":{}}".into(),
+        });
+        roundtrip(Frame::SpawnResult {
+            new_ranks: vec![4, 5],
+        });
+        roundtrip(Frame::ListInstances { rank: 1 });
+        roundtrip(Frame::InstanceList {
+            ranks: vec![0, 1, 2],
+        });
+        roundtrip(Frame::Bye { rank: 0 });
+    }
+
+    #[test]
+    fn stream_read_write() {
+        let frames = vec![
+            Frame::Register { rank: 1 },
+            Frame::Put {
+                src: 1,
+                dst: 0,
+                tag: 1,
+                key: 1,
+                offset: 0,
+                op_id: 99,
+                data: vec![0xAB; 1024],
+            },
+            Frame::Bye { rank: 1 },
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            f.write_to(&mut buf).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(buf);
+        for f in &frames {
+            assert_eq!(&Frame::read_from(&mut cursor).unwrap().unwrap(), f);
+        }
+        assert!(Frame::read_from(&mut cursor).unwrap().is_none()); // EOF
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Frame::decode(&[]).is_err());
+        assert!(Frame::decode(&[200]).is_err()); // unknown opcode
+        assert!(Frame::decode(&[2, 0, 0]).is_err()); // truncated Put
+        // Trailing bytes after a valid frame:
+        let mut enc = Frame::Register { rank: 1 }.encode();
+        enc.push(0xFF);
+        assert!(Frame::decode(&enc[4..]).is_err());
+    }
+
+    #[test]
+    fn frame_property_roundtrip() {
+        crate::prop_check!("wire-roundtrip", |g| {
+            let f = match g.rng.range_usize(0, 3) {
+                0 => Frame::Put {
+                    src: g.rng.range_u64(0, 64) as u32,
+                    dst: g.rng.range_u64(0, 64) as u32,
+                    tag: g.rng.next_u64(),
+                    key: g.rng.next_u64(),
+                    offset: g.rng.next_u64(),
+                    op_id: g.rng.next_u64(),
+                    data: g.bytes(4096),
+                },
+                1 => Frame::Exchange {
+                    rank: g.rng.range_u64(0, 64) as u32,
+                    tag: g.rng.next_u64(),
+                    entries: (0..g.sized(0, 20))
+                        .map(|_| (g.rng.next_u64(), g.rng.next_u64()))
+                        .collect(),
+                },
+                2 => Frame::GetData {
+                    to: g.rng.range_u64(0, 64) as u32,
+                    tag: g.rng.next_u64(),
+                    op_id: g.rng.next_u64(),
+                    data: g.bytes(1024),
+                },
+                _ => Frame::InstanceList {
+                    ranks: (0..g.sized(0, 32)).map(|i| i as u32).collect(),
+                },
+            };
+            let enc = f.encode();
+            let dec = Frame::decode(&enc[4..]).map_err(|e| e.to_string())?;
+            if dec != f {
+                return Err("wire roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

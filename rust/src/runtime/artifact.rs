@@ -1,0 +1,276 @@
+//! Artifact bundle loader: `artifacts/meta.json`, `weights.bin`,
+//! `testset.bin` and the per-batch-size HLO text files.
+
+use std::path::{Path, PathBuf};
+
+use crate::core::error::{HicrError, Result};
+use crate::util::json;
+
+/// One weight tensor: shape + flat f32 data.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// The AOT artifact bundle the Rust side serves from.
+pub struct ArtifactBundle {
+    pub dir: PathBuf,
+    pub layer_dims: Vec<usize>,
+    pub batch_sizes: Vec<usize>,
+    /// batch size -> HLO file name.
+    pub hlo_files: Vec<(usize, String)>,
+    /// Flat weight tensors in calling-convention order (w1,b1,w2,b2,...).
+    pub weights: Vec<Tensor>,
+    /// Test images, flattened (n × img_dim).
+    pub test_images: Vec<f32>,
+    /// Test labels (n).
+    pub test_labels: Vec<u8>,
+    pub img_dim: usize,
+    /// Training metadata: reference accuracy and img-0 score from aot.py.
+    pub ref_accuracy: f64,
+    pub img0_score: f64,
+    pub img0_pred: usize,
+}
+
+impl ArtifactBundle {
+    /// Load a bundle from `dir` (usually `artifacts/`).
+    pub fn load(dir: &Path) -> Result<ArtifactBundle> {
+        let meta_text = std::fs::read_to_string(dir.join("meta.json")).map_err(|e| {
+            HicrError::Artifact(format!(
+                "cannot read {}/meta.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let meta = json::parse(&meta_text)
+            .map_err(|e| HicrError::Artifact(format!("meta.json parse: {e}")))?;
+
+        let layer_dims: Vec<usize> = meta
+            .get("layer_dims")
+            .as_arr()
+            .ok_or_else(|| HicrError::Artifact("meta missing layer_dims".into()))?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+
+        let batch_sizes: Vec<usize> = meta
+            .get("batch_sizes")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+
+        let mut hlo_files = Vec::new();
+        if let Some(obj) = meta.get("hlo").as_obj() {
+            for (batch, file) in obj {
+                let b: usize = batch
+                    .parse()
+                    .map_err(|e| HicrError::Artifact(format!("bad batch {batch}: {e}")))?;
+                let f = file
+                    .as_str()
+                    .ok_or_else(|| HicrError::Artifact("bad hlo file entry".into()))?;
+                hlo_files.push((b, f.to_string()));
+            }
+        }
+        hlo_files.sort();
+
+        // Weights blob.
+        let wfile = meta.get("weights").get("file").as_str().unwrap_or("weights.bin");
+        let wbytes = std::fs::read(dir.join(wfile))?;
+        let mut weights = Vec::new();
+        let tensors = meta
+            .get("weights")
+            .get("tensors")
+            .as_arr()
+            .ok_or_else(|| HicrError::Artifact("meta missing weights.tensors".into()))?;
+        for t in tensors {
+            let shape: Vec<usize> = t
+                .get("shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            let offset = t
+                .get("offset")
+                .as_usize()
+                .ok_or_else(|| HicrError::Artifact("tensor missing offset".into()))?;
+            let count: usize = shape.iter().product();
+            let end = offset + count * 4;
+            if end > wbytes.len() {
+                return Err(HicrError::Artifact(format!(
+                    "weights.bin too short: need {end}, have {}",
+                    wbytes.len()
+                )));
+            }
+            let data = le_f32_slice(&wbytes[offset..end]);
+            weights.push(Tensor { shape, data });
+        }
+
+        // Test set blob: n * img_dim f32 images then n u8 labels.
+        let n = meta
+            .get("testset")
+            .get("n")
+            .as_usize()
+            .ok_or_else(|| HicrError::Artifact("meta missing testset.n".into()))?;
+        let img_dim = meta
+            .get("testset")
+            .get("img_dim")
+            .as_usize()
+            .ok_or_else(|| HicrError::Artifact("meta missing testset.img_dim".into()))?;
+        let tfile = meta.get("testset").get("file").as_str().unwrap_or("testset.bin");
+        let tbytes = std::fs::read(dir.join(tfile))?;
+        let img_bytes = n * img_dim * 4;
+        if tbytes.len() != img_bytes + n {
+            return Err(HicrError::Artifact(format!(
+                "testset.bin size {} != expected {}",
+                tbytes.len(),
+                img_bytes + n
+            )));
+        }
+        let test_images = le_f32_slice(&tbytes[..img_bytes]);
+        let test_labels = tbytes[img_bytes..].to_vec();
+
+        Ok(ArtifactBundle {
+            dir: dir.to_path_buf(),
+            layer_dims,
+            batch_sizes,
+            hlo_files,
+            weights,
+            test_images,
+            test_labels,
+            img_dim,
+            ref_accuracy: meta
+                .get("train")
+                .get("ref_test_accuracy")
+                .as_f64()
+                .unwrap_or(0.0),
+            img0_score: meta.get("img0").get("score").as_f64().unwrap_or(0.0),
+            img0_pred: meta.get("img0").get("pred").as_usize().unwrap_or(0),
+        })
+    }
+
+    /// Default artifact directory: `$HICR_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HICR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Path of the HLO file for `batch`, if exported.
+    pub fn hlo_path(&self, batch: usize) -> Option<PathBuf> {
+        self.hlo_files
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .map(|(_, f)| self.dir.join(f))
+    }
+
+    /// Number of test examples.
+    pub fn test_count(&self) -> usize {
+        self.test_labels.len()
+    }
+
+    /// Borrow test image `i` as a flat f32 slice.
+    pub fn test_image(&self, i: usize) -> &[f32] {
+        &self.test_images[i * self.img_dim..(i + 1) * self.img_dim]
+    }
+
+    /// Weight tensors as (data, dims) pairs for Executable::run_f32.
+    pub fn weight_args(&self) -> Vec<(&[f32], &[usize])> {
+        self.weights
+            .iter()
+            .map(|t| (t.data.as_slice(), t.shape.as_slice()))
+            .collect()
+    }
+}
+
+fn le_f32_slice(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Write a miniature, self-consistent artifact dir.
+    fn fake_bundle(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        // 2 tensors: w (2x3), b (3).
+        let w: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let b: Vec<f32> = vec![0.5, 1.5, 2.5];
+        let mut blob = Vec::new();
+        for v in w.iter().chain(b.iter()) {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(dir.join("weights.bin"), &blob).unwrap();
+        // 2 test images of dim 4, labels [1, 2].
+        let imgs: Vec<f32> = (0..8).map(|i| i as f32 / 10.0).collect();
+        let mut tblob = Vec::new();
+        for v in &imgs {
+            tblob.extend_from_slice(&v.to_le_bytes());
+        }
+        tblob.extend_from_slice(&[1u8, 2u8]);
+        std::fs::write(dir.join("testset.bin"), &tblob).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"layer_dims":[4,3],"batch_sizes":[1],"hlo":{"1":"m.hlo.txt"},
+               "weights":{"file":"weights.bin","tensors":[
+                 {"shape":[2,3],"offset":0},{"shape":[3],"offset":24}]},
+               "testset":{"file":"testset.bin","n":2,"img_dim":4},
+               "train":{"ref_test_accuracy":0.95},
+               "img0":{"score":7.25,"pred":3}}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("hicr-art-{}", std::process::id()));
+        fake_bundle(&dir);
+        let b = ArtifactBundle::load(&dir).unwrap();
+        assert_eq!(b.layer_dims, vec![4, 3]);
+        assert_eq!(b.weights.len(), 2);
+        assert_eq!(b.weights[0].shape, vec![2, 3]);
+        assert_eq!(b.weights[1].data, vec![0.5, 1.5, 2.5]);
+        assert_eq!(b.test_count(), 2);
+        assert_eq!(b.test_labels, vec![1, 2]);
+        assert_eq!(b.test_image(1), &[0.4, 0.5, 0.6, 0.7]);
+        assert_eq!(b.img0_pred, 3);
+        assert!((b.img0_score - 7.25).abs() < 1e-12);
+        assert_eq!(b.hlo_path(1), Some(dir.join("m.hlo.txt")));
+        assert_eq!(b.hlo_path(32), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_gives_helpful_error() {
+        let Err(err) = ArtifactBundle::load(Path::new("/nonexistent-hicr")) else {
+            panic!("expected error");
+        };
+        let msg = err.to_string();
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn truncated_weights_detected() {
+        let dir = std::env::temp_dir().join(format!("hicr-art2-{}", std::process::id()));
+        fake_bundle(&dir);
+        std::fs::write(dir.join("weights.bin"), [0u8; 8]).unwrap();
+        assert!(ArtifactBundle::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

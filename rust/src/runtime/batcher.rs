@@ -1,0 +1,274 @@
+//! Dynamic request batcher for the serving path (the vLLM-router-style L3
+//! hot loop): requests are queued, packed into the largest exported batch
+//! size within a deadline, padded, executed once, and de-multiplexed.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::core::error::{HicrError, Result};
+
+/// One queued inference request.
+pub struct BatchRequest {
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+    respond: Sender<(Vec<f32>, Duration)>,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Exported batch size to pack to (pad partial batches up to this).
+    pub max_batch: usize,
+    /// How long to wait for more requests before flushing a partial batch.
+    pub max_wait: Duration,
+    /// Input feature dimension.
+    pub input_dim: usize,
+    /// Output dimension per example.
+    pub output_dim: usize,
+}
+
+/// The model executor the batcher drives: takes a padded (max_batch ×
+/// input_dim) buffer, returns (max_batch × output_dim).
+pub type BatchExecutor = Arc<dyn Fn(&[f32]) -> Result<Vec<f32>> + Send + Sync>;
+
+struct Queue {
+    pending: VecDeque<BatchRequest>,
+    closed: bool,
+}
+
+/// Dynamic batcher: `submit` from any thread; a worker thread flushes.
+pub struct Batcher {
+    queue: Arc<(Mutex<Queue>, Condvar)>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+    cfg: BatcherConfig,
+    /// Batches executed / examples padded (observability).
+    stats: Arc<Mutex<BatchStats>>,
+}
+
+/// Counters for batching efficiency reporting.
+#[derive(Debug, Default, Clone)]
+pub struct BatchStats {
+    pub batches: u64,
+    pub requests: u64,
+    pub padded_slots: u64,
+}
+
+impl Batcher {
+    pub fn start(cfg: BatcherConfig, exec: BatchExecutor) -> Arc<Batcher> {
+        let queue = Arc::new((
+            Mutex::new(Queue {
+                pending: VecDeque::new(),
+                closed: false,
+            }),
+            Condvar::new(),
+        ));
+        let stats = Arc::new(Mutex::new(BatchStats::default()));
+        let b = Arc::new(Batcher {
+            queue: Arc::clone(&queue),
+            worker: Mutex::new(None),
+            cfg: cfg.clone(),
+            stats: Arc::clone(&stats),
+        });
+        let worker = std::thread::Builder::new()
+            .name("hicr-batcher".into())
+            .spawn(move || batch_loop(cfg, queue, exec, stats))
+            .expect("spawn batcher");
+        *b.worker.lock().unwrap() = Some(worker);
+        b
+    }
+
+    /// Submit one request; returns a receiver for (output, queue_latency).
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<(Vec<f32>, Duration)>> {
+        if input.len() != self.cfg.input_dim {
+            return Err(HicrError::Bounds(format!(
+                "input dim {} != {}",
+                input.len(),
+                self.cfg.input_dim
+            )));
+        }
+        let (tx, rx) = channel();
+        let (q, cv) = &*self.queue;
+        let mut queue = q.lock().unwrap();
+        if queue.closed {
+            return Err(HicrError::InvalidState("batcher shut down".into()));
+        }
+        queue.pending.push_back(BatchRequest {
+            input,
+            enqueued: Instant::now(),
+            respond: tx,
+        });
+        cv.notify_all();
+        Ok(rx)
+    }
+
+    /// Convenience: submit and block for the result.
+    pub fn infer(&self, input: Vec<f32>) -> Result<(Vec<f32>, Duration)> {
+        let rx = self.submit(input)?;
+        rx.recv()
+            .map_err(|_| HicrError::InvalidState("batcher dropped request".into()))
+    }
+
+    pub fn stats(&self) -> BatchStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Drain and stop the worker.
+    pub fn shutdown(&self) {
+        {
+            let (q, cv) = &*self.queue;
+            q.lock().unwrap().closed = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batch_loop(
+    cfg: BatcherConfig,
+    queue: Arc<(Mutex<Queue>, Condvar)>,
+    exec: BatchExecutor,
+    stats: Arc<Mutex<BatchStats>>,
+) {
+    let (q, cv) = &*queue;
+    loop {
+        // Collect up to max_batch requests, waiting up to max_wait after
+        // the first arrives.
+        let mut batch: Vec<BatchRequest> = Vec::new();
+        {
+            let mut queue = q.lock().unwrap();
+            loop {
+                while let Some(r) = queue.pending.pop_front() {
+                    batch.push(r);
+                    if batch.len() >= cfg.max_batch {
+                        break;
+                    }
+                }
+                if batch.len() >= cfg.max_batch || (queue.closed && batch.is_empty()) {
+                    break;
+                }
+                if !batch.is_empty() {
+                    // Partial batch: wait out the deadline for stragglers.
+                    let deadline = batch[0].enqueued + cfg.max_wait;
+                    let now = Instant::now();
+                    if now >= deadline || queue.closed {
+                        break;
+                    }
+                    let (g, _t) = cv.wait_timeout(queue, deadline - now).unwrap();
+                    queue = g;
+                } else {
+                    queue = cv.wait(queue).unwrap();
+                }
+            }
+            if queue.closed && batch.is_empty() {
+                return;
+            }
+        }
+        // Pack + pad.
+        let n = batch.len();
+        let mut input = vec![0f32; cfg.max_batch * cfg.input_dim];
+        for (i, r) in batch.iter().enumerate() {
+            input[i * cfg.input_dim..(i + 1) * cfg.input_dim].copy_from_slice(&r.input);
+        }
+        let out = exec(&input);
+        {
+            let mut s = stats.lock().unwrap();
+            s.batches += 1;
+            s.requests += n as u64;
+            s.padded_slots += (cfg.max_batch - n) as u64;
+        }
+        match out {
+            Ok(out) => {
+                for (i, r) in batch.into_iter().enumerate() {
+                    let slice =
+                        out[i * cfg.output_dim..(i + 1) * cfg.output_dim].to_vec();
+                    let _ = r.respond.send((slice, r.enqueued.elapsed()));
+                }
+            }
+            Err(_) => {
+                // Drop senders: receivers observe RecvError.
+                drop(batch);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_cfg(max_batch: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(5),
+            input_dim: 2,
+            output_dim: 2,
+        }
+    }
+
+    /// Executor: out[i] = in[i] * 10 (elementwise) — identity-ish.
+    fn times10() -> BatchExecutor {
+        Arc::new(|input: &[f32]| Ok(input.iter().map(|v| v * 10.0).collect()))
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let b = Batcher::start(echo_cfg(4), times10());
+        let (out, latency) = b.infer(vec![1.0, 2.0]).unwrap();
+        assert_eq!(out, vec![10.0, 20.0]);
+        assert!(latency >= Duration::from_millis(0));
+        b.shutdown();
+        let s = b.stats();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.padded_slots, 3);
+    }
+
+    #[test]
+    fn batches_pack_concurrent_requests() {
+        let b = Batcher::start(
+            BatcherConfig {
+                max_wait: Duration::from_millis(50),
+                ..echo_cfg(8)
+            },
+            times10(),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            rxs.push(b.submit(vec![i as f32, 0.0]).unwrap());
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let (out, _) = rx.recv().unwrap();
+            assert_eq!(out[0], i as f32 * 10.0);
+        }
+        let s = b.stats();
+        assert_eq!(s.requests, 8);
+        assert!(s.batches <= 2, "8 requests should pack into <=2 batches");
+        b.shutdown();
+    }
+
+    #[test]
+    fn wrong_dim_rejected() {
+        let b = Batcher::start(echo_cfg(2), times10());
+        assert!(b.submit(vec![1.0, 2.0, 3.0]).is_err());
+        b.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_rejected() {
+        let b = Batcher::start(echo_cfg(2), times10());
+        b.shutdown();
+        assert!(b.submit(vec![1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn executor_failure_drops_requests() {
+        let fail: BatchExecutor = Arc::new(|_| Err(HicrError::Xla("device lost".into())));
+        let b = Batcher::start(echo_cfg(2), fail);
+        let rx = b.submit(vec![1.0, 2.0]).unwrap();
+        assert!(rx.recv().is_err());
+        b.shutdown();
+    }
+}

@@ -1,0 +1,175 @@
+//! Thin wrapper over the `xla` crate: PJRT CPU client, HLO-text loading,
+//! executable caching, f32 tensor execution.
+//!
+//! Interchange is HLO *text* (see `/opt/xla-example/README.md`): jax>=0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::core::error::{HicrError, Result};
+
+/// A compiled, ready-to-run computation.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// The xla crate wraps C++ objects behind pointers without Send/Sync
+// markers; PJRT CPU executables and clients are thread-safe to *invoke*
+// (PJRT guarantees concurrent Execute calls are legal).
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Run with f32 inputs given as (data, dims) pairs; returns the flat
+    /// f32 output of the 1-tuple result (our AOT convention).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let expected: usize = dims.iter().product();
+            if expected != data.len() {
+                return Err(HicrError::Xla(format!(
+                    "input length {} != shape {:?}",
+                    data.len(),
+                    dims
+                )));
+            }
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims_i64)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| HicrError::Xla("empty execution result".into()))?
+            .to_literal_sync()?;
+        // AOT lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = out.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// PJRT CPU client with an executable cache keyed by artifact name.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+impl XlaRuntime {
+    /// Create a CPU-PJRT runtime.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO text file, caching by `name`.
+    pub fn load_hlo_text(&self, name: &str, path: &Path) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            HicrError::Artifact(format!("parse HLO text {path:?}: {e}"))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let exe = Arc::new(Executable {
+            name: name.to_string(),
+            exe,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny hand-written HLO module: f(x, y) = (x + y,) over f32[2,2].
+    /// Written as text so the runtime tests do not depend on `make
+    /// artifacts` having run.
+    pub(crate) const ADD_HLO: &str = r#"
+HloModule tiny_add, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main {
+  p0 = f32[2,2]{1,0} parameter(0)
+  p1 = f32[2,2]{1,0} parameter(1)
+  sum = f32[2,2]{1,0} add(p0, p1)
+  ROOT out = (f32[2,2]{1,0}) tuple(sum)
+}
+"#;
+
+    fn write_tmp(name: &str, text: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("hicr-{name}-{}.hlo.txt", std::process::id()));
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    #[test]
+    fn load_and_execute_hlo_text() {
+        let rt = XlaRuntime::cpu().unwrap();
+        assert!(rt.device_count() >= 1);
+        let path = write_tmp("add", ADD_HLO);
+        let exe = rt.load_hlo_text("add", &path).unwrap();
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [10.0f32, 20.0, 30.0, 40.0];
+        let out = exe.run_f32(&[(&x, &[2, 2]), (&y, &[2, 2])]).unwrap();
+        assert_eq!(out, vec![11.0, 22.0, 33.0, 44.0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cache_hits_by_name() {
+        let rt = XlaRuntime::cpu().unwrap();
+        let path = write_tmp("add2", ADD_HLO);
+        let a = rt.load_hlo_text("same", &path).unwrap();
+        let b = rt.load_hlo_text("same", &path).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(rt.cached_executables(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let rt = XlaRuntime::cpu().unwrap();
+        let path = write_tmp("add3", ADD_HLO);
+        let exe = rt.load_hlo_text("add3", &path).unwrap();
+        let x = [1.0f32, 2.0];
+        assert!(exe.run_f32(&[(&x, &[2, 2]), (&x, &[2, 2])]).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_artifact_error() {
+        let rt = XlaRuntime::cpu().unwrap();
+        let Err(err) = rt.load_hlo_text("nope", Path::new("/does/not/exist.hlo.txt"))
+        else {
+            panic!("expected error");
+        };
+        assert!(matches!(err, HicrError::Artifact(_)));
+    }
+}

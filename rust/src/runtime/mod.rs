@@ -1,0 +1,12 @@
+//! PJRT runtime bridge: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text + weights + test set) and executes
+//! them on the XLA CPU client from the Rust hot path. Python never runs at
+//! request time.
+
+pub mod artifact;
+pub mod batcher;
+pub mod client;
+
+pub use artifact::ArtifactBundle;
+pub use batcher::{Batcher, BatcherConfig};
+pub use client::XlaRuntime;

@@ -1,0 +1,216 @@
+//! Benchmark runner (criterion substitute — offline registry carries no
+//! criterion). All `rust/benches/*` binaries (`harness = false`) use this.
+//!
+//! Protocol: warmup iterations, then `reps` timed repetitions of the
+//! workload; reports mean ± stddev and percentiles in both human-readable
+//! rows (the paper-table format) and machine-readable JSON lines for
+//! post-processing.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::{fmt_duration, Summary};
+
+/// One measured series (e.g. one message size in Fig 8, one backend in
+/// Fig 9).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub label: String,
+    /// Per-repetition wall-clock seconds (or virtual seconds).
+    pub samples_s: Vec<f64>,
+    /// Optional derived metric (e.g. goodput bit/s, GFlop/s) per rep.
+    pub derived: Vec<f64>,
+    pub derived_unit: &'static str,
+}
+
+impl Measurement {
+    pub fn time_summary(&self) -> Option<Summary> {
+        Summary::of(&self.samples_s)
+    }
+
+    pub fn derived_summary(&self) -> Option<Summary> {
+        Summary::of(&self.derived)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let t = self.time_summary();
+        let d = self.derived_summary();
+        Json::obj([
+            ("label", Json::Str(self.label.clone())),
+            (
+                "time_s",
+                t.map(|s| {
+                    Json::obj([
+                        ("mean", s.mean.into()),
+                        ("stddev", s.stddev.into()),
+                        ("min", s.min.into()),
+                        ("p50", s.p50.into()),
+                    ])
+                })
+                .unwrap_or(Json::Null),
+            ),
+            (
+                "derived",
+                d.map(|s| {
+                    Json::obj([
+                        ("unit", self.derived_unit.into()),
+                        ("mean", s.mean.into()),
+                        ("stddev", s.stddev.into()),
+                        ("min", s.min.into()),
+                        ("max", s.max.into()),
+                    ])
+                })
+                .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Time one closure invocation.
+pub fn time_once<F: FnOnce()>(f: F) -> Duration {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed()
+}
+
+/// Run `f` for `warmup` throwaway + `reps` measured repetitions.
+pub fn run<F: FnMut()>(label: impl Into<String>, warmup: usize, reps: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        samples.push(time_once(&mut f).as_secs_f64());
+    }
+    Measurement {
+        label: label.into(),
+        samples_s: samples,
+        derived: Vec::new(),
+        derived_unit: "",
+    }
+}
+
+/// A named table of measurements, printed in the paper-row format.
+pub struct Report {
+    pub title: &'static str,
+    pub rows: Vec<Measurement>,
+}
+
+impl Report {
+    pub fn new(title: &'static str) -> Self {
+        Self {
+            title,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, m: Measurement) {
+        self.rows.push(m);
+    }
+
+    /// Print human table + one JSON line per row (prefixed `@@` for easy
+    /// grepping by tooling / EXPERIMENTS.md collection).
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let wide = self
+            .rows
+            .iter()
+            .map(|r| r.label.len())
+            .max()
+            .unwrap_or(8)
+            .max(8);
+        println!(
+            "{:<wide$}  {:>12}  {:>12}  {:>12}  {:>16}",
+            "series", "mean", "stddev", "best", "derived(mean)",
+        );
+        for row in &self.rows {
+            let t = row.time_summary();
+            let d = row.derived_summary();
+            println!(
+                "{:<wide$}  {:>12}  {:>12}  {:>12}  {:>16}",
+                row.label,
+                t.as_ref()
+                    .map(|s| fmt_duration(Duration::from_secs_f64(s.mean)))
+                    .unwrap_or_else(|| "-".into()),
+                t.as_ref()
+                    .map(|s| fmt_duration(Duration::from_secs_f64(s.stddev)))
+                    .unwrap_or_else(|| "-".into()),
+                t.as_ref()
+                    .map(|s| fmt_duration(Duration::from_secs_f64(s.min)))
+                    .unwrap_or_else(|| "-".into()),
+                d.as_ref()
+                    .map(|s| format!("{:.4e} {}", s.mean, row.derived_unit))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        for row in &self.rows {
+            println!("@@ {}", row.to_json().to_string_compact());
+        }
+    }
+}
+
+/// Parse standard bench CLI overrides: `--reps N`, `--quick`.
+pub struct BenchArgs {
+    pub reps: usize,
+    pub quick: bool,
+}
+
+impl BenchArgs {
+    pub fn parse(default_reps: usize) -> Self {
+        let args: Vec<String> = std::env::args().collect();
+        let mut reps = default_reps;
+        let mut quick = false;
+        let mut i = 1;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--reps" => {
+                    reps = args
+                        .get(i + 1)
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(default_reps);
+                    i += 1;
+                }
+                "--quick" => quick = true,
+                // `cargo bench` passes --bench; ignore unknown flags.
+                _ => {}
+            }
+            i += 1;
+        }
+        if quick {
+            reps = reps.min(3);
+        }
+        Self { reps, quick }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_counts_reps() {
+        let mut calls = 0;
+        let m = run("t", 2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(m.samples_s.len(), 5);
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let mut m = run("series-a", 0, 3, || {
+            std::hint::black_box(1 + 1);
+        });
+        m.derived = vec![10.0, 20.0, 30.0];
+        m.derived_unit = "widgets/s";
+        let j = m.to_json().to_string_compact();
+        let v = crate::util::json::parse(&j).unwrap();
+        assert_eq!(v.get("label").as_str(), Some("series-a"));
+        assert_eq!(v.get("derived").get("mean").as_f64(), Some(20.0));
+    }
+
+    #[test]
+    fn time_once_positive() {
+        let d = time_once(|| std::thread::sleep(Duration::from_millis(1)));
+        assert!(d >= Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,9 @@
+//! Support substrates built from scratch for the offline environment:
+//! JSON serialization, PRNG, property-test harness, statistics, and the
+//! benchmark runner (substituting serde/proptest/criterion — DESIGN.md §2).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,181 @@
+//! Mini property-testing harness (proptest substitute — the offline
+//! registry has no proptest).
+//!
+//! A property is a function from a seeded [`Gen`] to `Result<(), String>`.
+//! The runner executes many random cases; on failure it reports the seed
+//! and re-runs with `PROP_SEED=<seed>` reproducibility, then attempts a
+//! bounded "size shrink" by re-running with progressively smaller size
+//! hints so the minimal failing magnitude is reported.
+//!
+//! Used across the crate for the model invariants DESIGN.md §5 lists:
+//! channel FIFO/capacity, topology serialization round-trips, exchange
+//! tag/key uniqueness, memcpy legality, fence counting, and allocator
+//! state machines.
+
+use crate::util::rng::Rng;
+
+/// Case-generation context: a PRNG plus a size hint in `[0, 100]` that
+/// properties use to scale their structures (shrinking lowers it).
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    /// Scaled integer in `[lo, lo + (hi-lo) * size/100]` — grows with size.
+    pub fn sized(&mut self, lo: usize, hi: usize) -> usize {
+        let span = (hi - lo) * self.size / 100;
+        self.rng.range_usize(lo, lo + span.max(0))
+    }
+
+    /// Arbitrary byte vector with sized length in `[0, max_len]`.
+    pub fn bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let len = self.sized(0, max_len);
+        let mut v = vec![0u8; len];
+        self.rng.fill_bytes(&mut v);
+        v
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub name: &'static str,
+}
+
+impl Config {
+    pub fn new(name: &'static str) -> Self {
+        // Honour PROP_SEED for reproduction, PROP_CASES for soak runs.
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        let cases = std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Self { cases, seed, name }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases; panic with diagnostics on the
+/// first failure (after attempting size shrinking).
+pub fn check<F>(cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // Ramp size up over the run so early cases are small.
+        let size = 1 + (case * 100 / cfg.cases.max(1)).min(99);
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            size,
+        };
+        if let Err(msg) = prop(&mut g) {
+            // Try to find a smaller failing size with the same seed.
+            let mut min_fail = (size, msg.clone());
+            let mut lo = 1usize;
+            let mut hi = size;
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                let mut g = Gen {
+                    rng: Rng::new(case_seed),
+                    size: mid,
+                };
+                match prop(&mut g) {
+                    Err(m) => {
+                        min_fail = (mid, m);
+                        hi = mid;
+                    }
+                    Ok(()) => lo = mid + 1,
+                }
+            }
+            panic!(
+                "property '{}' failed (case {case}, seed {case_seed:#x}, \
+                 size {} -> shrunk to {}):\n  {}\nreproduce with \
+                 PROP_SEED={} PROP_CASES={}",
+                cfg.name,
+                size,
+                min_fail.0,
+                min_fail.1,
+                cfg.seed,
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Convenience macro: `prop_check!("name", |g| { ... })`.
+#[macro_export]
+macro_rules! prop_check {
+    ($name:literal, $body:expr) => {
+        $crate::util::prop::check($crate::util::prop::Config::new($name), $body)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            Config {
+                cases: 10,
+                seed: 1,
+                name: "always-ok",
+            },
+            |_g| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            Config {
+                cases: 5,
+                seed: 2,
+                name: "always-fails",
+            },
+            |_g| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        let mut sizes = Vec::new();
+        check(
+            Config {
+                cases: 50,
+                seed: 3,
+                name: "sizes",
+            },
+            |g| {
+                sizes.push(g.size);
+                Ok(())
+            },
+        );
+        assert!(sizes.first().unwrap() < sizes.last().unwrap());
+        assert!(*sizes.last().unwrap() <= 100);
+    }
+
+    #[test]
+    fn gen_sized_within_bounds() {
+        let mut g = Gen {
+            rng: Rng::new(9),
+            size: 50,
+        };
+        for _ in 0..100 {
+            let v = g.sized(10, 110);
+            assert!((10..=60).contains(&v), "v={v}");
+        }
+    }
+}
