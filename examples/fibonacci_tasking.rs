@@ -1,12 +1,13 @@
 //! Test Case 3 demo: Fibonacci task DAG on both tasking engines with
 //! OVNI-style traces rendered as ASCII timelines (the Fig. 9 visual).
+//! Engines are compute *plugins* selected by name through the registry.
 //!
 //! Run: `cargo run --release --example fibonacci_tasking [-- n [workers]]`
 
 use hicr::apps::fibonacci;
-use hicr::frontends::tasking::{TaskSystem, TaskSystemKind};
+use hicr::frontends::tasking::TaskSystem;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().collect();
     let n: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
     let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
@@ -17,14 +18,16 @@ fn main() -> anyhow::Result<()> {
         fibonacci::expected_tasks(n)
     );
 
-    for kind in [TaskSystemKind::Coro, TaskSystemKind::Nosv] {
-        let sys = TaskSystem::new(kind, workers, true);
+    let registry = hicr::backends::registry();
+    for backend in ["coro", "nosv"] {
+        let cm = registry.builder().compute(backend).build()?.compute()?;
+        let sys = TaskSystem::new(cm, workers, true);
         let run = fibonacci::run(&sys, n)?;
         sys.shutdown()?;
         assert_eq!(run.value, fibonacci::fib_value(n));
         assert_eq!(run.tasks_executed, fibonacci::expected_tasks(n));
         println!(
-            "[{kind:?}] F({n}) = {} in {:.3}s ({} tasks, {:.1} µs/task)",
+            "[{backend}] F({n}) = {} in {:.3}s ({} tasks, {:.1} µs/task)",
             run.value,
             run.elapsed_s,
             run.tasks_executed,

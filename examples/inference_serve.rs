@@ -13,15 +13,15 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use hicr::apps::inference::{evaluate, KernelProvider, XlaKernels};
-use hicr::backends::threads::ThreadsCommunicationManager;
+use hicr::apps::inference::{evaluate, KernelProvider};
+use hicr::backends::xlacomp::XlaKernels;
 use hicr::core::memory::LocalMemorySlot;
 use hicr::frontends::channels::spsc::{SpscConsumer, SpscProducer};
 use hicr::runtime::{ArtifactBundle, Batcher, BatcherConfig, XlaRuntime};
 use hicr::util::stats::Summary;
 use hicr::{CommunicationManager, MemorySpaceId, Tag};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n_requests: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -67,7 +67,12 @@ fn main() -> anyhow::Result<()> {
     );
 
     // The request channel carries image indices (u32) router -> worker.
-    let cmm: Arc<dyn CommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
+    // The communication plugin is resolved by name through the registry.
+    let cmm: Arc<dyn CommunicationManager> = hicr::backends::registry()
+        .builder()
+        .communication("threads")
+        .build()?
+        .communication()?;
     let alloc = |len| LocalMemorySlot::alloc(MemorySpaceId(1), len);
     let mut consumer = SpscConsumer::create(
         cmm.as_ref(),

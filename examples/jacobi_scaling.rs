@@ -1,12 +1,13 @@
 //! Test Case 4 demo: the 3-D Jacobi heat solver on both tasking engines
-//! (Fig. 10, scaled grid), with optional thread-mesh sweep.
+//! (Fig. 10, scaled grid), with optional thread-mesh sweep. Engines are
+//! compute *plugins* selected by name through the registry.
 //!
 //! Run: `cargo run --release --example jacobi_scaling [-- n iters]`
 
 use hicr::apps::jacobi::{run_local, run_sequential, Grid};
-use hicr::frontends::tasking::{TaskSystem, TaskSystemKind};
+use hicr::frontends::tasking::TaskSystem;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().collect();
     let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(96);
     let iters: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(30);
@@ -17,8 +18,10 @@ fn main() -> anyhow::Result<()> {
     let want = run_sequential(&mut ref_grid, iters);
     println!("jacobi {n}^3, {iters} iterations, mesh {mesh:?}; reference checksum {want:.6}\n");
 
-    for kind in [TaskSystemKind::Coro, TaskSystemKind::Nosv] {
-        let sys = TaskSystem::new(kind, mesh.0 * mesh.1 * mesh.2, true);
+    let registry = hicr::backends::registry();
+    for backend in ["coro", "nosv"] {
+        let cm = registry.builder().compute(backend).build()?.compute()?;
+        let sys = TaskSystem::new(cm, mesh.0 * mesh.1 * mesh.2, true);
         let mut grid = Grid::new(n);
         let run = run_local(&sys, &mut grid, iters, mesh)?;
         sys.shutdown()?;
@@ -28,7 +31,7 @@ fn main() -> anyhow::Result<()> {
             run.checksum
         );
         println!(
-            "[{kind:?}] {:.3}s  {:.3} GFlop/s  checksum {:.6}",
+            "[{backend}] {:.3}s  {:.3} GFlop/s  checksum {:.6}",
             run.elapsed_s, run.gflops, run.checksum
         );
         println!("{}", sys.trace().render_ascii(mesh.0 * mesh.1 * mesh.2, 72));

@@ -13,12 +13,11 @@ use hicr::apps::pingpong::{
     build_channels, goodput_from_rtts, modeled_series, paper_sizes, run_pinger,
     run_ponger, Side,
 };
-use hicr::backends::threads::ThreadsCommunicationManager;
 use hicr::netsim::fabric::{LPF_IBVERBS_EDR, MPI_RMA_EDR};
 use hicr::util::stats::fmt_bps;
 use hicr::CommunicationManager;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Modeled Fig. 8 series.
     let sizes = paper_sizes();
     let lpf = modeled_series(&LPF_IBVERBS_EDR, &sizes);
@@ -34,12 +33,17 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // Measured intra-process validation run.
+    // Measured intra-process validation run (communication plugin
+    // resolved by name through the registry).
     println!("\nmeasured (threads backend, loopback):");
+    let registry = hicr::backends::registry();
     let msg_sizes = [1usize, 256, 4096, 65536, 1 << 20];
     for (i, &size) in msg_sizes.iter().enumerate() {
-        let cmm: Arc<dyn CommunicationManager> =
-            Arc::new(ThreadsCommunicationManager::new());
+        let cmm: Arc<dyn CommunicationManager> = registry
+            .builder()
+            .communication("threads")
+            .build()?
+            .communication()?;
         let tag = 5000 + i as u64 * 4;
         let cmm2 = Arc::clone(&cmm);
         let ponger = std::thread::spawn(move || -> hicr::Result<()> {

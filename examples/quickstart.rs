@@ -1,7 +1,9 @@
 //! Quickstart: the paper's Figs. 4–7 as one runnable program.
 //!
-//! 1. Instantiate backends (Fig. 4) — hostmem topology+memory, threads
-//!    communication+compute, xlacomp accelerator discovery.
+//! 1. Instantiate backends (Fig. 4) — resolved *by name* from the plugin
+//!    registry: hostmem memory+instance, threads communication+compute;
+//!    the topology comes merged from every topology-capable plugin
+//!    (hostmem host discovery + xlacomp accelerator discovery).
 //! 2. Query + merge topologies and broadcast a message into a slot on
 //!    every memory space (Fig. 5).
 //! 3. Run one execution unit on every compute resource (Fig. 6).
@@ -13,36 +15,41 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use hicr::backends::hostmem::{HostMemoryManager, HostTopologyManager};
-use hicr::backends::threads::{ThreadsCommunicationManager, ThreadsComputeManager};
-use hicr::backends::xlacomp::XlaTopologyManager;
 use hicr::core::communication::DataEndpoint;
 use hicr::core::compute::{ExecutionUnit, FnExecutionUnit};
 use hicr::core::memory::LocalMemorySlot;
 use hicr::core::topology::MemorySpaceKind;
-use hicr::runtime::XlaRuntime;
-use hicr::{CommunicationManager, ComputeManager, MemoryManager, Tag, TopologyManager};
+use hicr::{PluginContext, Tag};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // ------------------------------------------------------------------
-    // Fig. 4: backend instantiation. The application below only ever sees
-    // the abstract manager traits.
+    // Fig. 4: backend instantiation — by *name*, through the registry.
+    // The application below only ever sees the abstract manager traits.
     // ------------------------------------------------------------------
-    let tm = HostTopologyManager::new();
-    let mm = HostMemoryManager::new();
-    let cmm = ThreadsCommunicationManager::new();
-    let cpm = ThreadsComputeManager::new();
+    let registry = hicr::backends::registry();
+    let set = registry
+        .builder()
+        .memory("hostmem")
+        .instance("hostmem")
+        .communication("threads")
+        .compute("threads")
+        .build()?;
+    let (mm, cmm, cpm, im) = (
+        set.memory()?,
+        set.communication()?,
+        set.compute()?,
+        set.instance()?,
+    );
+    println!("resolved managers: {:?}", set.selections());
 
     // ------------------------------------------------------------------
-    // Fig. 5: obtain the topology and broadcast a message to a new slot
-    // in every (host) memory space of every device.
+    // Fig. 5: obtain the merged topology of every topology-capable
+    // plugin — combined managers covering different technologies
+    // (§3.1.2; hostmem host discovery + the xlacomp accelerator when
+    // available) — and broadcast a message to a new slot in every
+    // (host) memory space of every device.
     // ------------------------------------------------------------------
-    let mut topology = tm.query_topology()?;
-    if let Ok(rt) = XlaRuntime::cpu() {
-        // Combine managers covering different technologies (§3.1.2).
-        let xtm = XlaTopologyManager::new(Arc::new(rt));
-        topology.merge(xtm.query_topology()?)?;
-    }
+    let topology = hicr::backends::merged_topology(&registry, &PluginContext::new())?;
     println!(
         "discovered {} device(s), {} compute resource(s), {} total memory",
         topology.devices.len(),
@@ -90,7 +97,7 @@ fn main() -> anyhow::Result<()> {
     let mut processing_units = Vec::new();
     for resource in topology.compute_resources() {
         if resource.kind != "cpu-core" {
-            continue; // threads backend initializes CPU cores
+            continue; // the selected host compute plugin runs CPU cores
         }
         let pu = cpm.create_processing_unit(resource)?;
         let state = cpm.create_execution_state(unit.clone() as Arc<dyn ExecutionUnit>)?;
@@ -114,7 +121,12 @@ fn main() -> anyhow::Result<()> {
     // distributed variant runs under `hicr launch` — see `hicr worker`'s
     // spawntest app.)
     // ------------------------------------------------------------------
-    println!("instance check: single-instance deployment is root; desired count satisfied");
+    assert!(im.is_root());
+    println!(
+        "instance check: {} launch-time instance(s), current is root; \
+         desired count satisfied",
+        im.instances()?.len()
+    );
     println!("quickstart OK");
     Ok(())
 }

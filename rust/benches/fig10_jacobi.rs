@@ -1,5 +1,6 @@
 //! Fig. 10 — coarse-grained tasking: 3-D Jacobi, 13-point stencil,
-//! nOS-V vs Pthreads+Boost engines on one instance.
+//! nOS-V vs Pthreads+Boost engines on one instance (compute plugins
+//! resolved by name through the registry).
 //!
 //! Paper: 704³ grid, 500 iterations, 44 threads — 40.5 s (nOS-V) vs
 //! 39.9 s (Boost): parity, because coarse tasks amortize scheduling.
@@ -8,7 +9,7 @@
 //! near-parity of the two engines (contrast with Fig. 9).
 
 use hicr::apps::jacobi::{run_local, run_sequential, Grid};
-use hicr::frontends::tasking::{TaskSystem, TaskSystemKind};
+use hicr::frontends::tasking::TaskSystem;
 use hicr::util::bench::{BenchArgs, Measurement, Report};
 
 fn main() {
@@ -31,27 +32,35 @@ fn main() {
          ref checksum {want:.6} =="
     );
 
+    let registry = hicr::backends::registry();
     let mut report = Report::new("Fig 10: coarse-grained tasking");
     let mut best = Vec::new();
-    for kind in [TaskSystemKind::Nosv, TaskSystemKind::Coro] {
+    for backend in ["nosv", "coro"] {
         let mut samples = Vec::new();
         let mut gflops = Vec::new();
         for _ in 0..args.reps {
-            let sys = TaskSystem::new(kind, workers, false);
+            let cm = registry
+                .builder()
+                .compute(backend)
+                .build()
+                .expect("resolve compute plugin")
+                .compute()
+                .expect("compute manager");
+            let sys = TaskSystem::new(cm, workers, false);
             let mut grid = Grid::new(n);
             let run = run_local(&sys, &mut grid, iters, mesh).expect("jacobi");
             sys.shutdown().expect("shutdown");
             assert!(
                 (run.checksum - want).abs() < 1e-9,
-                "{kind:?} checksum {} != {want}",
+                "{backend} checksum {} != {want}",
                 run.checksum
             );
             samples.push(run.elapsed_s);
             gflops.push(run.gflops);
         }
-        best.push((kind, samples.iter().cloned().fold(f64::INFINITY, f64::min)));
+        best.push((backend, samples.iter().cloned().fold(f64::INFINITY, f64::min)));
         report.push(Measurement {
-            label: format!("{kind:?}"),
+            label: backend.to_string(),
             samples_s: samples,
             derived: gflops,
             derived_unit: "GFlop/s",

@@ -15,7 +15,7 @@
 //!    cycles during the communication phase).
 
 use hicr::apps::jacobi::{run_local, run_sequential, Grid};
-use hicr::frontends::tasking::{TaskSystem, TaskSystemKind};
+use hicr::frontends::tasking::TaskSystem;
 use hicr::netsim::fabric::LPF_IBVERBS_EDR;
 use hicr::util::bench::BenchArgs;
 
@@ -72,7 +72,14 @@ fn main() {
 
     // ---- Part 2: modeled Fig. 11 curves. ----
     // Calibrate per-node compute throughput from a single local run.
-    let sys = TaskSystem::new(TaskSystemKind::Coro, 4, false);
+    let cm = hicr::backends::registry()
+        .builder()
+        .compute("coro")
+        .build()
+        .expect("resolve compute plugin")
+        .compute()
+        .expect("compute manager");
+    let sys = TaskSystem::new(cm, 4, false);
     let mut grid = Grid::new(n);
     let local = run_local(&sys, &mut grid, iters.max(4), (1, 2, 2)).expect("local");
     sys.shutdown().expect("shutdown");

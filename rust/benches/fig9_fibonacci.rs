@@ -1,5 +1,7 @@
 //! Fig. 9 — fine-grained tasking: naive Fibonacci F(24), 150 049 tasks on
-//! 8 workers, nOS-V (thread-per-task) vs Pthreads+Boost (fiber) engines.
+//! 8 workers, nOS-V (thread-per-task) vs Pthreads+Boost (fiber) engines —
+//! selected *by plugin name* through the registry, the same way an
+//! application would.
 //!
 //! Paper: coro-style user-level switching finished in 0.21 s vs 1.34 s for
 //! nOS-V (~6.4×). The box here has 1 core (vs 2×22), so absolute times
@@ -8,9 +10,8 @@
 //! tasks (override with FIB_N).
 
 use hicr::apps::fibonacci;
-use hicr::backends::coro::CoroComputeManager;
 use hicr::backends::nosv::NosvComputeManager;
-use hicr::frontends::tasking::{TaskSystem, TaskSystemKind};
+use hicr::frontends::tasking::TaskSystem;
 use hicr::util::bench::{BenchArgs, Measurement, Report};
 
 fn main() {
@@ -26,12 +27,20 @@ fn main() {
         fibonacci::fib_value(n)
     );
 
+    let registry = hicr::backends::registry();
     let mut report = Report::new("Fig 9: fine-grained tasking");
-    let mut best: Vec<(TaskSystemKind, f64)> = Vec::new();
-    for kind in [TaskSystemKind::Coro, TaskSystemKind::Nosv] {
+    let mut best: Vec<(&str, f64)> = Vec::new();
+    for backend in ["coro", "nosv"] {
         let mut samples = Vec::new();
         for _ in 0..args.reps {
-            let sys = TaskSystem::new(kind, workers, false);
+            let cm = registry
+                .builder()
+                .compute(backend)
+                .build()
+                .expect("resolve compute plugin")
+                .compute()
+                .expect("compute manager");
+            let sys = TaskSystem::new(cm, workers, false);
             let run = fibonacci::run(&sys, n).expect("fib run");
             sys.shutdown().expect("shutdown");
             assert_eq!(run.value, fibonacci::fib_value(n));
@@ -39,9 +48,9 @@ fn main() {
             samples.push(run.elapsed_s);
         }
         let best_t = samples.iter().cloned().fold(f64::INFINITY, f64::min);
-        best.push((kind, best_t));
+        best.push((backend, best_t));
         report.push(Measurement {
-            label: format!("{kind:?}"),
+            label: backend.to_string(),
             samples_s: samples.clone(),
             derived: samples
                 .iter()
@@ -63,7 +72,6 @@ fn main() {
          spawned so far = {} (thread-per-task)",
         NosvComputeManager::threads_spawned()
     );
-    let _ = CoroComputeManager::new(); // silence unused-import pattern
     assert!(
         nosv > coro,
         "coro (user-level switching) must beat thread-per-task: {coro} vs {nosv}"

@@ -11,7 +11,8 @@
 
 use std::sync::Arc;
 
-use hicr::apps::inference::{adhoc_forward, evaluate, NativeKernels, XlaKernels};
+use hicr::apps::inference::{adhoc_forward, evaluate, NativeKernels};
+use hicr::backends::xlacomp::XlaKernels;
 use hicr::runtime::{ArtifactBundle, XlaRuntime};
 use hicr::util::bench::BenchArgs;
 
@@ -62,8 +63,15 @@ fn main() {
         t0.elapsed().as_secs_f64()
     );
 
-    // HiCR providers.
-    let native = NativeKernels::new(&bundle).expect("native kernels");
+    // HiCR providers (compute plugin resolved by name, as an app would).
+    let cm = hicr::backends::registry()
+        .builder()
+        .compute("threads")
+        .build()
+        .expect("resolve compute plugin")
+        .compute()
+        .expect("compute manager");
+    let native = NativeKernels::new(&bundle, cm).expect("native kernels");
     let native_report = evaluate(&native, &bundle, n).expect("native eval");
     println!(
         "{:<22} {:<10} {:>8.2}% {:>16.9} {:>8.2}s",

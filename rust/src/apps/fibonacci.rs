@@ -86,7 +86,17 @@ pub fn run(system: &TaskSystem, n: u64) -> Result<FibonacciRun> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::frontends::tasking::TaskSystemKind;
+
+    fn system_for(backend: &str) -> Arc<TaskSystem> {
+        let cm = crate::backends::registry()
+            .builder()
+            .compute(backend)
+            .build()
+            .unwrap()
+            .compute()
+            .unwrap();
+        TaskSystem::new(cm, 4, false)
+    }
 
     #[test]
     fn task_count_formula_matches_paper() {
@@ -97,7 +107,7 @@ mod tests {
 
     #[test]
     fn coro_fib_correct_and_counts() {
-        let sys = TaskSystem::new(TaskSystemKind::Coro, 4, false);
+        let sys = system_for("coro");
         let run = run(&sys, 12).unwrap();
         sys.shutdown().unwrap();
         assert_eq!(run.value, fib_value(12));
@@ -106,7 +116,7 @@ mod tests {
 
     #[test]
     fn nosv_fib_correct_and_counts() {
-        let sys = TaskSystem::new(TaskSystemKind::Nosv, 4, false);
+        let sys = system_for("nosv");
         let run = run(&sys, 10).unwrap();
         sys.shutdown().unwrap();
         assert_eq!(run.value, fib_value(10));

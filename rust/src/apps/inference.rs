@@ -6,56 +6,49 @@
 //! kernels on an NPU, and naive OpenCL kernels on a GPU. Our providers:
 //!
 //! - [`NativeKernels`] — hand-written blocked f32 kernels executed through
-//!   the `threads` compute manager (the Pthreads+OpenBLAS analogue);
-//! - [`XlaKernels`] — the AOT-lowered Pallas/JAX HLO executed through the
-//!   `xlacomp` backend (the ACL pre-compiled-kernel analogue);
+//!   an *injected* host compute manager (the Pthreads+OpenBLAS analogue;
+//!   any plugin prescribing host-closure execution units works);
+//! - `backends::xlacomp::XlaKernels` — the AOT-lowered Pallas/JAX HLO
+//!   executed through the `xlacomp` plugin (the ACL pre-compiled-kernel
+//!   analogue); it lives with its plugin, keeping this application free
+//!   of concrete backend types;
 //! - [`adhoc_forward`] — the non-HiCR baseline the paper used to verify
 //!   result consistency.
 
 use std::sync::Arc;
 
-use crate::backends::threads::ThreadsComputeManager;
-use crate::backends::xlacomp::{XlaComputeManager, XlaExecutionUnit, XlaMemoryManager};
-use crate::core::compute::{ComputeManager, ExecutionState, ExecutionUnit, FnExecutionUnit};
+use crate::core::compute::{ComputeManager, ExecStatus, ExecutionUnit, FnExecutionUnit};
 use crate::core::error::{HicrError, Result};
-use crate::core::memory::{LocalMemorySlot, MemoryManager};
-use crate::core::topology::{ComputeResource, MemorySpace, MemorySpaceKind};
+use crate::core::topology::ComputeResource;
 use crate::runtime::artifact::{ArtifactBundle, Tensor};
-use crate::runtime::XlaRuntime;
 
-/// A device-agnostic forward-pass provider (the app's only kernel API).
-pub trait KernelProvider: Send + Sync {
-    /// Forward `batch` flattened images (batch × in_dim) → logits
-    /// (batch × out_dim).
-    fn forward(&self, x: &[f32], batch: usize) -> Result<Vec<f32>>;
-
-    /// Which backend runs the kernels (Table 2's "Backend" column).
-    fn backend_name(&self) -> &'static str;
-
-    /// Largest batch the provider accepts per call.
-    fn max_batch(&self) -> usize;
-}
+// The provider contract lives in `frontends::kernels` so backend plugins
+// can implement it without importing the application layer; re-exported
+// here because it is this app's kernel API.
+pub use crate::frontends::kernels::KernelProvider;
 
 // ---------------------------------------------------------------------
 // Native host kernels (Pthreads/OpenBLAS analogue).
 // ---------------------------------------------------------------------
 
-/// Blocked dense f32 kernels executed via the threads compute manager.
+/// Blocked dense f32 kernels executed via an injected compute manager —
+/// no concrete backend type appears here (select one by name through the
+/// plugin registry).
 pub struct NativeKernels {
     weights: Arc<Vec<Tensor>>,
     dims: Vec<usize>,
-    cm: ThreadsComputeManager,
+    cm: Arc<dyn ComputeManager>,
 }
 
 impl NativeKernels {
-    pub fn new(bundle: &ArtifactBundle) -> Result<NativeKernels> {
+    pub fn new(bundle: &ArtifactBundle, cm: Arc<dyn ComputeManager>) -> Result<NativeKernels> {
         if bundle.weights.len() != (bundle.layer_dims.len() - 1) * 2 {
             return Err(HicrError::Artifact("weight/layer count mismatch".into()));
         }
         Ok(NativeKernels {
             weights: Arc::new(bundle.weights.clone()),
             dims: bundle.layer_dims.clone(),
-            cm: ThreadsComputeManager::new(),
+            cm,
         })
     }
 }
@@ -139,136 +132,27 @@ impl KernelProvider for NativeKernels {
             .cm
             .create_execution_state(unit as Arc<dyn ExecutionUnit>)?;
         pu.start(Arc::clone(&state))?;
-        state.wait()?;
+        // Let the processing unit drive the state to completion. Calling
+        // state.wait() here would race the unit's own driver on
+        // suspendable (fiber) backends — both would resume() the same
+        // state.
+        pu.await_all()?;
         pu.terminate()?;
+        if state.status() == ExecStatus::Failed {
+            return Err(HicrError::InvalidState(
+                "native kernel execution failed (panicked)".into(),
+            ));
+        }
         let out = result.lock().unwrap().clone();
         Ok(out)
     }
 
     fn backend_name(&self) -> &'static str {
-        "threads"
+        self.cm.backend_name()
     }
 
     fn max_batch(&self) -> usize {
         usize::MAX
-    }
-}
-
-// ---------------------------------------------------------------------
-// XLA accelerator kernels (ACL analogue).
-// ---------------------------------------------------------------------
-
-/// AOT HLO kernels executed through the xlacomp backend with device slots.
-pub struct XlaKernels {
-    cm: XlaComputeManager,
-    mm: XlaMemoryManager,
-    space: MemorySpace,
-    units: Vec<(usize, Arc<XlaExecutionUnit>)>, // (batch, kernel)
-    weights: Vec<Tensor>,
-    in_dim: usize,
-    out_dim: usize,
-}
-
-impl XlaKernels {
-    pub fn new(runtime: Arc<XlaRuntime>, bundle: &ArtifactBundle) -> Result<XlaKernels> {
-        let cm = XlaComputeManager::new(runtime);
-        let in_dim = bundle.layer_dims[0];
-        let out_dim = *bundle.layer_dims.last().unwrap();
-        let mut units = Vec::new();
-        for (batch, _file) in &bundle.hlo_files {
-            let path = bundle.hlo_path(*batch).unwrap();
-            let mut dims = vec![vec![*batch, in_dim]];
-            dims.extend(bundle.weights.iter().map(|t| t.shape.clone()));
-            let unit = cm.load_kernel(
-                &format!("mlp_b{batch}"),
-                &path,
-                dims,
-                batch * out_dim,
-            )?;
-            units.push((*batch, unit));
-        }
-        if units.is_empty() {
-            return Err(HicrError::Artifact("no HLO kernels in bundle".into()));
-        }
-        Ok(XlaKernels {
-            cm,
-            mm: XlaMemoryManager::new(),
-            space: MemorySpace::new(
-                crate::backends::xlacomp::DEVICE_SPACE_BASE,
-                MemorySpaceKind::DeviceHbm,
-                crate::backends::xlacomp::topology::DEVICE_MEM_BYTES,
-                "pjrt:cpu:0",
-            )?,
-            weights: bundle.weights.clone(),
-            in_dim,
-            out_dim,
-            units,
-        })
-    }
-
-    fn slot_from_f32(&self, data: &[f32]) -> Result<LocalMemorySlot> {
-        let mut bytes = Vec::with_capacity(data.len() * 4);
-        for v in data {
-            bytes.extend_from_slice(&v.to_le_bytes());
-        }
-        self.mm.register(&self.space, bytes)
-    }
-}
-
-impl KernelProvider for XlaKernels {
-    fn forward(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
-        let (kernel_batch, unit) = self
-            .units
-            .iter()
-            .find(|(b, _)| *b >= batch)
-            .or_else(|| self.units.last())
-            .ok_or_else(|| HicrError::Artifact("no kernel for batch".into()))?;
-        if batch > *kernel_batch {
-            return Err(HicrError::Bounds(format!(
-                "batch {batch} exceeds largest exported kernel {kernel_batch}"
-            )));
-        }
-        // Pad input to the kernel's batch, move to device slots, execute
-        // on a stream, read back.
-        let mut padded = vec![0f32; kernel_batch * self.in_dim];
-        padded[..batch * self.in_dim].copy_from_slice(x);
-        let mut inputs = vec![self.slot_from_f32(&padded)?];
-        for t in &self.weights {
-            inputs.push(self.slot_from_f32(&t.data)?);
-        }
-        let output = self
-            .mm
-            .allocate(&self.space, kernel_batch * self.out_dim * 4)?;
-        let state = self
-            .cm
-            .create_invocation(Arc::clone(unit), inputs, output.clone())?;
-        let stream = self.cm.create_processing_unit(&ComputeResource {
-            id: crate::core::ids::ComputeResourceId(
-                crate::backends::xlacomp::DEVICE_SPACE_BASE,
-            ),
-            kind: "pjrt-stream".into(),
-            os_index: 0,
-            locality: 1000,
-        })?;
-        stream.start(Arc::clone(&state) as Arc<dyn crate::core::compute::ExecutionState>)?;
-        state.wait()?;
-        stream.terminate()?;
-        let mut bytes = vec![0u8; kernel_batch * self.out_dim * 4];
-        output.read_at(0, &mut bytes)?;
-        self.mm.free(output)?;
-        let all: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        Ok(all[..batch * self.out_dim].to_vec())
-    }
-
-    fn backend_name(&self) -> &'static str {
-        "xlacomp"
-    }
-
-    fn max_batch(&self) -> usize {
-        self.units.iter().map(|(b, _)| *b).max().unwrap_or(1)
     }
 }
 

@@ -11,8 +11,6 @@ use crate::core::error::{HicrError, Result};
 use crate::core::ids::{Key, Tag};
 use crate::core::memory::LocalMemorySlot;
 use crate::frontends::tasking::TaskSystem;
-#[cfg(test)]
-use crate::frontends::tasking::TaskSystemKind;
 
 /// Flops per updated grid point: 12 adds + 1 multiply.
 pub const FLOPS_PER_POINT: u64 = 13;
@@ -483,6 +481,17 @@ fn write_f64(slot: &LocalMemorySlot, data: &[f64]) -> Result<()> {
 mod tests {
     use super::*;
 
+    fn system_for(backend: &str) -> Arc<TaskSystem> {
+        let cm = crate::backends::registry()
+            .builder()
+            .compute(backend)
+            .build()
+            .unwrap()
+            .compute()
+            .unwrap();
+        TaskSystem::new(cm, 4, false)
+    }
+
     #[test]
     fn split_covers_range() {
         for (n, parts) in [(10, 3), (7, 7), (100, 8), (5, 1)] {
@@ -502,14 +511,14 @@ mod tests {
         let iters = 5;
         let mut seq = Grid::new(n);
         let want = run_sequential(&mut seq, iters);
-        for kind in [TaskSystemKind::Coro, TaskSystemKind::Nosv] {
-            let sys = TaskSystem::new(kind, 4, false);
+        for backend in ["coro", "nosv", "threads"] {
+            let sys = system_for(backend);
             let mut grid = Grid::new(n);
             let run = run_local(&sys, &mut grid, iters, (2, 2, 2)).unwrap();
             sys.shutdown().unwrap();
             assert!(
                 (run.checksum - want).abs() < 1e-9,
-                "{kind:?}: {} != {want}",
+                "{backend}: {} != {want}",
                 run.checksum
             );
             assert!(run.gflops > 0.0);
@@ -541,7 +550,7 @@ mod tests {
         let iters = 3;
         let cmm: Arc<dyn CommunicationManager> =
             Arc::new(ThreadsCommunicationManager::new());
-        let sys = TaskSystem::new(TaskSystemKind::Coro, 2, false);
+        let sys = system_for("coro");
         let run = run_distributed(
             &cmm,
             &sys,

@@ -203,6 +203,14 @@ impl ExecutionState for FiberExecutionState {
         *self.status.lock().unwrap()
     }
 
+    fn supports_suspension(&self) -> bool {
+        true
+    }
+
+    fn resume(&self) -> Result<ExecStatus> {
+        FiberExecutionState::resume(self)
+    }
+
     fn wait(&self) -> Result<()> {
         loop {
             match self.status() {
@@ -389,6 +397,10 @@ impl ComputeManager for CoroComputeManager {
         unit: Arc<dyn ExecutionUnit>,
     ) -> Result<Arc<dyn ExecutionState>> {
         Ok(self.create_fiber(unit)?)
+    }
+
+    fn supports_suspension(&self) -> bool {
+        true
     }
 
     fn backend_name(&self) -> &'static str {

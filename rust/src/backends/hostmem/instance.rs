@@ -1,0 +1,81 @@
+//! Single-process instance detection (Table 1: hostmem Instance ✓).
+//!
+//! The hostmem backend manages the *local* host only, so its instance
+//! manager reports exactly one instance — the current process, which is
+//! by definition root. Runtime instance creation is a distributed
+//! concern and is rejected (use `mpisim` for the launcher/ramp-up path).
+//!
+//! Before the plugin registry, the coverage matrix *claimed* this manager
+//! existed while nothing implemented it — the drift the derived matrix
+//! is designed to make impossible.
+
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::InstanceId;
+use crate::core::instance::{Instance, InstanceManager, InstanceTemplate};
+
+/// Instance manager for single-process (non-distributed) deployments.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct HostInstanceManager;
+
+impl HostInstanceManager {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl InstanceManager for HostInstanceManager {
+    fn current_instance(&self) -> Instance {
+        Instance {
+            id: InstanceId(0),
+            is_root: true,
+        }
+    }
+
+    fn instances(&self) -> Result<Vec<Instance>> {
+        Ok(vec![self.current_instance()])
+    }
+
+    fn create_instances(
+        &self,
+        _count: usize,
+        _template: &InstanceTemplate,
+    ) -> Result<Vec<Instance>> {
+        Err(HicrError::Unsupported(
+            "hostmem detects the local process only; runtime instance \
+             creation needs a distributed backend (mpisim)"
+                .into(),
+        ))
+    }
+
+    fn barrier(&self) -> Result<()> {
+        // One instance: a barrier is trivially complete.
+        Ok(())
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "hostmem"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::topology::TopologyRequirements;
+
+    #[test]
+    fn single_process_detection() {
+        let im = HostInstanceManager::new();
+        assert!(im.is_root());
+        assert_eq!(im.instances().unwrap().len(), 1);
+        assert_eq!(im.current_instance().id, InstanceId(0));
+        im.barrier().unwrap();
+    }
+
+    #[test]
+    fn runtime_creation_rejected() {
+        let im = HostInstanceManager::new();
+        let template = InstanceTemplate::new(TopologyRequirements::default());
+        let err = im.create_instances(1, &template).unwrap_err();
+        assert!(err.is_rejection());
+    }
+}

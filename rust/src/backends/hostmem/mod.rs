@@ -6,8 +6,10 @@
 //! with per-memory-space accounting. Table 1 row: Topology ✓, Memory ✓,
 //! Instance ✓ (single-process detection).
 
+pub mod instance;
 pub mod memory;
 pub mod topology;
 
+pub use instance::HostInstanceManager;
 pub use memory::HostMemoryManager;
 pub use topology::HostTopologyManager;

@@ -1,6 +1,15 @@
 //! Built-in backends (paper §4.2, Table 1): plugins translating subsets of
 //! the HiCR model into technology-specific operations.
 //!
+//! Every backend is described by a [`BackendPlugin`] in [`registry`]:
+//! a name, a capability bitset, and one factory per manager trait it
+//! provides. Applications and the CLI select backends *by name*
+//! (`--compute coro`) or *by capability* through
+//! [`crate::core::plugin::RuntimeBuilder`] — never by concrete type. The
+//! coverage matrix below is **derived** from the registry
+//! ([`coverage_matrix`]), so this table cannot drift from what the code
+//! actually provides:
+//!
 //! | Backend   | Topology | Instance | Communication | Memory | Compute |
 //! |-----------|----------|----------|---------------|--------|---------|
 //! | `mpisim`  |          | ✓        | ✓             | ✓      |         |
@@ -8,12 +17,20 @@
 //! | `hostmem` | ✓        | ✓        |               | ✓      |         |
 //! | `xlacomp` | ✓        |          | ✓             | ✓      | ✓       |
 //! | `threads` |          |          | ✓             |        | ✓       |
-//! | `coro`    |          |          |               |        | ✓       |
+//! | `coro`    |          |          |               |        | ✓ (suspendable) |
 //! | `nosv`    |          |          |               |        | ✓       |
 //!
 //! (`mpisim`/`lpfsim` stand in for the paper's MPI/LPF backends, `xlacomp`
 //! for ACL/OpenCL, `coro` for Boost.Context, `nosv` for nOS-V — see
 //! DESIGN.md §2 for the substitution rationale.)
+//!
+//! Factories draw substrate handles from the
+//! [`crate::core::plugin::PluginContext`]: the distributed backends need
+//! a [`crate::netsim::endpoint::Endpoint`] (mpisim's instance manager
+//! falls back to the `HICR_*` launcher environment), and `xlacomp`
+//! accepts an [`crate::runtime::XlaRuntime`] (creating a CPU-PJRT one on
+//! demand otherwise). Registering an out-of-tree backend is plain data:
+//! build a [`BackendPlugin`] and `register` it — see DESIGN.md §3.
 
 pub mod coro;
 pub mod dist;
@@ -24,76 +41,258 @@ pub mod nosv;
 pub mod threads;
 pub mod xlacomp;
 
-/// Backend-coverage matrix row (printed by `hicr backends`, asserted by
-/// the Table 1 integration test).
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct BackendCoverage {
-    pub name: &'static str,
-    pub topology: bool,
-    pub instance: bool,
-    pub communication: bool,
-    pub memory: bool,
-    pub compute: bool,
+use std::sync::Arc;
+
+use crate::core::communication::CommunicationManager;
+use crate::core::compute::ComputeManager;
+use crate::core::instance::InstanceManager;
+use crate::core::memory::MemoryManager;
+use crate::core::plugin::{BackendPlugin, PluginContext, Registry};
+use crate::core::topology::TopologyManager;
+use crate::netsim::endpoint::Endpoint;
+use crate::runtime::XlaRuntime;
+
+pub use crate::core::plugin::BackendCoverage;
+
+/// Clone the distributed endpoint out of the context (every distributed
+/// factory needs one; mpisim's instance factory additionally falls back
+/// to the launcher environment).
+fn endpoint_from(ctx: &PluginContext) -> crate::core::error::Result<Endpoint> {
+    Ok((*ctx.expect::<Endpoint>("distributed Endpoint")?).clone())
 }
 
-/// The built-in coverage matrix (our Table 1).
+/// The PJRT runtime from the context, or a CPU one created on demand and
+/// cached in `cache` so every xlacomp factory of one registry shares a
+/// single client (and thus one compiled-executable cache).
+fn xla_runtime_from(
+    ctx: &PluginContext,
+    cache: &std::sync::Mutex<Option<Arc<XlaRuntime>>>,
+) -> crate::core::error::Result<Arc<XlaRuntime>> {
+    if let Some(rt) = ctx.get::<XlaRuntime>() {
+        return Ok(rt);
+    }
+    let mut cached = cache.lock().unwrap();
+    if let Some(rt) = &*cached {
+        return Ok(Arc::clone(rt));
+    }
+    let rt = Arc::new(XlaRuntime::cpu()?);
+    *cached = Some(Arc::clone(&rt));
+    Ok(rt)
+}
+
+/// The registry of all seven built-in backends, in Table 1 order.
+///
+/// Construction is cheap (descriptors and closures only — no manager is
+/// instantiated until a `RuntimeBuilder` resolves it), so callers build a
+/// fresh registry wherever they need one and extend it freely with
+/// out-of-tree plugins.
+pub fn registry() -> Registry {
+    let mut r = Registry::new();
+
+    r.register(
+        BackendPlugin::new("mpisim")
+            .with_instance(|ctx| {
+                let im = match ctx.get::<Endpoint>() {
+                    Some(ep) => mpisim::MpiInstanceManager::new((*ep).clone()),
+                    None => mpisim::MpiInstanceManager::from_env()?,
+                };
+                Ok(Arc::new(im) as Arc<dyn InstanceManager>)
+            })
+            .with_communication(|ctx| {
+                let ep = endpoint_from(ctx)?;
+                Ok(Arc::new(mpisim::communication_manager(ep))
+                    as Arc<dyn CommunicationManager>)
+            })
+            .with_memory(|_| {
+                Ok(Arc::new(mpisim::memory_manager()) as Arc<dyn MemoryManager>)
+            }),
+    )
+    .expect("unique built-in name");
+
+    r.register(
+        BackendPlugin::new("lpfsim")
+            .with_communication(|ctx| {
+                let ep = endpoint_from(ctx)?;
+                Ok(Arc::new(lpfsim::communication_manager(ep))
+                    as Arc<dyn CommunicationManager>)
+            })
+            .with_memory(|_| {
+                Ok(Arc::new(lpfsim::memory_manager()) as Arc<dyn MemoryManager>)
+            }),
+    )
+    .expect("unique built-in name");
+
+    r.register(
+        BackendPlugin::new("hostmem")
+            .with_topology(|_| {
+                Ok(Arc::new(hostmem::HostTopologyManager::new())
+                    as Arc<dyn TopologyManager>)
+            })
+            .with_instance(|_| {
+                Ok(Arc::new(hostmem::HostInstanceManager::new())
+                    as Arc<dyn InstanceManager>)
+            })
+            .with_memory(|_| {
+                Ok(Arc::new(hostmem::HostMemoryManager::new()) as Arc<dyn MemoryManager>)
+            }),
+    )
+    .expect("unique built-in name");
+
+    let xla_cache: Arc<std::sync::Mutex<Option<Arc<XlaRuntime>>>> =
+        Arc::new(std::sync::Mutex::new(None));
+    let (topo_cache, compute_cache) = (Arc::clone(&xla_cache), xla_cache);
+    r.register(
+        BackendPlugin::new("xlacomp")
+            .with_topology(move |ctx| {
+                let rt = xla_runtime_from(ctx, &topo_cache)?;
+                Ok(Arc::new(xlacomp::XlaTopologyManager::new(rt))
+                    as Arc<dyn TopologyManager>)
+            })
+            .with_communication(|_| {
+                Ok(Arc::new(xlacomp::memory::XlaCommunicationManager::new())
+                    as Arc<dyn CommunicationManager>)
+            })
+            .with_memory(|_| {
+                Ok(Arc::new(xlacomp::XlaMemoryManager::new()) as Arc<dyn MemoryManager>)
+            })
+            .with_compute(move |ctx| {
+                let rt = xla_runtime_from(ctx, &compute_cache)?;
+                Ok(Arc::new(xlacomp::XlaComputeManager::new(rt))
+                    as Arc<dyn ComputeManager>)
+            }),
+    )
+    .expect("unique built-in name");
+
+    r.register(
+        BackendPlugin::new("threads")
+            .with_communication(|_| {
+                Ok(Arc::new(threads::ThreadsCommunicationManager::new())
+                    as Arc<dyn CommunicationManager>)
+            })
+            .with_compute(|_| {
+                Ok(Arc::new(threads::ThreadsComputeManager::new())
+                    as Arc<dyn ComputeManager>)
+            }),
+    )
+    .expect("unique built-in name");
+
+    r.register(BackendPlugin::new("coro").with_suspendable_compute(|_| {
+        Ok(Arc::new(coro::CoroComputeManager::new()) as Arc<dyn ComputeManager>)
+    }))
+    .expect("unique built-in name");
+
+    r.register(BackendPlugin::new("nosv").with_compute(|_| {
+        Ok(Arc::new(nosv::NosvComputeManager::new()) as Arc<dyn ComputeManager>)
+    }))
+    .expect("unique built-in name");
+
+    r
+}
+
+/// The coverage matrix (our Table 1) — a derived view over [`registry`],
+/// not a hand-maintained literal: a backend gains a ✓ exactly when its
+/// plugin attaches the corresponding manager factory.
 pub fn coverage_matrix() -> Vec<BackendCoverage> {
-    vec![
-        BackendCoverage {
-            name: "mpisim",
-            topology: false,
-            instance: true,
-            communication: true,
-            memory: true,
-            compute: false,
-        },
-        BackendCoverage {
-            name: "lpfsim",
-            topology: false,
-            instance: false,
-            communication: true,
-            memory: true,
-            compute: false,
-        },
-        BackendCoverage {
-            name: "hostmem",
-            topology: true,
-            instance: true,
-            communication: false,
-            memory: true,
-            compute: false,
-        },
-        BackendCoverage {
-            name: "xlacomp",
-            topology: true,
-            instance: false,
-            communication: true,
-            memory: true,
-            compute: true,
-        },
-        BackendCoverage {
-            name: "threads",
-            topology: false,
-            instance: false,
-            communication: true,
-            memory: false,
-            compute: true,
-        },
-        BackendCoverage {
-            name: "coro",
-            topology: false,
-            instance: false,
-            communication: false,
-            memory: false,
-            compute: true,
-        },
-        BackendCoverage {
-            name: "nosv",
-            topology: false,
-            instance: false,
-            communication: false,
-            memory: false,
-            compute: true,
-        },
-    ]
+    registry().coverage()
+}
+
+/// Query and merge the topology of every topology-capable plugin in the
+/// registry (the paper's combined-manager pattern, Fig. 4/5). Plugins
+/// whose manager cannot be constructed in this environment (e.g.
+/// `xlacomp` without a PJRT runtime) are reported on stderr and skipped;
+/// fails only when no plugin yields a topology at all.
+pub fn merged_topology(
+    registry: &Registry,
+    ctx: &PluginContext,
+) -> crate::core::error::Result<crate::core::topology::Topology> {
+    let mut merged: Option<crate::core::topology::Topology> = None;
+    for plugin in registry.plugins() {
+        if !plugin.provides(crate::core::plugin::Capabilities::TOPOLOGY) {
+            continue;
+        }
+        match plugin
+            .topology_manager(ctx)
+            .and_then(|tm| tm.query_topology())
+        {
+            Ok(t) => match &mut merged {
+                None => merged = Some(t),
+                Some(m) => {
+                    m.merge(t)?;
+                }
+            },
+            Err(e) => eprintln!("({} unavailable: {e})", plugin.name()),
+        }
+    }
+    merged.ok_or_else(|| {
+        crate::core::error::HicrError::Unsupported(
+            "no topology-capable backend available".into(),
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::plugin::Capabilities;
+
+    #[test]
+    fn builtin_registry_has_seven_in_table1_order() {
+        let names = registry().names();
+        assert_eq!(
+            names,
+            vec!["mpisim", "lpfsim", "hostmem", "xlacomp", "threads", "coro", "nosv"]
+        );
+    }
+
+    #[test]
+    fn compute_backends_resolve_by_name() {
+        let r = registry();
+        for name in ["threads", "coro", "nosv"] {
+            let set = r.builder().compute(name).build().unwrap();
+            assert_eq!(set.compute().unwrap().backend_name(), name);
+        }
+    }
+
+    #[test]
+    fn only_coro_offers_suspendable_compute() {
+        let r = registry();
+        let p = r
+            .find(Capabilities::COMPUTE | Capabilities::COMPUTE_SUSPEND)
+            .unwrap();
+        assert_eq!(p.name(), "coro");
+    }
+
+    #[test]
+    fn distributed_factories_require_endpoint() {
+        let r = registry();
+        // No Endpoint in context → descriptive factory error.
+        let err = r.builder().communication("lpfsim").build().unwrap_err();
+        assert!(err.to_string().contains("PluginContext"), "{err}");
+    }
+
+    #[test]
+    fn instance_requirement_falls_back_to_hostmem() {
+        // mpisim is the first INSTANCE-capable plugin but cannot
+        // construct without an Endpoint or the launcher environment;
+        // capability resolution falls through to hostmem.
+        let r = registry();
+        let set = r.builder().require(Capabilities::INSTANCE).build().unwrap();
+        assert_eq!(set.instance().unwrap().backend_name(), "hostmem");
+    }
+
+    #[test]
+    fn capability_resolution_prefers_table1_order() {
+        let r = registry();
+        // First memory provider in Table 1 order is mpisim.
+        let set = r.builder().require(Capabilities::MEMORY).build().unwrap();
+        assert_eq!(set.memory().unwrap().backend_name(), "mpisim");
+        // Memory + topology → hostmem is the first (and only) match.
+        let set = r
+            .builder()
+            .require(Capabilities::MEMORY | Capabilities::TOPOLOGY)
+            .build()
+            .unwrap();
+        assert_eq!(set.memory().unwrap().backend_name(), "hostmem");
+        assert_eq!(set.topology().unwrap().backend_name(), "hostmem");
+    }
 }

@@ -23,12 +23,11 @@ struct GlobalScheduler {
     threads_spawned: AtomicUsize,
 }
 
-static SCHEDULER: once_cell::sync::Lazy<GlobalScheduler> =
-    once_cell::sync::Lazy::new(|| GlobalScheduler {
-        admission: Mutex::new(()),
-        tasks_started: AtomicUsize::new(0),
-        threads_spawned: AtomicUsize::new(0),
-    });
+static SCHEDULER: GlobalScheduler = GlobalScheduler {
+    admission: Mutex::new(()),
+    tasks_started: AtomicUsize::new(0),
+    threads_spawned: AtomicUsize::new(0),
+};
 
 /// A processing unit in the nosv model: a *slot* in the system-wide pool.
 /// Starting a state spawns a dedicated kernel thread for it (thread-per-
@@ -260,12 +259,4 @@ mod tests {
         assert_eq!(st.status(), ExecStatus::Finished);
         pu.terminate().unwrap();
     }
-}
-
-/// Admit one task through the system-wide scheduler (used by the Tasking
-/// frontend's nosv engine, which spawns its own task threads).
-pub fn admit_task() {
-    let _admit = SCHEDULER.admission.lock().unwrap();
-    SCHEDULER.tasks_started.fetch_add(1, Ordering::Relaxed);
-    SCHEDULER.threads_spawned.fetch_add(1, Ordering::Relaxed);
 }

@@ -14,18 +14,20 @@ use crate::core::compute::{
 use crate::core::error::{HicrError, Result};
 use crate::core::topology::ComputeResource;
 
-/// Best-effort pin of the calling thread to one CPU (Linux only). With
-/// fewer physical cores than requested (this sandbox has one) failures are
-/// silently ignored — placement is a performance hint, not a semantic.
+/// Best-effort pin of the calling thread to one CPU (Linux only, behind
+/// the `affinity` feature which pulls in `libc` — the default build has
+/// zero external dependencies, DESIGN.md §2). With fewer physical cores
+/// than requested (this sandbox has one) failures are silently ignored —
+/// placement is a performance hint, not a semantic.
 pub fn pin_to_core(core: u32) {
-    #[cfg(target_os = "linux")]
+    #[cfg(all(feature = "affinity", target_os = "linux"))]
     unsafe {
         let mut set: libc::cpu_set_t = std::mem::zeroed();
         libc::CPU_ZERO(&mut set);
         libc::CPU_SET(core as usize, &mut set);
         libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
     }
-    #[cfg(not(target_os = "linux"))]
+    #[cfg(not(all(feature = "affinity", target_os = "linux")))]
     let _ = core;
 }
 

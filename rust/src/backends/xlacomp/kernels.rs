@@ -1,0 +1,134 @@
+//! The xlacomp implementation of the [`KernelProvider`] contract (paper
+//! Table 2, ACL column): AOT HLO kernels executed through the backend's
+//! compute manager with device memory slots.
+//!
+//! This lives with the plugin — not in `apps/` — so the application layer
+//! stays free of concrete backend types: apps receive a
+//! `Box<dyn KernelProvider>`/`&dyn KernelProvider` and never name
+//! `xlacomp`. The trait itself lives in `frontends::kernels`, keeping
+//! the backend free of application imports in turn.
+
+use std::sync::Arc;
+
+use crate::frontends::kernels::KernelProvider;
+use crate::backends::xlacomp::{XlaComputeManager, XlaExecutionUnit, XlaMemoryManager};
+use crate::core::compute::{ComputeManager, ExecutionState};
+use crate::core::error::{HicrError, Result};
+use crate::core::memory::{LocalMemorySlot, MemoryManager};
+use crate::core::topology::{ComputeResource, MemorySpace, MemorySpaceKind};
+use crate::runtime::artifact::{ArtifactBundle, Tensor};
+use crate::runtime::XlaRuntime;
+
+/// AOT HLO kernels executed through the xlacomp backend with device slots.
+pub struct XlaKernels {
+    cm: XlaComputeManager,
+    mm: XlaMemoryManager,
+    space: MemorySpace,
+    units: Vec<(usize, Arc<XlaExecutionUnit>)>, // (batch, kernel)
+    weights: Vec<Tensor>,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl XlaKernels {
+    pub fn new(runtime: Arc<XlaRuntime>, bundle: &ArtifactBundle) -> Result<XlaKernels> {
+        let cm = XlaComputeManager::new(runtime);
+        let in_dim = bundle.layer_dims[0];
+        let out_dim = *bundle.layer_dims.last().unwrap();
+        let mut units = Vec::new();
+        for (batch, _file) in &bundle.hlo_files {
+            let path = bundle.hlo_path(*batch).unwrap();
+            let mut dims = vec![vec![*batch, in_dim]];
+            dims.extend(bundle.weights.iter().map(|t| t.shape.clone()));
+            let unit = cm.load_kernel(
+                &format!("mlp_b{batch}"),
+                &path,
+                dims,
+                batch * out_dim,
+            )?;
+            units.push((*batch, unit));
+        }
+        if units.is_empty() {
+            return Err(HicrError::Artifact("no HLO kernels in bundle".into()));
+        }
+        Ok(XlaKernels {
+            cm,
+            mm: XlaMemoryManager::new(),
+            space: MemorySpace::new(
+                crate::backends::xlacomp::DEVICE_SPACE_BASE,
+                MemorySpaceKind::DeviceHbm,
+                crate::backends::xlacomp::topology::DEVICE_MEM_BYTES,
+                "pjrt:cpu:0",
+            )?,
+            weights: bundle.weights.clone(),
+            in_dim,
+            out_dim,
+            units,
+        })
+    }
+
+    fn slot_from_f32(&self, data: &[f32]) -> Result<LocalMemorySlot> {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.mm.register(&self.space, bytes)
+    }
+}
+
+impl KernelProvider for XlaKernels {
+    fn forward(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let (kernel_batch, unit) = self
+            .units
+            .iter()
+            .find(|(b, _)| *b >= batch)
+            .or_else(|| self.units.last())
+            .ok_or_else(|| HicrError::Artifact("no kernel for batch".into()))?;
+        if batch > *kernel_batch {
+            return Err(HicrError::Bounds(format!(
+                "batch {batch} exceeds largest exported kernel {kernel_batch}"
+            )));
+        }
+        // Pad input to the kernel's batch, move to device slots, execute
+        // on a stream, read back.
+        let mut padded = vec![0f32; kernel_batch * self.in_dim];
+        padded[..batch * self.in_dim].copy_from_slice(x);
+        let mut inputs = vec![self.slot_from_f32(&padded)?];
+        for t in &self.weights {
+            inputs.push(self.slot_from_f32(&t.data)?);
+        }
+        let output = self
+            .mm
+            .allocate(&self.space, kernel_batch * self.out_dim * 4)?;
+        let state = self
+            .cm
+            .create_invocation(Arc::clone(unit), inputs, output.clone())?;
+        let stream = self.cm.create_processing_unit(&ComputeResource {
+            id: crate::core::ids::ComputeResourceId(
+                crate::backends::xlacomp::DEVICE_SPACE_BASE,
+            ),
+            kind: "pjrt-stream".into(),
+            os_index: 0,
+            locality: 1000,
+        })?;
+        stream.start(Arc::clone(&state) as Arc<dyn ExecutionState>)?;
+        state.wait()?;
+        stream.terminate()?;
+        let mut bytes = vec![0u8; kernel_batch * self.out_dim * 4];
+        output.read_at(0, &mut bytes)?;
+        self.mm.free(output)?;
+        let all: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(all[..batch * self.out_dim].to_vec())
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "xlacomp"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.units.iter().map(|(b, _)| *b).max().unwrap_or(1)
+    }
+}

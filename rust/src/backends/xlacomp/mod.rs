@@ -11,10 +11,12 @@
 //! (host-backed in the CPU sandbox; see DESIGN.md §Hardware-Adaptation).
 
 pub mod compute;
+pub mod kernels;
 pub mod memory;
 pub mod topology;
 
 pub use compute::{XlaComputeManager, XlaExecutionUnit, XlaInvocationState};
+pub use kernels::XlaKernels;
 pub use memory::XlaMemoryManager;
 pub use topology::XlaTopologyManager;
 

@@ -125,6 +125,25 @@ pub trait ExecutionState: Send + Sync {
         matches!(self.status(), ExecStatus::Finished | ExecStatus::Failed)
     }
 
+    /// True when this state can be cooperatively suspended and driven by
+    /// [`ExecutionState::resume`] (fiber-class backends). Schedulers use
+    /// this — not a concrete type — to decide how to drive the state.
+    fn supports_suspension(&self) -> bool {
+        false
+    }
+
+    /// Resume (or first-start) a suspendable state on the calling thread;
+    /// blocks until it suspends or finishes and returns the resulting
+    /// status. Run-to-completion backends reject this: their states are
+    /// driven by processing units instead.
+    fn resume(&self) -> Result<ExecStatus> {
+        Err(crate::core::error::HicrError::Unsupported(
+            "this execution state cannot suspend/resume (run-to-completion \
+             backend)"
+                .into(),
+        ))
+    }
+
     fn as_any(&self) -> &dyn Any;
 
     /// Owned downcast hook so processing units can take `Arc`s of their
@@ -165,6 +184,14 @@ pub trait ComputeManager: Send + Sync {
         &self,
         unit: Arc<dyn ExecutionUnit>,
     ) -> Result<Arc<dyn ExecutionState>>;
+
+    /// True when this manager's execution states support cooperative
+    /// suspension ([`ExecutionState::resume`]). Capability-negotiated by
+    /// the Tasking frontend: suspension-capable backends get the parking
+    /// scheduler, run-to-completion backends the blocking one.
+    fn supports_suspension(&self) -> bool {
+        false
+    }
 
     /// Human-readable backend name.
     fn backend_name(&self) -> &'static str;

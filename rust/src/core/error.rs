@@ -1,6 +1,10 @@
 //! Error taxonomy for every HiCR operation.
+//!
+//! Implemented by hand (no `thiserror`): the crate keeps zero mandatory
+//! external dependencies so it builds in fully offline sandboxes
+//! (DESIGN.md §2).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, HicrError>;
@@ -12,53 +16,78 @@ pub type Result<T> = std::result::Result<T, HicrError>;
 /// communication manager does not bridge, or a Global-to-Global transfer.
 /// Those rejections are first-class variants here so callers can
 /// distinguish "illegal per the model" from "failed in the substrate".
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum HicrError {
     /// The operation is illegal under the HiCR model (e.g. G2G memcpy).
-    #[error("operation rejected by the HiCR model: {0}")]
     Rejected(String),
 
     /// The manager does not support the requested memory space / resource.
-    #[error("unsupported by this backend: {0}")]
     Unsupported(String),
 
     /// Out-of-bounds slot access or size mismatch.
-    #[error("bounds error: {0}")]
     Bounds(String),
 
     /// Allocation failed (memory space exhausted or invalid size).
-    #[error("allocation failure: {0}")]
     Allocation(String),
 
     /// A stateful component was used in an invalid lifecycle state.
-    #[error("invalid state: {0}")]
     InvalidState(String),
 
     /// Collective operation mismatch (tag/key/cardinality).
-    #[error("collective mismatch: {0}")]
     Collective(String),
 
     /// Underlying transport / wire failure.
-    #[error("transport error: {0}")]
     Transport(String),
 
     /// Instance management failure (spawn, detection, template).
-    #[error("instance error: {0}")]
     Instance(String),
 
     /// XLA / PJRT runtime failure.
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// Artifact loading / parsing failure.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// I/O error from the OS.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for HicrError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HicrError::Rejected(m) => {
+                write!(f, "operation rejected by the HiCR model: {m}")
+            }
+            HicrError::Unsupported(m) => write!(f, "unsupported by this backend: {m}"),
+            HicrError::Bounds(m) => write!(f, "bounds error: {m}"),
+            HicrError::Allocation(m) => write!(f, "allocation failure: {m}"),
+            HicrError::InvalidState(m) => write!(f, "invalid state: {m}"),
+            HicrError::Collective(m) => write!(f, "collective mismatch: {m}"),
+            HicrError::Transport(m) => write!(f, "transport error: {m}"),
+            HicrError::Instance(m) => write!(f, "instance error: {m}"),
+            HicrError::Xla(m) => write!(f, "xla runtime error: {m}"),
+            HicrError::Artifact(m) => write!(f, "artifact error: {m}"),
+            HicrError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HicrError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            HicrError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for HicrError {
+    fn from(e: std::io::Error) -> Self {
+        HicrError::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for HicrError {
     fn from(e: xla::Error) -> Self {
         HicrError::Xla(e.to_string())

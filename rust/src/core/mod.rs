@@ -14,4 +14,5 @@ pub mod error;
 pub mod ids;
 pub mod instance;
 pub mod memory;
+pub mod plugin;
 pub mod topology;

@@ -1,0 +1,875 @@
+//! The plugin subsystem (paper §4.2): backends as *named, discoverable
+//! plugins* instead of concrete types.
+//!
+//! HiCR's central claim is that a minimal set of abstract manager
+//! operations, realized by a plugin-based approach, lets applications
+//! operate equally on a diversity of platforms. This module makes that
+//! selection a first-class runtime decision:
+//!
+//! - [`Capabilities`] — a bitset mirroring the Table 1 columns (plus
+//!   extended capability flags such as [`Capabilities::COMPUTE_SUSPEND`]).
+//! - [`BackendPlugin`] — a descriptor: name + capabilities + one factory
+//!   closure per manager trait the backend provides.
+//! - [`Registry`] — an ordered collection of plugins, queried by name or
+//!   by capability. The built-in seven live in `backends::registry()`;
+//!   out-of-tree backends register with [`Registry::register`].
+//! - [`RuntimeBuilder`] — resolves a full manager set from backend
+//!   *names* (`--compute coro --comm mpisim`) or from capability
+//!   requirements, erasing everything to `Arc<dyn …Manager>` trait
+//!   objects so no caller ever names a concrete backend type.
+//! - [`PluginContext`] — a type-erased bag of substrate handles
+//!   (endpoints, device runtimes) factories may need, so the registry
+//!   itself stays independent of any backend's bootstrap details.
+//!
+//! The layering is deliberately inverted relative to the rest of the
+//! crate: `core` defines the descriptor/registry machinery with no
+//! knowledge of any backend; `backends` registers its plugins into it;
+//! apps, frontends and the CLI consume managers exclusively through the
+//! registry.
+
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::Arc;
+
+use crate::core::communication::CommunicationManager;
+use crate::core::compute::ComputeManager;
+use crate::core::error::{HicrError, Result};
+use crate::core::instance::InstanceManager;
+use crate::core::memory::MemoryManager;
+use crate::core::topology::TopologyManager;
+
+// ---------------------------------------------------------------------
+// Capabilities
+// ---------------------------------------------------------------------
+
+/// What a backend plugin provides: one bit per Table 1 column, plus
+/// extended flags that refine a column (negotiated by the builder, never
+/// shown in the coverage matrix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Capabilities(u16);
+
+impl Capabilities {
+    pub const NONE: Capabilities = Capabilities(0);
+    /// Hardware topology discovery (`TopologyManager`).
+    pub const TOPOLOGY: Capabilities = Capabilities(1 << 0);
+    /// Instance detection/creation (`InstanceManager`).
+    pub const INSTANCE: Capabilities = Capabilities(1 << 1);
+    /// Data motion between memory slots (`CommunicationManager`).
+    pub const COMMUNICATION: Capabilities = Capabilities(1 << 2);
+    /// Memory-slot allocation/registration (`MemoryManager`).
+    pub const MEMORY: Capabilities = Capabilities(1 << 3);
+    /// Kernel execution (`ComputeManager`).
+    pub const COMPUTE: Capabilities = Capabilities(1 << 4);
+    /// Extended: the compute manager's execution states can cooperatively
+    /// suspend and resume (fiber-class backends). Implies COMPUTE.
+    pub const COMPUTE_SUSPEND: Capabilities = Capabilities(1 << 5);
+
+    /// The five Table 1 columns (no extended flags).
+    pub const TABLE1: Capabilities = Capabilities(0b1_1111);
+
+    pub fn contains(self, other: Capabilities) -> bool {
+        self.0 & other.0 == other.0
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// The subset of `self` that is a Table 1 column.
+    pub fn table1(self) -> Capabilities {
+        Capabilities(self.0 & Capabilities::TABLE1.0)
+    }
+}
+
+impl std::ops::BitOr for Capabilities {
+    type Output = Capabilities;
+    fn bitor(self, rhs: Capabilities) -> Capabilities {
+        Capabilities(self.0 | rhs.0)
+    }
+}
+
+impl std::ops::BitOrAssign for Capabilities {
+    fn bitor_assign(&mut self, rhs: Capabilities) {
+        self.0 |= rhs.0;
+    }
+}
+
+impl fmt::Display for Capabilities {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (bit, label) in [
+            (Capabilities::TOPOLOGY, "topology"),
+            (Capabilities::INSTANCE, "instance"),
+            (Capabilities::COMMUNICATION, "communication"),
+            (Capabilities::MEMORY, "memory"),
+            (Capabilities::COMPUTE, "compute"),
+            (Capabilities::COMPUTE_SUSPEND, "compute-suspend"),
+        ] {
+            if self.contains(bit) {
+                if !first {
+                    write!(f, "+")?;
+                }
+                write!(f, "{label}")?;
+                first = false;
+            }
+        }
+        if first {
+            write!(f, "none")?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Plugin context
+// ---------------------------------------------------------------------
+
+/// Type-erased bag of substrate handles a plugin factory may need (a
+/// distributed endpoint, a device runtime, ...). Keyed by type: at most
+/// one value per type. Keeps the registry machinery independent of every
+/// backend's bootstrap details — an out-of-tree plugin can stash whatever
+/// handle type it needs without touching `core`.
+#[derive(Default, Clone)]
+pub struct PluginContext {
+    slots: HashMap<TypeId, Arc<dyn Any + Send + Sync>>,
+}
+
+impl PluginContext {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert (or replace) the context value of type `T`.
+    pub fn insert<T: Send + Sync + 'static>(&mut self, value: T) {
+        self.slots.insert(TypeId::of::<T>(), Arc::new(value));
+    }
+
+    /// Builder-style [`PluginContext::insert`].
+    pub fn with<T: Send + Sync + 'static>(mut self, value: T) -> Self {
+        self.insert(value);
+        self
+    }
+
+    pub fn get<T: Send + Sync + 'static>(&self) -> Option<Arc<T>> {
+        self.slots
+            .get(&TypeId::of::<T>())
+            .cloned()
+            .and_then(|any| any.downcast::<T>().ok())
+    }
+
+    /// Like [`PluginContext::get`] but with a backend-quality error
+    /// message for factories whose substrate handle is missing.
+    pub fn expect<T: Send + Sync + 'static>(&self, what: &str) -> Result<Arc<T>> {
+        self.get::<T>().ok_or_else(|| {
+            HicrError::Unsupported(format!(
+                "this backend needs a {what} in the PluginContext \
+                 (RuntimeBuilder::with)"
+            ))
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Plugin descriptor
+// ---------------------------------------------------------------------
+
+type TopologyFactory =
+    Arc<dyn Fn(&PluginContext) -> Result<Arc<dyn TopologyManager>> + Send + Sync>;
+type InstanceFactory =
+    Arc<dyn Fn(&PluginContext) -> Result<Arc<dyn InstanceManager>> + Send + Sync>;
+type CommunicationFactory =
+    Arc<dyn Fn(&PluginContext) -> Result<Arc<dyn CommunicationManager>> + Send + Sync>;
+type MemoryFactory =
+    Arc<dyn Fn(&PluginContext) -> Result<Arc<dyn MemoryManager>> + Send + Sync>;
+type ComputeFactory =
+    Arc<dyn Fn(&PluginContext) -> Result<Arc<dyn ComputeManager>> + Send + Sync>;
+
+/// Descriptor of one backend: its name, its capability set, and a factory
+/// closure for each of the five manager traits it provides. Capabilities
+/// are derived from which factories are attached (plus extended flags),
+/// so the coverage matrix can never drift from what the plugin actually
+/// constructs.
+#[derive(Clone)]
+pub struct BackendPlugin {
+    name: &'static str,
+    capabilities: Capabilities,
+    topology: Option<TopologyFactory>,
+    instance: Option<InstanceFactory>,
+    communication: Option<CommunicationFactory>,
+    memory: Option<MemoryFactory>,
+    compute: Option<ComputeFactory>,
+}
+
+impl BackendPlugin {
+    pub fn new(name: &'static str) -> Self {
+        Self {
+            name,
+            capabilities: Capabilities::NONE,
+            topology: None,
+            instance: None,
+            communication: None,
+            memory: None,
+            compute: None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn capabilities(&self) -> Capabilities {
+        self.capabilities
+    }
+
+    pub fn provides(&self, caps: Capabilities) -> bool {
+        self.capabilities.contains(caps)
+    }
+
+    pub fn with_topology(
+        mut self,
+        f: impl Fn(&PluginContext) -> Result<Arc<dyn TopologyManager>> + Send + Sync + 'static,
+    ) -> Self {
+        self.capabilities |= Capabilities::TOPOLOGY;
+        self.topology = Some(Arc::new(f));
+        self
+    }
+
+    pub fn with_instance(
+        mut self,
+        f: impl Fn(&PluginContext) -> Result<Arc<dyn InstanceManager>> + Send + Sync + 'static,
+    ) -> Self {
+        self.capabilities |= Capabilities::INSTANCE;
+        self.instance = Some(Arc::new(f));
+        self
+    }
+
+    pub fn with_communication(
+        mut self,
+        f: impl Fn(&PluginContext) -> Result<Arc<dyn CommunicationManager>>
+            + Send
+            + Sync
+            + 'static,
+    ) -> Self {
+        self.capabilities |= Capabilities::COMMUNICATION;
+        self.communication = Some(Arc::new(f));
+        self
+    }
+
+    pub fn with_memory(
+        mut self,
+        f: impl Fn(&PluginContext) -> Result<Arc<dyn MemoryManager>> + Send + Sync + 'static,
+    ) -> Self {
+        self.capabilities |= Capabilities::MEMORY;
+        self.memory = Some(Arc::new(f));
+        self
+    }
+
+    pub fn with_compute(
+        mut self,
+        f: impl Fn(&PluginContext) -> Result<Arc<dyn ComputeManager>> + Send + Sync + 'static,
+    ) -> Self {
+        self.capabilities |= Capabilities::COMPUTE;
+        self.compute = Some(Arc::new(f));
+        self
+    }
+
+    /// Like [`BackendPlugin::with_compute`] for backends whose execution
+    /// states support cooperative suspension (fiber-class).
+    pub fn with_suspendable_compute(
+        mut self,
+        f: impl Fn(&PluginContext) -> Result<Arc<dyn ComputeManager>> + Send + Sync + 'static,
+    ) -> Self {
+        self.capabilities |= Capabilities::COMPUTE | Capabilities::COMPUTE_SUSPEND;
+        self.compute = Some(Arc::new(f));
+        self
+    }
+
+    fn missing(&self, role: &str) -> HicrError {
+        HicrError::Unsupported(format!(
+            "backend '{}' provides no {role} manager (capabilities: {})",
+            self.name, self.capabilities
+        ))
+    }
+
+    pub fn topology_manager(&self, ctx: &PluginContext) -> Result<Arc<dyn TopologyManager>> {
+        match &self.topology {
+            Some(f) => f(ctx),
+            None => Err(self.missing("topology")),
+        }
+    }
+
+    pub fn instance_manager(&self, ctx: &PluginContext) -> Result<Arc<dyn InstanceManager>> {
+        match &self.instance {
+            Some(f) => f(ctx),
+            None => Err(self.missing("instance")),
+        }
+    }
+
+    pub fn communication_manager(
+        &self,
+        ctx: &PluginContext,
+    ) -> Result<Arc<dyn CommunicationManager>> {
+        match &self.communication {
+            Some(f) => f(ctx),
+            None => Err(self.missing("communication")),
+        }
+    }
+
+    pub fn memory_manager(&self, ctx: &PluginContext) -> Result<Arc<dyn MemoryManager>> {
+        match &self.memory {
+            Some(f) => f(ctx),
+            None => Err(self.missing("memory")),
+        }
+    }
+
+    pub fn compute_manager(&self, ctx: &PluginContext) -> Result<Arc<dyn ComputeManager>> {
+        match &self.compute {
+            Some(f) => f(ctx),
+            None => Err(self.missing("compute")),
+        }
+    }
+}
+
+impl fmt::Debug for BackendPlugin {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("BackendPlugin")
+            .field("name", &self.name)
+            .field("capabilities", &format_args!("{}", self.capabilities))
+            .finish()
+    }
+}
+
+/// One row of the backend-coverage matrix (our Table 1) — a projection of
+/// a plugin's capabilities onto the five manager columns. Printed by
+/// `hicr backends`, asserted by the Table 1 integration test.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackendCoverage {
+    pub name: &'static str,
+    pub topology: bool,
+    pub instance: bool,
+    pub communication: bool,
+    pub memory: bool,
+    pub compute: bool,
+}
+
+impl BackendCoverage {
+    fn of(plugin: &BackendPlugin) -> BackendCoverage {
+        let caps = plugin.capabilities();
+        BackendCoverage {
+            name: plugin.name(),
+            topology: caps.contains(Capabilities::TOPOLOGY),
+            instance: caps.contains(Capabilities::INSTANCE),
+            communication: caps.contains(Capabilities::COMMUNICATION),
+            memory: caps.contains(Capabilities::MEMORY),
+            compute: caps.contains(Capabilities::COMPUTE),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Ordered collection of backend plugins. Order is significant: it is the
+/// Table 1 presentation order and the capability-resolution preference
+/// order.
+#[derive(Default, Clone)]
+pub struct Registry {
+    plugins: Vec<BackendPlugin>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a plugin. Names are unique; re-registering an existing
+    /// name is rejected (shadowing a backend silently would make the
+    /// coverage matrix lie).
+    pub fn register(&mut self, plugin: BackendPlugin) -> Result<()> {
+        if self.get(plugin.name()).is_some() {
+            return Err(HicrError::Rejected(format!(
+                "backend '{}' is already registered",
+                plugin.name()
+            )));
+        }
+        self.plugins.push(plugin);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BackendPlugin> {
+        self.plugins.iter().find(|p| p.name() == name)
+    }
+
+    pub fn plugins(&self) -> &[BackendPlugin] {
+        &self.plugins
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.plugins.iter().map(|p| p.name()).collect()
+    }
+
+    /// First registered plugin providing every capability in `caps`.
+    pub fn find(&self, caps: Capabilities) -> Option<&BackendPlugin> {
+        self.plugins.iter().find(|p| p.provides(caps))
+    }
+
+    /// The coverage matrix (Table 1), derived from the registered
+    /// plugins — one row per plugin in registration order.
+    pub fn coverage(&self) -> Vec<BackendCoverage> {
+        self.plugins.iter().map(BackendCoverage::of).collect()
+    }
+
+    /// Start resolving a manager set against this registry.
+    pub fn builder(&self) -> RuntimeBuilder<'_> {
+        RuntimeBuilder::new(self)
+    }
+}
+
+// ---------------------------------------------------------------------
+// RuntimeBuilder
+// ---------------------------------------------------------------------
+
+/// How one manager role gets resolved.
+#[derive(Clone)]
+enum RoleSelection {
+    /// Role not requested; the manager set will not contain it.
+    Skip,
+    /// Resolve by backend name (`--compute coro` style).
+    Named(String),
+    /// Resolve by capability: first registered plugin providing all the
+    /// listed capabilities whose factory succeeds.
+    Require(Capabilities),
+}
+
+/// Resolves a full manager set from backend names or capability
+/// requirements, erasing every selection to `Arc<dyn …Manager>` trait
+/// objects (paper Fig. 4, made dynamic).
+///
+/// ```ignore
+/// let set = registry
+///     .builder()
+///     .compute("coro")
+///     .communication("mpisim")
+///     .with(endpoint)               // substrate handle for mpisim
+///     .build()?;
+/// let cm: Arc<dyn ComputeManager> = set.compute()?;
+/// ```
+pub struct RuntimeBuilder<'r> {
+    registry: &'r Registry,
+    ctx: PluginContext,
+    topology: RoleSelection,
+    instance: RoleSelection,
+    communication: RoleSelection,
+    memory: RoleSelection,
+    compute: RoleSelection,
+}
+
+impl<'r> RuntimeBuilder<'r> {
+    pub fn new(registry: &'r Registry) -> Self {
+        Self {
+            registry,
+            ctx: PluginContext::new(),
+            topology: RoleSelection::Skip,
+            instance: RoleSelection::Skip,
+            communication: RoleSelection::Skip,
+            memory: RoleSelection::Skip,
+            compute: RoleSelection::Skip,
+        }
+    }
+
+    /// Stash a substrate handle (endpoint, device runtime, worker count,
+    /// ...) for plugin factories to pick up.
+    pub fn with<T: Send + Sync + 'static>(mut self, value: T) -> Self {
+        self.ctx.insert(value);
+        self
+    }
+
+    /// Replace the whole plugin context.
+    pub fn context(mut self, ctx: PluginContext) -> Self {
+        self.ctx = ctx;
+        self
+    }
+
+    pub fn topology(mut self, backend: impl Into<String>) -> Self {
+        self.topology = RoleSelection::Named(backend.into());
+        self
+    }
+
+    pub fn instance(mut self, backend: impl Into<String>) -> Self {
+        self.instance = RoleSelection::Named(backend.into());
+        self
+    }
+
+    pub fn communication(mut self, backend: impl Into<String>) -> Self {
+        self.communication = RoleSelection::Named(backend.into());
+        self
+    }
+
+    pub fn memory(mut self, backend: impl Into<String>) -> Self {
+        self.memory = RoleSelection::Named(backend.into());
+        self
+    }
+
+    pub fn compute(mut self, backend: impl Into<String>) -> Self {
+        self.compute = RoleSelection::Named(backend.into());
+        self
+    }
+
+    /// Capability-driven resolution: for every Table 1 column contained
+    /// in `caps`, resolve that role to the first registered plugin
+    /// providing *all* of `caps`. Extended flags refine the match:
+    /// `.require(Capabilities::COMPUTE | Capabilities::COMPUTE_SUSPEND)`
+    /// selects a fiber-class compute backend.
+    pub fn require(mut self, caps: Capabilities) -> Self {
+        if caps.contains(Capabilities::TOPOLOGY) {
+            self.topology = RoleSelection::Require(caps);
+        }
+        if caps.contains(Capabilities::INSTANCE) {
+            self.instance = RoleSelection::Require(caps);
+        }
+        if caps.contains(Capabilities::COMMUNICATION) {
+            self.communication = RoleSelection::Require(caps);
+        }
+        if caps.contains(Capabilities::MEMORY) {
+            self.memory = RoleSelection::Require(caps);
+        }
+        if caps.contains(Capabilities::COMPUTE)
+            || caps.contains(Capabilities::COMPUTE_SUSPEND)
+        {
+            self.compute = RoleSelection::Require(caps | Capabilities::COMPUTE);
+        }
+        self
+    }
+
+    /// Resolve every requested role, erasing to trait objects.
+    pub fn build(self) -> Result<ManagerSet> {
+        let mut set = ManagerSet::default();
+        let RuntimeBuilder {
+            registry,
+            ctx,
+            topology,
+            instance,
+            communication,
+            memory,
+            compute,
+        } = self;
+        if let Some((name, m)) =
+            Self::resolve(registry, &topology, Capabilities::TOPOLOGY, |p| {
+                p.topology_manager(&ctx)
+            })?
+        {
+            set.topology = Some(m);
+            set.selected.push(("topology", name));
+        }
+        if let Some((name, m)) =
+            Self::resolve(registry, &instance, Capabilities::INSTANCE, |p| {
+                p.instance_manager(&ctx)
+            })?
+        {
+            set.instance = Some(m);
+            set.selected.push(("instance", name));
+        }
+        if let Some((name, m)) =
+            Self::resolve(registry, &communication, Capabilities::COMMUNICATION, |p| {
+                p.communication_manager(&ctx)
+            })?
+        {
+            set.communication = Some(m);
+            set.selected.push(("communication", name));
+        }
+        if let Some((name, m)) =
+            Self::resolve(registry, &memory, Capabilities::MEMORY, |p| {
+                p.memory_manager(&ctx)
+            })?
+        {
+            set.memory = Some(m);
+            set.selected.push(("memory", name));
+        }
+        if let Some((name, m)) =
+            Self::resolve(registry, &compute, Capabilities::COMPUTE, |p| {
+                p.compute_manager(&ctx)
+            })?
+        {
+            set.compute = Some(m);
+            set.selected.push(("compute", name));
+        }
+        Ok(set)
+    }
+
+    /// Resolve one role to a constructed manager (`None` = role
+    /// skipped). Named lookups must exist, provide the role, *and*
+    /// construct — their factory error propagates. Capability lookups
+    /// walk the registry in order and take the first matching plugin
+    /// whose factory succeeds (a later plugin can serve when an earlier
+    /// one's substrate handle is missing).
+    fn resolve<T>(
+        registry: &Registry,
+        sel: &RoleSelection,
+        role_bit: Capabilities,
+        mut make: impl FnMut(&BackendPlugin) -> Result<T>,
+    ) -> Result<Option<(&'static str, T)>> {
+        match sel {
+            RoleSelection::Skip => Ok(None),
+            RoleSelection::Named(name) => {
+                let p = registry.get(name).ok_or_else(|| {
+                    HicrError::Unsupported(format!(
+                        "unknown backend '{name}' (registered: {})",
+                        registry.names().join(", ")
+                    ))
+                })?;
+                if !p.provides(role_bit) {
+                    return Err(HicrError::Unsupported(format!(
+                        "backend '{name}' does not provide {role_bit} \
+                         (capabilities: {})",
+                        p.capabilities()
+                    )));
+                }
+                Ok(Some((p.name(), make(p)?)))
+            }
+            RoleSelection::Require(caps) => {
+                let mut last_err = None;
+                for p in registry.plugins().iter().filter(|p| p.provides(*caps)) {
+                    match make(p) {
+                        Ok(m) => return Ok(Some((p.name(), m))),
+                        Err(e) => last_err = Some((p.name(), e)),
+                    }
+                }
+                Err(match last_err {
+                    Some((name, e)) => HicrError::Unsupported(format!(
+                        "no backend providing {caps} could be constructed \
+                         (last tried '{name}': {e})"
+                    )),
+                    None => HicrError::Unsupported(format!(
+                        "no registered backend provides {caps} (registered: {})",
+                        registry.names().join(", ")
+                    )),
+                })
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The resolved manager set
+// ---------------------------------------------------------------------
+
+/// A resolved set of managers, all erased to trait objects. Accessors
+/// fail with a descriptive error when the role was never requested, so
+/// apps get an actionable message instead of an unwrap panic.
+#[derive(Default, Clone)]
+pub struct ManagerSet {
+    topology: Option<Arc<dyn TopologyManager>>,
+    instance: Option<Arc<dyn InstanceManager>>,
+    communication: Option<Arc<dyn CommunicationManager>>,
+    memory: Option<Arc<dyn MemoryManager>>,
+    compute: Option<Arc<dyn ComputeManager>>,
+    /// (role, backend name) pairs in resolution order.
+    selected: Vec<(&'static str, &'static str)>,
+}
+
+impl ManagerSet {
+    fn missing(role: &str) -> HicrError {
+        HicrError::InvalidState(format!(
+            "no {role} manager in this set: select one on the RuntimeBuilder \
+             (by name or with require())"
+        ))
+    }
+
+    pub fn topology(&self) -> Result<Arc<dyn TopologyManager>> {
+        self.topology.clone().ok_or_else(|| Self::missing("topology"))
+    }
+
+    pub fn instance(&self) -> Result<Arc<dyn InstanceManager>> {
+        self.instance.clone().ok_or_else(|| Self::missing("instance"))
+    }
+
+    pub fn communication(&self) -> Result<Arc<dyn CommunicationManager>> {
+        self.communication
+            .clone()
+            .ok_or_else(|| Self::missing("communication"))
+    }
+
+    pub fn memory(&self) -> Result<Arc<dyn MemoryManager>> {
+        self.memory.clone().ok_or_else(|| Self::missing("memory"))
+    }
+
+    pub fn compute(&self) -> Result<Arc<dyn ComputeManager>> {
+        self.compute.clone().ok_or_else(|| Self::missing("compute"))
+    }
+
+    /// Which backend serves each resolved role, in resolution order.
+    pub fn selections(&self) -> &[(&'static str, &'static str)] {
+        &self.selected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::compute::{ExecutionState, ExecutionUnit, ProcessingUnit};
+    use crate::core::topology::ComputeResource;
+
+    /// Minimal compute manager for registry-mechanics tests.
+    struct MockCompute(&'static str);
+
+    impl ComputeManager for MockCompute {
+        fn create_processing_unit(
+            &self,
+            _resource: &ComputeResource,
+        ) -> Result<Arc<dyn ProcessingUnit>> {
+            Err(HicrError::Unsupported("mock".into()))
+        }
+
+        fn create_execution_state(
+            &self,
+            _unit: Arc<dyn ExecutionUnit>,
+        ) -> Result<Arc<dyn ExecutionState>> {
+            Err(HicrError::Unsupported("mock".into()))
+        }
+
+        fn backend_name(&self) -> &'static str {
+            self.0
+        }
+    }
+
+    fn mock_plugin(name: &'static str) -> BackendPlugin {
+        BackendPlugin::new(name)
+            .with_compute(move |_| Ok(Arc::new(MockCompute(name)) as Arc<dyn ComputeManager>))
+    }
+
+    #[test]
+    fn capability_bit_algebra() {
+        let c = Capabilities::COMPUTE | Capabilities::MEMORY;
+        assert!(c.contains(Capabilities::COMPUTE));
+        assert!(c.contains(Capabilities::MEMORY));
+        assert!(!c.contains(Capabilities::TOPOLOGY));
+        assert!(c.contains(Capabilities::NONE));
+        assert_eq!(c.table1(), c);
+        let s = c | Capabilities::COMPUTE_SUSPEND;
+        assert_eq!(s.table1(), c);
+    }
+
+    #[test]
+    fn capability_display_order() {
+        let c = Capabilities::MEMORY | Capabilities::COMPUTE;
+        assert_eq!(format!("{c}"), "memory+compute");
+        assert_eq!(format!("{}", Capabilities::NONE), "none");
+    }
+
+    #[test]
+    fn register_and_lookup_by_name() {
+        let mut r = Registry::new();
+        r.register(mock_plugin("alpha")).unwrap();
+        r.register(mock_plugin("beta")).unwrap();
+        assert_eq!(r.names(), vec!["alpha", "beta"]);
+        assert!(r.get("alpha").is_some());
+        assert!(r.get("gamma").is_none());
+        // Duplicate names rejected.
+        assert!(r.register(mock_plugin("alpha")).is_err());
+    }
+
+    #[test]
+    fn capabilities_derived_from_factories() {
+        let p = mock_plugin("x");
+        assert!(p.provides(Capabilities::COMPUTE));
+        assert!(!p.provides(Capabilities::MEMORY));
+        let cov = BackendCoverage::of(&p);
+        assert!(cov.compute && !cov.memory && !cov.topology);
+    }
+
+    #[test]
+    fn builder_resolves_by_name() {
+        let mut r = Registry::new();
+        r.register(mock_plugin("alpha")).unwrap();
+        r.register(mock_plugin("beta")).unwrap();
+        let set = r.builder().compute("beta").build().unwrap();
+        assert_eq!(set.compute().unwrap().backend_name(), "beta");
+        assert_eq!(set.selections(), &[("compute", "beta")]);
+        // Unknown names and unprovided roles are descriptive errors.
+        assert!(r.builder().compute("gamma").build().is_err());
+        assert!(r.builder().memory("alpha").build().is_err());
+    }
+
+    #[test]
+    fn builder_resolves_by_capability_in_registration_order() {
+        let mut r = Registry::new();
+        r.register(mock_plugin("first")).unwrap();
+        r.register(mock_plugin("second")).unwrap();
+        let set = r.builder().require(Capabilities::COMPUTE).build().unwrap();
+        assert_eq!(set.compute().unwrap().backend_name(), "first");
+    }
+
+    #[test]
+    fn require_extended_capability_skips_non_matching() {
+        let mut r = Registry::new();
+        r.register(mock_plugin("plain")).unwrap();
+        r.register(BackendPlugin::new("fiber").with_suspendable_compute(|_| {
+            Ok(Arc::new(MockCompute("fiber")) as Arc<dyn ComputeManager>)
+        }))
+        .unwrap();
+        let set = r
+            .builder()
+            .require(Capabilities::COMPUTE | Capabilities::COMPUTE_SUSPEND)
+            .build()
+            .unwrap();
+        assert_eq!(set.compute().unwrap().backend_name(), "fiber");
+        // Nothing provides topology.
+        assert!(r.builder().require(Capabilities::TOPOLOGY).build().is_err());
+    }
+
+    #[test]
+    fn require_falls_through_failing_factories() {
+        // Capability resolution tries the next matching plugin when an
+        // earlier one's factory cannot construct (missing substrate
+        // handle) — a named lookup of the same plugin still propagates
+        // the factory error.
+        let mut r = Registry::new();
+        r.register(BackendPlugin::new("needy").with_compute(|_| {
+            Err(HicrError::Unsupported("substrate handle missing".into()))
+        }))
+        .unwrap();
+        r.register(mock_plugin("fallback")).unwrap();
+        let set = r.builder().require(Capabilities::COMPUTE).build().unwrap();
+        assert_eq!(set.compute().unwrap().backend_name(), "fallback");
+        assert!(r.builder().compute("needy").build().is_err());
+        // Every matching factory failing reports the last error tried.
+        let mut lone = Registry::new();
+        lone.register(BackendPlugin::new("needy").with_compute(|_| {
+            Err(HicrError::Unsupported("substrate handle missing".into()))
+        }))
+        .unwrap();
+        let err = lone
+            .builder()
+            .require(Capabilities::COMPUTE)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("needy"), "{err}");
+    }
+
+    #[test]
+    fn context_values_reach_factories() {
+        #[derive(Debug, PartialEq)]
+        struct Knob(u32);
+        let mut r = Registry::new();
+        r.register(BackendPlugin::new("ctx").with_compute(|ctx| {
+            let knob = ctx.expect::<Knob>("Knob")?;
+            assert_eq!(*knob, Knob(7));
+            Ok(Arc::new(MockCompute("ctx")) as Arc<dyn ComputeManager>)
+        }))
+        .unwrap();
+        // Missing handle → factory error surfaces through build().
+        assert!(r.builder().compute("ctx").build().is_err());
+        let set = r.builder().with(Knob(7)).compute("ctx").build().unwrap();
+        assert_eq!(set.compute().unwrap().backend_name(), "ctx");
+    }
+
+    #[test]
+    fn empty_set_accessors_are_descriptive() {
+        let r = Registry::new();
+        let set = r.builder().build().unwrap();
+        let err = set.compute().unwrap_err();
+        assert!(err.to_string().contains("RuntimeBuilder"), "{err}");
+    }
+}

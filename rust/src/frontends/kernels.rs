@@ -1,0 +1,24 @@
+//! Device-agnostic kernel-provider interface: the contract between an
+//! application's compute hot path and whichever plugin executes it.
+//!
+//! Lives in `frontends` — not in `apps` — so the dependency arrows stay
+//! acyclic: applications consume `dyn KernelProvider`, and backend
+//! plugins (e.g. `backends::xlacomp::XlaKernels`) implement it without
+//! importing the application layer. An out-of-tree accelerator plugin
+//! implements this trait to slot into the inference app unchanged.
+
+use crate::core::error::Result;
+
+/// A device-agnostic forward-pass provider (the inference app's only
+/// kernel API — paper §5.2's swappable-backend experiment).
+pub trait KernelProvider: Send + Sync {
+    /// Forward `batch` flattened images (batch × in_dim) → logits
+    /// (batch × out_dim).
+    fn forward(&self, x: &[f32], batch: usize) -> Result<Vec<f32>>;
+
+    /// Which backend runs the kernels (Table 2's "Backend" column).
+    fn backend_name(&self) -> &'static str;
+
+    /// Largest batch the provider accepts per call.
+    fn max_batch(&self) -> usize;
+}

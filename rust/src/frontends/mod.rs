@@ -6,6 +6,8 @@
 //! - [`channels`] — circular-buffer channels for frequent small messages
 //!   (SPSC + MPSC in locking / non-locking modes).
 //! - [`dataobject`] — publish/get of sporadic large data blocks.
+//! - [`kernels`] — the device-agnostic kernel-provider interface apps
+//!   consume and backend plugins implement.
 //! - [`rpc`] — remote procedure registration, listening and execution.
 //! - [`tasking`] — building blocks for task-based runtime systems
 //!   (stateful tasks with callbacks, pull-scheduled workers, and an
@@ -13,5 +15,6 @@
 
 pub mod channels;
 pub mod dataobject;
+pub mod kernels;
 pub mod rpc;
 pub mod tasking;

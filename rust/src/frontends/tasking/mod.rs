@@ -2,22 +2,28 @@
 //! systems — stateful tasks with state-change callbacks, pull-scheduled
 //! worker objects, and an OVNI-style execution tracer.
 //!
-//! Two execution engines reproduce the paper's Test Case 3/4 variants:
+//! The frontend is written purely against the abstract compute API: it
+//! accepts **any** [`crate::core::compute::ComputeManager`] trait object
+//! and negotiates its scheduling engine from the manager's capabilities
+//! instead of naming concrete backends:
 //!
-//! - **coro** (Pthreads workers + Boost-like fibers): workers pull tasks
-//!   from a shared ready queue and drive them with user-level
-//!   suspend/resume; a task waiting on children parks *without* occupying
+//! - A manager whose execution states *support suspension* (fiber-class,
+//!   e.g. the `coro` plugin) gets the parking scheduler: workers pull
+//!   tasks from a shared ready queue and drive them with user-level
+//!   `resume()`; a task waiting on children parks *without* occupying
 //!   its worker.
-//! - **nosv** (thread-per-task, system-wide scheduler): every task gets a
-//!   kernel thread admitted through a global lock; waiting on children
-//!   blocks the kernel thread (releasing its concurrency slot), and
-//!   completion is eagerly polled.
+//! - A run-to-completion manager (e.g. the `threads` or `nosv` plugins)
+//!   gets the blocking scheduler: tasks are admitted into concurrency
+//!   slots and waiting on children blocks the kernel thread (releasing
+//!   its slot).
 //!
-//! The same application code (a body receiving a [`TaskCtx`]) runs on
-//! both — the Fibonacci and Jacobi apps are written once.
+//! The paper's Test Case 3/4 engine comparison is thus a pure plugin
+//! swap; the same application code (a body receiving a [`TaskCtx`]) runs
+//! on every compute backend — the Fibonacci and Jacobi apps are written
+//! once.
 
 pub mod system;
 pub mod trace;
 
-pub use system::{TaskCtx, TaskSystem, TaskSystemKind};
+pub use system::{TaskCtx, TaskSystem};
 pub use trace::{EventKind, Trace, TraceEvent};

@@ -1,25 +1,45 @@
-//! The task system: stateful tasks, pull-scheduled workers, and the two
-//! execution engines (coro fibers vs nosv thread-per-task) the paper
-//! compares in Test Cases 3 and 4.
+//! The task system: stateful tasks, pull-scheduled workers, and two
+//! scheduling engines — selected by *capability negotiation* against the
+//! injected compute manager, never by naming a concrete backend.
+//!
+//! `TaskSystem::new` accepts any [`ComputeManager`] trait object:
+//!
+//! - If the manager's execution states support cooperative suspension
+//!   (`supports_suspension()`, e.g. the fiber-class `coro` plugin), tasks
+//!   run on the **parking scheduler**: pull-loop workers drive states
+//!   with [`ExecutionState::resume`], and a task waiting on children
+//!   parks *without* occupying its worker.
+//! - Otherwise (run-to-completion states, e.g. the `threads` or `nosv`
+//!   plugins) tasks run on the **blocking scheduler**: a dispatcher
+//!   admits queued tasks into `n_workers` concurrency slots and runs
+//!   each on its own processing unit; waiting on children blocks the
+//!   kernel thread after releasing its slot.
+//!
+//! The paper's Test Case 3/4 engine comparison (Boost fibers vs nOS-V
+//! thread-per-task) is therefore a pure backend swap: the same
+//! application body runs under `--compute coro` or `--compute nosv`.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::backends::coro::compute::{CoroComputeManager, FiberExecutionState};
-use crate::backends::nosv;
-use crate::core::compute::{ExecStatus, ExecutionUnit, FnExecutionUnit};
+use crate::core::compute::{
+    ComputeManager, ExecStatus, ExecutionState, ExecutionUnit, FnExecutionUnit,
+    ProcessingUnit,
+};
 use crate::core::error::{HicrError, Result};
+use crate::core::ids::ComputeResourceId;
+use crate::core::topology::ComputeResource;
 use crate::frontends::tasking::trace::{EventKind, Trace};
 
-/// Which engine executes the tasks.
+/// Which scheduling engine drives the tasks — derived from the compute
+/// manager's capabilities, not chosen by the caller.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum TaskSystemKind {
-    /// Pthreads workers + fiber tasks (Boost.Context analogue).
-    Coro,
-    /// Kernel-thread-per-task with a slot-bounded system scheduler
-    /// (nOS-V analogue).
-    Nosv,
+enum EngineKind {
+    /// Suspendable states: pull workers + user-level parking.
+    Suspending,
+    /// Run-to-completion states: slot-gated dispatch, blocking waits.
+    Blocking,
 }
 
 /// A task body: runs once, may spawn children and wait for them.
@@ -31,8 +51,8 @@ struct TaskSync {
     waiting: bool,
     /// Set when a waiting parent became ready before it finished parking.
     ready_now: bool,
-    /// Parked coro task awaiting child completion.
-    parked: Option<CoroTask>,
+    /// Parked suspendable task awaiting child completion.
+    parked: Option<SuspendableTask>,
 }
 
 struct TaskNode {
@@ -41,17 +61,19 @@ struct TaskNode {
     label: String,
     parent: Option<Arc<TaskNode>>,
     sync: Mutex<TaskSync>,
-    /// nosv engine: parents block here awaiting children.
+    /// Blocking engine: parents block here awaiting children.
     cv: Condvar,
 }
 
+/// A task bound to a suspendable execution state (parking scheduler).
 #[derive(Clone)]
-struct CoroTask {
+struct SuspendableTask {
     node: Arc<TaskNode>,
-    fiber: Arc<FiberExecutionState>,
+    state: Arc<dyn ExecutionState>,
 }
 
-/// Counting semaphore handing out stable slot ids (nosv worker slots).
+/// Counting semaphore handing out stable slot ids (blocking-engine
+/// concurrency slots).
 struct IdSemaphore {
     free: Mutex<Vec<usize>>,
     cv: Condvar,
@@ -81,36 +103,45 @@ impl IdSemaphore {
     }
 }
 
-struct CoroEngine {
-    cm: CoroComputeManager,
-    ready: Mutex<VecDeque<CoroTask>>,
+struct SuspendingEngine {
+    ready: Mutex<VecDeque<SuspendableTask>>,
     ready_cv: Condvar,
     shutdown: AtomicBool,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
-struct NosvEngine {
+struct BlockingEngine {
     slots: IdSemaphore,
-    /// Submitted-but-unscheduled tasks. nOS-V materializes a task's
-    /// kernel thread when it is *scheduled*, not when submitted — eager
-    /// per-submission spawning would hold thousands of live threads on a
-    /// deep DAG (observed as EAGAIN at F(20); EXPERIMENTS.md §Perf).
-    queue: Mutex<VecDeque<(String, TaskBody, Arc<TaskNode>)>>,
+    /// Submitted-but-unscheduled tasks. Thread-per-task backends
+    /// materialize a task's kernel thread when it is *scheduled*, not
+    /// when submitted — eager per-submission spawning would hold
+    /// thousands of live threads on a deep DAG (observed as EAGAIN at
+    /// F(20); EXPERIMENTS.md §Perf).
+    queue: Mutex<VecDeque<(TaskBody, Arc<TaskNode>)>>,
     queue_cv: Condvar,
     shutdown: AtomicBool,
     dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Processing units with live states, garbage-collected as their
+    /// states finish (terminating a unit joins its executor).
+    live: Mutex<Vec<(Arc<dyn ProcessingUnit>, Arc<dyn ExecutionState>)>>,
 }
 
 struct Inner {
-    kind: TaskSystemKind,
+    cm: Arc<dyn ComputeManager>,
+    engine: EngineKind,
     trace: Arc<Trace>,
     next_task_id: AtomicU64,
     outstanding: AtomicUsize,
     done_mx: Mutex<()>,
     done_cv: Condvar,
     tasks_executed: AtomicU64,
-    coro: Option<CoroEngine>,
-    nosv: Option<NosvEngine>,
+    /// First task the backend rejected (wrong unit format, terminated
+    /// unit): surfaced as the error of the enclosing `run()` so a
+    /// mis-selected backend fails loudly instead of reporting wrong
+    /// results.
+    first_error: Mutex<Option<HicrError>>,
+    suspending: Option<SuspendingEngine>,
+    blocking: Option<BlockingEngine>,
 }
 
 /// Handle task bodies use to spawn children and synchronize (the only
@@ -138,9 +169,9 @@ impl<'a> TaskCtx<'a> {
 
     /// Wait until every child spawned by this task has finished.
     pub fn wait_children(&self) {
-        match self.inner.kind {
-            TaskSystemKind::Coro => {
-                // Park the fiber; child completion re-enqueues us.
+        match self.inner.engine {
+            EngineKind::Suspending => {
+                // Park the state; child completion re-enqueues us.
                 loop {
                     {
                         let mut sync = self.node.sync.lock().unwrap();
@@ -150,14 +181,15 @@ impl<'a> TaskCtx<'a> {
                         sync.waiting = true;
                     }
                     self.exec
-                        .expect("coro task without exec ctx")
+                        .expect("suspending task without exec ctx")
                         .suspend();
                 }
             }
-            TaskSystemKind::Nosv => {
-                // Release our scheduler slot and block the kernel thread.
-                let engine = self.inner.nosv.as_ref().expect("nosv engine");
-                let slot = current_nosv_slot();
+            EngineKind::Blocking => {
+                // Release our concurrency slot and block the kernel
+                // thread.
+                let engine = self.inner.blocking.as_ref().expect("blocking engine");
+                let slot = current_task_slot();
                 if let Some(s) = slot {
                     engine.slots.release(s);
                 }
@@ -169,7 +201,7 @@ impl<'a> TaskCtx<'a> {
                 }
                 if slot.is_some() {
                     let s = engine.slots.acquire();
-                    set_nosv_slot(Some(s));
+                    set_task_slot(Some(s));
                 }
             }
         }
@@ -177,16 +209,16 @@ impl<'a> TaskCtx<'a> {
 }
 
 thread_local! {
-    /// The nosv scheduler slot the current task thread holds.
-    static NOSV_SLOT: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
+    /// The blocking-engine concurrency slot the current task thread holds.
+    static TASK_SLOT: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
 }
 
-fn current_nosv_slot() -> Option<usize> {
-    NOSV_SLOT.with(|s| s.get())
+fn current_task_slot() -> Option<usize> {
+    TASK_SLOT.with(|s| s.get())
 }
 
-fn set_nosv_slot(v: Option<usize>) {
-    NOSV_SLOT.with(|s| s.set(v));
+fn set_task_slot(v: Option<usize>) {
+    TASK_SLOT.with(|s| s.set(v));
 }
 
 /// The task system facade.
@@ -196,60 +228,74 @@ pub struct TaskSystem {
 }
 
 impl TaskSystem {
-    /// Create a system with `n_workers` workers/slots.
-    pub fn new(kind: TaskSystemKind, n_workers: usize, trace_enabled: bool) -> Arc<TaskSystem> {
+    /// Create a system with `n_workers` workers/slots executing through
+    /// `cm`. Any compute manager whose execution units are host closures
+    /// works; the scheduling engine is negotiated from the manager's
+    /// suspension capability.
+    pub fn new(
+        cm: Arc<dyn ComputeManager>,
+        n_workers: usize,
+        trace_enabled: bool,
+    ) -> Arc<TaskSystem> {
         assert!(n_workers > 0, "need at least one worker");
+        let engine = if cm.supports_suspension() {
+            EngineKind::Suspending
+        } else {
+            EngineKind::Blocking
+        };
         let trace = Arc::new(Trace::new(trace_enabled));
         let inner = Arc::new(Inner {
-            kind,
+            cm,
+            engine,
             trace,
             next_task_id: AtomicU64::new(1),
             outstanding: AtomicUsize::new(0),
             done_mx: Mutex::new(()),
             done_cv: Condvar::new(),
             tasks_executed: AtomicU64::new(0),
-            coro: match kind {
-                TaskSystemKind::Coro => Some(CoroEngine {
-                    cm: CoroComputeManager::new(),
+            first_error: Mutex::new(None),
+            suspending: match engine {
+                EngineKind::Suspending => Some(SuspendingEngine {
                     ready: Mutex::new(VecDeque::new()),
                     ready_cv: Condvar::new(),
                     shutdown: AtomicBool::new(false),
                     workers: Mutex::new(Vec::new()),
                 }),
-                TaskSystemKind::Nosv => None,
+                EngineKind::Blocking => None,
             },
-            nosv: match kind {
-                TaskSystemKind::Nosv => Some(NosvEngine {
+            blocking: match engine {
+                EngineKind::Blocking => Some(BlockingEngine {
                     slots: IdSemaphore::new(n_workers),
                     queue: Mutex::new(VecDeque::new()),
                     queue_cv: Condvar::new(),
                     shutdown: AtomicBool::new(false),
                     dispatcher: Mutex::new(None),
+                    live: Mutex::new(Vec::new()),
                 }),
-                TaskSystemKind::Coro => None,
+                EngineKind::Suspending => None,
             },
         });
-        if kind == TaskSystemKind::Nosv {
+        if engine == EngineKind::Blocking {
             // The system-wide scheduler pump: admits queued tasks onto
-            // kernel threads as slots free up.
+            // processing units as slots free up.
             let inner2 = Arc::clone(&inner);
             let handle = std::thread::Builder::new()
-                .name("hicr-nosv-sched".into())
-                .spawn(move || nosv_dispatcher_loop(inner2))
-                .expect("spawn nosv dispatcher");
-            *inner.nosv.as_ref().unwrap().dispatcher.lock().unwrap() = Some(handle);
+                .name("hicr-task-sched".into())
+                .spawn(move || blocking_dispatcher_loop(inner2))
+                .expect("spawn task dispatcher");
+            *inner.blocking.as_ref().unwrap().dispatcher.lock().unwrap() = Some(handle);
         }
-        if kind == TaskSystemKind::Coro {
+        if engine == EngineKind::Suspending {
             // Start the pull-loop workers (paper: "a simple loop that
             // calls a pull function").
-            let engine = inner.coro.as_ref().unwrap();
-            let mut workers = engine.workers.lock().unwrap();
+            let eng = inner.suspending.as_ref().unwrap();
+            let mut workers = eng.workers.lock().unwrap();
             for w in 0..n_workers {
                 let inner2 = Arc::clone(&inner);
                 workers.push(
                     std::thread::Builder::new()
                         .name(format!("hicr-task-worker-{w}"))
-                        .spawn(move || coro_worker_loop(inner2, w))
+                        .spawn(move || suspending_worker_loop(inner2, w))
                         .expect("spawn task worker"),
                 );
             }
@@ -257,8 +303,14 @@ impl TaskSystem {
         Arc::new(TaskSystem { inner, n_workers })
     }
 
-    pub fn kind(&self) -> TaskSystemKind {
-        self.inner.kind
+    /// The backend executing the tasks.
+    pub fn backend_name(&self) -> &'static str {
+        self.inner.cm.backend_name()
+    }
+
+    /// True when the parking (user-level suspension) scheduler is active.
+    pub fn suspending(&self) -> bool {
+        self.inner.engine == EngineKind::Suspending
     }
 
     pub fn trace(&self) -> Arc<Trace> {
@@ -275,19 +327,25 @@ impl TaskSystem {
     }
 
     /// Spawn a root task and block until the whole task graph quiesces.
+    /// Fails if the backend rejected any task (e.g. a compute plugin
+    /// that does not prescribe host-closure execution units).
     pub fn run(&self, label: impl Into<String>, body: impl FnOnce(&TaskCtx) + Send + 'static) -> Result<()> {
         spawn_task(&self.inner, label.into(), Box::new(body), None);
         let mut guard = self.inner.done_mx.lock().unwrap();
         while self.inner.outstanding.load(Ordering::Acquire) != 0 {
             guard = self.inner.done_cv.wait(guard).unwrap();
         }
+        drop(guard);
+        if let Some(e) = self.inner.first_error.lock().unwrap().take() {
+            return Err(e);
+        }
         Ok(())
     }
 
-    /// Stop workers (coro) / the scheduler pump (nosv). Call after the
-    /// last `run`.
+    /// Stop workers (suspending) / the scheduler pump (blocking). Call
+    /// after the last `run`.
     pub fn shutdown(&self) -> Result<()> {
-        if let Some(engine) = &self.inner.coro {
+        if let Some(engine) = &self.inner.suspending {
             engine.shutdown.store(true, Ordering::SeqCst);
             engine.ready_cv.notify_all();
             let mut workers = engine.workers.lock().unwrap();
@@ -296,15 +354,24 @@ impl TaskSystem {
                     .map_err(|_| HicrError::InvalidState("task worker panicked".into()))?;
             }
         }
-        if let Some(engine) = &self.inner.nosv {
+        if let Some(engine) = &self.inner.blocking {
             engine.shutdown.store(true, Ordering::SeqCst);
             engine.queue_cv.notify_all();
             if let Some(d) = engine.dispatcher.lock().unwrap().take() {
                 d.join()
-                    .map_err(|_| HicrError::InvalidState("nosv dispatcher panicked".into()))?;
+                    .map_err(|_| HicrError::InvalidState("task dispatcher panicked".into()))?;
             }
         }
         Ok(())
+    }
+}
+
+/// Keep only the *first* failure: it is the root cause surfaced by
+/// `run()`; later failures are usually fallout.
+fn record_first_error(inner: &Arc<Inner>, e: HicrError) {
+    let mut first = inner.first_error.lock().unwrap();
+    if first.is_none() {
+        *first = Some(e);
     }
 }
 
@@ -323,9 +390,9 @@ fn spawn_task(inner: &Arc<Inner>, label: String, body: TaskBody, parent: Option<
         }),
         cv: Condvar::new(),
     });
-    match inner.kind {
-        TaskSystemKind::Coro => {
-            let engine = inner.coro.as_ref().expect("coro engine");
+    match inner.engine {
+        EngineKind::Suspending => {
+            let engine = inner.suspending.as_ref().expect("suspending engine");
             let inner2 = Arc::clone(inner);
             let node2 = Arc::clone(&node);
             let body_cell = Mutex::new(Some(body));
@@ -338,27 +405,43 @@ fn spawn_task(inner: &Arc<Inner>, label: String, body: TaskBody, parent: Option<
                 };
                 body(&tctx);
             });
-            let fiber = engine
-                .cm
-                .create_fiber(unit as Arc<dyn ExecutionUnit>)
-                .expect("fiber creation");
-            enqueue(engine, CoroTask { node, fiber });
+            match inner.cm.create_execution_state(unit as Arc<dyn ExecutionUnit>) {
+                Ok(state) => {
+                    debug_assert!(state.supports_suspension());
+                    enqueue(engine, SuspendableTask { node, state });
+                }
+                Err(e) => {
+                    // Keep bookkeeping sound and surface the rejection
+                    // through run() — a panic here would kill a worker
+                    // thread mid-task and hang the system.
+                    record_first_error(
+                        inner,
+                        HicrError::InvalidState(format!(
+                            "backend '{}' rejected task '{}': {e}",
+                            inner.cm.backend_name(),
+                            node.label
+                        )),
+                    );
+                    finish_task(inner, &node);
+                }
+            }
         }
-        TaskSystemKind::Nosv => {
+        EngineKind::Blocking => {
             // Submit to the system-wide scheduler; the dispatcher
-            // materializes a kernel thread when a slot frees up.
-            let engine = inner.nosv.as_ref().expect("nosv engine");
-            let label = node.label.clone();
-            engine.queue.lock().unwrap().push_back((label, body, node));
+            // materializes a processing unit when a slot frees up.
+            let engine = inner.blocking.as_ref().expect("blocking engine");
+            engine.queue.lock().unwrap().push_back((body, node));
             engine.queue_cv.notify_one();
         }
     }
 }
 
-/// The nOS-V scheduler pump: pop a submitted task, acquire a slot, and
-/// run it on a fresh kernel thread (thread-per-task at *schedule* time).
-fn nosv_dispatcher_loop(inner: Arc<Inner>) {
-    let engine = inner.nosv.as_ref().expect("nosv engine");
+/// The blocking-engine scheduler pump: pop a submitted task, acquire a
+/// slot, and run it on a dedicated processing unit of the injected
+/// compute manager (thread-per-task at *schedule* time for backends like
+/// nosv; a fresh queue-worker thread for the threads backend).
+fn blocking_dispatcher_loop(inner: Arc<Inner>) {
+    let engine = inner.blocking.as_ref().expect("blocking engine");
     loop {
         let next = {
             let mut queue = engine.queue.lock().unwrap();
@@ -372,40 +455,103 @@ fn nosv_dispatcher_loop(inner: Arc<Inner>) {
                 queue = engine.queue_cv.wait(queue).unwrap();
             }
         };
-        let Some((_label, body, node)) = next else { return };
-        // Admission through the system-wide scheduler lock, then a slot.
-        nosv::compute::admit_task();
+        let Some((body, node)) = next else {
+            // Shutdown: join the executors of every finished task.
+            let mut live = engine.live.lock().unwrap();
+            for (pu, _state) in live.drain(..) {
+                let _ = pu.terminate();
+            }
+            return;
+        };
         let slot = engine.slots.acquire();
-        let inner2 = Arc::clone(&inner);
-        std::thread::Builder::new()
-            .name("hicr-nosv-task".into())
-            .spawn(move || {
-                let engine = inner2.nosv.as_ref().expect("nosv engine");
-                set_nosv_slot(Some(slot));
-                let t0 = inner2.trace.now_ns();
-                let tctx = TaskCtx {
-                    inner: &inner2,
-                    node: &node,
-                    exec: None,
-                };
-                body(&tctx);
-                inner2.trace.record(
-                    current_nosv_slot().unwrap_or(slot),
-                    EventKind::Run,
-                    &node.label,
-                    t0,
-                );
-                if let Some(s) = current_nosv_slot() {
-                    engine.slots.release(s);
-                    set_nosv_slot(None);
+        // Garbage-collect processing units whose states finished.
+        {
+            let mut live = engine.live.lock().unwrap();
+            live.retain(|(pu, state)| {
+                if state.is_finished() {
+                    let _ = pu.terminate();
+                    false
+                } else {
+                    true
                 }
-                finish_task(&inner2, &node);
-            })
-            .expect("spawn nosv task thread");
+            });
+        }
+        let inner2 = Arc::clone(&inner);
+        let node2 = Arc::clone(&node);
+        let body_cell = Mutex::new(Some(body));
+        let unit = FnExecutionUnit::new(node.label.clone(), move |ctx| {
+            let body = body_cell.lock().unwrap().take().expect("body runs once");
+            let engine = inner2.blocking.as_ref().expect("blocking engine");
+            set_task_slot(Some(slot));
+            let t0 = inner2.trace.now_ns();
+            let tctx = TaskCtx {
+                inner: &inner2,
+                node: &node2,
+                exec: Some(ctx),
+            };
+            // Catch panics so bookkeeping always runs: a lost
+            // finish_task would hang the whole system. The panic is not
+            // swallowed — it surfaces as the run()'s error.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                body(&tctx)
+            }));
+            if outcome.is_err() {
+                record_first_error(
+                    &inner2,
+                    HicrError::InvalidState(format!("task '{}' panicked", node2.label)),
+                );
+            }
+            inner2.trace.record(
+                current_task_slot().unwrap_or(slot),
+                EventKind::Run,
+                &node2.label,
+                t0,
+            );
+            if let Some(s) = current_task_slot() {
+                engine.slots.release(s);
+                set_task_slot(None);
+            }
+            finish_task(&inner2, &node2);
+        });
+        // Route through the abstract manager: state + processing unit.
+        let started = inner
+            .cm
+            .create_execution_state(unit as Arc<dyn ExecutionUnit>)
+            .and_then(|state| {
+                let resource = ComputeResource {
+                    id: ComputeResourceId(slot as u64),
+                    kind: "cpu-core".into(),
+                    os_index: slot as u32,
+                    locality: 0,
+                };
+                let pu = inner.cm.create_processing_unit(&resource)?;
+                pu.start(Arc::clone(&state))?;
+                Ok((pu, state))
+            });
+        match started {
+            Ok(pair) => engine.live.lock().unwrap().push(pair),
+            Err(e) => {
+                // The manager rejected the task (wrong unit format /
+                // terminated unit). Record the first rejection so the
+                // enclosing `run()` fails loudly — silently dropping work
+                // would report wrong results with a clean exit — while
+                // keeping the graph bookkeeping sound so `run()` returns.
+                record_first_error(
+                    &inner,
+                    HicrError::InvalidState(format!(
+                        "backend '{}' rejected task '{}': {e}",
+                        inner.cm.backend_name(),
+                        node.label
+                    )),
+                );
+                engine.slots.release(slot);
+                finish_task(&inner, &node);
+            }
+        }
     }
 }
 
-fn enqueue(engine: &CoroEngine, task: CoroTask) {
+fn enqueue(engine: &SuspendingEngine, task: SuspendableTask) {
     engine.ready.lock().unwrap().push_back(task);
     engine.ready_cv.notify_one();
 }
@@ -422,8 +568,8 @@ fn finish_task(inner: &Arc<Inner>, node: &Arc<TaskNode>) {
                 match sync.parked.take() {
                     Some(task) => Some(task),
                     None => {
-                        // Parent not parked yet: flag it ready (coro) /
-                        // wake it (nosv).
+                        // Parent not parked yet: flag it ready
+                        // (suspending) / wake it (blocking).
                         sync.ready_now = true;
                         None
                     }
@@ -434,7 +580,7 @@ fn finish_task(inner: &Arc<Inner>, node: &Arc<TaskNode>) {
         };
         parent.cv.notify_all();
         if let Some(task) = to_enqueue {
-            let engine = inner.coro.as_ref().expect("parked implies coro");
+            let engine = inner.suspending.as_ref().expect("parked implies suspending");
             enqueue(engine, task);
         }
     }
@@ -444,9 +590,10 @@ fn finish_task(inner: &Arc<Inner>, node: &Arc<TaskNode>) {
     }
 }
 
-/// The coro worker pull loop (paper §4.3 Tasking: worker objects).
-fn coro_worker_loop(inner: Arc<Inner>, worker_id: usize) {
-    let engine = inner.coro.as_ref().expect("coro engine");
+/// The suspending-engine worker pull loop (paper §4.3 Tasking: worker
+/// objects), driving opaque `dyn ExecutionState`s via `resume()`.
+fn suspending_worker_loop(inner: Arc<Inner>, worker_id: usize) {
+    let engine = inner.suspending.as_ref().expect("suspending engine");
     loop {
         // Pull the next ready task.
         let task = {
@@ -463,12 +610,37 @@ fn coro_worker_loop(inner: Arc<Inner>, worker_id: usize) {
         };
         let Some(task) = task else { return };
         let t0 = inner.trace.now_ns();
-        let status = task.fiber.resume().unwrap_or(ExecStatus::Failed);
+        let status = match task.state.resume() {
+            Ok(s) => s,
+            Err(e) => {
+                record_first_error(
+                    &inner,
+                    HicrError::InvalidState(format!(
+                        "task '{}' could not be resumed: {e}",
+                        task.node.label
+                    )),
+                );
+                ExecStatus::Failed
+            }
+        };
         inner
             .trace
             .record(worker_id, EventKind::Run, &task.node.label, t0);
         match status {
-            ExecStatus::Finished | ExecStatus::Failed => {
+            ExecStatus::Finished => {
+                finish_task(&inner, &task.node);
+            }
+            ExecStatus::Failed => {
+                // A failed state means the task body panicked (or the
+                // backend broke mid-task): surface it, don't report a
+                // clean run with missing work.
+                record_first_error(
+                    &inner,
+                    HicrError::InvalidState(format!(
+                        "task '{}' failed (panicked)",
+                        task.node.label
+                    )),
+                );
                 finish_task(&inner, &task.node);
             }
             ExecStatus::Suspended => {
@@ -488,7 +660,7 @@ fn coro_worker_loop(inner: Arc<Inner>, worker_id: usize) {
                 }
             }
             other => {
-                debug_assert!(false, "unexpected fiber status {other:?}");
+                debug_assert!(false, "unexpected resume status {other:?}");
                 finish_task(&inner, &task.node);
             }
         }
@@ -498,10 +670,25 @@ fn coro_worker_loop(inner: Arc<Inner>, worker_id: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backends::coro::CoroComputeManager;
+    use crate::backends::nosv::NosvComputeManager;
+    use crate::backends::threads::ThreadsComputeManager;
 
-    fn run_tree(kind: TaskSystemKind) -> u64 {
+    fn coro_cm() -> Arc<dyn ComputeManager> {
+        Arc::new(CoroComputeManager::new())
+    }
+
+    fn nosv_cm() -> Arc<dyn ComputeManager> {
+        Arc::new(NosvComputeManager::new())
+    }
+
+    fn threads_cm() -> Arc<dyn ComputeManager> {
+        Arc::new(ThreadsComputeManager::new())
+    }
+
+    fn run_tree(cm: Arc<dyn ComputeManager>) -> u64 {
         // Three-level tree: root -> 3 children -> 2 grandchildren each.
-        let sys = TaskSystem::new(kind, 4, false);
+        let sys = TaskSystem::new(cm, 4, false);
         let total = Arc::new(AtomicU64::new(0));
         let t = Arc::clone(&total);
         sys.run("root", move |ctx| {
@@ -528,19 +715,71 @@ mod tests {
     }
 
     #[test]
-    fn coro_tree_dependencies() {
-        assert_eq!(run_tree(TaskSystemKind::Coro), 136);
+    fn suspending_engine_tree_dependencies() {
+        assert_eq!(run_tree(coro_cm()), 136);
     }
 
     #[test]
-    fn nosv_tree_dependencies() {
-        assert_eq!(run_tree(TaskSystemKind::Nosv), 136);
+    fn blocking_engine_tree_dependencies() {
+        assert_eq!(run_tree(nosv_cm()), 136);
+    }
+
+    #[test]
+    fn threads_backend_tree_dependencies() {
+        // Any run-to-completion manager works — not only nosv.
+        assert_eq!(run_tree(threads_cm()), 136);
+    }
+
+    /// A compute manager that rejects every execution unit (stand-in for
+    /// selecting a plugin that does not prescribe host closures).
+    struct RejectingCompute;
+
+    impl ComputeManager for RejectingCompute {
+        fn create_processing_unit(
+            &self,
+            _resource: &ComputeResource,
+        ) -> Result<Arc<dyn ProcessingUnit>> {
+            Err(HicrError::Unsupported("no processing units".into()))
+        }
+
+        fn create_execution_state(
+            &self,
+            _unit: Arc<dyn ExecutionUnit>,
+        ) -> Result<Arc<dyn ExecutionState>> {
+            Err(HicrError::Unsupported("no host closures".into()))
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "rejecting"
+        }
+    }
+
+    #[test]
+    fn backend_rejection_surfaces_from_run() {
+        // A backend that cannot execute the task must fail the run, not
+        // silently report success with dropped work.
+        let sys = TaskSystem::new(Arc::new(RejectingCompute), 2, false);
+        let err = sys.run("r", |_| {}).unwrap_err();
+        assert!(err.to_string().contains("rejected task"), "{err}");
+        sys.shutdown().unwrap();
+    }
+
+    #[test]
+    fn engine_negotiated_from_capability() {
+        let sys = TaskSystem::new(coro_cm(), 1, false);
+        assert!(sys.suspending());
+        assert_eq!(sys.backend_name(), "coro");
+        sys.shutdown().unwrap();
+        let sys = TaskSystem::new(threads_cm(), 1, false);
+        assert!(!sys.suspending());
+        assert_eq!(sys.backend_name(), "threads");
+        sys.shutdown().unwrap();
     }
 
     #[test]
     fn coro_small_fibonacci() {
         // fib(10) = 55 via the naive recursive task DAG.
-        let sys = TaskSystem::new(TaskSystemKind::Coro, 4, false);
+        let sys = TaskSystem::new(coro_cm(), 4, false);
         let result = Arc::new(AtomicU64::new(0));
         let r = Arc::clone(&result);
         sys.run("fib", move |ctx| {
@@ -575,7 +814,7 @@ mod tests {
 
     #[test]
     fn nosv_small_fibonacci() {
-        let sys = TaskSystem::new(TaskSystemKind::Nosv, 4, false);
+        let sys = TaskSystem::new(nosv_cm(), 4, false);
         let result = Arc::new(AtomicU64::new(0));
         let r = Arc::clone(&result);
         sys.run("fib", move |ctx| {
@@ -589,7 +828,7 @@ mod tests {
 
     #[test]
     fn trace_collects_task_events() {
-        let sys = TaskSystem::new(TaskSystemKind::Coro, 2, true);
+        let sys = TaskSystem::new(coro_cm(), 2, true);
         sys.run("traced", |ctx| {
             for _ in 0..4 {
                 ctx.spawn("leaf", |_| {
@@ -607,7 +846,7 @@ mod tests {
 
     #[test]
     fn sequential_runs_reuse_system() {
-        let sys = TaskSystem::new(TaskSystemKind::Coro, 2, false);
+        let sys = TaskSystem::new(coro_cm(), 2, false);
         for _ in 0..3 {
             sys.run("r", |ctx| {
                 ctx.spawn("c", |_| {});
@@ -633,7 +872,7 @@ mod tests {
             ctx.spawn("link", move |c| chain(c, depth - 1, h));
             ctx.wait_children();
         }
-        let sys = TaskSystem::new(TaskSystemKind::Coro, 2, false);
+        let sys = TaskSystem::new(coro_cm(), 2, false);
         let hits = Arc::new(AtomicU64::new(0));
         let h = Arc::clone(&hits);
         sys.run("chain", move |ctx| chain(ctx, 50, h)).unwrap();

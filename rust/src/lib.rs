@@ -12,12 +12,18 @@
 //! - [`core`] — the model: five manager traits plus the stateless
 //!   (Topology/Device/MemorySpace/ComputeResource/ExecutionUnit) and
 //!   stateful (Instance/ProcessingUnit/ExecutionState/memory slots)
-//!   component families.
+//!   component families, and the **plugin subsystem**
+//!   ([`core::plugin`]): backend descriptors with capability bitsets, a
+//!   registry, and a [`RuntimeBuilder`] resolving full manager sets from
+//!   backend *names* or capability requirements — apps never touch a
+//!   concrete backend type.
 //! - [`backends`] — built-in plugins (Table 1): host topology & memory
 //!   (HWLoc-analogue), threads (Pthreads), fibers (Boost.Context),
 //!   thread-per-task (nOS-V), distributed one-sided comms (MPI / LPF
 //!   analogues over a socket substrate), and an XLA/PJRT accelerator
-//!   backend executing AOT-compiled Pallas/JAX kernels.
+//!   backend executing AOT-compiled Pallas/JAX kernels. All seven are
+//!   registered in [`backends::registry`]; the Table 1 coverage matrix
+//!   is a derived view over it.
 //! - [`frontends`] — ready-to-use libraries built *only* on the core API:
 //!   Channels (SPSC/MPSC), DataObject, RPC, and Tasking.
 //! - [`netsim`] — the distributed substrate: instance launcher/rendezvous,
@@ -47,6 +53,10 @@ pub use crate::core::ids::{
 };
 pub use crate::core::instance::{Instance, InstanceManager, InstanceTemplate};
 pub use crate::core::memory::{LocalMemorySlot, MemoryManager};
+pub use crate::core::plugin::{
+    BackendCoverage, BackendPlugin, Capabilities, ManagerSet, PluginContext, Registry,
+    RuntimeBuilder,
+};
 pub use crate::core::topology::{
     ComputeResource, Device, DeviceKind, MemorySpace, MemorySpaceKind, Topology,
     TopologyManager,

@@ -1,13 +1,23 @@
 //! `hicr` — the leader entrypoint and CLI.
 //!
 //! Subcommands:
-//! - `topology`            print the merged local topology (hostmem + xlacomp)
-//! - `backends`            print the backend coverage matrix (Table 1)
-//! - `launch --np N -- <app> [args]`
+//! - `topology`            print the merged local topology (every
+//!                         topology-capable plugin in the registry)
+//! - `backends`            print the backend coverage matrix (Table 1,
+//!                         derived from the plugin registry)
+//! - `run <app> [flags]`   run a single-instance app with backends
+//!                         selected *by name*:
+//!                         `run fibonacci --compute <threads|coro|nosv>`
+//! - `launch --np N [--comm C] [--compute C] -- <app> [args]`
 //!                         start the hub, spawn N instance processes, run
 //!                         the named distributed app in each
 //! - `worker`              internal: instance-process entrypoint (spawned
 //!                         by `launch`; configured via HICR_* env vars)
+//!
+//! All wiring goes through `core::plugin::RuntimeBuilder`: no subcommand
+//! names a concrete backend type — backends are chosen by CLI name
+//! (`--compute coro`) or capability and resolved to `Arc<dyn …Manager>`
+//! trait objects.
 //!
 //! Distributed apps available under `launch`: `pingpong` (Test Case 1
 //! measured mode), `jacobi` (Fig. 11 halo-exchange solver), `spawntest`
@@ -15,45 +25,54 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
-
-use hicr::apps::{jacobi, pingpong};
-use hicr::backends::hostmem::HostTopologyManager;
+use hicr::apps::{fibonacci, jacobi, pingpong};
 use hicr::backends::mpisim::instance::{ENV_HUB, ENV_RANK, ENV_WORLD};
-use hicr::backends::mpisim::MpiInstanceManager;
-use hicr::backends::xlacomp::XlaTopologyManager;
-use hicr::core::instance::{ensure_instances, InstanceManager, InstanceTemplate};
-use hicr::core::topology::{TopologyManager, TopologyRequirements};
-use hicr::frontends::tasking::{TaskSystem, TaskSystemKind};
+use hicr::core::instance::{ensure_instances, InstanceTemplate};
+use hicr::core::topology::TopologyRequirements;
+use hicr::frontends::tasking::TaskSystem;
+use hicr::netsim::endpoint::Endpoint;
 use hicr::netsim::hub::Hub;
-use hicr::runtime::XlaRuntime;
+use hicr::{CommunicationManager, InstanceManager, PluginContext, Registry};
+
+/// Backend selections forwarded from `launch` to every worker process.
+const ENV_COMM: &str = "HICR_COMM";
+const ENV_COMPUTE: &str = "HICR_COMPUTE";
+
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
+fn err(msg: impl Into<String>) -> Box<dyn std::error::Error> {
+    msg.into().into()
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     match args.get(1).map(String::as_str) {
         Some("topology") => cmd_topology(),
         Some("backends") => cmd_backends(),
+        Some("run") => cmd_run(&args[2..]),
         Some("launch") => cmd_launch(&args[2..]),
         Some("worker") => cmd_worker(),
         _ => {
             eprintln!(
-                "usage: hicr <topology|backends|launch --np N -- <app> [args]>\n\
-                 apps: pingpong | jacobi [n iters] | spawntest"
+                "usage: hicr <topology|backends|run <app> [flags]|launch --np N \
+                 [--comm C] [--compute C] -- <app> [args]>\n\
+                 run apps:    fibonacci [--n N] | jacobi [--n N --iters I] | \
+                 inference [--images M]   (+ --compute <name> --workers W)\n\
+                 launch apps: pingpong | jacobi [n iters] | spawntest\n\
+                 backends: selected by name from the plugin registry \
+                 (`hicr backends` lists them)"
             );
             Ok(())
         }
     }
 }
 
+/// Merge the topology of every topology-capable plugin (the paper's
+/// combined-manager pattern, Fig. 4/5 — previously hand-wired to two
+/// concrete managers, now derived from the registry).
 fn cmd_topology() -> Result<()> {
-    let mut topo = HostTopologyManager::new().query_topology()?;
-    match XlaRuntime::cpu() {
-        Ok(rt) => {
-            let accel = XlaTopologyManager::new(Arc::new(rt)).query_topology()?;
-            topo.merge(accel).ok();
-        }
-        Err(e) => eprintln!("(xlacomp unavailable: {e})"),
-    }
+    let registry = hicr::backends::registry();
+    let topo = hicr::backends::merged_topology(&registry, &PluginContext::new())?;
     for d in &topo.devices {
         println!("device {} [{:?}] '{}'", d.id, d.kind, d.name);
         for m in &d.memory_spaces {
@@ -91,9 +110,130 @@ fn cmd_backends() -> Result<()> {
     Ok(())
 }
 
-/// `hicr launch --np N -- <app> [args]`
+/// `hicr run <app> [--compute NAME] [--workers W] [--n N] [--iters I]
+/// [--images M]` — single-instance apps with registry-resolved backends.
+fn cmd_run(args: &[String]) -> Result<()> {
+    let app = args
+        .first()
+        .ok_or_else(|| err("run requires an app: fibonacci | jacobi | inference"))?
+        .clone();
+    fn flag_value<'a>(args: &'a [String], i: usize, flag: &str) -> Result<&'a str> {
+        args.get(i + 1)
+            .map(String::as_str)
+            .ok_or_else(|| err(format!("{flag} needs a value")))
+    }
+    let mut compute = "coro".to_string();
+    let mut workers = 4usize;
+    let mut n: Option<u64> = None;
+    let mut iters = 10usize;
+    let mut images = 200usize;
+    let mut i = 1;
+    while i < args.len() {
+        let flag = args[i].as_str();
+        match flag {
+            "--compute" => {
+                compute = flag_value(args, i, flag)?.to_string();
+                i += 1;
+            }
+            "--workers" => {
+                workers = flag_value(args, i, flag)?
+                    .parse()
+                    .map_err(|e| err(format!("bad --workers: {e}")))?;
+                i += 1;
+            }
+            "--n" => {
+                n = Some(
+                    flag_value(args, i, flag)?
+                        .parse()
+                        .map_err(|e| err(format!("bad --n: {e}")))?,
+                );
+                i += 1;
+            }
+            "--iters" => {
+                iters = flag_value(args, i, flag)?
+                    .parse()
+                    .map_err(|e| err(format!("bad --iters: {e}")))?;
+                i += 1;
+            }
+            "--images" => {
+                images = flag_value(args, i, flag)?
+                    .parse()
+                    .map_err(|e| err(format!("bad --images: {e}")))?;
+                i += 1;
+            }
+            other => return Err(err(format!("unknown run flag {other}"))),
+        }
+        i += 1;
+    }
+    let registry = hicr::backends::registry();
+    let task_system = |registry: &Registry, workers: usize| -> Result<Arc<TaskSystem>> {
+        let cm = registry
+            .builder()
+            .compute(compute.as_str())
+            .build()?
+            .compute()?;
+        Ok(TaskSystem::new(cm, workers, false))
+    };
+    match app.as_str() {
+        "fibonacci" => {
+            let n = n.unwrap_or(16);
+            let sys = task_system(&registry, workers)?;
+            let run = fibonacci::run(&sys, n)?;
+            sys.shutdown()?;
+            println!(
+                "fibonacci n={n} value={} tasks={} backend={} elapsed={:.3}s",
+                run.value,
+                run.tasks_executed,
+                sys.backend_name(),
+                run.elapsed_s
+            );
+        }
+        "jacobi" => {
+            let n = n.unwrap_or(32) as usize;
+            let sys = task_system(&registry, workers)?;
+            let mut grid = jacobi::Grid::new(n);
+            let run = jacobi::run_local(&sys, &mut grid, iters, (1, 2, 2))?;
+            sys.shutdown()?;
+            println!(
+                "jacobi n={n} iters={iters} checksum={:.9} backend={} \
+                 elapsed={:.3}s gflops={:.3}",
+                run.checksum,
+                sys.backend_name(),
+                run.elapsed_s,
+                run.gflops
+            );
+        }
+        "inference" => {
+            let bundle =
+                hicr::runtime::ArtifactBundle::load(&hicr::runtime::ArtifactBundle::default_dir())
+                    .map_err(|e| err(format!("artifacts not built (`make artifacts`): {e}")))?;
+            let cm = registry
+                .builder()
+                .compute(compute.as_str())
+                .build()?
+                .compute()?;
+            let provider = hicr::apps::inference::NativeKernels::new(&bundle, cm)?;
+            let report = hicr::apps::inference::evaluate(&provider, &bundle, images)?;
+            println!(
+                "inference images={} accuracy={:.4} img0_pred={} backend={} \
+                 elapsed={:.3}s",
+                report.images,
+                report.accuracy,
+                report.img0_pred,
+                report.backend,
+                report.elapsed_s
+            );
+        }
+        other => return Err(err(format!("unknown run app {other}"))),
+    }
+    Ok(())
+}
+
+/// `hicr launch --np N [--comm C] [--compute C] -- <app> [args]`
 fn cmd_launch(args: &[String]) -> Result<()> {
     let mut np = 2usize;
+    let mut comm = "lpfsim".to_string();
+    let mut compute = "coro".to_string();
     let mut rest = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -101,26 +241,41 @@ fn cmd_launch(args: &[String]) -> Result<()> {
             "--np" => {
                 np = args
                     .get(i + 1)
-                    .context("--np needs a value")?
+                    .ok_or_else(|| err("--np needs a value"))?
                     .parse()
-                    .context("bad --np")?;
+                    .map_err(|e| err(format!("bad --np: {e}")))?;
+                i += 1;
+            }
+            "--comm" => {
+                comm = args
+                    .get(i + 1)
+                    .ok_or_else(|| err("--comm needs a value"))?
+                    .clone();
+                i += 1;
+            }
+            "--compute" => {
+                compute = args
+                    .get(i + 1)
+                    .ok_or_else(|| err("--compute needs a value"))?
+                    .clone();
                 i += 1;
             }
             "--" => {
                 rest = args[i + 1..].to_vec();
                 break;
             }
-            other => bail!("unknown launch flag {other}"),
+            other => return Err(err(format!("unknown launch flag {other}"))),
         }
         i += 1;
     }
     if rest.is_empty() {
-        bail!("launch requires `-- <app> [args]`");
+        return Err(err("launch requires `-- <app> [args]`"));
     }
     let sock = std::env::temp_dir().join(format!("hicr-hub-{}.sock", std::process::id()));
     let exe = std::env::current_exe()?;
     let sock2 = sock.clone();
     let rest2 = rest.clone();
+    let (comm2, compute2) = (comm.clone(), compute.clone());
     // Runtime spawns (Fig. 7) reuse the same worker entry.
     let spawn_fn = move |rank: u32, _template: &str| {
         std::process::Command::new(&exe)
@@ -128,6 +283,8 @@ fn cmd_launch(args: &[String]) -> Result<()> {
             .env(ENV_RANK, rank.to_string())
             .env(ENV_WORLD, "0")
             .env(ENV_HUB, &sock2)
+            .env(ENV_COMM, &comm2)
+            .env(ENV_COMPUTE, &compute2)
             .env("HICR_APP", rest2.join(" "))
             .spawn()
             .map_err(|e| hicr::HicrError::Instance(format!("spawn rank {rank}: {e}")))?;
@@ -143,9 +300,11 @@ fn cmd_launch(args: &[String]) -> Result<()> {
                 .env(ENV_RANK, rank.to_string())
                 .env(ENV_WORLD, np.to_string())
                 .env(ENV_HUB, &sock)
+                .env(ENV_COMM, &comm)
+                .env(ENV_COMPUTE, &compute)
                 .env("HICR_APP", rest.join(" "))
                 .spawn()
-                .with_context(|| format!("spawn rank {rank}"))?,
+                .map_err(|e| err(format!("spawn rank {rank}: {e}")))?,
         );
     }
     let hub_result = hub.run();
@@ -159,40 +318,58 @@ fn cmd_launch(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Instance-process entrypoint.
+/// Instance-process entrypoint. The full manager set is resolved through
+/// the registry: instance management by name ("mpisim"), communication by
+/// the launcher-forwarded `--comm` selection, tasking compute by
+/// `--compute` — the worker never touches a concrete backend type.
 fn cmd_worker() -> Result<()> {
     let app = std::env::var("HICR_APP").unwrap_or_default();
+    let comm = std::env::var(ENV_COMM).unwrap_or_else(|_| "lpfsim".to_string());
+    let compute = std::env::var(ENV_COMPUTE).unwrap_or_else(|_| "coro".to_string());
     let words: Vec<&str> = app.split_whitespace().collect();
-    let im = MpiInstanceManager::from_env().context("worker env")?;
+
+    // Substrate bootstrap: connect this process to the launcher's hub.
+    let rank: u32 = std::env::var(ENV_RANK)
+        .map_err(|_| err(format!("{ENV_RANK} not set")))?
+        .parse()
+        .map_err(|e| err(format!("bad {ENV_RANK}: {e}")))?;
+    let hub = std::env::var(ENV_HUB).map_err(|_| err(format!("{ENV_HUB} not set")))?;
+    let endpoint = Endpoint::connect(std::path::Path::new(&hub), rank)?;
+
+    let registry = hicr::backends::registry();
+    let set = registry
+        .builder()
+        .with(endpoint.clone())
+        .instance("mpisim")
+        .communication(comm.as_str())
+        .build()?;
+    let im = set.instance()?;
+    let cmm = set.communication()?;
     let me = im.current_instance();
-    let endpoint = im.endpoint().clone();
     let result = match words.first().copied() {
-        Some("pingpong") => worker_pingpong(&im),
+        Some("pingpong") => worker_pingpong(im.as_ref(), &cmm),
         Some("jacobi") => {
             let n: usize = words.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
             let iters: usize = words.get(2).and_then(|s| s.parse().ok()).unwrap_or(20);
-            worker_jacobi(&im, n, iters)
+            worker_jacobi(im.as_ref(), &cmm, &registry, &compute, n, iters)
         }
-        Some("spawntest") => worker_spawntest(&im),
-        other => bail!("unknown app {other:?}"),
+        Some("spawntest") => worker_spawntest(im.as_ref()),
+        other => Err(err(format!("unknown app {other:?}"))),
     };
     endpoint.bye();
-    result.map_err(|e| anyhow::anyhow!("rank {} app error: {e}", me.id))
+    result.map_err(|e| err(format!("rank {} app error: {e}", me.id)))
 }
 
 /// Test Case 1, measured mode: rank 0 pings, rank 1 pongs.
-fn worker_pingpong(im: &MpiInstanceManager) -> Result<()> {
+fn worker_pingpong(im: &dyn InstanceManager, cmm: &Arc<dyn CommunicationManager>) -> Result<()> {
     use hicr::apps::pingpong::Side;
     let rank = im.current_instance().id.0;
-    let cmm: Arc<dyn hicr::CommunicationManager> = Arc::new(
-        hicr::backends::lpfsim::communication_manager(im.endpoint().clone()),
-    );
     let sizes: Vec<usize> = vec![1, 64, 4096, 65536, 1 << 20];
     let reps = 20;
     for (si, &size) in sizes.iter().enumerate() {
         let tag = 9000 + (si as u64) * 4;
         let side = if rank == 0 { Side::Pinger } else { Side::Ponger };
-        let (mut p, mut c) = pingpong::build_channels(Arc::clone(&cmm), tag, size, side)?;
+        let (mut p, mut c) = pingpong::build_channels(Arc::clone(cmm), tag, size, side)?;
         if rank == 0 {
             let times = pingpong::run_pinger(&mut p, &mut c, size, reps)?;
             let point = pingpong::goodput_from_rtts(size as u64, &times);
@@ -209,16 +386,22 @@ fn worker_pingpong(im: &MpiInstanceManager) -> Result<()> {
     Ok(())
 }
 
-/// Fig. 11 worker: distributed Jacobi over the LPF backend.
-fn worker_jacobi(im: &MpiInstanceManager, n: usize, iters: usize) -> Result<()> {
+/// Fig. 11 worker: distributed Jacobi over the selected communication
+/// backend, tasking over the selected compute backend.
+fn worker_jacobi(
+    im: &dyn InstanceManager,
+    cmm: &Arc<dyn CommunicationManager>,
+    registry: &Registry,
+    compute: &str,
+    n: usize,
+    iters: usize,
+) -> Result<()> {
     let rank = im.current_instance().id.0;
     let world = im.instances()?.len() as u32;
-    let cmm: Arc<dyn hicr::CommunicationManager> = Arc::new(
-        hicr::backends::lpfsim::communication_manager(im.endpoint().clone()),
-    );
-    let sys = TaskSystem::new(TaskSystemKind::Coro, 2, false);
+    let cm = registry.builder().compute(compute).build()?.compute()?;
+    let sys = TaskSystem::new(cm, 2, false);
     let run = jacobi::run_distributed(
-        &cmm,
+        cmm,
         &sys,
         rank,
         world,
@@ -237,7 +420,7 @@ fn worker_jacobi(im: &MpiInstanceManager, n: usize, iters: usize) -> Result<()> 
 }
 
 /// Fig. 7 demo: root tops up the instance count at runtime.
-fn worker_spawntest(im: &MpiInstanceManager) -> Result<()> {
+fn worker_spawntest(im: &dyn InstanceManager) -> Result<()> {
     let desired = 3;
     let template = InstanceTemplate::new(TopologyRequirements::default());
     let created = ensure_instances(im, desired, &template)?;

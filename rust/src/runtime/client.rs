@@ -4,6 +4,12 @@
 //! Interchange is HLO *text* (see `/opt/xla-example/README.md`): jax>=0.5
 //! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids.
+//!
+//! The real PJRT path sits behind the `xla` cargo feature (DESIGN.md §2:
+//! zero mandatory external dependencies). Without it this module is a
+//! *stub* with the identical public API whose constructor reports the
+//! runtime as unavailable — every caller already handles that gracefully
+//! (topology merge, kernel providers, the Table 2 bench skip).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -14,6 +20,7 @@ use crate::core::error::{HicrError, Result};
 /// A compiled, ready-to-run computation.
 pub struct Executable {
     pub name: String,
+    #[cfg(feature = "xla")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -26,6 +33,7 @@ unsafe impl Sync for Executable {}
 impl Executable {
     /// Run with f32 inputs given as (data, dims) pairs; returns the flat
     /// f32 output of the 1-tuple result (our AOT convention).
+    #[cfg(feature = "xla")]
     pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
         let mut literals = Vec::with_capacity(inputs.len());
         for (data, dims) in inputs {
@@ -50,10 +58,21 @@ impl Executable {
         let out = out.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
     }
+
+    /// Stub: the runtime is never constructible without the `xla`
+    /// feature, so this is unreachable in practice.
+    #[cfg(not(feature = "xla"))]
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        Err(HicrError::Xla(format!(
+            "executable '{}': built without the `xla` feature",
+            self.name
+        )))
+    }
 }
 
 /// PJRT CPU client with an executable cache keyed by artifact name.
 pub struct XlaRuntime {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
 }
@@ -62,7 +81,9 @@ unsafe impl Send for XlaRuntime {}
 unsafe impl Sync for XlaRuntime {}
 
 impl XlaRuntime {
-    /// Create a CPU-PJRT runtime.
+    /// Create a CPU-PJRT runtime. Without the `xla` feature this always
+    /// fails: the accelerator backend is unavailable in this build.
+    #[cfg(feature = "xla")]
     pub fn cpu() -> Result<Self> {
         Ok(Self {
             client: xla::PjRtClient::cpu()?,
@@ -70,15 +91,40 @@ impl XlaRuntime {
         })
     }
 
+    /// Stub constructor: reports the PJRT runtime as unavailable.
+    #[cfg(not(feature = "xla"))]
+    pub fn cpu() -> Result<Self> {
+        Err(HicrError::Xla(
+            "PJRT unavailable: hicr was built without the `xla` feature \
+             (see rust/Cargo.toml)"
+                .into(),
+        ))
+    }
+
     pub fn platform_name(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "xla")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            "unavailable".to_string()
+        }
     }
 
     pub fn device_count(&self) -> usize {
-        self.client.device_count()
+        #[cfg(feature = "xla")]
+        {
+            self.client.device_count()
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            0
+        }
     }
 
     /// Load + compile an HLO text file, caching by `name`.
+    #[cfg(feature = "xla")]
     pub fn load_hlo_text(&self, name: &str, path: &Path) -> Result<Arc<Executable>> {
         if let Some(exe) = self.cache.lock().unwrap().get(name) {
             return Ok(Arc::clone(exe));
@@ -99,13 +145,21 @@ impl XlaRuntime {
         Ok(exe)
     }
 
+    /// Stub: unreachable (the stub runtime cannot be constructed).
+    #[cfg(not(feature = "xla"))]
+    pub fn load_hlo_text(&self, _name: &str, _path: &Path) -> Result<Arc<Executable>> {
+        Err(HicrError::Xla(
+            "built without the `xla` feature".into(),
+        ))
+    }
+
     /// Number of compiled executables currently cached.
     pub fn cached_executables(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
 
