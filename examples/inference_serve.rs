@@ -85,10 +85,18 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     )?;
     let mut producer = SpscProducer::create(Arc::clone(&cmm), Tag(42), 0, 4, 1024, alloc(8)?)?;
 
+    // Router streams request ids in batches: one doorbell + zero fences
+    // (shared-memory ring) per 32 requests instead of per request.
     let router = std::thread::spawn(move || -> hicr::Result<()> {
-        for i in 0..n_requests {
-            let idx = (i % 10_000) as u32;
-            producer.push_blocking(&idx.to_le_bytes())?;
+        let mut i = 0usize;
+        while i < n_requests {
+            let n = 32.min(n_requests - i);
+            let mut batch = Vec::with_capacity(n * 4);
+            for j in 0..n {
+                batch.extend_from_slice(&(((i + j) % 10_000) as u32).to_le_bytes());
+            }
+            producer.push_batch_blocking(&batch)?;
+            i += n;
         }
         Ok(())
     });
@@ -98,13 +106,21 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut correct = 0usize;
     let mut receivers = Vec::new();
     let mut labels = Vec::new();
-    let mut buf = [0u8; 4];
-    for _ in 0..n_requests {
-        consumer.pop_blocking(&mut buf)?;
-        let idx = u32::from_le_bytes(buf) as usize % bundle.test_count();
-        let rx = batcher.submit(bundle.test_image(idx).to_vec())?;
-        receivers.push(rx);
-        labels.push(bundle.test_labels[idx]);
+    // Worker drains the channel in batches and feeds the batcher, so the
+    // whole ingest path (ring pop → dynamic batcher) is batch-granular.
+    let mut buf = [0u8; 64 * 4];
+    let mut served = 0usize;
+    while served < n_requests {
+        let popped = consumer.pop_batch_blocking(&mut buf)? as usize;
+        for r in 0..popped.min(n_requests - served) {
+            let idx = u32::from_le_bytes(buf[r * 4..(r + 1) * 4].try_into().unwrap())
+                as usize
+                % bundle.test_count();
+            let rx = batcher.submit(bundle.test_image(idx).to_vec())?;
+            receivers.push(rx);
+            labels.push(bundle.test_labels[idx]);
+        }
+        served += popped;
         // Drain completions opportunistically to bound memory.
         while receivers.len() > 256 {
             let rx = receivers.remove(0);

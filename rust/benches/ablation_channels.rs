@@ -3,6 +3,12 @@
 //! memory) vs *non-locking* (a dedicated ring per producer, no exclusion,
 //! n× memory). Measures end-to-end message throughput as producer count
 //! grows, plus the memory cost of each mode.
+//!
+//! Each mode runs two series: per-message `push` (the pre-zero-copy
+//! "before" datapath shape) and `push_batch`/`pop_batch` (the
+//! reserve/commit "after" path: one doorbell and at most one fence per
+//! batch) — quantifying the fence-elision win of EXPERIMENTS.md §Perf.
+//! `--json <dir>` exports `BENCH_ablation_channels.json`.
 
 use std::sync::Arc;
 
@@ -21,7 +27,10 @@ fn slot(len: usize) -> LocalMemorySlot {
     LocalMemorySlot::alloc(MemorySpaceId(1), len).unwrap()
 }
 
-fn run_locking(n_producers: usize, per_producer: u64, tag: u64) -> f64 {
+/// Messages per batch in the batched series.
+const BATCH: u64 = 32;
+
+fn run_locking(n_producers: usize, per_producer: u64, tag: u64, batched: bool) -> f64 {
     let cmm: Arc<ThreadsCommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
     let mut consumer = LockingMpscConsumer::create(
         cmm.as_ref(),
@@ -47,15 +56,35 @@ fn run_locking(n_producers: usize, per_producer: u64, tag: u64) -> f64 {
     for pid in 0..n_producers {
         let p = producer.clone();
         handles.push(std::thread::spawn(move || {
-            let msg = [pid as u8; MSG];
-            for _ in 0..per_producer {
-                p.push_blocking(&msg).unwrap();
+            if batched {
+                let batch = vec![pid as u8; MSG * BATCH as usize];
+                for _ in 0..per_producer / BATCH {
+                    p.push_batch_blocking(&batch).unwrap();
+                }
+                let rem = (per_producer % BATCH) as usize;
+                if rem > 0 {
+                    p.push_batch_blocking(&batch[..rem * MSG]).unwrap();
+                }
+            } else {
+                let msg = [pid as u8; MSG];
+                for _ in 0..per_producer {
+                    p.push_blocking(&msg).unwrap();
+                }
             }
         }));
     }
-    let mut out = [0u8; MSG];
-    for _ in 0..(n_producers as u64 * per_producer) {
-        consumer.pop_blocking(&mut out).unwrap();
+    let total = n_producers as u64 * per_producer;
+    if batched {
+        let mut out = vec![0u8; MSG * BATCH as usize];
+        let mut got = 0u64;
+        while got < total {
+            got += consumer.pop_batch_blocking(&mut out).unwrap();
+        }
+    } else {
+        let mut out = [0u8; MSG];
+        for _ in 0..total {
+            consumer.pop_blocking(&mut out).unwrap();
+        }
     }
     for h in handles {
         h.join().unwrap();
@@ -63,7 +92,7 @@ fn run_locking(n_producers: usize, per_producer: u64, tag: u64) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
-fn run_nonlocking(n_producers: usize, per_producer: u64, tag: u64) -> f64 {
+fn run_nonlocking(n_producers: usize, per_producer: u64, tag: u64, batched: bool) -> f64 {
     let cmm: Arc<ThreadsCommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
     let mut consumer = NonLockingMpscConsumer::create(
         cmm.as_ref(),
@@ -90,15 +119,35 @@ fn run_nonlocking(n_producers: usize, per_producer: u64, tag: u64) -> f64 {
                 slot(8),
             )
             .unwrap();
-            let msg = [pid as u8; MSG];
-            for _ in 0..per_producer {
-                p.push_blocking(&msg).unwrap();
+            if batched {
+                let batch = vec![pid as u8; MSG * BATCH as usize];
+                for _ in 0..per_producer / BATCH {
+                    p.push_batch_blocking(&batch).unwrap();
+                }
+                let rem = (per_producer % BATCH) as usize;
+                if rem > 0 {
+                    p.push_batch_blocking(&batch[..rem * MSG]).unwrap();
+                }
+            } else {
+                let msg = [pid as u8; MSG];
+                for _ in 0..per_producer {
+                    p.push_blocking(&msg).unwrap();
+                }
             }
         }));
     }
-    let mut out = [0u8; MSG];
-    for _ in 0..(n_producers as u64 * per_producer) {
-        consumer.pop_blocking(&mut out).unwrap();
+    let total = n_producers as u64 * per_producer;
+    if batched {
+        let mut out = vec![0u8; MSG * BATCH as usize];
+        let mut got = 0u64;
+        while got < total {
+            got += consumer.pop_batch_blocking(&mut out).unwrap();
+        }
+    } else {
+        let mut out = [0u8; MSG];
+        for _ in 0..total {
+            consumer.pop_blocking(&mut out).unwrap();
+        }
     }
     for h in handles {
         h.join().unwrap();
@@ -109,15 +158,23 @@ fn run_nonlocking(n_producers: usize, per_producer: u64, tag: u64) -> f64 {
 fn main() {
     let args = BenchArgs::parse(3);
     let per_producer: u64 = if args.quick { 2_000 } else { 20_000 };
-    let mut report = Report::new("Ablation: MPSC locking vs non-locking");
+    let mut report = Report::named(
+        "Ablation: MPSC locking vs non-locking, per-message vs batched",
+        "ablation_channels",
+    );
     for n_producers in [1usize, 2, 4, 8] {
-        for mode in ["locking", "nonlocking"] {
+        for mode in ["locking", "nonlocking", "locking-batch", "nonlocking-batch"] {
+            let batched = mode.ends_with("-batch");
             let mut samples = Vec::new();
             for rep in 0..args.reps {
-                let tag = 10_000 + n_producers as u64 * 100 + rep as u64 * 10;
-                let t = match mode {
-                    "locking" => run_locking(n_producers, per_producer, tag),
-                    _ => run_nonlocking(n_producers, per_producer, tag + 5),
+                let tag = 10_000
+                    + n_producers as u64 * 1000
+                    + rep as u64 * 100
+                    + if batched { 50 } else { 0 };
+                let t = if mode.starts_with("locking") {
+                    run_locking(n_producers, per_producer, tag, batched)
+                } else {
+                    run_nonlocking(n_producers, per_producer, tag + 5, batched)
                 };
                 samples.push(t);
             }
@@ -139,5 +196,5 @@ fn main() {
             n_producers
         );
     }
-    report.print();
+    report.finish(&args);
 }

@@ -13,8 +13,8 @@
 use std::sync::Arc;
 
 use hicr::apps::pingpong::{
-    build_channels, goodput_from_rtts, modeled_series, paper_sizes, run_pinger,
-    run_ponger, Side,
+    build_channels, build_channels_with_capacity, goodput_from_rtts, modeled_series,
+    paper_sizes, run_pinger, run_pinger_batched, run_ponger, run_ponger_batched, Side,
 };
 use hicr::backends::threads::ThreadsCommunicationManager;
 use hicr::netsim::fabric::{LPF_IBVERBS_EDR, MPI_RMA_EDR};
@@ -54,8 +54,37 @@ fn main() {
     assert!((40.0..=90.0).contains(&small_ratio));
     assert!((0.7..=0.85).contains(&big_frac));
 
-    // Measured loopback series over the real channel protocol.
-    let mut report = Report::new("Fig 8 (measured loopback validation)");
+    // Modeled batched series: the reserve/commit + push_batch datapath
+    // pays one fence per batch, closing most of the fence's share of the
+    // per-message cost (the "after" of this PR's datapath rework).
+    let batch = 32u64;
+    println!("\n== Fig 8b: fence-amortized goodput (batch = {batch}) ==");
+    println!(
+        "{:>14} {:>20} {:>20} {:>9} {:>9}",
+        "size (B)", "LPF batched", "MPI batched", "LPF gain", "MPI gain"
+    );
+    for &s in sizes.iter().step_by(6) {
+        let lb = LPF_IBVERBS_EDR.batched_goodput_bps(s, batch);
+        let mb = MPI_RMA_EDR.batched_goodput_bps(s, batch);
+        let lg = lb / LPF_IBVERBS_EDR.pingpong_goodput_bps(s);
+        let mg = mb / MPI_RMA_EDR.pingpong_goodput_bps(s);
+        println!(
+            "{:>14} {:>20} {:>20} {:>9.2} {:>9.2}",
+            s,
+            fmt_bps(lb),
+            fmt_bps(mb),
+            lg,
+            mg
+        );
+        assert!(lg >= 1.0 && mg >= 1.0, "batching must never lose goodput");
+    }
+
+    // Measured loopback series over the real channel protocol:
+    // per-message pushes ("before") and batched reserve/commit ("after").
+    let mut report = Report::named(
+        "Fig 8 (measured loopback validation, per-message vs batched)",
+        "fig8_pingpong",
+    );
     let reps = args.reps.max(3);
     for (i, &size) in [1usize, 4096, 65536, 1 << 20, 8 << 20]
         .iter()
@@ -80,5 +109,29 @@ fn main() {
             derived_unit: "bit/s",
         });
     }
-    report.print();
+    // Batched series (small/medium sizes: a batch-deep ring per side).
+    for (i, &size) in [1usize, 4096, 65536].iter().enumerate() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let tag = 8900 + i as u64 * 4;
+        let cmm2 = Arc::clone(&cmm);
+        let ponger = std::thread::spawn(move || {
+            let (mut p, mut c) =
+                build_channels_with_capacity(cmm2, tag, size, batch, Side::Ponger).unwrap();
+            run_ponger_batched(&mut p, &mut c, size, batch, reps).unwrap();
+        });
+        let (mut p, mut c) =
+            build_channels_with_capacity(cmm, tag, size, batch, Side::Pinger).unwrap();
+        let rtts = run_pinger_batched(&mut p, &mut c, size, batch, reps).unwrap();
+        ponger.join().unwrap();
+        // Goodput counts the whole batch's payload per round trip.
+        let point = goodput_from_rtts(size as u64 * batch, &rtts);
+        report.push(Measurement {
+            label: format!("loopback-batched/{size}Bx{batch}"),
+            samples_s: rtts,
+            derived: vec![point.goodput_bps],
+            derived_unit: "bit/s",
+        });
+    }
+    report.finish(&args);
 }

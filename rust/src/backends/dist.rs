@@ -12,8 +12,8 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 
 use crate::core::communication::{
-    validate_bounds, validate_direction, CommunicationManager, DataEndpoint,
-    Direction, GlobalMemorySlot,
+    validate_bounds, validate_direction, CommunicationManager, CompletionHandle,
+    DataEndpoint, Direction, GlobalMemorySlot,
 };
 use crate::core::error::{HicrError, Result};
 use crate::core::ids::{InstanceId, Key, MemorySpaceId, Tag};
@@ -114,6 +114,18 @@ impl CommunicationManager for DistCommunicationManager {
         src_offset: usize,
         len: usize,
     ) -> Result<()> {
+        self.memcpy_async(dst, dst_offset, src, src_offset, len)
+            .map(|_| ())
+    }
+
+    fn memcpy_async(
+        &self,
+        dst: &DataEndpoint,
+        dst_offset: usize,
+        src: &DataEndpoint,
+        src_offset: usize,
+        len: usize,
+    ) -> Result<CompletionHandle> {
         let dir = validate_direction(dst, src)?;
         validate_bounds(dst, dst_offset, len)?;
         validate_bounds(src, src_offset, len)?;
@@ -123,6 +135,7 @@ impl CommunicationManager for DistCommunicationManager {
                     unreachable!()
                 };
                 d.copy_from(dst_offset, s, src_offset, len)?;
+                Ok(CompletionHandle::completed())
             }
             Direction::LocalToGlobal => {
                 let (DataEndpoint::Global(g), DataEndpoint::Local(_)) = (dst, src) else {
@@ -135,10 +148,15 @@ impl CommunicationManager for DistCommunicationManager {
                         HicrError::InvalidState("own window without local slot".into())
                     })?;
                     local.copy_from(dst_offset, &self.resolve_local(src)?, src_offset, len)?;
+                    Ok(CompletionHandle::completed())
                 } else {
+                    // Genuinely one-sided: the remote ack both retires the
+                    // fence accounting and flips the handle's flag.
                     let data = Self::read_local(&self.resolve_local(src)?, src_offset, len)?;
-                    self.endpoint
-                        .put(g.owner.0, g.tag, g.key, dst_offset, data)?;
+                    let (_op, flag) = self
+                        .endpoint
+                        .put_tracked(g.owner.0, g.tag, g.key, dst_offset, data)?;
+                    Ok(CompletionHandle::pending(flag))
                 }
             }
             Direction::GlobalToLocal => {
@@ -152,12 +170,13 @@ impl CommunicationManager for DistCommunicationManager {
                     })?;
                     d.copy_from(dst_offset, &local, src_offset, len)?;
                 } else {
+                    // Gets are synchronous at the endpoint level.
                     let data = self.endpoint.get(g.owner.0, g.tag, g.key, src_offset, len)?;
                     d.write_at(dst_offset, &data)?;
                 }
+                Ok(CompletionHandle::completed())
             }
         }
-        Ok(())
     }
 
     fn fence(&self, tag: Tag) -> Result<()> {

@@ -3,7 +3,8 @@
 //! Its compute manager creates processing units as system-scheduled
 //! threads mapped 1:1 (best effort) to the CPU cores detected by the
 //! hostmem backend; its communication manager implements intra-instance
-//! memcpy with mutex-based fencing. Table 1 row: Communication ✓,
+//! memcpy with sharded atomic fence accounting (the registry mutex is
+//! reserved for slot exchange/lookup). Table 1 row: Communication ✓,
 //! Compute ✓.
 
 pub mod communication;

@@ -29,6 +29,19 @@ unsafe impl Sync for SlotBuffer {}
 
 static NEXT_SLOT_ID: AtomicU64 = AtomicU64::new(1);
 
+thread_local! {
+    static THREAD_SLOT_ALLOCS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of slot allocations (`alloc` + `register_vec`) performed by the
+/// *calling thread* since it started. Perf instrumentation: steady-state
+/// datapaths (e.g. the channel push path) assert a zero delta across a
+/// window of operations. Thread-local so concurrently running tests don't
+/// contaminate each other's counts.
+pub fn thread_slot_allocations() -> u64 {
+    THREAD_SLOT_ALLOCS.with(|c| c.get())
+}
+
 /// A local memory slot: the minimum information required to describe a
 /// segment of memory (size, storage, owning memory space). Stateful —
 /// clones share the same underlying buffer (Arc), mirroring the C++
@@ -57,6 +70,7 @@ impl LocalMemorySlot {
         if len == 0 {
             return Err(HicrError::Allocation("zero-size slot".into()));
         }
+        THREAD_SLOT_ALLOCS.with(|c| c.set(c.get() + 1));
         Ok(Self {
             id: NEXT_SLOT_ID.fetch_add(1, Ordering::Relaxed),
             space,
@@ -74,6 +88,7 @@ impl LocalMemorySlot {
         if data.is_empty() {
             return Err(HicrError::Allocation("zero-size registration".into()));
         }
+        THREAD_SLOT_ALLOCS.with(|c| c.set(c.get() + 1));
         let len = data.len();
         Ok(Self {
             id: NEXT_SLOT_ID.fetch_add(1, Ordering::Relaxed),
@@ -175,6 +190,41 @@ impl LocalMemorySlot {
     /// Write a little-endian u64 at `offset`.
     pub fn write_u64(&self, offset: usize, v: u64) -> Result<()> {
         self.write_at(offset, &v.to_le_bytes())
+    }
+
+    /// Pointer to the 8-aligned u64 at `offset`, or an error: a plain
+    /// access "fallback" would be a silent data race, so misalignment is
+    /// rejected loudly instead (callers probe once at channel creation).
+    fn atomic_u64_at(&self, offset: usize) -> Result<*const AtomicU64> {
+        self.check_bounds(offset, 8)?;
+        let p = unsafe { (*self.buf.data.get()).as_ptr().add(offset) };
+        if p as usize % 8 != 0 {
+            return Err(HicrError::Bounds(format!(
+                "slot {} offset {offset} is not 8-aligned: atomic u64 \
+                 coordination words need an aligned buffer",
+                self.id
+            )));
+        }
+        Ok(p as *const AtomicU64)
+    }
+
+    /// Atomically read the little-endian u64 at `offset` with `Acquire`
+    /// ordering. Counterpart of [`Self::write_u64_release`]: a reader that
+    /// observes the written value also observes every plain write the
+    /// writer made before it — the producer/consumer doorbell contract of
+    /// the channels frontend, with no fence or lock on either side.
+    /// Errors if the word is not 8-byte aligned.
+    pub fn read_u64_acquire(&self, offset: usize) -> Result<u64> {
+        let a = self.atomic_u64_at(offset)?;
+        Ok(u64::from_le(unsafe { (*a).load(Ordering::Acquire) }))
+    }
+
+    /// Atomically write the little-endian u64 at `offset` with `Release`
+    /// ordering (see [`Self::read_u64_acquire`]).
+    pub fn write_u64_release(&self, offset: usize, v: u64) -> Result<()> {
+        let a = self.atomic_u64_at(offset)?;
+        unsafe { (*a).store(v.to_le(), Ordering::Release) };
+        Ok(())
     }
 
     /// Borrow the underlying bytes for in-place compute (e.g. running a
@@ -286,6 +336,19 @@ mod tests {
     }
 
     #[test]
+    fn u64_atomic_coordination_words_interop_with_plain() {
+        // Atomic and plain accessors must agree on the byte layout so
+        // mixed readers (e.g. `depth` vs a remote get) see one value.
+        let s = slot(16);
+        s.write_u64_release(0, 0x0102_0304_0506_0708).unwrap();
+        assert_eq!(s.read_u64(0).unwrap(), 0x0102_0304_0506_0708);
+        s.write_u64(8, 42).unwrap();
+        assert_eq!(s.read_u64_acquire(8).unwrap(), 42);
+        assert!(s.read_u64_acquire(9).is_err()); // out of bounds
+        assert!(s.write_u64_release(12, 1).is_err());
+    }
+
+    #[test]
     fn clones_share_storage() {
         let a = slot(4);
         let b = a.clone();
@@ -297,6 +360,22 @@ mod tests {
     #[test]
     fn ids_unique() {
         assert_ne!(slot(1).id(), slot(1).id());
+    }
+
+    #[test]
+    fn thread_alloc_counter_tracks_this_thread_only() {
+        let before = thread_slot_allocations();
+        let _a = slot(4);
+        let _b = LocalMemorySlot::register_vec(MemorySpaceId(1), vec![1]).unwrap();
+        assert_eq!(thread_slot_allocations() - before, 2);
+        // Another thread's allocations must not bleed into our counter.
+        let mid = thread_slot_allocations();
+        std::thread::spawn(|| {
+            let _ = slot(4);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(thread_slot_allocations(), mid);
     }
 
     #[test]

@@ -10,15 +10,23 @@
 //! operations, so it runs identically over the threads backend (shared
 //! memory) and the mpisim/lpfsim backends (distributed one-sided puts).
 //!
+//! The push datapath is zero-copy reserve/commit with coalesced tail
+//! doorbells and per-batch fencing — see [`spsc`] for the protocol and
+//! EXPERIMENTS.md §Perf for the measured win. Payloads land directly in
+//! the consumer's ring whenever the exchanged slot is addressable from
+//! the producer's instance; only genuinely remote rings stage through a
+//! producer-side mirror.
+//!
 //! Variants: [`spsc`] single-producer/single-consumer, and [`mpsc`]
 //! multiple-producer in *locking* (one shared ring + exclusive access) and
-//! *non-locking* (one dedicated ring per producer) modes.
+//! *non-locking* (one dedicated ring per producer) modes — both lifted on
+//! the same reserve/commit + batch primitives.
 
 pub mod mpsc;
 pub mod spsc;
 
 pub use mpsc::{LockingMpscConsumer, LockingMpscProducer, MpscMode, NonLockingMpscConsumer};
-pub use spsc::{SpscConsumer, SpscProducer};
+pub use spsc::{ProducerStats, SlotGrant, SpscConsumer, SpscProducer};
 
 /// Byte layout of the coordination window: two little-endian u64 counters.
 pub const COORD_BYTES: usize = 16;

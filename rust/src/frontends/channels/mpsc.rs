@@ -16,6 +16,7 @@ use crate::core::error::{HicrError, Result};
 use crate::core::ids::Tag;
 use crate::core::memory::LocalMemorySlot;
 use crate::frontends::channels::spsc::{SpscConsumer, SpscProducer};
+use crate::util::backoff::{retry_until, retry_until_some};
 
 /// Which MPSC flavour to construct (ablation knob).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,13 +68,24 @@ impl LockingMpscProducer {
         self.inner.lock().unwrap().push(msg)
     }
 
+    /// Batch push under one exclusive-access acquisition: the whole batch
+    /// pays one lock, one tail doorbell and at most one fence. Returns
+    /// the number of messages accepted.
+    pub fn push_batch(&self, msgs: &[u8]) -> Result<u64> {
+        self.inner.lock().unwrap().push_batch(msgs)
+    }
+
+    /// Blocking batch push; re-acquires the lock between attempts so
+    /// other producers interleave while we back off.
+    pub fn push_batch_blocking(&self, msgs: &[u8]) -> Result<()> {
+        let msg_size = self.inner.lock().unwrap().msg_size();
+        retry_until(msgs.len(), |off| {
+            Ok(self.push_batch(&msgs[off..])? as usize * msg_size)
+        })
+    }
+
     pub fn push_blocking(&self, msg: &[u8]) -> Result<()> {
-        loop {
-            if self.push(msg)? {
-                return Ok(());
-            }
-            std::thread::yield_now();
-        }
+        retry_until_some(|| Ok(self.push(msg)?.then_some(())))
     }
 }
 
@@ -94,6 +106,17 @@ impl LockingMpscConsumer {
 
     pub fn pop(&mut self, out: &mut [u8]) -> Result<bool> {
         self.inner.pop(out)
+    }
+
+    /// Batch pop: drains up to `out.len() / msg_size` messages with one
+    /// head publish. Returns the number popped.
+    pub fn pop_batch(&mut self, out: &mut [u8]) -> Result<u64> {
+        self.inner.pop_batch(out)
+    }
+
+    /// Blocking batch pop (backoff until ≥ 1 message arrives).
+    pub fn pop_batch_blocking(&mut self, out: &mut [u8]) -> Result<u64> {
+        self.inner.pop_batch_blocking(out)
     }
 
     pub fn pop_blocking(&mut self, out: &mut [u8]) -> Result<()> {
@@ -179,13 +202,39 @@ impl NonLockingMpscConsumer {
         Ok(false)
     }
 
-    pub fn pop_blocking(&mut self, out: &mut [u8]) -> Result<()> {
-        loop {
-            if self.pop(out)? {
-                return Ok(());
-            }
-            std::thread::yield_now();
+    /// Batch pop: fills `out` (a multiple of msg_size) by draining the
+    /// sub-channels round-robin, each drained sub-channel paying a single
+    /// head publish. Returns the number of messages popped.
+    pub fn pop_batch(&mut self, out: &mut [u8]) -> Result<u64> {
+        let msg_size = self.subs[0].msg_size();
+        if msg_size == 0 || out.len() / msg_size == 0 {
+            return Err(HicrError::Bounds(
+                "pop_batch buffer smaller than one message".into(),
+            ));
         }
+        let mut popped = 0usize;
+        for _ in 0..self.subs.len() {
+            let i = self.next;
+            self.next = (self.next + 1) % self.subs.len();
+            let room = &mut out[popped * msg_size..];
+            if room.len() < msg_size {
+                break;
+            }
+            popped += self.subs[i].pop_batch(room)? as usize;
+        }
+        Ok(popped as u64)
+    }
+
+    pub fn pop_blocking(&mut self, out: &mut [u8]) -> Result<()> {
+        retry_until_some(|| Ok(self.pop(out)?.then_some(())))
+    }
+
+    /// Blocking batch pop (backoff until ≥ 1 message arrives).
+    pub fn pop_batch_blocking(&mut self, out: &mut [u8]) -> Result<u64> {
+        retry_until_some(|| {
+            let n = self.pop_batch(out)?;
+            Ok((n > 0).then_some(n))
+        })
     }
 
     /// Total queued messages across sub-channels.
@@ -313,6 +362,178 @@ mod tests {
             Ok((slot(a), slot(b)))
         })
         .is_err());
+    }
+
+    /// Mirror of the SPSC `fifo_property_random_interleaving` check for
+    /// both MPSC modes: random single/batch push/pop interleavings must
+    /// lose nothing, duplicate nothing, and preserve per-producer FIFO.
+    #[test]
+    fn mpsc_fifo_property_random_interleaving_both_modes() {
+        crate::prop_check!("mpsc-fifo", |g| {
+            let n_producers = g.rng.range_usize(1, 3);
+            let cap = g.rng.range_u64(2, 8);
+            let tag = 3_000 + g.rng.range_u64(0, u32::MAX as u64);
+            let cmm: Arc<ThreadsCommunicationManager> =
+                Arc::new(ThreadsCommunicationManager::new());
+            for (mode_i, mode) in [MpscMode::Locking, MpscMode::NonLocking]
+                .into_iter()
+                .enumerate()
+            {
+                let tag = tag + mode_i as u64 * 50;
+                // (push fn per producer, pop fn) for the mode under test.
+                let mut locking_cons = None;
+                let mut locking_prods = Vec::new();
+                let mut nonlocking_cons = None;
+                let mut nonlocking_prods = Vec::new();
+                match mode {
+                    MpscMode::Locking => {
+                        locking_cons = Some(
+                            LockingMpscConsumer::create(
+                                cmm.as_ref(),
+                                slot(8 * cap as usize),
+                                slot(16),
+                                Tag(tag),
+                                0,
+                                8,
+                                cap,
+                            )
+                            .map_err(|e| e.to_string())?,
+                        );
+                        let p = LockingMpscProducer::create(
+                            Arc::clone(&cmm) as Arc<dyn CommunicationManager>,
+                            Tag(tag),
+                            0,
+                            8,
+                            cap,
+                            slot(8),
+                        )
+                        .map_err(|e| e.to_string())?;
+                        locking_prods = (0..n_producers).map(|_| p.clone()).collect();
+                    }
+                    MpscMode::NonLocking => {
+                        nonlocking_cons = Some(
+                            NonLockingMpscConsumer::create(
+                                cmm.as_ref(),
+                                n_producers,
+                                tag,
+                                0,
+                                8,
+                                cap,
+                                |a, b| Ok((slot(a), slot(b))),
+                            )
+                            .map_err(|e| e.to_string())?,
+                        );
+                        for i in 0..n_producers {
+                            nonlocking_prods.push(
+                                NonLockingMpscConsumer::producer(
+                                    Arc::clone(&cmm) as Arc<dyn CommunicationManager>,
+                                    i,
+                                    tag,
+                                    0,
+                                    8,
+                                    cap,
+                                    slot(8),
+                                )
+                                .map_err(|e| e.to_string())?,
+                            );
+                        }
+                    }
+                }
+                let mut next_push = vec![0u64; n_producers];
+                let mut next_pop = vec![0u64; n_producers];
+                let mut outstanding = 0u64;
+                let mut check_pop = |buf: &[u8],
+                                     next_pop: &mut [u64]|
+                 -> std::result::Result<(), String> {
+                    let v = u64::from_le_bytes(buf.try_into().unwrap());
+                    let p = (v >> 32) as usize;
+                    let seq = v & 0xFFFF_FFFF;
+                    if p >= n_producers {
+                        return Err(format!("corrupt producer id {p}"));
+                    }
+                    if seq != next_pop[p] {
+                        return Err(format!(
+                            "producer {p} FIFO violated: got {seq}, want {}",
+                            next_pop[p]
+                        ));
+                    }
+                    next_pop[p] += 1;
+                    Ok(())
+                };
+                for _ in 0..g.sized(1, 80) {
+                    if g.rng.bool() {
+                        // Push a random-size batch from a random producer.
+                        let pi = g.rng.range_usize(0, n_producers - 1);
+                        let k = g.rng.range_u64(1, 4);
+                        let mut batch = Vec::new();
+                        for j in 0..k {
+                            let v = ((pi as u64) << 32) | (next_push[pi] + j);
+                            batch.extend_from_slice(&v.to_le_bytes());
+                        }
+                        let accepted = match mode {
+                            MpscMode::Locking => locking_prods[pi]
+                                .push_batch(&batch)
+                                .map_err(|e| e.to_string())?,
+                            MpscMode::NonLocking => nonlocking_prods[pi]
+                                .push_batch(&batch)
+                                .map_err(|e| e.to_string())?,
+                        };
+                        next_push[pi] += accepted;
+                        outstanding += accepted;
+                    } else {
+                        // Pop a random-size batch.
+                        let k = g.rng.range_usize(1, 4);
+                        let mut out = vec![0u8; k * 8];
+                        let popped = match mode {
+                            MpscMode::Locking => locking_cons
+                                .as_mut()
+                                .unwrap()
+                                .pop_batch(&mut out)
+                                .map_err(|e| e.to_string())?,
+                            MpscMode::NonLocking => nonlocking_cons
+                                .as_mut()
+                                .unwrap()
+                                .pop_batch(&mut out)
+                                .map_err(|e| e.to_string())?,
+                        };
+                        if popped == 0 && outstanding > 0 && mode == MpscMode::Locking {
+                            return Err("pop_batch empty with messages queued".into());
+                        }
+                        for j in 0..popped as usize {
+                            check_pop(&out[j * 8..(j + 1) * 8], &mut next_pop)?;
+                        }
+                        outstanding -= popped;
+                    }
+                }
+                // Drain: everything pushed must come out exactly once.
+                while outstanding > 0 {
+                    let mut out = [0u8; 8];
+                    let ok = match mode {
+                        MpscMode::Locking => locking_cons
+                            .as_mut()
+                            .unwrap()
+                            .pop(&mut out)
+                            .map_err(|e| e.to_string())?,
+                        MpscMode::NonLocking => nonlocking_cons
+                            .as_mut()
+                            .unwrap()
+                            .pop(&mut out)
+                            .map_err(|e| e.to_string())?,
+                    };
+                    if !ok {
+                        return Err("drain pop failed with messages queued".into());
+                    }
+                    check_pop(&out, &mut next_pop)?;
+                    outstanding -= 1;
+                }
+                if next_pop != next_push {
+                    return Err(format!(
+                        "loss/dup: pushed {next_push:?}, popped {next_pop:?}"
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -41,8 +41,51 @@ pub mod netsim;
 pub mod runtime;
 pub mod util;
 
+/// Unit-test-only instrumentation: a System-allocator wrapper counting
+/// heap allocations *per thread*, so steady-state datapath tests (e.g.
+/// the channel push path) can assert a true zero-allocation window
+/// without interference from concurrently running tests.
+#[cfg(test)]
+mod test_alloc {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    // Const-initialized Cell<u64> has no destructor, so accessing it from
+    // inside the allocator (even during thread teardown) cannot recurse
+    // or abort.
+    std::thread_local! {
+        static THREAD_HEAP_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Heap allocations performed by the calling thread so far.
+    pub fn thread_heap_allocations() -> u64 {
+        THREAD_HEAP_ALLOCS.with(|c| c.get())
+    }
+
+    struct CountingAlloc;
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            THREAD_HEAP_ALLOCS.with(|c| c.set(c.get() + 1));
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            THREAD_HEAP_ALLOCS.with(|c| c.set(c.get() + 1));
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+}
+
 pub use crate::core::communication::{
-    CommunicationManager, DataEndpoint, GlobalMemorySlot,
+    CommunicationManager, CompletionHandle, DataEndpoint, GlobalMemorySlot,
 };
 pub use crate::core::compute::{
     ComputeManager, ExecStatus, ExecutionState, ExecutionUnit, ProcessingUnit,

@@ -6,7 +6,7 @@ use std::collections::HashMap;
 use std::io::Write;
 use std::os::unix::net::UnixStream;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -32,6 +32,8 @@ struct Shared {
     exchange_results: Mutex<HashMap<u64, Vec<(u64, u32, u64)>>>,
     /// Pending get replies: op_id -> sender.
     get_waiters: Mutex<HashMap<u64, Sender<Vec<u8>>>>,
+    /// Completion flags of tracked puts: op_id -> flag set on PutAck.
+    put_flags: Mutex<HashMap<u64, Arc<AtomicBool>>>,
     /// Spawn replies.
     spawn_results: Mutex<Option<Vec<u32>>>,
     /// Instance-list replies.
@@ -94,6 +96,7 @@ impl Endpoint {
             windows: Mutex::new(HashMap::new()),
             exchange_results: Mutex::new(HashMap::new()),
             get_waiters: Mutex::new(HashMap::new()),
+            put_flags: Mutex::new(HashMap::new()),
             spawn_results: Mutex::new(None),
             instance_lists: Mutex::new(None),
             barrier_releases: Mutex::new(Vec::new()),
@@ -184,10 +187,41 @@ impl Endpoint {
         offset: usize,
         data: Vec<u8>,
     ) -> Result<u64> {
+        self.put_inner(dst_rank, tag, key, offset, data, None)
+    }
+
+    /// One-sided put whose remote ack additionally sets a per-op
+    /// completion flag — the substrate of `memcpy_async` handles.
+    pub fn put_tracked(
+        &self,
+        dst_rank: u32,
+        tag: Tag,
+        key: Key,
+        offset: usize,
+        data: Vec<u8>,
+    ) -> Result<(u64, Arc<AtomicBool>)> {
+        let flag = Arc::new(AtomicBool::new(false));
+        let op_id =
+            self.put_inner(dst_rank, tag, key, offset, data, Some(Arc::clone(&flag)))?;
+        Ok((op_id, flag))
+    }
+
+    fn put_inner(
+        &self,
+        dst_rank: u32,
+        tag: Tag,
+        key: Key,
+        offset: usize,
+        data: Vec<u8>,
+        flag: Option<Arc<AtomicBool>>,
+    ) -> Result<u64> {
         let op_id = self.next_op_id.fetch_add(1, Ordering::Relaxed);
         {
             let mut out = self.shared.outstanding.lock().unwrap();
             *out.puts.entry(tag.0).or_insert(0) += 1;
+        }
+        if let Some(flag) = flag {
+            self.shared.put_flags.lock().unwrap().insert(op_id, flag);
         }
         self.send(&Frame::Put {
             src: self.rank,
@@ -346,7 +380,10 @@ fn receive(
                 .map_err(|e| HicrError::Transport(format!("ack: {e}")))?;
             shared.notify();
         }
-        Frame::PutAck { tag, .. } => {
+        Frame::PutAck { tag, op_id, .. } => {
+            if let Some(flag) = shared.put_flags.lock().unwrap().remove(&op_id) {
+                flag.store(true, Ordering::Release);
+            }
             let mut out = shared.outstanding.lock().unwrap();
             if let Some(n) = out.puts.get_mut(&tag) {
                 *n = n.saturating_sub(1);
@@ -463,6 +500,28 @@ mod tests {
         let back = e0.get(1, t, Key(7), 0, 8).unwrap();
         assert_eq!(back, vec![0, 0, 9, 8, 7, 0, 0, 0]);
         assert_eq!(e1.inbound_put_count(t), 1);
+        e0.bye();
+        e1.bye();
+        hub.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn tracked_put_flag_set_on_ack() {
+        let (hub, e0, e1) = pair("trackedput");
+        let t = Tag(11);
+        let slot1 = LocalMemorySlot::alloc(MemorySpaceId(1), 4).unwrap();
+        e1.bind_window(t, Key(0), slot1.clone());
+        let h1 = std::thread::spawn({
+            let e1 = e1.clone();
+            move || e1.exchange(t, vec![(0, 4)]).unwrap()
+        });
+        e0.exchange(t, vec![]).unwrap();
+        h1.join().unwrap();
+        let (_op, flag) = e0.put_tracked(1, t, Key(0), 0, vec![5, 6]).unwrap();
+        e0.fence(t).unwrap();
+        // Fence waits for the ack, and the ack sets the flag first.
+        assert!(flag.load(Ordering::Acquire));
+        assert_eq!(slot1.to_vec(), vec![5, 6, 0, 0]);
         e0.bye();
         e1.bye();
         hub.join().unwrap().unwrap();

@@ -1,0 +1,165 @@
+//! Escalating wait strategy for spin loops.
+//!
+//! Channel blocking operations and the producer's late-consumer wait used
+//! to hot-spin on `yield_now`, burning a core (and, under contention,
+//! slowing the very thread they were waiting for). `Backoff` escalates
+//! through three regimes: busy spins (cheapest when the wait is tens of
+//! nanoseconds), OS yields, then short sleeps capped at 1 ms so a stalled
+//! peer costs microwatts instead of a core.
+
+use std::time::Duration;
+
+/// Spin-loop batches double for the first `SPIN_STEPS` waits.
+const SPIN_STEPS: u32 = 6;
+/// After spinning, yield to the OS for this many waits.
+const YIELD_STEPS: u32 = 10;
+/// Sleeps start here and double up to [`MAX_SLEEP`].
+const FIRST_SLEEP: Duration = Duration::from_micros(10);
+/// Ceiling on a single sleep.
+const MAX_SLEEP: Duration = Duration::from_millis(1);
+
+/// An escalating waiter. `wait()` blocks a little longer each call;
+/// `reset()` drops back to busy-spinning after progress is made.
+#[derive(Debug, Default)]
+pub struct Backoff {
+    step: u32,
+}
+
+impl Backoff {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Forget accumulated pressure (call after making progress).
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+
+    /// True once waits have escalated past busy-spinning (observability
+    /// for tests; also a cheap "are we stalled" signal).
+    pub fn is_sleeping(&self) -> bool {
+        self.step > YIELD_STEPS
+    }
+
+    /// Wait once, escalating: spins → yields → capped sleeps.
+    pub fn wait(&mut self) {
+        if self.step < SPIN_STEPS {
+            for _ in 0..(1u32 << self.step) {
+                std::hint::spin_loop();
+            }
+        } else if self.step < YIELD_STEPS {
+            std::thread::yield_now();
+        } else {
+            let exp = (self.step - YIELD_STEPS).min(16);
+            let dur = FIRST_SLEEP
+                .checked_mul(1u32 << exp)
+                .map_or(MAX_SLEEP, |d| d.min(MAX_SLEEP));
+            std::thread::sleep(dur);
+        }
+        self.step = self.step.saturating_add(1);
+    }
+}
+
+/// Drive `attempt` — which receives the units completed so far and
+/// reports the units it just completed — with exponential backoff until
+/// `total` units accumulate. Zero-progress attempts escalate the wait;
+/// progress resets it. The shared skeleton of every blocking batch
+/// push/pop loop in the channels frontend.
+pub fn retry_until<E>(
+    total: usize,
+    mut attempt: impl FnMut(usize) -> Result<usize, E>,
+) -> Result<(), E> {
+    let mut done = 0usize;
+    let mut backoff = Backoff::new();
+    while done < total {
+        let n = attempt(done)?;
+        if n == 0 {
+            backoff.wait();
+        } else {
+            done += n;
+            backoff.reset();
+        }
+    }
+    Ok(())
+}
+
+/// Retry `attempt` with exponential backoff until it yields a value.
+pub fn retry_until_some<T, E>(
+    mut attempt: impl FnMut() -> Result<Option<T>, E>,
+) -> Result<T, E> {
+    let mut backoff = Backoff::new();
+    loop {
+        if let Some(v) = attempt()? {
+            return Ok(v);
+        }
+        backoff.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escalates_then_resets() {
+        let mut b = Backoff::new();
+        for _ in 0..=YIELD_STEPS {
+            assert!(!b.is_sleeping());
+            b.wait();
+        }
+        b.wait();
+        assert!(b.is_sleeping());
+        b.reset();
+        assert!(!b.is_sleeping());
+    }
+
+    #[test]
+    fn retry_until_accumulates_progress() {
+        // Attempts yield 0, 3, 0, 4 → completes a total of 7 in order.
+        let yields = [0usize, 3, 0, 4];
+        let mut call = 0usize;
+        let mut offsets = Vec::new();
+        retry_until::<()>(7, |done| {
+            offsets.push(done);
+            let n = yields[call];
+            call += 1;
+            Ok(n)
+        })
+        .unwrap();
+        assert_eq!(offsets, vec![0, 0, 3, 3]);
+        // Errors propagate immediately.
+        assert_eq!(retry_until(1, |_| Err::<usize, &str>("boom")), Err("boom"));
+        // total == 0 never calls attempt.
+        retry_until::<()>(0, |_| panic!("must not be called")).unwrap();
+    }
+
+    #[test]
+    fn retry_until_some_returns_first_value() {
+        let mut n = 0;
+        let v = retry_until_some::<_, ()>(|| {
+            n += 1;
+            Ok(if n == 3 { Some(42) } else { None })
+        })
+        .unwrap();
+        assert_eq!(v, 42);
+        assert_eq!(n, 3);
+        assert_eq!(retry_until_some::<u8, _>(|| Err("bad")), Err("bad"));
+    }
+
+    #[test]
+    fn sleep_duration_is_capped() {
+        let mut b = Backoff::new();
+        // Drive far past the sleep threshold; each wait must stay ~1 ms.
+        for _ in 0..YIELD_STEPS + 4 {
+            b.wait();
+        }
+        let t0 = std::time::Instant::now();
+        b.wait();
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        // step saturates without overflow even near the u32 ceiling.
+        for _ in 0..3 {
+            b.step = b.step.saturating_add(u32::MAX / 2);
+            b.wait();
+        }
+    }
+}

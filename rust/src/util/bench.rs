@@ -93,6 +93,9 @@ pub fn run<F: FnMut()>(label: impl Into<String>, warmup: usize, reps: usize, mut
 /// A named table of measurements, printed in the paper-row format.
 pub struct Report {
     pub title: &'static str,
+    /// Machine name for JSON export (`BENCH_<name>.json`); reports
+    /// without one print but never export.
+    pub name: Option<&'static str>,
     pub rows: Vec<Measurement>,
 }
 
@@ -100,6 +103,16 @@ impl Report {
     pub fn new(title: &'static str) -> Self {
         Self {
             title,
+            name: None,
+            rows: Vec::new(),
+        }
+    }
+
+    /// A report that exports as `BENCH_<name>.json` when `--json` is set.
+    pub fn named(title: &'static str, name: &'static str) -> Self {
+        Self {
+            title,
+            name: Some(name),
             rows: Vec::new(),
         }
     }
@@ -147,19 +160,105 @@ impl Report {
             println!("@@ {}", row.to_json().to_string_compact());
         }
     }
+
+    /// The machine-readable export: name, reps, per-row median/p95
+    /// seconds and throughput (bytes/s or whatever the derived unit is).
+    pub fn to_export_json(&self) -> Json {
+        let reps = self.rows.iter().map(|r| r.samples_s.len()).max().unwrap_or(0);
+        Json::obj([
+            (
+                "name",
+                Json::Str(self.name.unwrap_or(self.title).to_string()),
+            ),
+            ("title", Json::Str(self.title.to_string())),
+            ("reps", Json::Num(reps as f64)),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            let t = r.time_summary();
+                            let d = r.derived_summary();
+                            Json::obj([
+                                ("label", Json::Str(r.label.clone())),
+                                (
+                                    "median_s",
+                                    t.as_ref().map(|s| Json::Num(s.p50)).unwrap_or(Json::Null),
+                                ),
+                                (
+                                    "p95_s",
+                                    t.as_ref().map(|s| Json::Num(s.p95)).unwrap_or(Json::Null),
+                                ),
+                                (
+                                    "throughput",
+                                    d.map(|s| {
+                                        Json::obj([
+                                            ("unit", r.derived_unit.into()),
+                                            ("mean", s.mean.into()),
+                                        ])
+                                    })
+                                    .unwrap_or(Json::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` into `dir` (created if missing).
+    pub fn write_json(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        let name = self.name.unwrap_or(self.title);
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{name}.json"));
+        std::fs::write(&path, self.to_export_json().to_string_compact())?;
+        Ok(path)
+    }
+
+    /// Print the human table and, when `--json <dir>` was passed, export
+    /// the machine-readable file. The standard tail call of every bench.
+    pub fn finish(&self, args: &BenchArgs) {
+        self.print();
+        if let Some(dir) = &args.json {
+            match self.write_json(dir) {
+                Ok(path) => println!("bench JSON written to {}", path.display()),
+                Err(e) => {
+                    eprintln!("failed to write bench JSON under {}: {e}", dir.display());
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
 }
 
-/// Parse standard bench CLI overrides: `--reps N`, `--quick`.
+/// Parse standard bench CLI overrides: `--reps N`, `--quick`,
+/// `--json <dir>` (export `BENCH_<name>.json` per report).
 pub struct BenchArgs {
     pub reps: usize,
     pub quick: bool,
+    pub json: Option<std::path::PathBuf>,
 }
 
 impl BenchArgs {
     pub fn parse(default_reps: usize) -> Self {
-        let args: Vec<String> = std::env::args().collect();
+        match Self::parse_from(std::env::args().collect(), default_reps) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("bench args: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    fn parse_from(
+        args: Vec<String>,
+        default_reps: usize,
+    ) -> std::result::Result<Self, String> {
         let mut reps = default_reps;
         let mut quick = false;
+        let mut json = None;
         let mut i = 1;
         while i < args.len() {
             match args[i].as_str() {
@@ -171,6 +270,15 @@ impl BenchArgs {
                     i += 1;
                 }
                 "--quick" => quick = true,
+                "--json" => {
+                    // A silently dropped value would skip the export and
+                    // only surface as a missing-file failure downstream.
+                    let dir = args
+                        .get(i + 1)
+                        .ok_or("--json requires a directory argument")?;
+                    json = Some(std::path::PathBuf::from(dir));
+                    i += 1;
+                }
                 // `cargo bench` passes --bench; ignore unknown flags.
                 _ => {}
             }
@@ -179,7 +287,7 @@ impl BenchArgs {
         if quick {
             reps = reps.min(3);
         }
-        Self { reps, quick }
+        Ok(Self { reps, quick, json })
     }
 }
 
@@ -206,6 +314,63 @@ mod tests {
         let v = crate::util::json::parse(&j).unwrap();
         assert_eq!(v.get("label").as_str(), Some("series-a"));
         assert_eq!(v.get("derived").get("mean").as_f64(), Some(20.0));
+    }
+
+    #[test]
+    fn json_export_writes_bench_file() {
+        let mut report = Report::named("Demo title", "demo");
+        let mut m = run("series-a", 0, 4, || {
+            std::hint::black_box(1 + 1);
+        });
+        m.derived = vec![1e6; 4];
+        m.derived_unit = "bytes/s";
+        report.push(m);
+        let dir = std::env::temp_dir().join(format!(
+            "hicr-benchjson-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = report.write_json(&dir).unwrap();
+        assert!(path.ends_with("BENCH_demo.json"));
+        let parsed =
+            crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("name").as_str(), Some("demo"));
+        assert_eq!(parsed.get("reps").as_usize(), Some(4));
+        let rows = parsed.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("label").as_str(), Some("series-a"));
+        assert!(rows[0].get("median_s").as_f64().is_some());
+        assert!(rows[0].get("p95_s").as_f64().is_some());
+        assert_eq!(
+            rows[0].get("throughput").get("unit").as_str(),
+            Some("bytes/s")
+        );
+        assert_eq!(rows[0].get("throughput").get("mean").as_f64(), Some(1e6));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_args_parse_json_flag() {
+        let a = BenchArgs::parse_from(
+            vec![
+                "bench".into(),
+                "--reps".into(),
+                "7".into(),
+                "--json".into(),
+                "/tmp/out".into(),
+            ],
+            3,
+        )
+        .unwrap();
+        assert_eq!(a.reps, 7);
+        assert_eq!(a.json.as_deref(), Some(std::path::Path::new("/tmp/out")));
+        let b = BenchArgs::parse_from(vec!["bench".into(), "--quick".into()], 10).unwrap();
+        assert!(b.quick);
+        assert_eq!(b.reps, 3);
+        assert!(b.json.is_none());
+        // A trailing --json with no value must error, not silently skip
+        // the export.
+        assert!(BenchArgs::parse_from(vec!["bench".into(), "--json".into()], 3).is_err());
     }
 
     #[test]

@@ -246,6 +246,72 @@ fn mpisim_abstract_put_get_fence() {
     hub.join().unwrap().unwrap();
 }
 
+/// SPSC channel with the batched reserve/commit datapath across two real
+/// instances (mpisim): the producer's ring is *not* directly addressable,
+/// so payloads stage through the mirror ring and ride one-sided puts with
+/// one doorbell + one fence per batch.
+#[test]
+fn channel_push_batch_across_instances() {
+    use hicr::frontends::channels::{SpscConsumer, SpscProducer};
+    let path = temp_sock("chan-batch");
+    let hub = Hub::bind(&path, 2, None).unwrap().spawn();
+    let e0 = Endpoint::connect(&path, 0).unwrap();
+    let e1 = Endpoint::connect(&path, 1).unwrap();
+    let cmm0: Arc<dyn CommunicationManager> = Arc::new(mpisim::communication_manager(e0.clone()));
+    let cmm1: Arc<dyn CommunicationManager> = Arc::new(mpisim::communication_manager(e1.clone()));
+
+    let msg = 8usize;
+    let cap = 16u64;
+    let t = 6100u64;
+    // Rank 1 owns the ring (consumer); rank 0 produces. The exchange is
+    // a blocking collective — run the consumer side on its own thread.
+    let consumer_thread = std::thread::spawn({
+        let cmm1 = Arc::clone(&cmm1);
+        move || {
+            let mut c = SpscConsumer::create(
+                cmm1.as_ref(),
+                slot(msg * cap as usize),
+                slot(16),
+                Tag(t),
+                0,
+                msg,
+                cap,
+            )
+            .unwrap();
+            let mut out = [0u8; 8];
+            for i in 0..100u64 {
+                c.pop_blocking(&mut out).unwrap();
+                assert_eq!(u64::from_le_bytes(out), i, "FIFO across instances");
+            }
+        }
+    });
+    let mut p = SpscProducer::create(Arc::clone(&cmm0), Tag(t), 0, msg, cap, slot(8)).unwrap();
+    let mut batch = Vec::new();
+    for i in 0..100u64 {
+        batch.extend_from_slice(&i.to_le_bytes());
+    }
+    p.push_batch_blocking(&batch).unwrap();
+    consumer_thread.join().unwrap();
+    let stats = p.stats();
+    assert_eq!(
+        stats.staged_copies, 100,
+        "remote ring: every payload stages exactly once"
+    );
+    assert!(
+        stats.fences >= 1,
+        "remote ring: the async puts must be fenced"
+    );
+    // Doorbells fire once per flush-with-progress, never per message;
+    // the exact count depends on consumer scheduling, but it can never
+    // exceed the number of messages and with a 16-deep ring it should
+    // land well below it. (The strict one-doorbell-per-batch property is
+    // asserted deterministically in the spsc unit tests.)
+    assert!(stats.doorbells >= 1 && stats.doorbells <= 100);
+    e0.bye();
+    e1.bye();
+    hub.join().unwrap().unwrap();
+}
+
 /// The LPF and MPI backends share semantics: the same program produces
 /// the same bytes; only the cost model differs.
 #[test]
