@@ -1,0 +1,175 @@
+//! Fig. 7 deployment / RPC-mesh bench series (companion to
+//! `fig11_scaling`'s methodology — DESIGN.md §2: one sandbox core, so a
+//! measured in-process + small-scale multi-process part plus a modeled
+//! scaling part over the calibrated fabric profiles).
+//!
+//! 1. **Measured, multi-process** — when the `hicr` CLI is built, run
+//!    `launch --np 2 -- taskfarm 2 200`: real processes, hub wire
+//!    protocol, elastic deployment, 200 verified RPC round-trips.
+//! 2. **Measured, in-process** — RPC call latency and a
+//!    concurrent-caller throughput series over the threads backend:
+//!    K ∈ {1, 2, 4} callers hammering one server through the per-caller
+//!    MPSC request fabric.
+//! 3. **Modeled mesh scaling** — calls/s a root can farm across
+//!    N workers over the MPI-RMA vs LPF-ibverbs EDR profiles: the flat
+//!    synchronous baseline (today's farm blocks per call, one round
+//!    trip each), and a pipelined farm that scales linearly with N
+//!    until the root's serial link occupancy caps it (the Fig. 11
+//!    strong-scaling knee).
+
+use std::sync::Arc;
+
+use hicr::frontends::rpc::{RpcClient, RpcServer, HDR};
+use hicr::netsim::fabric::{CostProfile, LPF_IBVERBS_EDR, MPI_RMA_EDR};
+use hicr::util::bench::{BenchArgs, Measurement, Report};
+use hicr::{CommunicationManager, LocalMemorySlot, MemorySpaceId, Result};
+
+fn alloc(len: usize) -> Result<LocalMemorySlot> {
+    LocalMemorySlot::alloc(MemorySpaceId(1), len)
+}
+
+fn cmm() -> Arc<dyn CommunicationManager> {
+    Arc::new(hicr::backends::threads::ThreadsCommunicationManager::new())
+}
+
+/// Calls/s of the *current* synchronous farm: the root blocks for each
+/// response, so throughput is one call per round trip regardless of how
+/// many workers exist — the flat baseline that motivates pipelining.
+fn modeled_sync_rate(profile: &CostProfile, payload: u64) -> f64 {
+    1.0 / profile.pingpong_rtt_s(HDR as u64 + payload)
+}
+
+/// Calls/s of a pipelined farm with N overlapping workers: each worker
+/// completes one call per round trip (N calls/rtt in flight), while the
+/// root's link is serially occupied by every request it sends and every
+/// response it receives (2 envelope transfers per call). Small N is
+/// worker-limited (linear scaling); the curve knees where N×rtt-rate
+/// crosses the root's link occupancy — the Fig. 11 strong-scaling shape.
+fn modeled_pipelined_rate(profile: &CostProfile, payload: u64, workers: u64) -> f64 {
+    let envelope = HDR as u64 + payload;
+    let root_occupancy_s = 2.0 * profile.transfer_time_s(envelope);
+    let worker_rate = workers as f64 / profile.pingpong_rtt_s(envelope);
+    (1.0 / root_occupancy_s).min(worker_rate)
+}
+
+fn main() {
+    let args = BenchArgs::parse(5);
+    let payload = 64usize;
+
+    // ---- Part 1: measured 2-process taskfarm over the wire protocol. --
+    println!("== RPC mesh part 1: measured 2-process taskfarm (hub wire protocol) ==");
+    let exe = std::env::current_exe().unwrap();
+    let cli = exe
+        .parent()
+        .and_then(|d| d.parent())
+        .map(|d| d.join("hicr"))
+        .filter(|p| p.exists());
+    match cli {
+        Some(cli) => {
+            let tasks = if args.quick { 50 } else { 200 };
+            let out = std::process::Command::new(&cli)
+                .args([
+                    "launch",
+                    "--np",
+                    "2",
+                    "--",
+                    "taskfarm",
+                    "2",
+                    &tasks.to_string(),
+                ])
+                .output()
+                .expect("launch taskfarm");
+            let text = String::from_utf8_lossy(&out.stdout);
+            print!("{text}");
+            assert!(
+                text.contains(&format!("tasks={tasks} ok")),
+                "taskfarm failed:\n{text}\n{}",
+                String::from_utf8_lossy(&out.stderr)
+            );
+        }
+        None => println!("(hicr CLI not built; run `cargo build --release` first — skipping)"),
+    }
+
+    // ---- Part 2: measured in-process RPC series (threads backend). ----
+    let mut report = Report::named(
+        "Fig 7 RPC mesh: call latency, caller scaling, modeled farm rates",
+        "rpc_mesh",
+    );
+    let calls_per_rep: u64 = if args.quick { 200 } else { 2_000 };
+
+    for callers in [1usize, 2, 4] {
+        let caller_ranks: Vec<u32> = (1..=callers as u32).collect();
+        let mut samples = Vec::with_capacity(args.reps);
+        let mut rates = Vec::with_capacity(args.reps);
+        for rep in 0..args.reps {
+            let cmm = cmm();
+            let service = (100 + rep * 8 + callers) as u16;
+            let mut server = RpcServer::create(
+                Arc::clone(&cmm),
+                service,
+                0,
+                &caller_ranks,
+                payload,
+                alloc,
+            )
+            .unwrap();
+            server
+                .register("echo", |a| Ok(a.to_vec()))
+                .unwrap();
+            let total = calls_per_rep * callers as u64;
+            let server_thread = std::thread::spawn(move || {
+                server.serve(total as usize).unwrap();
+            });
+            let t0 = std::time::Instant::now();
+            let mut joins = Vec::new();
+            for &rank in &caller_ranks {
+                let cmm = Arc::clone(&cmm);
+                joins.push(std::thread::spawn(move || {
+                    let mut client =
+                        RpcClient::create(cmm, service, 0, rank, payload, alloc)
+                            .unwrap();
+                    let msg = [0x5Au8; 64];
+                    for _ in 0..calls_per_rep {
+                        let ret = client.call("echo", &msg).unwrap();
+                        assert_eq!(ret.len(), 64);
+                    }
+                }));
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+            server_thread.join().unwrap();
+            let dt = t0.elapsed().as_secs_f64();
+            samples.push(dt / total as f64); // per-call latency
+            rates.push(total as f64 / dt);
+        }
+        report.push(Measurement {
+            label: format!("measured threads {callers} caller(s)"),
+            samples_s: samples,
+            derived: rates,
+            derived_unit: "calls/s",
+        });
+    }
+
+    // ---- Part 3: modeled mesh farm rates over the EDR profiles. -------
+    for profile in [&MPI_RMA_EDR, &LPF_IBVERBS_EDR] {
+        let sync = modeled_sync_rate(profile, payload as u64);
+        report.push(Measurement {
+            label: format!("modeled {} sync farm", profile.name),
+            samples_s: vec![1.0 / sync],
+            derived: vec![sync],
+            derived_unit: "calls/s",
+        });
+        for workers in [1u64, 2, 4, 8] {
+            let rate = modeled_pipelined_rate(profile, payload as u64, workers);
+            report.push(Measurement {
+                label: format!("modeled {} pipelined {workers}w", profile.name),
+                samples_s: vec![1.0 / rate],
+                derived: vec![rate],
+                derived_unit: "calls/s",
+            });
+        }
+    }
+
+    report.finish(&args);
+}

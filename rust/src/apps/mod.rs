@@ -8,8 +8,12 @@
 //! - [`fibonacci`] — Test Case 3: fine-grained recursive task DAG.
 //! - [`jacobi`] — Test Case 4: coarse-grained 3-D Jacobi heat solver,
 //!   thread-parallel and distributed (halo exchange over one-sided puts).
+//! - [`taskfarm`] — the Fig. 7 deployment pattern as an app: elastic
+//!   ramp-up, topology gathering and master/worker farming over the RPC
+//!   mesh.
 
 pub mod fibonacci;
 pub mod inference;
 pub mod jacobi;
 pub mod pingpong;
+pub mod taskfarm;

@@ -1,0 +1,206 @@
+//! Master/worker task farm over the deployment mesh (the paper's Fig. 7
+//! orchestration pattern as a runnable distributed app).
+//!
+//! Every instance enters [`run`]: the root ensures the world holds
+//! `total` instances (spawning the difference at runtime through the
+//! instance manager — the elastic ramp-up), all instances join the
+//! deployment mesh, workers register the farmed function and serve,
+//! while the root gathers all worker topologies via the built-in
+//! `topology` RPC, dispatches `tasks` tasks round-robin across the
+//! workers, verifies every result, and shuts the farm down by RPC.
+//!
+//! Written purely against the abstract managers and the deployment/RPC
+//! frontends: the same code farms over the threads backend (in-process)
+//! and over mpisim (real processes launched by `hicr launch`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::core::communication::CommunicationManager;
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::MemorySpaceId;
+use crate::core::instance::{InstanceManager, InstanceTemplate};
+use crate::core::memory::LocalMemorySlot;
+use crate::core::topology::{Topology, TopologyRequirements};
+use crate::frontends::deployment::{deploy, Deployment, DeploymentConfig};
+
+/// The farmed RPC.
+pub const FN_TASK: &str = "taskfarm/execute";
+
+/// The task kernel: a splitmix64 avalanche of the task index — cheap,
+/// deterministic, and sensitive to any payload corruption, so the root
+/// can verify every single result.
+pub fn task_value(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// What the root observed (workers return `None`).
+#[derive(Debug, Clone)]
+pub struct FarmReport {
+    pub world: usize,
+    pub workers: usize,
+    pub tasks: u64,
+    /// Tasks executed per worker rank.
+    pub per_worker: Vec<(u32, u64)>,
+    /// Wrapping sum of all verified results.
+    pub checksum: u64,
+    /// Worker topologies gathered through the built-in RPC.
+    pub gathered_topologies: usize,
+    /// Devices across all gathered topologies.
+    pub total_devices: usize,
+    pub elapsed_s: f64,
+}
+
+/// Run this instance's side of the farm. Collective across the world:
+/// root returns `Some(report)`, workers serve until shutdown and return
+/// `None`. `topology_json` is this instance's serialized device tree.
+pub fn run(
+    im: &dyn InstanceManager,
+    cmm: &Arc<dyn CommunicationManager>,
+    topology_json: String,
+    total: usize,
+    tasks: u64,
+) -> Result<Option<FarmReport>> {
+    let t0 = Instant::now();
+    let alloc = |len| LocalMemorySlot::alloc(MemorySpaceId(1), len);
+    let template = InstanceTemplate::new(TopologyRequirements::default());
+    let mut d = deploy(
+        im,
+        cmm,
+        total,
+        &template,
+        &DeploymentConfig::default(),
+        topology_json,
+        alloc,
+    )?;
+
+    if !d.is_root {
+        d.mesh.server.register(FN_TASK, |args| {
+            let x = u64::from_le_bytes(args.try_into().map_err(|_| {
+                HicrError::Bounds("taskfarm payload must be 8 B".into())
+            })?);
+            Ok(task_value(x).to_le_bytes().to_vec())
+        })?;
+        d.serve_until_shutdown()?;
+        // Exit in lockstep with the root's post-shutdown barrier.
+        im.barrier()?;
+        return Ok(None);
+    }
+
+    match orchestrate(&mut d, tasks) {
+        Ok((topos, total_devices, per_worker, checksum)) => {
+            d.shutdown_workers()?;
+            im.barrier()?;
+            Ok(Some(FarmReport {
+                world: d.ranks.len(),
+                workers: d.workers().len(),
+                tasks,
+                per_worker: per_worker.into_iter().collect(),
+                checksum,
+                gathered_topologies: topos.len(),
+                total_devices,
+                elapsed_s: t0.elapsed().as_secs_f64(),
+            }))
+        }
+        Err(e) => {
+            // Best-effort release: without this, live workers would sit
+            // in their serve loops forever and the launcher would hang
+            // instead of reporting the orchestration error. (A worker
+            // that died mid-farm can still stall its own shutdown call;
+            // per-call deadlines are future work.)
+            if d.shutdown_workers().is_ok() {
+                let _ = im.barrier();
+            }
+            Err(e)
+        }
+    }
+}
+
+type Orchestrated = (Vec<(u32, Topology)>, usize, BTreeMap<u32, u64>, u64);
+
+/// The root's orchestration body, separated so `run` can release the
+/// workers on *any* error path.
+fn orchestrate(d: &mut Deployment, tasks: u64) -> Result<Orchestrated> {
+    let topos = d.gather_topologies()?;
+    let total_devices = topos.iter().map(|(_, t)| t.devices.len()).sum();
+    let workers = d.workers();
+    if workers.is_empty() {
+        return Err(HicrError::Instance(
+            "taskfarm needs at least one worker (launch with --np 2 or more)"
+                .into(),
+        ));
+    }
+    let mut per_worker: BTreeMap<u32, u64> =
+        workers.iter().map(|&w| (w, 0)).collect();
+    let mut checksum = 0u64;
+    for i in 0..tasks {
+        let w = workers[(i % workers.len() as u64) as usize];
+        let ret = d.client(w)?.call(FN_TASK, &i.to_le_bytes())?;
+        let got =
+            u64::from_le_bytes(ret.as_slice().try_into().map_err(|_| {
+                HicrError::Transport(format!(
+                    "task {i}: short response ({} B) from worker {w}",
+                    ret.len()
+                ))
+            })?);
+        let want = task_value(i);
+        if got != want {
+            return Err(HicrError::InvalidState(format!(
+                "task {i} on worker {w}: got {got:#018x}, want {want:#018x}"
+            )));
+        }
+        checksum = checksum.wrapping_add(got);
+        *per_worker.get_mut(&w).expect("dispatched to a known worker") += 1;
+    }
+    Ok((topos, total_devices, per_worker, checksum))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::threads::ThreadsCommunicationManager;
+    use crate::core::instance::testworld::local_world;
+
+    #[test]
+    fn task_value_deterministic_and_mixing() {
+        assert_eq!(task_value(7), task_value(7));
+        assert_ne!(task_value(7), task_value(8));
+        assert_ne!(task_value(0), 0);
+    }
+
+    /// Full farm over the threads backend: 1 root + 2 workers in one
+    /// process, 31 tasks (odd count → uneven round-robin) all verified.
+    #[test]
+    fn farm_in_process_three_instances() {
+        let n = 3usize;
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let mut joins = Vec::new();
+        for im in local_world(n) {
+            let cmm = Arc::clone(&cmm);
+            joins.push(std::thread::spawn(move || {
+                run(&im, &cmm, Topology::default().serialize(), n, 31).unwrap()
+            }));
+        }
+        let reports: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        let report = reports
+            .iter()
+            .flatten()
+            .next()
+            .expect("root produced a report");
+        assert_eq!(report.world, 3);
+        assert_eq!(report.workers, 2);
+        assert_eq!(report.tasks, 31);
+        assert_eq!(report.gathered_topologies, 2);
+        let per: u64 = report.per_worker.iter().map(|(_, c)| c).sum();
+        assert_eq!(per, 31);
+        assert_eq!(report.per_worker[0].1, 16); // rank 1 gets the extra task
+        assert_eq!(report.per_worker[1].1, 15);
+        let want: u64 = (0..31).map(task_value).fold(0, u64::wrapping_add);
+        assert_eq!(report.checksum, want);
+    }
+}

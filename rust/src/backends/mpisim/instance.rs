@@ -66,6 +66,25 @@ impl InstanceManager for MpiInstanceManager {
         count: usize,
         template: &InstanceTemplate,
     ) -> Result<Vec<Instance>> {
+        if count == 0 {
+            // Avoid a hub round-trip (and a pointless resize of in-flight
+            // collectives) for a no-op ramp-up.
+            return Ok(Vec::new());
+        }
+        if self.endpoint.barrier_epochs_used() > 0 {
+            // Spawned instances start counting barrier epochs at 1; if
+            // this instance already barriered, the newcomers' first
+            // barrier would pair with an epoch the rest of the world has
+            // left behind — a silent deadlock. Fail loudly instead: the
+            // Fig. 7 idiom requires ramp-up before the first barrier
+            // (`ensure_world` makes the join barrier the world's first).
+            return Err(HicrError::Instance(
+                "runtime instance creation after a barrier would \
+                 desynchronize the join protocol: spawn instances before \
+                 the world's first barrier (see ensure_world)"
+                    .into(),
+            ));
+        }
         let new_ranks = self
             .endpoint
             .spawn_instances(count as u32, &template.to_json().to_string_compact())?;

@@ -124,6 +124,95 @@ pub fn ensure_instances(
     im.create_instances(desired - current, template)
 }
 
+/// The collective form of the Fig. 7 idiom: root tops the world up to
+/// `desired` instances, then **every** participant — launch-time workers,
+/// runtime-spawned workers, and root alike — synchronizes on a barrier
+/// (the join point the spawned instances enter as their first collective)
+/// and reads back the complete, id-sorted membership. After this returns,
+/// all instances agree on the world and can enter per-link collectives
+/// (e.g. [`crate::frontends::rpc::RpcMesh::build`]) in a canonical order.
+///
+/// When the world actually grows, this must be the **first** barrier any
+/// participant performs: spawned instances start their barrier-epoch
+/// counters fresh, so a world that already barriered cannot ramp up
+/// (the mpisim backend rejects such a spawn with a descriptive error
+/// rather than deadlocking the join).
+pub fn ensure_world(
+    im: &dyn InstanceManager,
+    desired: usize,
+    template: &InstanceTemplate,
+) -> Result<Vec<Instance>> {
+    ensure_instances(im, desired, template)?;
+    im.barrier()?;
+    let mut all = im.instances()?;
+    all.sort_by_key(|i| i.id);
+    Ok(all)
+}
+
+/// Shared test double: a fixed-size in-process world of thread
+/// "instances" (rank 0 is root) synchronized by a real join barrier —
+/// used by the deployment frontend's and the taskfarm app's tests.
+#[cfg(test)]
+pub(crate) mod testworld {
+    use super::{Instance, InstanceManager, InstanceTemplate};
+    use crate::core::error::{HicrError, Result};
+    use crate::core::ids::InstanceId;
+    use std::sync::{Arc, Barrier};
+
+    pub(crate) struct LocalIm {
+        me: Instance,
+        n: usize,
+        barrier: Arc<Barrier>,
+    }
+
+    impl InstanceManager for LocalIm {
+        fn current_instance(&self) -> Instance {
+            self.me.clone()
+        }
+
+        fn instances(&self) -> Result<Vec<Instance>> {
+            Ok((0..self.n)
+                .map(|i| Instance {
+                    id: InstanceId(i as u32),
+                    is_root: i == 0,
+                })
+                .collect())
+        }
+
+        fn create_instances(
+            &self,
+            _count: usize,
+            _template: &InstanceTemplate,
+        ) -> Result<Vec<Instance>> {
+            Err(HicrError::Unsupported("fixed-size test world".into()))
+        }
+
+        fn barrier(&self) -> Result<()> {
+            self.barrier.wait();
+            Ok(())
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "local-test"
+        }
+    }
+
+    /// One `LocalIm` per rank, all sharing one `n`-party barrier.
+    pub(crate) fn local_world(n: usize) -> Vec<LocalIm> {
+        let barrier = Arc::new(Barrier::new(n));
+        (0..n)
+            .map(|i| LocalIm {
+                me: Instance {
+                    id: InstanceId(i as u32),
+                    is_root: i == 0,
+                },
+                n,
+                barrier: Arc::clone(&barrier),
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +306,19 @@ mod tests {
             .unwrap()
             .is_empty());
         assert_eq!(im.instances().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn ensure_world_tops_up_and_returns_sorted_membership() {
+        let im = mock(2, true, true);
+        let world = ensure_world(&im, 4, &InstanceTemplate::default()).unwrap();
+        assert_eq!(world.len(), 4);
+        assert!(world.windows(2).all(|w| w[0].id < w[1].id));
+        // A non-root participant of the same collective only barriers and
+        // reads the membership back.
+        let worker = mock(4, false, false);
+        let view = ensure_world(&worker, 4, &InstanceTemplate::default()).unwrap();
+        assert_eq!(view.len(), 4);
     }
 
     #[test]

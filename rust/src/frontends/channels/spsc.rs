@@ -493,6 +493,21 @@ impl SpscProducer {
     pub fn pushed(&self) -> u64 {
         self.tail
     }
+
+    /// Byte length of the consumer's exchanged data ring, resolving the
+    /// ring endpoints first if necessary (may block briefly waiting for
+    /// a late intra-process consumer). Lets frontends validate that both
+    /// sides negotiated identical ring geometry.
+    pub fn ring_len(&mut self) -> Result<usize> {
+        self.ensure_rings()?;
+        Ok(self.rings.as_ref().expect("rings resolved").data.len)
+    }
+
+    /// Non-blocking variant of [`Self::ring_len`]: `None` until the
+    /// consumer's exchange has been observed.
+    pub fn resolved_ring_len(&self) -> Option<usize> {
+        self.rings.as_ref().map(|r| r.data.len)
+    }
 }
 
 impl SlotGrant<'_> {

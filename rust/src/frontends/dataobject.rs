@@ -20,11 +20,24 @@ use crate::core::error::{HicrError, Result};
 use crate::core::ids::{Key, Tag};
 use crate::core::memory::LocalMemorySlot;
 
-/// Tag namespace reserved for data objects.
-pub const DATAOBJECT_TAG_BASE: u64 = 0x0D0B_0000_0000;
+/// Tag namespace reserved for data objects (bits 48..64 = 0x0D0B;
+/// policy: DESIGN.md §4).
+pub const DATAOBJECT_TAG_BASE: u64 = 0x0D0B << 48;
 
-fn tag_for(id: u64) -> Tag {
-    Tag(DATAOBJECT_TAG_BASE ^ id)
+/// Object ids must fit the namespace's 48 low bits.
+pub const MAX_DATAOBJECT_ID: u64 = (1 << 48) - 1;
+
+/// Object ids map injectively into the reserved namespace; out-of-range
+/// ids are rejected loudly (like RPC link ranks) rather than folded —
+/// silent aliasing could deliver the wrong object's payload, and no
+/// caller-chosen id may forge a tag inside another frontend's space.
+fn tag_for(id: u64) -> Result<Tag> {
+    if id > MAX_DATAOBJECT_ID {
+        return Err(HicrError::Bounds(format!(
+            "data object id {id:#x} exceeds the 48-bit tag namespace"
+        )));
+    }
+    Ok(Tag(DATAOBJECT_TAG_BASE | id))
 }
 
 /// A published local data object (publisher side).
@@ -41,7 +54,7 @@ impl DataObject {
         id: u64,
         slot: LocalMemorySlot,
     ) -> Result<DataObject> {
-        cmm.exchange_global_slots(tag_for(id), &[(Key(id), slot.clone())])?;
+        cmm.exchange_global_slots(tag_for(id)?, &[(Key(id), slot.clone())])?;
         Ok(DataObject { id, slot })
     }
 
@@ -65,7 +78,7 @@ impl DataObjectHandle {
     /// Obtain a handle for object `id` (collective counterpart of
     /// `publish` — enters the same exchange volunteering nothing).
     pub fn get_handle(cmm: &dyn CommunicationManager, id: u64) -> Result<DataObjectHandle> {
-        let map = cmm.exchange_global_slots(tag_for(id), &[])?;
+        let map = cmm.exchange_global_slots(tag_for(id)?, &[])?;
         let global = map.get(&Key(id)).cloned().ok_or_else(|| {
             HicrError::Collective(format!("no instance published data object {id}"))
         })?;
@@ -107,14 +120,14 @@ impl DataObjectHandle {
 
     /// Fence the fetch (per the paper: completion checked like Fig. 5).
     pub fn fence(&self, cmm: &Arc<dyn CommunicationManager>) -> Result<()> {
-        cmm.fence(tag_for(self.id))
+        cmm.fence(tag_for(self.id)?)
     }
 }
 
 /// Non-publishing participant for instances that neither publish nor
 /// consume object `id` but must take part in the collective.
 pub fn participate(cmm: &dyn CommunicationManager, id: u64) -> Result<()> {
-    cmm.exchange_global_slots(tag_for(id), &[])?;
+    cmm.exchange_global_slots(tag_for(id)?, &[])?;
     Ok(())
 }
 
@@ -126,6 +139,15 @@ mod tests {
 
     fn slot_with(data: &[u8]) -> LocalMemorySlot {
         LocalMemorySlot::register_vec(MemorySpaceId(1), data.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn oversized_id_rejected_not_folded() {
+        let cmm = ThreadsCommunicationManager::new();
+        let err = DataObject::publish(&cmm, 1 << 48, slot_with(&[1])).unwrap_err();
+        assert!(err.to_string().contains("48-bit"), "{err}");
+        assert!(DataObjectHandle::get_handle(&cmm, u64::MAX).is_err());
+        assert!(participate(&cmm, MAX_DATAOBJECT_ID).is_ok());
     }
 
     #[test]

@@ -1,0 +1,366 @@
+//! Deployment frontend: the paper's Fig. 7 idiom, end to end.
+//!
+//! §3.1.1 instance management plus the §4.3 RPC engine exist to drive
+//! multi-instance deployment: the root instance tops the world up to the
+//! desired size at runtime (`ensure_instances` — the cloud ramp-up
+//! pattern), every instance joins a barrier so launch-time and spawned
+//! workers agree on the membership, an N×N [`RpcMesh`] is assembled over
+//! it, and the root then orchestrates workers by RPC — gathering their
+//! serialized device trees through the built-in `topology` function and
+//! dispatching work until it requests `shutdown`.
+//!
+//! Built exclusively on the abstract managers ([`InstanceManager`],
+//! [`CommunicationManager`]) and the RPC frontend, so the same deployment
+//! runs over the threads backend (intra-process) and over mpisim/lpfsim
+//! (real processes joined through the hub).
+//!
+//! Built-in RPCs every deployment instance serves:
+//!
+//! - [`FN_TOPOLOGY`] — returns this instance's serialized topology (the
+//!   Fig. 7 "gather the global topology" step).
+//! - [`FN_PING`] — echoes its payload (liveness / mesh smoke checks).
+//! - [`FN_SHUTDOWN`] — flips the shutdown flag; the worker's
+//!   [`Deployment::serve_until_shutdown`] loop exits after answering.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::core::communication::CommunicationManager;
+use crate::core::error::{HicrError, Result};
+use crate::core::instance::{ensure_world, InstanceManager, InstanceTemplate};
+use crate::core::memory::LocalMemorySlot;
+use crate::core::topology::Topology;
+use crate::frontends::rpc::{RpcClient, RpcMesh};
+
+/// RPC service id reserved for the deployment mesh.
+pub const DEPLOYMENT_SERVICE: u16 = 0xD0;
+
+/// Built-in RPC: serialized topology of the serving instance.
+pub const FN_TOPOLOGY: &str = "hicr/deployment/topology";
+/// Built-in RPC: payload echo.
+pub const FN_PING: &str = "hicr/deployment/ping";
+/// Built-in RPC: request the serving instance leave its serve loop.
+pub const FN_SHUTDOWN: &str = "hicr/deployment/shutdown";
+
+/// Link geometry of the deployment mesh. Identical on every instance
+/// (validated at link setup by the RPC frontend; ring depth is the RPC
+/// protocol constant `RPC_RING_CAPACITY`).
+#[derive(Debug, Clone)]
+pub struct DeploymentConfig {
+    pub service: u16,
+    pub max_payload: usize,
+}
+
+impl Default for DeploymentConfig {
+    fn default() -> Self {
+        Self {
+            service: DEPLOYMENT_SERVICE,
+            // Large enough for serialized topologies of many-core hosts.
+            max_payload: 32 * 1024,
+        }
+    }
+}
+
+/// One instance's view of a deployed world: the agreed membership and
+/// this instance's server + client links into the mesh.
+pub struct Deployment {
+    pub me: u32,
+    pub is_root: bool,
+    /// Rank of the root instance.
+    pub root: u32,
+    /// Sorted ranks of every member, root included.
+    pub ranks: Vec<u32>,
+    pub mesh: RpcMesh,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// Deploy this instance into a world of (at least) `desired` instances:
+/// root creates the missing ones from `template`, everyone synchronizes
+/// on the join barrier, and the RPC mesh is built over the agreed
+/// membership with the built-in functions registered. **Collective**:
+/// every instance — including runtime-spawned ones, for which this must
+/// be the first collective — calls `deploy` with the same `desired` and
+/// `config`. `topology_json` is this instance's serialized device tree
+/// (kept abstract so the frontend stays backend-agnostic); `alloc`
+/// supplies the ring slots this instance owns.
+///
+/// Failure semantics: everything locally checkable (e.g. the topology
+/// payload against `max_payload`) is validated *before* the first
+/// collective, but a one-sided error — this instance returning `Err`
+/// while its peers proceed — cannot release the peers' join barrier or
+/// mesh exchanges from here. Over mpisim the failing process's
+/// departure shrinks the pending collectives so survivors are released
+/// (they will then report the missing peer's rings as never exchanged);
+/// a fixed-size in-process world must be torn down by its harness.
+pub fn deploy(
+    im: &dyn InstanceManager,
+    cmm: &Arc<dyn CommunicationManager>,
+    desired: usize,
+    template: &InstanceTemplate,
+    config: &DeploymentConfig,
+    topology_json: String,
+    alloc: impl FnMut(usize) -> Result<LocalMemorySlot>,
+) -> Result<Deployment> {
+    if topology_json.len() > config.max_payload {
+        return Err(HicrError::Bounds(format!(
+            "serialized topology ({} B) exceeds the deployment link payload \
+             limit ({} B); raise DeploymentConfig::max_payload",
+            topology_json.len(),
+            config.max_payload
+        )));
+    }
+    let world = ensure_world(im, desired, template)?;
+    let root = world
+        .iter()
+        .find(|i| i.is_root())
+        .map(|i| i.id.0)
+        .ok_or_else(|| HicrError::Instance("deployed world has no root".into()))?;
+    let ranks: Vec<u32> = world.iter().map(|i| i.id.0).collect();
+    let me = im.current_instance().id.0;
+    let mut mesh = RpcMesh::build(
+        cmm,
+        config.service,
+        me,
+        &ranks,
+        config.max_payload,
+        alloc,
+    )?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    mesh.server
+        .register(FN_TOPOLOGY, move |_| Ok(topology_json.clone().into_bytes()))?;
+    mesh.server.register(FN_PING, |args| Ok(args.to_vec()))?;
+    let flag = Arc::clone(&shutdown);
+    mesh.server.register(FN_SHUTDOWN, move |_| {
+        flag.store(true, Ordering::Release);
+        Ok(Vec::new())
+    })?;
+    Ok(Deployment {
+        me,
+        is_root: im.is_root(),
+        root,
+        ranks,
+        mesh,
+        shutdown,
+    })
+}
+
+impl Deployment {
+    /// Every member rank except the root.
+    pub fn workers(&self) -> Vec<u32> {
+        self.ranks.iter().copied().filter(|&r| r != self.root).collect()
+    }
+
+    /// True once a peer requested shutdown via [`FN_SHUTDOWN`].
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// The client for calls into `rank`'s server.
+    pub fn client(&mut self, rank: u32) -> Result<&mut RpcClient> {
+        self.mesh.client(rank)
+    }
+
+    /// Worker loop: serve built-in and app-registered RPCs until a peer
+    /// calls [`FN_SHUTDOWN`] (the shutdown response itself is sent before
+    /// the loop exits). Returns the number of requests served.
+    pub fn serve_until_shutdown(&mut self) -> Result<u64> {
+        let flag = Arc::clone(&self.shutdown);
+        self.mesh
+            .server
+            .serve_while(move || !flag.load(Ordering::Acquire))
+    }
+
+    /// Root orchestration: gather every worker's topology through the
+    /// built-in RPC (the Fig. 7 global-topology step).
+    pub fn gather_topologies(&mut self) -> Result<Vec<(u32, Topology)>> {
+        let workers = self.workers();
+        let mut out = Vec::with_capacity(workers.len());
+        for rank in workers {
+            let bytes = self.client(rank)?.call(FN_TOPOLOGY, b"")?;
+            let text = String::from_utf8(bytes).map_err(|e| {
+                HicrError::Transport(format!(
+                    "instance {rank} returned non-UTF-8 topology: {e}"
+                ))
+            })?;
+            out.push((rank, Topology::deserialize(&text)?));
+        }
+        Ok(out)
+    }
+
+    /// Root orchestration: ask every worker to leave its serve loop.
+    /// Best-effort: every worker is attempted even if an earlier call
+    /// fails (aborting on the first error would strand the remaining
+    /// workers in their serve loops); the first error is returned after
+    /// all attempts, and `Ok` means every worker acknowledged shutdown.
+    pub fn shutdown_workers(&mut self) -> Result<()> {
+        let mut first_err = None;
+        for rank in self.workers() {
+            let attempt = self
+                .client(rank)
+                .and_then(|client| client.call(FN_SHUTDOWN, b""));
+            if let Err(e) = attempt {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::threads::ThreadsCommunicationManager;
+    use crate::core::ids::MemorySpaceId;
+    use crate::core::instance::testworld::local_world;
+
+    fn alloc(len: usize) -> Result<LocalMemorySlot> {
+        LocalMemorySlot::alloc(MemorySpaceId(1), len)
+    }
+
+    fn topo_json() -> String {
+        Topology::default().serialize()
+    }
+
+    /// Fig. 7 over the threads backend: root gathers topologies, farms
+    /// work through an app-registered RPC, and shuts the workers down.
+    #[test]
+    fn root_orchestrates_workers_end_to_end() {
+        let n = 3usize;
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let mut joins = Vec::new();
+        for im in local_world(n) {
+            let cmm = Arc::clone(&cmm);
+            joins.push(std::thread::spawn(move || {
+                let config = DeploymentConfig {
+                    max_payload: 4096,
+                    ..DeploymentConfig::default()
+                };
+                let mut d = deploy(
+                    &im,
+                    &cmm,
+                    3,
+                    &InstanceTemplate::default(),
+                    &config,
+                    topo_json(),
+                    alloc,
+                )
+                .unwrap();
+                assert_eq!(d.ranks, vec![0, 1, 2]);
+                assert_eq!(d.root, 0);
+                if d.is_root {
+                    let topos = d.gather_topologies().unwrap();
+                    assert_eq!(topos.len(), 2);
+                    let mut per_worker = std::collections::BTreeMap::new();
+                    for i in 0..30u64 {
+                        let rank = d.workers()[(i % 2) as usize];
+                        let ret =
+                            d.client(rank).unwrap().call("work/square", &i.to_le_bytes());
+                        let ret = ret.unwrap();
+                        assert_eq!(
+                            u64::from_le_bytes(ret.try_into().unwrap()),
+                            i * i
+                        );
+                        *per_worker.entry(rank).or_insert(0u64) += 1;
+                    }
+                    assert_eq!(per_worker.len(), 2, "work spread across workers");
+                    d.shutdown_workers().unwrap();
+                    0
+                } else {
+                    d.mesh
+                        .server
+                        .register("work/square", |args| {
+                            let x = u64::from_le_bytes(args.try_into().unwrap());
+                            Ok((x * x).to_le_bytes().to_vec())
+                        })
+                        .unwrap();
+                    let served = d.serve_until_shutdown().unwrap();
+                    assert!(d.shutdown_requested());
+                    served
+                }
+            }));
+        }
+        let mut served_total = 0;
+        for j in joins {
+            served_total += j.join().unwrap();
+        }
+        // 2 topology gathers + 30 squares + 2 shutdowns.
+        assert_eq!(served_total, 34);
+    }
+
+    /// Satellite: unknown-function and handler-error paths through the
+    /// deployed mesh surface as typed errors at the root.
+    #[test]
+    fn error_paths_through_the_mesh() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let mut joins = Vec::new();
+        for im in local_world(2) {
+            let cmm = Arc::clone(&cmm);
+            joins.push(std::thread::spawn(move || {
+                let config = DeploymentConfig {
+                    max_payload: 1024,
+                    ..DeploymentConfig::default()
+                };
+                let mut d = deploy(
+                    &im,
+                    &cmm,
+                    2,
+                    &InstanceTemplate::default(),
+                    &config,
+                    topo_json(),
+                    alloc,
+                )
+                .unwrap();
+                if d.is_root {
+                    let err = d.client(1).unwrap().call("no/such/fn", b"").unwrap_err();
+                    assert!(err.is_rejection(), "{err}");
+                    let err = d.client(1).unwrap().call("always/fails", b"").unwrap_err();
+                    assert!(err.to_string().contains("deliberate"), "{err}");
+                    // Ping still works after the failures.
+                    let pong = d.client(1).unwrap().call(FN_PING, b"hello").unwrap();
+                    assert_eq!(pong, b"hello");
+                    d.shutdown_workers().unwrap();
+                } else {
+                    d.mesh
+                        .server
+                        .register("always/fails", |_| {
+                            Err(HicrError::InvalidState("deliberate".into()))
+                        })
+                        .unwrap();
+                    d.serve_until_shutdown().unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    /// An oversized topology is rejected at deploy time, before any ring
+    /// is exchanged.
+    #[test]
+    fn oversized_topology_rejected_at_deploy() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let im = local_world(1).remove(0);
+        let config = DeploymentConfig {
+            max_payload: 8,
+            ..DeploymentConfig::default()
+        };
+        let err = deploy(
+            &im,
+            &cmm,
+            1,
+            &InstanceTemplate::default(),
+            &config,
+            "x".repeat(64),
+            alloc,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("max_payload"), "{err}");
+    }
+}

@@ -6,15 +6,19 @@
 //! - [`channels`] — circular-buffer channels for frequent small messages
 //!   (SPSC + MPSC in locking / non-locking modes).
 //! - [`dataobject`] — publish/get of sporadic large data blocks.
+//! - [`deployment`] — the Fig. 7 idiom: elastic instance ramp-up, join
+//!   barrier, RPC mesh assembly, topology gathering and orchestration.
 //! - [`kernels`] — the device-agnostic kernel-provider interface apps
 //!   consume and backend plugins implement.
-//! - [`rpc`] — remote procedure registration, listening and execution.
+//! - [`rpc`] — remote procedure registration, listening and execution
+//!   over an any-to-any mesh of per-caller rings.
 //! - [`tasking`] — building blocks for task-based runtime systems
 //!   (stateful tasks with callbacks, pull-scheduled workers, and an
 //!   OVNI-style execution tracer).
 
 pub mod channels;
 pub mod dataobject;
+pub mod deployment;
 pub mod kernels;
 pub mod rpc;
 pub mod tasking;

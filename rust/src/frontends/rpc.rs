@@ -2,18 +2,47 @@
 //! remote procedure calls — the coordination primitive for multi-instance
 //! deployment (topology exchange, channel setup, task orchestration).
 //!
-//! Built entirely on the Channels frontend: one SPSC request channel
-//! (caller → listener) and one SPSC response channel (listener → caller).
-//! Functions must be registered on the listening side before a call
-//! executes; the listener enters `serve_one`/`serve_forever`, and return
-//! values are delivered back to the caller automatically.
+//! The engine is a **mesh**: every instance may run one [`RpcServer`]
+//! (callee side) and any number of [`RpcClient`]s (caller side). A server
+//! listens on one dedicated SPSC request ring *per caller* — the
+//! non-locking MPSC pattern of the channels frontend — and routes each
+//! response back on the calling instance's private response ring, so any
+//! instance can call any other without callers contending for a shared
+//! ring. [`RpcMesh::build`] assembles the full N×N link set with the
+//! collective choreography the distributed backends require.
 //!
-//! Wire format inside the fixed-size ring message:
-//! `[u64 fn_id][u64 payload_len][payload .. padded]`; responses carry
-//! `[u64 status][u64 payload_len][payload ..]` (status 0 = ok, 1 =
-//! unknown function, 2 = handler error).
+//! ## Wire format
+//!
+//! Every ring message is `HDR` (32) header bytes followed by
+//! `max_payload` payload bytes. Fields are little-endian:
+//!
+//! ```text
+//! request:  [u64 fn_id][u32 caller][u32 magic][u64 seq][u64 len][payload…]
+//! response: [u64 status][u64 seq][u64 len][u32 magic][u32 0][payload…]
+//! ```
+//!
+//! Lengths are validated on both sides of the wire: a request or response
+//! whose `len` exceeds the link's `max_payload` is a **protocol error**
+//! (`ST_MALFORMED` / a `Transport` error at the caller), never a silent
+//! truncation. A handler return value that does not fit the link is
+//! reported as `ST_OVERSIZED` with the original length. Ring depth is a
+//! protocol constant ([`RPC_RING_CAPACITY`]; each link carries one
+//! outstanding call, so depth is not worth negotiating), which makes the
+//! exchanged ring length `RPC_RING_CAPACITY × (HDR + max_payload)` a
+//! *unique* function of `max_payload` — both sides verify it at link
+//! setup, so mismatched `max_payload` configurations fail fast instead
+//! of corrupting frames.
+//!
+//! ## Tag namespace
+//!
+//! All RPC rings live in a reserved tag namespace under [`RPC_TAG_BASE`]
+//! (policy: DESIGN.md §4). [`rpc_link_tags`] packs (service, server
+//! instance, caller instance, lane) into disjoint bit fields, so no two
+//! links can alias and nothing is claimed implicitly — the historical
+//! `Tag(tag + 1)` response-ring convention, which aliased adjacent links,
+//! is structurally impossible here.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::Arc;
 
 use crate::core::communication::CommunicationManager;
@@ -21,6 +50,7 @@ use crate::core::error::{HicrError, Result};
 use crate::core::ids::Tag;
 use crate::core::memory::LocalMemorySlot;
 use crate::frontends::channels::spsc::{SpscConsumer, SpscProducer};
+use crate::util::backoff::{retry_until_some, Backoff};
 
 /// Stable 64-bit id for a function name (FNV-1a).
 pub fn fn_id(name: &str) -> u64 {
@@ -32,110 +62,342 @@ pub fn fn_id(name: &str) -> u64 {
     h
 }
 
-/// Header bytes inside each ring message.
-const HDR: usize = 16;
+/// Header bytes of every wire message (request and response alike).
+pub const HDR: usize = 32;
+
+/// Frame marker embedded in every envelope ("HRPC").
+const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"HRPC");
 
 /// Response status codes.
-const ST_OK: u64 = 0;
-const ST_UNKNOWN: u64 = 1;
-const ST_HANDLER_ERR: u64 = 2;
+pub const ST_OK: u64 = 0;
+/// The function id is not registered on the serving instance.
+pub const ST_UNKNOWN_FN: u64 = 1;
+/// The handler executed and returned an error.
+pub const ST_HANDLER_ERR: u64 = 2;
+/// The handler's return value exceeds the link's `max_payload`.
+pub const ST_OVERSIZED: u64 = 3;
+/// The request envelope failed validation (magic, length, caller id).
+pub const ST_MALFORMED: u64 = 4;
+
+/// Reserved tag namespace for all RPC rings (bits 52..64 = 0xA9C).
+pub const RPC_TAG_BASE: u64 = 0xA9C << 52;
+
+const SERVICE_SHIFT: u32 = 36;
+const SERVER_SHIFT: u32 = 20;
+const CALLER_SHIFT: u32 = 4;
+const LANE_REQUEST: u64 = 0;
+const LANE_RESPONSE: u64 = 1;
+
+/// RPC instance ranks must fit the 16-bit tag field.
+pub const MAX_RPC_RANK: u32 = 0xFFFF;
+
+/// Fixed ring depth of every RPC link. A protocol constant rather than a
+/// per-link knob: each caller has at most one call outstanding, and a
+/// fixed depth makes the exchanged ring length a unique function of
+/// `max_payload`, so link-setup geometry validation cannot be fooled by
+/// colliding (capacity, max_payload) products.
+pub const RPC_RING_CAPACITY: u64 = 4;
+
+/// Exchanged ring length implied by a link's `max_payload` — unique,
+/// because ring depth is fixed. The single source of the geometry both
+/// validation sites compare against.
+fn negotiated_ring_len(max_payload: usize) -> usize {
+    RPC_RING_CAPACITY as usize * (HDR + max_payload)
+}
+
+/// The (request, response) ring tags of the RPC link from `caller` to
+/// `server` under `service`. Both tags are derived from disjoint bit
+/// fields of the reserved namespace — distinct links can never alias,
+/// and no tag adjacent to another frontend's is claimed implicitly.
+pub fn rpc_link_tags(service: u16, server: u32, caller: u32) -> Result<(Tag, Tag)> {
+    if server > MAX_RPC_RANK || caller > MAX_RPC_RANK {
+        return Err(HicrError::Bounds(format!(
+            "RPC instance ranks must fit 16 bits (server {server}, caller {caller})"
+        )));
+    }
+    if server == caller {
+        return Err(HicrError::Rejected(format!(
+            "an RPC link joins two distinct instances (both sides are {server})"
+        )));
+    }
+    let base = RPC_TAG_BASE
+        | (service as u64) << SERVICE_SHIFT
+        | (server as u64) << SERVER_SHIFT
+        | (caller as u64) << CALLER_SHIFT;
+    Ok((Tag(base | LANE_REQUEST), Tag(base | LANE_RESPONSE)))
+}
 
 /// A registered remote procedure.
-pub type RpcHandler = Box<dyn Fn(&[u8]) -> Result<Vec<u8>> + Send>;
+pub type RpcHandler = Box<dyn FnMut(&[u8]) -> Result<Vec<u8>> + Send>;
 
-/// Listener (server) side of an RPC link.
-pub struct RpcListener {
+struct RequestHeader {
+    fn_id: u64,
+    caller: u32,
+    seq: u64,
+    len: usize,
+}
+
+fn encode_request(buf: &mut [u8], id: u64, caller: u32, seq: u64, args: &[u8]) {
+    buf[0..8].copy_from_slice(&id.to_le_bytes());
+    buf[8..12].copy_from_slice(&caller.to_le_bytes());
+    buf[12..16].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+    buf[16..24].copy_from_slice(&seq.to_le_bytes());
+    buf[24..32].copy_from_slice(&(args.len() as u64).to_le_bytes());
+    buf[HDR..HDR + args.len()].copy_from_slice(args);
+}
+
+fn decode_request(
+    buf: &[u8],
+    max_payload: usize,
+) -> std::result::Result<RequestHeader, String> {
+    let magic = u32::from_le_bytes(buf[12..16].try_into().unwrap());
+    if magic != WIRE_MAGIC {
+        return Err(format!("bad request frame marker {magic:#010x}"));
+    }
+    let len = u64::from_le_bytes(buf[24..32].try_into().unwrap()) as usize;
+    if len > max_payload {
+        return Err(format!(
+            "request length {len} B exceeds link max payload {max_payload} B"
+        ));
+    }
+    Ok(RequestHeader {
+        fn_id: u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+        caller: u32::from_le_bytes(buf[8..12].try_into().unwrap()),
+        seq: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+        len,
+    })
+}
+
+fn encode_response(buf: &mut [u8], status: u64, seq: u64, payload: &[u8]) {
+    buf[0..8].copy_from_slice(&status.to_le_bytes());
+    buf[8..16].copy_from_slice(&seq.to_le_bytes());
+    buf[16..24].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    buf[24..28].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+    buf[28..32].copy_from_slice(&0u32.to_le_bytes());
+    buf[HDR..HDR + payload.len()].copy_from_slice(payload);
+}
+
+fn decode_response(
+    buf: &[u8],
+    max_payload: usize,
+) -> std::result::Result<(u64, u64, usize), String> {
+    let magic = u32::from_le_bytes(buf[24..28].try_into().unwrap());
+    if magic != WIRE_MAGIC {
+        return Err(format!("bad response frame marker {magic:#010x}"));
+    }
+    let len = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+    if len > max_payload {
+        return Err(format!(
+            "response length {len} B exceeds link max payload {max_payload} B"
+        ));
+    }
+    Ok((
+        u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+        u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+        len,
+    ))
+}
+
+/// One caller's pair of rings as seen from the server.
+struct ServerLink {
+    caller: u32,
     requests: SpscConsumer,
     responses: SpscProducer,
+    /// Response ring geometry verified against this link's negotiation.
+    validated: bool,
+}
+
+/// The callee side of the mesh: one request ring per caller (drained
+/// round-robin, exactly the non-locking MPSC pattern), responses routed
+/// back on the requesting caller's private ring.
+pub struct RpcServer {
+    service: u16,
+    me: u32,
+    links: Vec<ServerLink>,
     handlers: HashMap<u64, RpcHandler>,
     names: HashMap<u64, String>,
     max_payload: usize,
+    next: usize,
+    served: u64,
+    req_buf: Vec<u8>,
+    resp_buf: Vec<u8>,
 }
 
-/// Caller (client) side of an RPC link.
-pub struct RpcCaller {
+/// The caller side of one link: this instance calling into `server`.
+pub struct RpcClient {
+    service: u16,
+    server: u32,
+    me: u32,
     requests: SpscProducer,
     responses: SpscConsumer,
     max_payload: usize,
+    next_seq: u64,
+    /// Request ring geometry verified against this link's negotiation.
+    validated: bool,
+    sbuf: Vec<u8>,
+    rbuf: Vec<u8>,
 }
 
-/// Create the listener side. Collective with [`RpcCaller::create`] under
-/// the same `tag` — the listener owns the request ring, the caller the
-/// response ring. `alloc` supplies (data, coord) slots for the ring this
-/// side owns.
-impl RpcListener {
+fn geometry_error(
+    side: &str,
+    service: u16,
+    server: u32,
+    caller: u32,
+    got: usize,
+    want: usize,
+) -> HicrError {
+    HicrError::Collective(format!(
+        "RPC link (service {service}, server {server}, caller {caller}): \
+         {side} ring is {got} B but this side negotiated {want} B — \
+         caller and listener disagree on max_payload"
+    ))
+}
+
+impl RpcServer {
+    /// Create the server with one request/response ring pair per caller.
+    /// Collective with each caller's [`RpcClient::create`] under the same
+    /// `(service, me, caller)` link; over a distributed backend with more
+    /// than two instances use [`RpcMesh::build`], which adds the
+    /// bystander participation every collective exchange needs. `alloc`
+    /// supplies the ring/coordination/scratch slots this side owns.
     pub fn create(
         cmm: Arc<dyn CommunicationManager>,
-        tag: Tag,
+        service: u16,
+        me: u32,
+        callers: &[u32],
         max_payload: usize,
-        capacity: u64,
         mut alloc: impl FnMut(usize) -> Result<LocalMemorySlot>,
-    ) -> Result<RpcListener> {
+    ) -> Result<RpcServer> {
         let msg = HDR + max_payload;
-        // Request ring: ours. Keys 0/1 under `tag`.
-        let requests = SpscConsumer::create(
-            cmm.as_ref(),
-            alloc(msg * capacity as usize)?,
-            alloc(16)?,
-            tag,
-            0,
-            msg,
-            capacity,
-        )?;
-        // Response ring: the caller's. Keys 0/1 under tag+1.
-        let responses = SpscProducer::create(
-            Arc::clone(&cmm),
-            Tag(tag.0 + 1),
-            0,
-            msg,
-            capacity,
-            alloc(8)?,
-        )?;
-        Ok(RpcListener {
-            requests,
-            responses,
+        let want = negotiated_ring_len(max_payload);
+        let mut seen = BTreeSet::new();
+        let mut links = Vec::with_capacity(callers.len());
+        for &caller in callers {
+            if !seen.insert(caller) {
+                return Err(HicrError::Rejected(format!(
+                    "duplicate caller {caller} in RPC server link set"
+                )));
+            }
+            let (req_tag, resp_tag) = rpc_link_tags(service, me, caller)?;
+            let requests = SpscConsumer::create(
+                cmm.as_ref(),
+                alloc(want)?,
+                alloc(16)?,
+                req_tag,
+                0,
+                msg,
+                RPC_RING_CAPACITY,
+            )?;
+            let responses = SpscProducer::create(
+                Arc::clone(&cmm),
+                resp_tag,
+                0,
+                msg,
+                RPC_RING_CAPACITY,
+                alloc(8)?,
+            )?;
+            let mut link = ServerLink {
+                caller,
+                requests,
+                responses,
+                validated: false,
+            };
+            // Mismatched link geometry must fail at setup, not corrupt
+            // frames later. The caller's response ring resolves eagerly
+            // on collective backends; late (intra-process) consumers are
+            // validated on first response instead.
+            if let Some(got) = link.responses.resolved_ring_len() {
+                if got != want {
+                    return Err(geometry_error(
+                        "response", service, me, caller, got, want,
+                    ));
+                }
+                link.validated = true;
+            }
+            links.push(link);
+        }
+        Ok(RpcServer {
+            service,
+            me,
+            links,
             handlers: HashMap::new(),
             names: HashMap::new(),
             max_payload,
+            next: 0,
+            served: 0,
+            req_buf: vec![0u8; msg],
+            resp_buf: vec![0u8; msg],
         })
     }
 
-    /// Register `name` before callers invoke it (paper: "the function must
-    /// be pre-registered on the receiving instance").
+    /// This server's instance rank.
+    pub fn instance(&self) -> u32 {
+        self.me
+    }
+
+    /// Requests served so far.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// Register `name` before callers invoke it (paper: "the function
+    /// must be pre-registered on the receiving instance"). Re-registering
+    /// a name, or registering a name whose FNV-1a id collides with an
+    /// already-registered one, is an error — never a silent overwrite.
     pub fn register(
         &mut self,
         name: &str,
-        handler: impl Fn(&[u8]) -> Result<Vec<u8>> + Send + 'static,
-    ) {
-        let id = fn_id(name);
-        self.names.insert(id, name.to_string());
-        self.handlers.insert(id, Box::new(handler));
+        handler: impl FnMut(&[u8]) -> Result<Vec<u8>> + Send + 'static,
+    ) -> Result<()> {
+        self.register_with_id(fn_id(name), name, Box::new(handler))
     }
 
-    /// Serve exactly one request (blocking listen).
-    pub fn serve_one(&mut self) -> Result<()> {
-        let msg_size = HDR + self.max_payload;
-        let mut buf = vec![0u8; msg_size];
-        self.requests.pop_blocking(&mut buf)?;
-        let id = u64::from_le_bytes(buf[0..8].try_into().unwrap());
-        let len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
-        if len > self.max_payload {
-            return Err(HicrError::Bounds("request payload overflow".into()));
+    /// Registration keyed by an explicit id (private: letting callers
+    /// pick ids divorced from `fn_id(name)` would undermine the
+    /// collision detection; the unit tests forge collisions through it).
+    fn register_with_id(
+        &mut self,
+        id: u64,
+        name: &str,
+        handler: RpcHandler,
+    ) -> Result<()> {
+        match self.names.get(&id) {
+            Some(existing) if existing == name => Err(HicrError::Rejected(format!(
+                "RPC '{name}' is already registered on instance {}",
+                self.me
+            ))),
+            Some(existing) => Err(HicrError::Rejected(format!(
+                "RPC fn_id collision: '{name}' hashes to {id:#018x}, \
+                 already taken by '{existing}'"
+            ))),
+            None => {
+                self.names.insert(id, name.to_string());
+                self.handlers.insert(id, handler);
+                Ok(())
+            }
         }
-        let (status, ret) = match self.handlers.get(&id) {
-            None => (ST_UNKNOWN, Vec::new()),
-            Some(h) => match h(&buf[HDR..HDR + len]) {
-                Ok(ret) if ret.len() <= self.max_payload => (ST_OK, ret),
-                Ok(_) => (ST_HANDLER_ERR, b"return value too large".to_vec()),
-                Err(e) => (ST_HANDLER_ERR, e.to_string().into_bytes()),
-            },
-        };
-        let mut resp = vec![0u8; msg_size];
-        resp[0..8].copy_from_slice(&status.to_le_bytes());
-        resp[8..16].copy_from_slice(&(ret.len() as u64).to_le_bytes());
-        resp[HDR..HDR + ret.len()].copy_from_slice(&ret);
-        self.responses.push_blocking(&resp)?;
-        Ok(())
+    }
+
+    /// Poll every caller's request ring once (round-robin) and serve at
+    /// most one request. Ok(false) when all rings are empty.
+    pub fn try_serve_one(&mut self) -> Result<bool> {
+        if self.links.is_empty() {
+            return Ok(false);
+        }
+        for _ in 0..self.links.len() {
+            let i = self.next;
+            self.next = (self.next + 1) % self.links.len();
+            if self.links[i].requests.pop(&mut self.req_buf)? {
+                self.dispatch(i)?;
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Serve exactly one request (blocking listen with backoff).
+    pub fn serve_one(&mut self) -> Result<()> {
+        retry_until_some(|| Ok(self.try_serve_one()?.then_some(())))
     }
 
     /// Serve `n` requests.
@@ -145,72 +407,318 @@ impl RpcListener {
         }
         Ok(())
     }
+
+    /// Serve requests until `keep` returns false (checked between
+    /// requests — a handler that flips shared state, like the deployment
+    /// frontend's shutdown RPC, ends the loop after its response is
+    /// sent). Returns the number of requests served by this call.
+    pub fn serve_while(&mut self, mut keep: impl FnMut() -> bool) -> Result<u64> {
+        let start = self.served;
+        let mut backoff = Backoff::new();
+        while keep() {
+            if self.try_serve_one()? {
+                backoff.reset();
+            } else {
+                backoff.wait();
+            }
+        }
+        Ok(self.served - start)
+    }
+
+    /// Decode the request sitting in `req_buf`, run the handler, and
+    /// push the response envelope on link `i`'s response ring.
+    fn dispatch(&mut self, i: usize) -> Result<()> {
+        let max_payload = self.max_payload;
+        let link_caller = self.links[i].caller;
+        // Best-effort seq echo even for malformed frames, so a waiting
+        // caller fails fast instead of desynchronizing.
+        let seq_hint = u64::from_le_bytes(self.req_buf[16..24].try_into().unwrap());
+        let (status, seq, mut ret): (u64, u64, Vec<u8>) =
+            match decode_request(&self.req_buf, max_payload) {
+                Err(fault) => (ST_MALFORMED, seq_hint, fault.into_bytes()),
+                Ok(req) if req.caller != link_caller => (
+                    ST_MALFORMED,
+                    req.seq,
+                    format!(
+                        "caller id {} on the ring of caller {link_caller}",
+                        req.caller
+                    )
+                    .into_bytes(),
+                ),
+                Ok(req) => {
+                    let RpcServer {
+                        handlers, req_buf, ..
+                    } = self;
+                    match handlers.get_mut(&req.fn_id) {
+                        None => (ST_UNKNOWN_FN, req.seq, Vec::new()),
+                        Some(h) => match h(&req_buf[HDR..HDR + req.len]) {
+                            Ok(v) if v.len() <= max_payload => (ST_OK, req.seq, v),
+                            Ok(v) => (
+                                ST_OVERSIZED,
+                                req.seq,
+                                format!(
+                                    "handler returned {} B > link max payload \
+                                     {max_payload} B",
+                                    v.len()
+                                )
+                                .into_bytes(),
+                            ),
+                            Err(e) => {
+                                (ST_HANDLER_ERR, req.seq, e.to_string().into_bytes())
+                            }
+                        },
+                    }
+                }
+            };
+        // Status texts (never ST_OK payloads) may be clipped to fit.
+        ret.truncate(max_payload);
+        encode_response(&mut self.resp_buf, status, seq, &ret);
+        let want = negotiated_ring_len(max_payload);
+        let (service, me) = (self.service, self.me);
+        let link = &mut self.links[i];
+        if !link.validated {
+            let got = link.responses.ring_len()?;
+            if got != want {
+                return Err(geometry_error(
+                    "response", service, me, link.caller, got, want,
+                ));
+            }
+            link.validated = true;
+        }
+        link.responses.push_blocking(&self.resp_buf)?;
+        self.served += 1;
+        Ok(())
+    }
 }
 
-impl RpcCaller {
-    /// Create the caller side (collective with [`RpcListener::create`]).
+impl RpcClient {
+    /// Create the caller side of the link from instance `me` to the
+    /// server on instance `server` (collective with the matching
+    /// [`RpcServer::create`] link; see [`RpcMesh::build`] for worlds of
+    /// more than two instances over distributed backends).
     pub fn create(
         cmm: Arc<dyn CommunicationManager>,
-        tag: Tag,
+        service: u16,
+        server: u32,
+        me: u32,
         max_payload: usize,
-        capacity: u64,
         mut alloc: impl FnMut(usize) -> Result<LocalMemorySlot>,
-    ) -> Result<RpcCaller> {
+    ) -> Result<RpcClient> {
+        let (req_tag, resp_tag) = rpc_link_tags(service, server, me)?;
         let msg = HDR + max_payload;
         let requests = SpscProducer::create(
             Arc::clone(&cmm),
-            tag,
+            req_tag,
             0,
             msg,
-            capacity,
+            RPC_RING_CAPACITY,
             alloc(8)?,
         )?;
         let responses = SpscConsumer::create(
             cmm.as_ref(),
-            alloc(msg * capacity as usize)?,
+            alloc(msg * RPC_RING_CAPACITY as usize)?,
             alloc(16)?,
-            Tag(tag.0 + 1),
+            resp_tag,
             0,
             msg,
-            capacity,
+            RPC_RING_CAPACITY,
         )?;
-        Ok(RpcCaller {
+        let mut client = RpcClient {
+            service,
+            server,
+            me,
             requests,
             responses,
             max_payload,
-        })
+            next_seq: 0,
+            validated: false,
+            sbuf: vec![0u8; msg],
+            rbuf: vec![0u8; msg],
+        };
+        if let Some(got) = client.requests.resolved_ring_len() {
+            client.check_geometry(got)?;
+            client.validated = true;
+        }
+        Ok(client)
     }
 
-    /// Invoke `name` with `args`; blocks for the return value.
+    /// The server instance this client calls into.
+    pub fn server_instance(&self) -> u32 {
+        self.server
+    }
+
+    fn check_geometry(&self, got: usize) -> Result<()> {
+        let want = negotiated_ring_len(self.max_payload);
+        if got != want {
+            return Err(geometry_error(
+                "request",
+                self.service,
+                self.server,
+                self.me,
+                got,
+                want,
+            ));
+        }
+        Ok(())
+    }
+
+    /// Invoke `name` with `args`; blocks for the return value. Responses
+    /// whose envelope fails validation (marker, length beyond the link's
+    /// `max_payload`, out-of-sync sequence number) are wire-protocol
+    /// errors — payloads are never truncated to fit.
     pub fn call(&mut self, name: &str, args: &[u8]) -> Result<Vec<u8>> {
         if args.len() > self.max_payload {
             return Err(HicrError::Bounds(format!(
-                "args {} B > max payload {}",
+                "args {} B > link max payload {}",
                 args.len(),
                 self.max_payload
             )));
         }
-        let msg_size = HDR + self.max_payload;
-        let mut req = vec![0u8; msg_size];
-        req[0..8].copy_from_slice(&fn_id(name).to_le_bytes());
-        req[8..16].copy_from_slice(&(args.len() as u64).to_le_bytes());
-        req[HDR..HDR + args.len()].copy_from_slice(args);
-        self.requests.push_blocking(&req)?;
-        let mut resp = vec![0u8; msg_size];
-        self.responses.pop_blocking(&mut resp)?;
-        let status = u64::from_le_bytes(resp[0..8].try_into().unwrap());
-        let len = u64::from_le_bytes(resp[8..16].try_into().unwrap()) as usize;
-        let payload = resp[HDR..HDR + len.min(self.max_payload)].to_vec();
-        match status {
-            ST_OK => Ok(payload),
-            ST_UNKNOWN => Err(HicrError::Rejected(format!(
-                "RPC '{name}' not registered on the listening instance"
-            ))),
-            _ => Err(HicrError::InvalidState(format!(
-                "RPC '{name}' handler failed: {}",
+        if !self.validated {
+            let got = self.requests.ring_len()?;
+            self.check_geometry(got)?;
+            self.validated = true;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        encode_request(&mut self.sbuf, fn_id(name), self.me, seq, args);
+        self.requests.push_blocking(&self.sbuf)?;
+        self.responses.pop_blocking(&mut self.rbuf)?;
+        let (status, rseq, len) =
+            decode_response(&self.rbuf, self.max_payload).map_err(|fault| {
+                HicrError::Transport(format!(
+                    "RPC '{name}' to instance {}: wire protocol violation: {fault}",
+                    self.server
+                ))
+            })?;
+        let payload = self.rbuf[HDR..HDR + len].to_vec();
+        // A malformed-request report echoes whatever sat in the seq
+        // field of the corrupt frame, so surface the server's diagnostic
+        // *before* the sequence check would mask it.
+        if status == ST_MALFORMED {
+            return Err(HicrError::Transport(format!(
+                "RPC '{name}' rejected as malformed: {}",
                 String::from_utf8_lossy(&payload)
+            )));
+        }
+        if rseq != seq {
+            return Err(HicrError::Transport(format!(
+                "RPC '{name}' to instance {}: response out of sync \
+                 (seq {rseq}, expected {seq})",
+                self.server
+            )));
+        }
+        if status == ST_OK {
+            return Ok(payload);
+        }
+        let text = String::from_utf8_lossy(&payload).into_owned();
+        match status {
+            ST_UNKNOWN_FN => Err(HicrError::Rejected(format!(
+                "RPC '{name}' not registered on instance {}",
+                self.server
+            ))),
+            ST_HANDLER_ERR => Err(HicrError::InvalidState(format!(
+                "RPC '{name}' handler failed: {text}"
+            ))),
+            ST_OVERSIZED => Err(HicrError::Bounds(format!(
+                "RPC '{name}' response exceeded the link payload limit: {text}"
+            ))),
+            other => Err(HicrError::Transport(format!(
+                "RPC '{name}': unknown response status {other}"
             ))),
         }
+    }
+}
+
+/// The full-mesh RPC fabric of one instance: a server accepting calls
+/// from every peer, plus a client to every peer's server.
+pub struct RpcMesh {
+    pub me: u32,
+    pub server: RpcServer,
+    pub clients: BTreeMap<u32, RpcClient>,
+}
+
+impl RpcMesh {
+    /// Assemble the N×N mesh. **Collective**: every instance in `ranks`
+    /// must call this with the same `service`, `ranks` and
+    /// `max_payload`. Ring exchanges are walked in one canonical global
+    /// order — (server, caller) ascending, request lane before response
+    /// lane — and instances not party to a link still participate in its
+    /// exchange (volunteering nothing), which is what the distributed
+    /// backends' collective-exchange semantics require.
+    pub fn build(
+        cmm: &Arc<dyn CommunicationManager>,
+        service: u16,
+        me: u32,
+        ranks: &[u32],
+        max_payload: usize,
+        mut alloc: impl FnMut(usize) -> Result<LocalMemorySlot>,
+    ) -> Result<RpcMesh> {
+        let mut sorted: Vec<u32> = ranks.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != ranks.len() {
+            return Err(HicrError::Rejected(
+                "duplicate instance ranks in RPC mesh".into(),
+            ));
+        }
+        if !sorted.contains(&me) {
+            return Err(HicrError::Rejected(format!(
+                "instance {me} not a member of the RPC mesh {sorted:?}"
+            )));
+        }
+        let peers: Vec<u32> = sorted.iter().copied().filter(|&r| r != me).collect();
+        let mut server = None;
+        let mut clients = BTreeMap::new();
+        for &s in &sorted {
+            if s == me {
+                server = Some(RpcServer::create(
+                    Arc::clone(cmm),
+                    service,
+                    me,
+                    &peers,
+                    max_payload,
+                    &mut alloc,
+                )?);
+                continue;
+            }
+            for &c in &sorted {
+                if c == s {
+                    continue;
+                }
+                if c == me {
+                    clients.insert(
+                        s,
+                        RpcClient::create(
+                            Arc::clone(cmm),
+                            service,
+                            s,
+                            me,
+                            max_payload,
+                            &mut alloc,
+                        )?,
+                    );
+                } else {
+                    // Bystander: enter the pair's collectives with no
+                    // contribution so the exchanges complete.
+                    let (req_tag, resp_tag) = rpc_link_tags(service, s, c)?;
+                    cmm.exchange_global_slots(req_tag, &[])?;
+                    cmm.exchange_global_slots(resp_tag, &[])?;
+                }
+            }
+        }
+        Ok(RpcMesh {
+            me,
+            server: server.expect("me is a mesh member"),
+            clients,
+        })
+    }
+
+    /// The client for calls into `rank`'s server.
+    pub fn client(&mut self, rank: u32) -> Result<&mut RpcClient> {
+        self.clients.get_mut(&rank).ok_or_else(|| {
+            HicrError::Rejected(format!("no RPC link to instance {rank}"))
+        })
     }
 }
 
@@ -224,86 +732,271 @@ mod tests {
         LocalMemorySlot::alloc(MemorySpaceId(1), len)
     }
 
-    fn link(tag: u64) -> (RpcListener, RpcCaller) {
-        let cmm: Arc<dyn CommunicationManager> =
-            Arc::new(ThreadsCommunicationManager::new());
-        let listener =
-            RpcListener::create(Arc::clone(&cmm), Tag(tag), 256, 4, alloc).unwrap();
-        let caller = RpcCaller::create(cmm, Tag(tag), 256, 4, alloc).unwrap();
-        (listener, caller)
+    fn cmm() -> Arc<dyn CommunicationManager> {
+        Arc::new(ThreadsCommunicationManager::new())
+    }
+
+    /// One server (instance 0) + one caller (instance 1).
+    fn link(service: u16) -> (RpcServer, RpcClient) {
+        let cmm = cmm();
+        let server =
+            RpcServer::create(Arc::clone(&cmm), service, 0, &[1], 256, alloc)
+                .unwrap();
+        let client = RpcClient::create(cmm, service, 0, 1, 256, alloc).unwrap();
+        (server, client)
     }
 
     #[test]
     fn call_with_return_value() {
-        let (mut listener, mut caller) = link(1000);
-        listener.register("sum", |args| {
-            let total: u64 = args
-                .chunks_exact(8)
-                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-                .sum();
-            Ok(total.to_le_bytes().to_vec())
-        });
-        let server = std::thread::spawn(move || {
-            listener.serve(1).unwrap();
-            listener
+        let (mut server, mut client) = link(10);
+        server
+            .register("sum", |args| {
+                let total: u64 = args
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .sum();
+                Ok(total.to_le_bytes().to_vec())
+            })
+            .unwrap();
+        let h = std::thread::spawn(move || {
+            server.serve(1).unwrap();
+            server
         });
         let mut args = Vec::new();
         for v in [3u64, 4, 5] {
             args.extend_from_slice(&v.to_le_bytes());
         }
-        let ret = caller.call("sum", &args).unwrap();
+        let ret = client.call("sum", &args).unwrap();
         assert_eq!(u64::from_le_bytes(ret.try_into().unwrap()), 12);
-        server.join().unwrap();
+        let server = h.join().unwrap();
+        assert_eq!(server.served(), 1);
     }
 
     #[test]
     fn unknown_function_rejected() {
-        let (mut listener, mut caller) = link(1010);
-        let server = std::thread::spawn(move || {
-            listener.serve(1).unwrap();
-        });
-        let err = caller.call("not-registered", b"").unwrap_err();
+        let (mut server, mut client) = link(11);
+        let h = std::thread::spawn(move || server.serve(1).unwrap());
+        let err = client.call("not-registered", b"").unwrap_err();
         assert!(err.is_rejection());
-        server.join().unwrap();
+        h.join().unwrap();
     }
 
     #[test]
     fn handler_error_propagates() {
-        let (mut listener, mut caller) = link(1020);
-        listener.register("bad", |_| {
-            Err(HicrError::InvalidState("deliberate".into()))
-        });
-        let server = std::thread::spawn(move || {
-            listener.serve(1).unwrap();
-        });
-        let err = caller.call("bad", b"x").unwrap_err();
+        let (mut server, mut client) = link(12);
+        server
+            .register("bad", |_| Err(HicrError::InvalidState("deliberate".into())))
+            .unwrap();
+        let h = std::thread::spawn(move || server.serve(1).unwrap());
+        let err = client.call("bad", b"x").unwrap_err();
         assert!(err.to_string().contains("deliberate"));
-        server.join().unwrap();
+        h.join().unwrap();
+    }
+
+    /// Regression (wire-protocol bug): an oversized handler return used
+    /// to be truncated to max_payload and delivered as success. It must
+    /// surface as an explicit error carrying the original length.
+    #[test]
+    fn oversized_response_is_wire_error_not_truncation() {
+        let (mut server, mut client) = link(13);
+        server.register("big", |_| Ok(vec![0xAB; 300])).unwrap();
+        let h = std::thread::spawn(move || server.serve(1).unwrap());
+        let err = client.call("big", b"").unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("300 B"), "missing original length: {text}");
+        assert!(text.contains("payload"), "unexpected error: {text}");
+        h.join().unwrap();
+    }
+
+    /// Regression (silent overwrite bug): re-registration and fn_id
+    /// collisions must be detected, never clobber an existing handler.
+    #[test]
+    fn duplicate_and_colliding_registrations_rejected() {
+        let (mut server, _client) = link(14);
+        server.register("f", |a| Ok(a.to_vec())).unwrap();
+        let err = server.register("f", |_| Ok(Vec::new())).unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err}");
+        // A forged id collision (two names, one id) is reported as such.
+        let err = server
+            .register_with_id(fn_id("f"), "g", Box::new(|_| Ok(Vec::new())))
+            .unwrap_err();
+        assert!(err.to_string().contains("collision"), "{err}");
+    }
+
+    /// Regression (ring-aliasing bug): links used to claim `tag + 1`
+    /// implicitly, so adjacent tags aliased each other's response rings.
+    /// The reserved-namespace packing is injective across services,
+    /// servers, callers and lanes, and disjoint from the data-object
+    /// namespace and plain low app tags.
+    #[test]
+    fn tag_namespace_is_injective_and_reserved() {
+        let mut seen = BTreeSet::new();
+        for service in [0u16, 1, 2, 0xFFFF] {
+            for server in [0u32, 1, 2, 7, 0xFFFF] {
+                for caller in [0u32, 1, 2, 7, 0xFFFF] {
+                    if server == caller {
+                        assert!(rpc_link_tags(service, server, caller).is_err());
+                        continue;
+                    }
+                    let (req, resp) = rpc_link_tags(service, server, caller).unwrap();
+                    assert!(seen.insert(req.0), "request tag aliased: {req}");
+                    assert!(seen.insert(resp.0), "response tag aliased: {resp}");
+                    for t in [req.0, resp.0] {
+                        assert_eq!(t >> 52, 0xA9C, "tag outside RPC namespace");
+                        assert_ne!(
+                            t >> 32,
+                            crate::frontends::dataobject::DATAOBJECT_TAG_BASE >> 32
+                        );
+                        assert!(t > u32::MAX as u64, "tag collides with app range");
+                    }
+                }
+            }
+        }
+        // Out-of-range ranks are rejected rather than wrapped.
+        assert!(rpc_link_tags(0, 0x1_0000, 0).is_err());
+        assert!(rpc_link_tags(0, 0, 0x1_0000).is_err());
+    }
+
+    /// Two links that share the server differ only in the caller bits;
+    /// traffic on one must never surface on the other (the aliasing the
+    /// old `tag + 1` scheme produced).
+    #[test]
+    fn adjacent_links_do_not_alias() {
+        let cmm = cmm();
+        let mut server =
+            RpcServer::create(Arc::clone(&cmm), 20, 0, &[1, 2], 64, alloc).unwrap();
+        server.register("echo", |a| Ok(a.to_vec())).unwrap();
+        let mut c1 = RpcClient::create(Arc::clone(&cmm), 20, 0, 1, 64, alloc).unwrap();
+        let mut c2 = RpcClient::create(cmm, 20, 0, 2, 64, alloc).unwrap();
+        let h = std::thread::spawn(move || server.serve(20).unwrap());
+        for i in 0..10u64 {
+            let r1 = c1.call("echo", &(i * 2).to_le_bytes()).unwrap();
+            let r2 = c2.call("echo", &(i * 2 + 1).to_le_bytes()).unwrap();
+            assert_eq!(u64::from_le_bytes(r1.try_into().unwrap()), i * 2);
+            assert_eq!(u64::from_le_bytes(r2.try_into().unwrap()), i * 2 + 1);
+        }
+        h.join().unwrap();
+    }
+
+    /// Mismatched link negotiation must fail at setup (the server was
+    /// created for 256-byte payloads, the caller for 128).
+    #[test]
+    fn mismatched_max_payload_rejected_at_link_setup() {
+        let cmm = cmm();
+        let _server =
+            RpcServer::create(Arc::clone(&cmm), 21, 0, &[1], 256, alloc).unwrap();
+        let err = RpcClient::create(cmm, 21, 0, 1, 128, alloc).unwrap_err();
+        assert!(err.to_string().contains("disagree"), "{err}");
     }
 
     #[test]
     fn many_sequential_calls() {
-        let (mut listener, mut caller) = link(1030);
-        listener.register("echo", |args| Ok(args.to_vec()));
-        let server = std::thread::spawn(move || {
-            listener.serve(50).unwrap();
-        });
+        let (mut server, mut client) = link(15);
+        server.register("echo", |a| Ok(a.to_vec())).unwrap();
+        let h = std::thread::spawn(move || server.serve(50).unwrap());
         for i in 0..50u32 {
-            let ret = caller.call("echo", &i.to_le_bytes()).unwrap();
+            let ret = client.call("echo", &i.to_le_bytes()).unwrap();
             assert_eq!(u32::from_le_bytes(ret.try_into().unwrap()), i);
         }
-        server.join().unwrap();
+        h.join().unwrap();
     }
 
     #[test]
     fn oversized_args_rejected_locally() {
-        let (_listener, mut caller) = link(1040);
-        assert!(caller.call("x", &vec![0u8; 300]).is_err());
+        let (_server, mut client) = link(16);
+        assert!(client.call("x", &[0u8; 300]).is_err());
     }
 
     #[test]
     fn fn_id_stable_and_distinct() {
         assert_eq!(fn_id("topology"), fn_id("topology"));
         assert_ne!(fn_id("topology"), fn_id("topologia"));
+    }
+
+    /// Satellite: concurrent callers hammering one listener through the
+    /// MPSC request fabric — every call answered, per-caller streams
+    /// isolated and in order.
+    #[test]
+    fn concurrent_callers_hammer_one_listener() {
+        let cmm = cmm();
+        let callers: Vec<u32> = vec![1, 2, 3, 4];
+        let per = 50u64;
+        let mut server =
+            RpcServer::create(Arc::clone(&cmm), 22, 0, &callers, 64, alloc).unwrap();
+        server
+            .register("double", |args| {
+                let v = u64::from_le_bytes(args.try_into().unwrap());
+                Ok((v * 2).to_le_bytes().to_vec())
+            })
+            .unwrap();
+        let total = per as usize * callers.len();
+        let server_thread = std::thread::spawn(move || {
+            server.serve(total).unwrap();
+            server
+        });
+        let mut joins = Vec::new();
+        for &caller in &callers {
+            let cmm = Arc::clone(&cmm);
+            joins.push(std::thread::spawn(move || {
+                let mut client =
+                    RpcClient::create(cmm, 22, 0, caller, 64, alloc).unwrap();
+                for i in 0..per {
+                    let x = (caller as u64) * 1_000 + i;
+                    let ret = client.call("double", &x.to_le_bytes()).unwrap();
+                    assert_eq!(u64::from_le_bytes(ret.try_into().unwrap()), x * 2);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let server = server_thread.join().unwrap();
+        assert_eq!(server.served(), total as u64);
+    }
+
+    /// Three-instance mesh over the threads backend: every instance
+    /// serves `whoami` and calls every peer.
+    #[test]
+    fn full_mesh_every_instance_calls_every_peer() {
+        let cmm = cmm();
+        let ranks = [0u32, 1, 2];
+        let mut joins = Vec::new();
+        for &me in &ranks {
+            let cmm = Arc::clone(&cmm);
+            joins.push(std::thread::spawn(move || {
+                let mut mesh =
+                    RpcMesh::build(&cmm, 23, me, &[0, 1, 2], 64, alloc).unwrap();
+                mesh.server
+                    .register("whoami", move |_| Ok(me.to_le_bytes().to_vec()))
+                    .unwrap();
+                // Each instance answers one call from each of 2 peers
+                // while issuing one call to each of 2 peers. Serve on a
+                // helper thread so call/serve never deadlock.
+                let mut server = mesh.server;
+                let serve = std::thread::spawn(move || {
+                    server.serve(2).unwrap();
+                });
+                for peer in ranks.iter().copied().filter(|&r| r != me) {
+                    let ret = mesh
+                        .clients
+                        .get_mut(&peer)
+                        .unwrap()
+                        .call("whoami", b"")
+                        .unwrap();
+                    assert_eq!(u32::from_le_bytes(ret.try_into().unwrap()), peer);
+                }
+                serve.join().unwrap();
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn mesh_membership_validated() {
+        let cmm = cmm();
+        assert!(RpcMesh::build(&cmm, 24, 9, &[0, 1], 64, alloc).is_err());
+        assert!(RpcMesh::build(&cmm, 24, 0, &[0, 0, 1], 64, alloc).is_err());
     }
 }

@@ -25,7 +25,8 @@
 //!   registered in [`backends::registry`]; the Table 1 coverage matrix
 //!   is a derived view over it.
 //! - [`frontends`] — ready-to-use libraries built *only* on the core API:
-//!   Channels (SPSC/MPSC), DataObject, RPC, and Tasking.
+//!   Channels (SPSC/MPSC), DataObject, RPC (any-to-any mesh), Deployment
+//!   (the Fig. 7 idiom), and Tasking.
 //! - [`netsim`] — the distributed substrate: instance launcher/rendezvous,
 //!   framed one-sided wire protocol, and calibrated interconnect cost
 //!   models (the sandbox has no Infiniband; see DESIGN.md §2).

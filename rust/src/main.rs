@@ -21,7 +21,12 @@
 //!
 //! Distributed apps available under `launch`: `pingpong` (Test Case 1
 //! measured mode), `jacobi` (Fig. 11 halo-exchange solver), `spawntest`
-//! (Fig. 7 runtime instance creation).
+//! (Fig. 7 runtime instance creation), and `taskfarm [total] [tasks]`
+//! (the full Fig. 7 deployment: root elastically ensures `total`
+//! instances — spawning the difference at runtime when `total` exceeds
+//! `--np` — gathers every worker's topology through the built-in
+//! `topology` RPC, farms `tasks` verified tasks across the mesh, and
+//! shuts the workers down by RPC).
 
 use std::sync::Arc;
 
@@ -58,7 +63,12 @@ fn main() -> Result<()> {
                  [--comm C] [--compute C] -- <app> [args]>\n\
                  run apps:    fibonacci [--n N] | jacobi [--n N --iters I] | \
                  inference [--images M]   (+ --compute <name> --workers W)\n\
-                 launch apps: pingpong | jacobi [n iters] | spawntest\n\
+                 launch apps: pingpong | jacobi [n iters] | spawntest | \
+                 taskfarm [total] [tasks]\n\
+                 taskfarm: root ensures `total` instances (default --np; \
+                 spawning the difference at runtime), gathers worker \
+                 topologies by RPC, farms `tasks` (default 100) verified \
+                 tasks across the mesh, then shuts workers down by RPC\n\
                  backends: selected by name from the plugin registry \
                  (`hicr backends` lists them)"
             );
@@ -354,6 +364,20 @@ fn cmd_worker() -> Result<()> {
             worker_jacobi(im.as_ref(), &cmm, &registry, &compute, n, iters)
         }
         Some("spawntest") => worker_spawntest(im.as_ref()),
+        Some("taskfarm") => {
+            let total: usize = words
+                .get(1)
+                .and_then(|s| s.parse().ok())
+                .or_else(|| {
+                    std::env::var(ENV_WORLD)
+                        .ok()
+                        .and_then(|w| w.parse().ok())
+                        .filter(|w| *w > 0)
+                })
+                .unwrap_or(2);
+            let tasks: u64 = words.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
+            worker_taskfarm(im.as_ref(), &cmm, &registry, total, tasks)
+        }
         other => Err(err(format!("unknown app {other:?}"))),
     };
     endpoint.bye();
@@ -417,6 +441,46 @@ fn worker_jacobi(
     );
     im.barrier()?;
     Ok(())
+}
+
+/// The full Fig. 7 deployment: elastic ramp-up to `total` instances,
+/// worker-topology gathering over the built-in `topology` RPC, and a
+/// verified master/worker task farm across the RPC mesh.
+fn worker_taskfarm(
+    im: &dyn InstanceManager,
+    cmm: &Arc<dyn CommunicationManager>,
+    registry: &Registry,
+    total: usize,
+    tasks: u64,
+) -> Result<()> {
+    // Serialize this instance's device tree for the topology RPC; an
+    // environment with no discoverable topology still farms (empty tree).
+    let topology_json = hicr::backends::merged_topology(registry, &PluginContext::new())
+        .map(|t| t.serialize())
+        .unwrap_or_else(|_| hicr::Topology::default().serialize());
+    match hicr::apps::taskfarm::run(im, cmm, topology_json, total, tasks)? {
+        None => Ok(()), // worker: served until shutdown
+        Some(report) => {
+            let spread: Vec<String> = report
+                .per_worker
+                .iter()
+                .map(|(rank, count)| format!("rank{rank}={count}"))
+                .collect();
+            println!(
+                "taskfarm world={} workers={} tasks={} ok checksum={:#018x} \
+                 topologies={} devices={} elapsed={:.3}s",
+                report.world,
+                report.workers,
+                report.tasks,
+                report.checksum,
+                report.gathered_topologies,
+                report.total_devices,
+                report.elapsed_s
+            );
+            println!("taskfarm spread: {}", spread.join(" "));
+            Ok(())
+        }
+    }
 }
 
 /// Fig. 7 demo: root tops up the instance count at runtime.

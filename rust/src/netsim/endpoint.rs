@@ -297,6 +297,15 @@ impl Endpoint {
         })
     }
 
+    /// Barriers this endpoint has initiated so far. Join-protocol guard:
+    /// the hub keys barriers by the per-endpoint epoch counter, and a
+    /// runtime-spawned instance starts counting at 1 — so spawning is
+    /// only well-defined while no barrier has been performed yet (the
+    /// join barrier must be the world's first).
+    pub fn barrier_epochs_used(&self) -> u64 {
+        self.next_barrier_epoch.load(Ordering::Relaxed) - 1
+    }
+
     /// Ask the hub to create new instances at runtime.
     pub fn spawn_instances(&self, count: u32, template_json: &str) -> Result<Vec<u32>> {
         self.shared.spawn_results.lock().unwrap().take();

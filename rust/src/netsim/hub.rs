@@ -41,6 +41,10 @@ struct HubState {
     departed: Vec<u32>,
     /// Ranks that have registered at least once.
     registered: Vec<u32>,
+    /// Barriers released so far. Once any barrier completed, runtime
+    /// spawning is refused: a newcomer's per-endpoint epoch counter
+    /// starts at 1 and could never pair with the world's next epoch.
+    barriers_completed: u64,
     /// Set when the hub is shutting down (accept loop exits).
     shutdown: bool,
 }
@@ -70,6 +74,7 @@ impl Hub {
                 next_rank: world as u32,
                 departed: Vec::new(),
                 registered: Vec::new(),
+                barriers_completed: 0,
                 shutdown: false,
             })),
             done_cv: Arc::new(std::sync::Condvar::new()),
@@ -141,6 +146,72 @@ impl Hub {
     }
 }
 
+/// Turn a completed exchange into its broadcast result frame.
+fn exchange_result_frame(tag: u64, ex: &ExchangeState) -> Frame {
+    let mut slots = Vec::new();
+    for (owner, entries) in &ex.arrived {
+        for (key, len) in entries {
+            slots.push((*key, *owner, *len));
+        }
+    }
+    Frame::ExchangeResult { tag, slots }
+}
+
+/// The join/leave path of the collectives. Pending **barriers** are
+/// re-sized to the live-instance count in both directions: a join
+/// barrier entered before a runtime spawn (Fig. 7) must also wait for
+/// the newcomers, and a departure must release a barrier the departed
+/// rank would have blocked forever. Pending **exchanges** follow their
+/// *original cohort*: an exchange in flight predates any newcomer (who
+/// can never enter it), so a spawn leaves it untouched
+/// (`departed_rank = None`), and a departure shrinks it by exactly the
+/// departing rank — and only when that rank had not already arrived.
+/// (A newcomer that both spawns and departs during an old exchange's
+/// pendency is mis-counted as cohort; no in-tree flow can produce that.)
+/// Returns the frames to broadcast for collectives the resize completed
+/// (possible only on departure).
+fn resize_pending_collectives(st: &mut HubState, departed_rank: Option<u32>) -> Vec<Frame> {
+    let live = (st.next_rank as usize).saturating_sub(st.departed.len());
+    let mut frames = Vec::new();
+    if let Some(rank) = departed_rank {
+        let complete: Vec<u64> = st
+            .exchanges
+            .iter_mut()
+            .filter_map(|(tag, ex)| {
+                if !ex.arrived.contains_key(&rank) {
+                    ex.expected = ex.expected.saturating_sub(1);
+                }
+                (ex.arrived.len() >= ex.expected).then_some(*tag)
+            })
+            .collect();
+        for tag in complete {
+            if let Some(ex) = st.exchanges.remove(&tag) {
+                frames.push(exchange_result_frame(tag, &ex));
+            }
+        }
+    }
+    let complete: Vec<u64> = st
+        .barriers
+        .iter_mut()
+        .filter_map(|(epoch, entry)| {
+            // A rank that died while blocked inside the barrier must not
+            // keep counting toward it, or its stale arrival would release
+            // the barrier without a still-live participant.
+            if let Some(rank) = departed_rank {
+                entry.0.retain(|&arrived| arrived != rank);
+            }
+            entry.1 = live;
+            (entry.0.len() >= live).then_some(*epoch)
+        })
+        .collect();
+    for epoch in complete {
+        st.barriers.remove(&epoch);
+        st.barriers_completed += 1;
+        frames.push(Frame::BarrierRelease { epoch });
+    }
+    frames
+}
+
 /// Send a frame to `rank` through the hub's routing table.
 fn route(state: &Mutex<HubState>, rank: u32, frame: &Frame) -> Result<()> {
     let mut st = state.lock().unwrap();
@@ -169,14 +240,44 @@ fn serve_connection(
     state: Arc<Mutex<HubState>>,
     spawn_fn: Option<Arc<SpawnFn>>,
 ) -> Result<()> {
+    let mut my_rank: Option<u32> = None;
+    let result = serve_frames(&stream, &state, &spawn_fn, &mut my_rank);
+    // Abnormal exit — an error (e.g. a rejected spawn) or EOF without a
+    // Bye (crashed instance): account the departure anyway, so pending
+    // collectives heal and Hub::run's completion condition can still be
+    // met instead of wedging the launcher forever. A clean Bye already
+    // recorded the departure; this is a no-op then.
+    if let Some(rank) = my_rank {
+        let frames = {
+            let mut st = state.lock().unwrap();
+            if st.departed.contains(&rank) {
+                Vec::new()
+            } else {
+                st.departed.push(rank);
+                st.writers.remove(&rank);
+                resize_pending_collectives(&mut st, Some(rank))
+            }
+        };
+        for frame in &frames {
+            let _ = broadcast(&state, frame);
+        }
+    }
+    result
+}
+
+fn serve_frames(
+    stream: &UnixStream,
+    state: &Arc<Mutex<HubState>>,
+    spawn_fn: &Option<Arc<SpawnFn>>,
+    my_rank: &mut Option<u32>,
+) -> Result<()> {
     let mut reader = stream
         .try_clone()
         .map_err(|e| HicrError::Transport(format!("clone stream: {e}")))?;
-    let mut my_rank: Option<u32> = None;
     while let Some(frame) = Frame::read_from(&mut reader)? {
         match frame {
             Frame::Register { rank } => {
-                my_rank = Some(rank);
+                *my_rank = Some(rank);
                 let writer = stream
                     .try_clone()
                     .map_err(|e| HicrError::Transport(format!("clone: {e}")))?;
@@ -187,10 +288,10 @@ fn serve_connection(
                 }
             }
             // One-sided traffic: route to destination.
-            Frame::Put { dst, .. } => route(&state, dst, &frame)?,
-            Frame::Get { dst, .. } => route(&state, dst, &frame)?,
-            Frame::PutAck { to, .. } => route(&state, to, &frame)?,
-            Frame::GetData { to, .. } => route(&state, to, &frame)?,
+            Frame::Put { dst, .. } => route(state, dst, &frame)?,
+            Frame::Get { dst, .. } => route(state, dst, &frame)?,
+            Frame::PutAck { to, .. } => route(state, to, &frame)?,
+            Frame::GetData { to, .. } => route(state, to, &frame)?,
             // Collective: exchange.
             Frame::Exchange { rank, tag, entries } => {
                 let complete = {
@@ -212,13 +313,7 @@ fn serve_connection(
                     }
                 };
                 if let Some(ex) = complete {
-                    let mut slots = Vec::new();
-                    for (owner, entries) in &ex.arrived {
-                        for (key, len) in entries {
-                            slots.push((*key, *owner, *len));
-                        }
-                    }
-                    broadcast(&state, &Frame::ExchangeResult { tag, slots })?;
+                    broadcast(state, &exchange_result_frame(tag, &ex))?;
                 }
             }
             // Collective: barrier.
@@ -234,13 +329,17 @@ fn serve_connection(
                     entry.0.push(rank);
                     if entry.0.len() >= entry.1 {
                         st.barriers.remove(&epoch);
+                        // Counted inside this critical section: a Spawn
+                        // interleaving between removal and the count
+                        // update would slip past the join guard.
+                        st.barriers_completed += 1;
                         true
                     } else {
                         false
                     }
                 };
                 if release {
-                    broadcast(&state, &Frame::BarrierRelease { epoch })?;
+                    broadcast(state, &Frame::BarrierRelease { epoch })?;
                 }
             }
             // Runtime instance creation.
@@ -248,19 +347,43 @@ fn serve_connection(
                 count,
                 template_json,
             } => {
-                let from =
-                    my_rank.ok_or_else(|| HicrError::Transport("spawn before register".into()))?;
+                let from = (*my_rank)
+                    .ok_or_else(|| HicrError::Transport("spawn before register".into()))?;
                 let new_ranks: Vec<u32> = {
                     let mut st = state.lock().unwrap();
-                    (0..count)
+                    if st.barriers_completed > 0 {
+                        // Hub-side defense of the join invariant (the
+                        // mpisim instance manager rejects this earlier
+                        // with a descriptive error): a newcomer's first
+                        // barrier is epoch 1, which the world has left
+                        // behind — spawning now would deadlock the join.
+                        // Erroring here drops the requester's connection;
+                        // serve_connection then records its departure so
+                        // the rest of the world heals while the requester
+                        // observes a timeout.
+                        return Err(HicrError::Instance(
+                            "runtime instance creation after a completed \
+                             barrier would desynchronize newcomer barrier \
+                             epochs"
+                                .into(),
+                        ));
+                    }
+                    let ranks: Vec<u32> = (0..count)
                         .map(|_| {
                             let r = st.next_rank;
                             st.next_rank += 1;
                             r
                         })
-                        .collect()
+                        .collect();
+                    // Join path: pending barriers must now also wait for
+                    // the spawned instances (growing the count can never
+                    // complete one, so nothing needs broadcasting here).
+                    // In-flight exchanges are left untouched — they
+                    // predate the newcomers.
+                    resize_pending_collectives(&mut st, None);
+                    ranks
                 };
-                if let Some(f) = &spawn_fn {
+                if let Some(f) = spawn_fn {
                     for r in &new_ranks {
                         f(*r, &template_json)?;
                     }
@@ -270,7 +393,7 @@ fn serve_connection(
                     ));
                 }
                 route(
-                    &state,
+                    state,
                     from,
                     &Frame::SpawnResult {
                         new_ranks: new_ranks.clone(),
@@ -291,12 +414,21 @@ fn serve_connection(
                     r.sort();
                     r
                 };
-                route(&state, rank, &Frame::InstanceList { ranks })?;
+                route(state, rank, &Frame::InstanceList { ranks })?;
             }
             Frame::Bye { rank } => {
-                let mut st = state.lock().unwrap();
-                st.departed.push(rank);
-                st.writers.remove(&rank);
+                // Leave path: re-size pending barriers to the shrunken
+                // live count, deduct this rank from exchange cohorts it
+                // had not entered, and release anything now complete.
+                let frames = {
+                    let mut st = state.lock().unwrap();
+                    st.departed.push(rank);
+                    st.writers.remove(&rank);
+                    resize_pending_collectives(&mut st, Some(rank))
+                };
+                for frame in &frames {
+                    broadcast(state, frame)?;
+                }
                 break;
             }
             other => {

@@ -464,6 +464,121 @@ fn inference_native_vs_xla_consistency() {
     assert_eq!(native_report.img0_pred, bundle.img0_pred);
 }
 
+/// Join-path regression: a barrier entered *before* a runtime spawn must
+/// wait for the spawned instance too (the hub resizes in-flight
+/// collectives when the world grows), and the spawned instance's first
+/// barrier joins the pending one.
+#[test]
+fn spawned_instance_joins_pending_barrier_over_mpisim() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let path = temp_sock("spawnjoin");
+    let spawned_arrived = Arc::new(AtomicBool::new(false));
+    let spawn_fn = {
+        let path = path.clone();
+        let spawned_arrived = Arc::clone(&spawned_arrived);
+        move |rank: u32, _template: &str| {
+            let path = path.clone();
+            let spawned_arrived = Arc::clone(&spawned_arrived);
+            std::thread::spawn(move || {
+                let e = Endpoint::connect(&path, rank).unwrap();
+                spawned_arrived.store(true, Ordering::SeqCst);
+                e.barrier().unwrap();
+                e.bye();
+            });
+            Ok(())
+        }
+    };
+    let hub = Hub::bind(&path, 2, Some(Box::new(spawn_fn))).unwrap().spawn();
+    let e0 = Endpoint::connect(&path, 0).unwrap();
+    let e1 = Endpoint::connect(&path, 1).unwrap();
+    // Rank 1 enters the barrier first: its entry is sized to the
+    // pre-spawn world of 2 and must be grown by the spawn.
+    let h1 = std::thread::spawn({
+        let e1 = e1.clone();
+        move || e1.barrier().unwrap()
+    });
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let new_ranks = e0.spawn_instances(1, "{}").unwrap();
+    assert_eq!(new_ranks, vec![2]);
+    e0.barrier().unwrap();
+    // The barrier can only have released after rank 2 arrived in it.
+    assert!(
+        spawned_arrived.load(Ordering::SeqCst),
+        "barrier released without the spawned instance"
+    );
+    h1.join().unwrap();
+    let ranks = e0.list_instances().unwrap();
+    assert_eq!(ranks, vec![0, 1, 2]);
+    e0.bye();
+    e1.bye();
+    hub.join().unwrap().unwrap();
+}
+
+/// Join-protocol guard: once any barrier has completed, runtime spawning
+/// must be rejected (a newcomer's barrier epochs start at 1 and could
+/// never pair with the world's next epoch — a silent deadlock before).
+#[test]
+fn spawn_after_barrier_rejected() {
+    use hicr::core::instance::{InstanceManager, InstanceTemplate};
+    let path = temp_sock("spawnlate");
+    let hub = Hub::bind(&path, 2, None).unwrap().spawn();
+    let e0 = Endpoint::connect(&path, 0).unwrap();
+    let e1 = Endpoint::connect(&path, 1).unwrap();
+    let h1 = std::thread::spawn({
+        let e1 = e1.clone();
+        move || e1.barrier().unwrap()
+    });
+    e0.barrier().unwrap();
+    h1.join().unwrap();
+    let im = mpisim::MpiInstanceManager::new(e0.clone());
+    let err = im
+        .create_instances(1, &InstanceTemplate::default())
+        .unwrap_err();
+    assert!(err.to_string().contains("first barrier"), "{err}");
+    e0.bye();
+    e1.bye();
+    hub.join().unwrap().unwrap();
+}
+
+/// Acceptance: `hicr launch --np 4 -- taskfarm` — root gathers all three
+/// worker topologies via the `topology` RPC, farms ≥ 100 verified tasks
+/// across the mesh, and shuts the workers down cleanly by RPC.
+#[test]
+fn cli_launch_taskfarm_four_processes() {
+    let cli = std::path::Path::new(env!("CARGO_BIN_EXE_hicr"));
+    let out = std::process::Command::new(cli)
+        .args(["launch", "--np", "4", "--", "taskfarm", "4", "120"])
+        .output()
+        .expect("launch taskfarm");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("taskfarm world=4 workers=3 tasks=120 ok"),
+        "unexpected taskfarm output:\n{text}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(text.contains("topologies=3"), "missing topology gather:\n{text}");
+    assert!(text.contains("taskfarm spread:"), "missing spread line:\n{text}");
+}
+
+/// Fig. 7 end to end: launch 2 processes, ask for a world of 3 — the
+/// root spawns the third instance at runtime, it joins the pending
+/// barrier and the mesh, and the farm completes across both workers.
+#[test]
+fn cli_launch_taskfarm_elastic_spawn() {
+    let cli = std::path::Path::new(env!("CARGO_BIN_EXE_hicr"));
+    let out = std::process::Command::new(cli)
+        .args(["launch", "--np", "2", "--", "taskfarm", "3", "60"])
+        .output()
+        .expect("launch taskfarm elastic");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("taskfarm world=3 workers=2 tasks=60 ok"),
+        "unexpected elastic taskfarm output:\n{text}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(text.contains("topologies=2"), "missing topology gather:\n{text}");
+}
+
 /// End-to-end CLI launch: two real OS processes, channel ping-pong.
 #[test]
 fn cli_launch_pingpong_two_processes() {
