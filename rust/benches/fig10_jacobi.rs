@@ -8,8 +8,8 @@
 //! (JACOBI_N / JACOBI_ITERS env to override); the shape under test is the
 //! near-parity of the two engines (contrast with Fig. 9).
 
-use hicr::apps::jacobi::{run_local, run_sequential, Grid};
-use hicr::frontends::tasking::TaskSystem;
+use hicr::apps::jacobi::{run_local, run_local_dag, run_sequential, Grid};
+use hicr::frontends::tasking::{SchedConfig, SchedPolicy, TaskSystem};
 use hicr::util::bench::{BenchArgs, Measurement, Report};
 
 fn main() {
@@ -33,40 +33,68 @@ fn main() {
     );
 
     let registry = hicr::backends::registry();
-    let mut report = Report::new("Fig 10: coarse-grained tasking");
+    let mut report = Report::named("Fig 10: coarse-grained tasking", "fig10_jacobi");
     let mut best = Vec::new();
+    // Three series per backend: the work-stealing scheduler, the seed's
+    // global-queue discipline (the removed-lock before/after pair — with
+    // coarse tasks the gap is small, contrast fig9/sched_scaling), and
+    // the cross-iteration spawn_after halo-pipeline DAG.
     for backend in ["nosv", "coro"] {
-        let mut samples = Vec::new();
-        let mut gflops = Vec::new();
-        for _ in 0..args.reps {
-            let cm = registry
-                .builder()
-                .compute(backend)
-                .build()
-                .expect("resolve compute plugin")
-                .compute()
-                .expect("compute manager");
-            let sys = TaskSystem::new(cm, workers, false);
-            let mut grid = Grid::new(n);
-            let run = run_local(&sys, &mut grid, iters, mesh).expect("jacobi");
-            sys.shutdown().expect("shutdown");
-            assert!(
-                (run.checksum - want).abs() < 1e-9,
-                "{backend} checksum {} != {want}",
-                run.checksum
-            );
-            samples.push(run.elapsed_s);
-            gflops.push(run.gflops);
+        for mode in ["steal", "global", "dag"] {
+            let mut samples = Vec::new();
+            let mut gflops = Vec::new();
+            for _ in 0..args.reps {
+                let cm = registry
+                    .builder()
+                    .compute(backend)
+                    .build()
+                    .expect("resolve compute plugin")
+                    .compute()
+                    .expect("compute manager");
+                let policy = if mode == "global" {
+                    SchedPolicy::GlobalQueue
+                } else {
+                    SchedPolicy::WorkStealing
+                };
+                let sys = TaskSystem::with_config(
+                    cm,
+                    workers,
+                    false,
+                    SchedConfig {
+                        policy,
+                        ..SchedConfig::default()
+                    },
+                );
+                let mut grid = Grid::new(n);
+                let run = if mode == "dag" {
+                    run_local_dag(&sys, &mut grid, iters, mesh).expect("jacobi dag")
+                } else {
+                    run_local(&sys, &mut grid, iters, mesh).expect("jacobi")
+                };
+                sys.shutdown().expect("shutdown");
+                assert!(
+                    (run.checksum - want).abs() < 1e-9,
+                    "{backend}/{mode} checksum {} != {want}",
+                    run.checksum
+                );
+                samples.push(run.elapsed_s);
+                gflops.push(run.gflops);
+            }
+            if mode == "steal" {
+                best.push((
+                    backend,
+                    samples.iter().cloned().fold(f64::INFINITY, f64::min),
+                ));
+            }
+            report.push(Measurement {
+                label: format!("{backend}/{mode}"),
+                samples_s: samples,
+                derived: gflops,
+                derived_unit: "GFlop/s",
+            });
         }
-        best.push((backend, samples.iter().cloned().fold(f64::INFINITY, f64::min)));
-        report.push(Measurement {
-            label: backend.to_string(),
-            samples_s: samples,
-            derived: gflops,
-            derived_unit: "GFlop/s",
-        });
     }
-    report.print();
+    report.finish(&args);
 
     let nosv = best[0].1;
     let coro = best[1].1;

@@ -3,15 +3,23 @@
 //! selected *by plugin name* through the registry, the same way an
 //! application would.
 //!
-//! Paper: coro-style user-level switching finished in 0.21 s vs 1.34 s for
-//! nOS-V (~6.4×). The box here has 1 core (vs 2×22), so absolute times
-//! differ; the *shape* under test is the coro advantage driven by kernel-
-//! thread-per-task overhead. Default is the paper's full F(24) = 150 049
-//! tasks (override with FIB_N).
+//! Every backend runs as a **before/after pair**: `<backend>/global` is
+//! the seed scheduler's discipline (one global queue, every spawn and
+//! dispatch through one mutex), `<backend>/steal` the per-worker
+//! work-stealing deques with the global queue demoted to an injection
+//! lane. The series difference is the global-lock ceiling this PR
+//! removes (EXPERIMENTS.md §Sched).
+//!
+//! Paper: coro-style user-level switching finished in 0.21 s vs 1.34 s
+//! for nOS-V (~6.4×). The box here has 1 core (vs 2×22), so absolute
+//! times differ; the *shapes* under test are (a) the coro advantage
+//! driven by kernel-thread-per-task overhead and (b) steal ≥ global.
+//! Default is the paper's full F(24) = 150 049 tasks (override with
+//! FIB_N).
 
 use hicr::apps::fibonacci;
 use hicr::backends::nosv::NosvComputeManager;
-use hicr::frontends::tasking::TaskSystem;
+use hicr::frontends::tasking::{SchedConfig, SchedPolicy, TaskSystem};
 use hicr::util::bench::{BenchArgs, Measurement, Report};
 
 fn main() {
@@ -28,45 +36,76 @@ fn main() {
     );
 
     let registry = hicr::backends::registry();
-    let mut report = Report::new("Fig 9: fine-grained tasking");
-    let mut best: Vec<(&str, f64)> = Vec::new();
+    let mut report = Report::named("Fig 9: fine-grained tasking", "fig9_fibonacci");
+    let mut best: Vec<(String, f64)> = Vec::new();
     for backend in ["coro", "nosv"] {
-        let mut samples = Vec::new();
-        for _ in 0..args.reps {
-            let cm = registry
-                .builder()
-                .compute(backend)
-                .build()
-                .expect("resolve compute plugin")
-                .compute()
-                .expect("compute manager");
-            let sys = TaskSystem::new(cm, workers, false);
-            let run = fibonacci::run(&sys, n).expect("fib run");
-            sys.shutdown().expect("shutdown");
-            assert_eq!(run.value, fibonacci::fib_value(n));
-            assert_eq!(run.tasks_executed, tasks);
-            samples.push(run.elapsed_s);
+        for (mode, policy) in [
+            ("steal", SchedPolicy::WorkStealing),
+            ("global", SchedPolicy::GlobalQueue),
+        ] {
+            let mut samples = Vec::new();
+            let mut stats = None;
+            for _ in 0..args.reps {
+                let cm = registry
+                    .builder()
+                    .compute(backend)
+                    .build()
+                    .expect("resolve compute plugin")
+                    .compute()
+                    .expect("compute manager");
+                let sys = TaskSystem::with_config(
+                    cm,
+                    workers,
+                    false,
+                    SchedConfig {
+                        policy,
+                        ..SchedConfig::default()
+                    },
+                );
+                let run = fibonacci::run(&sys, n).expect("fib run");
+                stats = Some(sys.sched_stats());
+                sys.shutdown().expect("shutdown");
+                assert_eq!(run.value, fibonacci::fib_value(n));
+                assert_eq!(run.tasks_executed, tasks);
+                samples.push(run.elapsed_s);
+            }
+            let label = format!("{backend}/{mode}");
+            let s = stats.expect("at least one rep");
+            println!(
+                "{label}: injection_pushes={} local_pushes={} steals={} parks={}",
+                s.injection_pushes, s.local_pushes, s.steals, s.parks
+            );
+            let best_t = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+            best.push((label.clone(), best_t));
+            report.push(Measurement {
+                label,
+                samples_s: samples.clone(),
+                derived: samples.iter().map(|s| tasks as f64 / s).collect(),
+                derived_unit: "tasks/s",
+            });
         }
-        let best_t = samples.iter().cloned().fold(f64::INFINITY, f64::min);
-        best.push((backend, best_t));
-        report.push(Measurement {
-            label: backend.to_string(),
-            samples_s: samples.clone(),
-            derived: samples
-                .iter()
-                .map(|s| tasks as f64 / s) // tasks per second
-                .collect(),
-            derived_unit: "tasks/s",
-        });
     }
-    report.print();
+    report.finish(&args);
 
-    let coro = best[0].1;
-    let nosv = best[1].1;
+    let t = |label: &str| {
+        best.iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, t)| *t)
+            .expect("series present")
+    };
+    let (coro, nosv) = (t("coro/steal"), t("nosv/steal"));
     println!(
-        "\nshape: nosv/coro best-time ratio = {:.2}x (paper: 1.34s/0.21s = 6.4x)",
+        "\nshape: nosv/coro best-time ratio (steal) = {:.2}x \
+         (paper: 1.34s/0.21s = 6.4x)",
         nosv / coro
     );
+    for backend in ["coro", "nosv"] {
+        println!(
+            "shape: {backend} global/steal best-time ratio = {:.2}x \
+             (the removed global-lock ceiling)",
+            t(&format!("{backend}/global")) / t(&format!("{backend}/steal"))
+        );
+    }
     println!(
         "mechanism: coro pooled-fiber threads spawned = few; nosv kernel threads \
          spawned so far = {} (thread-per-task)",

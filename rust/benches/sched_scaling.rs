@@ -1,0 +1,150 @@
+//! Scheduler scaling — the global-lock ceiling, isolated.
+//!
+//! A producer root spawns T trivial leaf tasks on the threads backend
+//! (the blocking engine) and waits for quiescence; the workload is pure
+//! scheduling. Each worker count runs as a before/after pair:
+//!
+//! - `global/W`: the seed discipline — every spawn and dispatch
+//!   serializes through the single global queue mutex. Throughput is
+//!   bounded by that lock whatever W is.
+//! - `steal/W`: per-worker deques — the producer's spawns stay on its
+//!   worker-local deque (zero global-lock acquisitions after the root
+//!   injection, asserted by the unit tests via the same counters printed
+//!   here) and idle workers steal from the top.
+//!
+//! A `dag/W` series runs the same task count as a `spawn_after`
+//! continuation DAG (Fibonacci in continuation-passing style) to price
+//! dependency-gated spawns. Exports `BENCH_sched_scaling.json`
+//! (median/p95/tasks-per-second per series) for the CI bench-smoke gate;
+//! measured rows land in EXPERIMENTS.md §Sched.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use hicr::apps::fibonacci;
+use hicr::frontends::tasking::{SchedConfig, SchedPolicy, TaskSystem};
+use hicr::util::bench::{BenchArgs, Measurement, Report};
+
+fn main() {
+    let args = BenchArgs::parse(3);
+    let tasks: u64 = std::env::var("SCHED_TASKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if args.quick { 2_000 } else { 20_000 });
+    println!("== Scheduler scaling: {tasks} leaf tasks, threads backend ==");
+
+    let registry = hicr::backends::registry();
+    let make_sys = |workers: usize, policy: SchedPolicy| {
+        let cm = registry
+            .builder()
+            .compute("threads")
+            .build()
+            .expect("resolve threads plugin")
+            .compute()
+            .expect("compute manager");
+        TaskSystem::with_config(
+            cm,
+            workers,
+            false,
+            SchedConfig {
+                policy,
+                ..SchedConfig::default()
+            },
+        )
+    };
+
+    let mut report = Report::named("Scheduler scaling", "sched_scaling");
+    for &workers in &[1usize, 2, 4, 8] {
+        for (mode, policy) in [
+            ("steal", SchedPolicy::WorkStealing),
+            ("global", SchedPolicy::GlobalQueue),
+        ] {
+            let mut samples = Vec::new();
+            let mut last_stats = None;
+            for _ in 0..args.reps {
+                let sys = make_sys(workers, policy);
+                let hits = Arc::new(AtomicU64::new(0));
+                let h = Arc::clone(&hits);
+                let t0 = std::time::Instant::now();
+                sys.run("producer", move |ctx| {
+                    for _ in 0..tasks {
+                        let h = Arc::clone(&h);
+                        ctx.spawn("leaf", move |_| {
+                            h.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                    ctx.wait_children();
+                })
+                .expect("sched run");
+                samples.push(t0.elapsed().as_secs_f64());
+                last_stats = Some(sys.sched_stats());
+                sys.shutdown().expect("shutdown");
+                assert_eq!(hits.load(Ordering::Relaxed), tasks);
+            }
+            let s = last_stats.expect("at least one rep");
+            println!(
+                "{mode}/{workers}w: injection_locks={} local_pushes={} steals={} \
+                 steal_failures={} parks={}",
+                s.injection_locks, s.local_pushes, s.steals, s.steal_failures, s.parks
+            );
+            report.push(Measurement {
+                label: format!("{mode}/{workers}w"),
+                samples_s: samples.clone(),
+                derived: samples.iter().map(|s| tasks as f64 / s).collect(),
+                derived_unit: "tasks/s",
+            });
+        }
+    }
+
+    // Dependency-gated spawns: the same scheduler driving a spawn_after
+    // continuation DAG (F(n) sized to ~the leaf-task count).
+    let fib_n: u64 = if args.quick { 14 } else { 20 };
+    let dag_tasks = fibonacci::expected_tasks(fib_n) + 1;
+    for &workers in &[4usize] {
+        let mut samples = Vec::new();
+        for _ in 0..args.reps {
+            let sys = make_sys(workers, SchedPolicy::WorkStealing);
+            let run = fibonacci::run_dag(&sys, fib_n).expect("fib dag");
+            sys.shutdown().expect("shutdown");
+            assert_eq!(run.value, fibonacci::fib_value(fib_n));
+            assert_eq!(run.tasks_executed, dag_tasks);
+            samples.push(run.elapsed_s);
+        }
+        println!("dag/{workers}w: F({fib_n}) = {dag_tasks} spawn_after-gated tasks");
+        report.push(Measurement {
+            // Stable label across --quick and full runs so the JSON
+            // trajectory stays comparable (the F(n) size is printed).
+            label: format!("dag/{workers}w"),
+            samples_s: samples.clone(),
+            derived: samples.iter().map(|s| dag_tasks as f64 / s).collect(),
+            derived_unit: "tasks/s",
+        });
+    }
+    report.finish(&args);
+
+    // Shape: work-stealing should not lose to the global queue once more
+    // than one worker contends for it. Deliberately a WARNING, not an
+    // assert: this bench gates the CI bench-smoke step, and wall-clock
+    // ratios on noisy shared runners must not fail the build — the JSON
+    // trajectory is the signal.
+    let med = |label: &str| {
+        report
+            .rows
+            .iter()
+            .find(|r| r.label == label)
+            .and_then(|r| r.time_summary())
+            .map(|s| s.p50)
+            .expect("series present")
+    };
+    let (steal4, global4) = (med("steal/4w"), med("global/4w"));
+    println!(
+        "\nshape: global/steal median ratio at 4 workers = {:.2}x",
+        global4 / steal4
+    );
+    if steal4 > global4 * 3.0 {
+        println!(
+            "WARN: work-stealing much slower than the global queue \
+             ({steal4:.4}s vs {global4:.4}s) — investigate if reproducible"
+        );
+    }
+}

@@ -9,7 +9,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::core::error::Result;
-use crate::frontends::tasking::{TaskCtx, TaskSystem};
+use crate::frontends::tasking::{TaskCtx, TaskHandle, TaskSystem};
 
 /// Number of tasks the naive recursion creates for F(n):
 /// `T(n) = T(n-1) + T(n-2) + 1`, `T(0) = T(1) = 1` (= 2·F(n+1) − 1; the
@@ -58,9 +58,13 @@ fn fib_task(ctx: &TaskCtx, n: u64) -> u64 {
 /// Outcome of one Fibonacci run.
 #[derive(Debug, Clone)]
 pub struct FibonacciRun {
+    /// Input `n`.
     pub n: u64,
+    /// Computed `F(n)`.
     pub value: u64,
+    /// Tasks this run executed.
     pub tasks_executed: u64,
+    /// Wall-clock seconds.
     pub elapsed_s: f64,
 }
 
@@ -73,6 +77,51 @@ pub fn run(system: &TaskSystem, n: u64) -> Result<FibonacciRun> {
     system.run("fib-root", move |ctx| {
         let v = fib_task(ctx, n);
         r.store(v, Ordering::Relaxed);
+    })?;
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    Ok(FibonacciRun {
+        n,
+        value: result.load(Ordering::Relaxed),
+        tasks_executed: system.tasks_executed() - before,
+        elapsed_s,
+    })
+}
+
+/// Build the Fibonacci computation as an explicit dependency DAG
+/// (continuation style): each node's value task is gated by
+/// `spawn_after` on its two subtree value tasks, instead of blocking in
+/// `wait_children`. Returns the handle of the task that stores `F(n)`
+/// into `out`.
+fn build_fib_dag(ctx: &TaskCtx, n: u64, out: Arc<AtomicU64>) -> TaskHandle {
+    if n < 2 {
+        return ctx.spawn("fib-leaf", move |_| out.store(n, Ordering::Relaxed));
+    }
+    let left = Arc::new(AtomicU64::new(0));
+    let right = Arc::new(AtomicU64::new(0));
+    let lh = build_fib_dag(ctx, n - 1, Arc::clone(&left));
+    let rh = build_fib_dag(ctx, n - 2, Arc::clone(&right));
+    ctx.spawn_after(&[lh, rh], "fib-sum", move |_| {
+        out.store(
+            left.load(Ordering::Relaxed) + right.load(Ordering::Relaxed),
+            Ordering::Relaxed,
+        );
+    })
+}
+
+/// Compute F(n) as a pure `spawn_after` DAG: no task ever blocks in
+/// `wait_children` except the root, so the whole graph is visible to the
+/// work-stealing scheduler up front (the continuation-passing shape
+/// driven by the sched_scaling bench's `dag` series). Executes
+/// `expected_tasks(n) + 1` tasks (the DAG plus the root): the top sum
+/// task writes F(n) straight into the result cell.
+pub fn run_dag(system: &TaskSystem, n: u64) -> Result<FibonacciRun> {
+    let before = system.tasks_executed();
+    let result = Arc::new(AtomicU64::new(0));
+    let r = Arc::clone(&result);
+    let t0 = std::time::Instant::now();
+    system.run("fib-dag-root", move |ctx| {
+        build_fib_dag(ctx, n, r);
+        ctx.wait_children();
     })?;
     let elapsed_s = t0.elapsed().as_secs_f64();
     Ok(FibonacciRun {
@@ -121,5 +170,18 @@ mod tests {
         sys.shutdown().unwrap();
         assert_eq!(run.value, fib_value(10));
         assert_eq!(run.tasks_executed, expected_tasks(10));
+    }
+
+    #[test]
+    fn dag_variant_matches_recursive_on_both_engines() {
+        // The spawn_after DAG computes the same value with a predictable
+        // task count: the DAG plus the root.
+        for backend in ["coro", "threads"] {
+            let sys = system_for(backend);
+            let run = run_dag(&sys, 12).unwrap();
+            sys.shutdown().unwrap();
+            assert_eq!(run.value, fib_value(12), "{backend}");
+            assert_eq!(run.tasks_executed, expected_tasks(12) + 1, "{backend}");
+        }
     }
 }

@@ -10,7 +10,7 @@ use crate::core::communication::{CommunicationManager, DataEndpoint};
 use crate::core::error::{HicrError, Result};
 use crate::core::ids::{Key, Tag};
 use crate::core::memory::LocalMemorySlot;
-use crate::frontends::tasking::TaskSystem;
+use crate::frontends::tasking::{TaskHandle, TaskSystem};
 
 /// Flops per updated grid point: 12 adds + 1 multiply.
 pub const FLOPS_PER_POINT: u64 = 13;
@@ -196,6 +196,119 @@ pub fn run_local(
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
     let flops = total_updates.load(std::sync::atomic::Ordering::Relaxed) * FLOPS_PER_POINT;
+    Ok(JacobiRun {
+        n,
+        iterations,
+        elapsed_s,
+        gflops: flops as f64 / elapsed_s / 1e9,
+        checksum: grid.checksum(iterations),
+    })
+}
+
+/// Per-axis stencil dependencies: for each block range, the indices of
+/// every block whose range intersects it expanded by the stencil radius
+/// (2) on both sides. A block's iteration-`k` task depends on the
+/// iteration-`k-1` tasks of exactly the cartesian product of these sets
+/// — both the cells it reads (RAW) and the readers of the cells it
+/// overwrites (WAR, double-buffering) lie inside that footprint.
+fn axis_neighbors(ranges: &[(usize, usize)]) -> Vec<Vec<usize>> {
+    ranges
+        .iter()
+        .map(|&(start, end)| {
+            let lo = start.saturating_sub(2);
+            let hi = end + 2;
+            ranges
+                .iter()
+                .enumerate()
+                .filter(|&(_, &(cs, ce))| cs < hi && ce > lo)
+                .map(|(i, _)| i)
+                .collect()
+        })
+        .collect()
+}
+
+/// Single-instance solver expressed as one explicit task DAG across
+/// *all* iterations: block (bx, by, bz) at iteration `k` is gated by
+/// `spawn_after` on the iteration-`k-1` blocks in its halo footprint,
+/// instead of a global barrier (`wait_children`) per iteration. Later
+/// sweeps therefore start in regions whose halos are ready while slow
+/// blocks of the previous sweep still run — the halo pipeline the
+/// work-stealing scheduler exploits.
+pub fn run_local_dag(
+    system: &TaskSystem,
+    grid: &mut Grid,
+    iterations: usize,
+    mesh: (usize, usize, usize),
+) -> Result<JacobiRun> {
+    let n = grid.n;
+    let (lx, ly, lz) = mesh;
+    if lx == 0 || ly == 0 || lz == 0 || lx > n || ly > n || lz > n {
+        return Err(HicrError::Rejected(format!("bad thread mesh {mesh:?}")));
+    }
+    let xr: Vec<(usize, usize)> = (0..lx).map(|i| split(n, lx, i)).collect();
+    let yr: Vec<(usize, usize)> = (0..ly).map(|i| split(n, ly, i)).collect();
+    let zr: Vec<(usize, usize)> = (0..lz).map(|i| split(n, lz, i)).collect();
+    let (nbx, nby, nbz) = (axis_neighbors(&xr), axis_neighbors(&yr), axis_neighbors(&zr));
+    let bufs = [Arc::clone(&grid.bufs[0]), Arc::clone(&grid.bufs[1])];
+    let total_updates = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let updates_root = Arc::clone(&total_updates);
+    let t0 = std::time::Instant::now();
+    system.run("jacobi-dag", move |ctx| {
+        let mut prev_handles: Vec<TaskHandle> = Vec::new();
+        for it in 0..iterations {
+            let mut cur = Vec::with_capacity(lx * ly * lz);
+            for bx in 0..lx {
+                for by in 0..ly {
+                    for bz in 0..lz {
+                        let deps: Vec<TaskHandle> = if it == 0 {
+                            Vec::new()
+                        } else {
+                            let mut d = Vec::new();
+                            for &ix in &nbx[bx] {
+                                for &iy in &nby[by] {
+                                    for &iz in &nbz[bz] {
+                                        d.push(
+                                            prev_handles[(ix * ly + iy) * lz + iz]
+                                                .clone(),
+                                        );
+                                    }
+                                }
+                            }
+                            d
+                        };
+                        let prev = Arc::clone(&bufs[it % 2]);
+                        let next = Arc::clone(&bufs[(it + 1) % 2]);
+                        let updates = Arc::clone(&updates_root);
+                        let ((x0, x1), (y0, y1), (z0, z1)) = (xr[bx], yr[by], zr[bz]);
+                        cur.push(ctx.spawn_after(&deps, "stencil", move |_| {
+                            // SAFETY: subgrids are disjoint within an
+                            // iteration, and the spawn_after halo edges
+                            // order every cross-iteration read/write on
+                            // the shared double buffers.
+                            let next_mut = unsafe { next.slice_mut() };
+                            let u = stencil_block(
+                                prev.slice(),
+                                next_mut,
+                                n,
+                                x0,
+                                x1,
+                                y0,
+                                y1,
+                                z0,
+                                z1,
+                            );
+                            updates.fetch_add(u, std::sync::atomic::Ordering::Relaxed);
+                        }));
+                    }
+                }
+            }
+            prev_handles = cur;
+        }
+        ctx.wait_children();
+    })?;
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let flops =
+        total_updates.load(std::sync::atomic::Ordering::Relaxed) * FLOPS_PER_POINT;
     Ok(JacobiRun {
         n,
         iterations,
@@ -523,6 +636,39 @@ mod tests {
                 run.checksum
             );
             assert!(run.gflops > 0.0);
+        }
+    }
+
+    #[test]
+    fn axis_neighbors_cover_stencil_footprint() {
+        // 10 cells in 5 blocks of 2: radius-2 reaches one block away.
+        let ranges: Vec<(usize, usize)> = (0..5).map(|i| split(10, 5, i)).collect();
+        let nb = axis_neighbors(&ranges);
+        assert_eq!(nb[0], vec![0, 1]);
+        assert_eq!(nb[2], vec![1, 2, 3]);
+        assert_eq!(nb[4], vec![3, 4]);
+        // One fat block depends only on itself.
+        assert_eq!(axis_neighbors(&[(0, 10)]), vec![vec![0]]);
+    }
+
+    #[test]
+    fn dag_pipeline_matches_sequential() {
+        let n = 16;
+        let iters = 5;
+        let mut seq = Grid::new(n);
+        let want = run_sequential(&mut seq, iters);
+        for backend in ["coro", "nosv", "threads"] {
+            let sys = system_for(backend);
+            let mut grid = Grid::new(n);
+            let run = run_local_dag(&sys, &mut grid, iters, (2, 2, 2)).unwrap();
+            sys.shutdown().unwrap();
+            assert!(
+                (run.checksum - want).abs() < 1e-9,
+                "{backend}: {} != {want}",
+                run.checksum
+            );
+            // One task per block per iteration, plus the root.
+            assert_eq!(sys.tasks_executed(), (iters * 8 + 1) as u64);
         }
     }
 

@@ -1,19 +1,34 @@
 //! Master/worker task farm over the deployment mesh (the paper's Fig. 7
 //! orchestration pattern as a runnable distributed app).
 //!
-//! Every instance enters [`run`]: the root ensures the world holds
-//! `total` instances (spawning the difference at runtime through the
-//! instance manager — the elastic ramp-up), all instances join the
-//! deployment mesh, workers register the farmed function and serve,
-//! while the root gathers all worker topologies via the built-in
-//! `topology` RPC, dispatches `tasks` tasks round-robin across the
-//! workers, verifies every result, and shuts the farm down by RPC.
+//! Every instance enters [`run`] (or [`run_spill`]): the root ensures
+//! the world holds `total` instances (spawning the difference at runtime
+//! through the instance manager — the elastic ramp-up), all instances
+//! join the deployment mesh, workers register the farmed function and
+//! serve, while the root gathers all worker topologies via the built-in
+//! `topology` RPC, dispatches `tasks` tasks, verifies every result, and
+//! shuts the farm down by RPC.
+//!
+//! [`run_spill`] is the **distributed spill** variant: the root executes
+//! tasks on its own local [`TaskSystem`] and, whenever the local
+//! scheduler's ready backlog saturates ([`TaskSystem::ready_backlog`]
+//! reaches [`SpillPolicy::backlog_threshold`]), offloads the overflow —
+//! closures identified by RPC fn-id, arguments on the wire — round-robin
+//! to idle instances over the PR 4 RPC mesh. Work stealing across
+//! *instances*, not just threads: the same saturation signal that makes
+//! an idle thread steal from a loaded deque makes a loaded instance push
+//! to an idle one. Spilled calls are currently **stop-and-wait** — each
+//! offload is one synchronous round-trip (the RPC link carries one
+//! outstanding call), so remote throughput is 1/RTT while the local
+//! lane drains concurrently; pipelined multi-link dispatch is future
+//! work (DESIGN.md §5).
 //!
 //! Written purely against the abstract managers and the deployment/RPC
 //! frontends: the same code farms over the threads backend (in-process)
 //! and over mpisim (real processes launched by `hicr launch`).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -24,6 +39,7 @@ use crate::core::instance::{InstanceManager, InstanceTemplate};
 use crate::core::memory::LocalMemorySlot;
 use crate::core::topology::{Topology, TopologyRequirements};
 use crate::frontends::deployment::{deploy, Deployment, DeploymentConfig};
+use crate::frontends::tasking::TaskSystem;
 
 /// The farmed RPC.
 pub const FN_TASK: &str = "taskfarm/execute";
@@ -38,32 +54,75 @@ pub fn task_value(x: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// When the root offloads work to remote instances instead of running
+/// it on its local task system.
+#[derive(Debug, Clone, Copy)]
+pub struct SpillPolicy {
+    /// Spill a task to a remote worker when the local scheduler's ready
+    /// backlog is at least this deep. `0` spills everything (the pure
+    /// remote farm); `usize::MAX` keeps everything local.
+    pub backlog_threshold: usize,
+}
+
+impl Default for SpillPolicy {
+    fn default() -> Self {
+        Self {
+            backlog_threshold: 8,
+        }
+    }
+}
+
 /// What the root observed (workers return `None`).
 #[derive(Debug, Clone)]
 pub struct FarmReport {
+    /// World size after the elastic ramp-up.
     pub world: usize,
+    /// Remote workers serving the farmed RPC.
     pub workers: usize,
+    /// Total tasks dispatched (local + spilled).
     pub tasks: u64,
-    /// Tasks executed per worker rank.
+    /// Tasks executed per worker rank (spilled work only).
     pub per_worker: Vec<(u32, u64)>,
     /// Wrapping sum of all verified results.
     pub checksum: u64,
+    /// Tasks the root executed on its local task system.
+    pub local_tasks: u64,
+    /// Tasks offloaded over the RPC mesh.
+    pub spilled_tasks: u64,
     /// Worker topologies gathered through the built-in RPC.
     pub gathered_topologies: usize,
     /// Devices across all gathered topologies.
     pub total_devices: usize,
+    /// Wall-clock seconds for this instance's side of the farm.
     pub elapsed_s: f64,
 }
 
-/// Run this instance's side of the farm. Collective across the world:
-/// root returns `Some(report)`, workers serve until shutdown and return
-/// `None`. `topology_json` is this instance's serialized device tree.
+/// Run this instance's side of the pure remote farm (every task goes
+/// over the RPC mesh). Collective across the world: root returns
+/// `Some(report)`, workers serve until shutdown and return `None`.
+/// `topology_json` is this instance's serialized device tree.
 pub fn run(
     im: &dyn InstanceManager,
     cmm: &Arc<dyn CommunicationManager>,
     topology_json: String,
     total: usize,
     tasks: u64,
+) -> Result<Option<FarmReport>> {
+    run_spill(im, cmm, topology_json, total, tasks, None)
+}
+
+/// [`run`] with a local execution lane: the root runs tasks on `local`'s
+/// task system and spills to remote instances only when the local ready
+/// backlog saturates per the [`SpillPolicy`]. Passing `None` (or a
+/// threshold of 0 with workers present) degenerates to the pure remote
+/// farm. Workers ignore `local`.
+pub fn run_spill(
+    im: &dyn InstanceManager,
+    cmm: &Arc<dyn CommunicationManager>,
+    topology_json: String,
+    total: usize,
+    tasks: u64,
+    local: Option<(&TaskSystem, SpillPolicy)>,
 ) -> Result<Option<FarmReport>> {
     let t0 = Instant::now();
     let alloc = |len| LocalMemorySlot::alloc(MemorySpaceId(1), len);
@@ -91,8 +150,8 @@ pub fn run(
         return Ok(None);
     }
 
-    match orchestrate(&mut d, tasks) {
-        Ok((topos, total_devices, per_worker, checksum)) => {
+    match orchestrate(&mut d, tasks, local) {
+        Ok((topos, total_devices, per_worker, checksum, local_tasks)) => {
             d.shutdown_workers()?;
             im.barrier()?;
             Ok(Some(FarmReport {
@@ -101,6 +160,8 @@ pub fn run(
                 tasks,
                 per_worker: per_worker.into_iter().collect(),
                 checksum,
+                local_tasks,
+                spilled_tasks: tasks - local_tasks,
                 gathered_topologies: topos.len(),
                 total_devices,
                 elapsed_s: t0.elapsed().as_secs_f64(),
@@ -120,43 +181,81 @@ pub fn run(
     }
 }
 
-type Orchestrated = (Vec<(u32, Topology)>, usize, BTreeMap<u32, u64>, u64);
+type Orchestrated = (Vec<(u32, Topology)>, usize, BTreeMap<u32, u64>, u64, u64);
 
 /// The root's orchestration body, separated so `run` can release the
-/// workers on *any* error path.
-fn orchestrate(d: &mut Deployment, tasks: u64) -> Result<Orchestrated> {
+/// workers on *any* error path. Dispatches every task either onto the
+/// local task system (when one is provided and its backlog is below the
+/// spill threshold) or over the RPC mesh, then verifies every result.
+fn orchestrate(
+    d: &mut Deployment,
+    tasks: u64,
+    local: Option<(&TaskSystem, SpillPolicy)>,
+) -> Result<Orchestrated> {
     let topos = d.gather_topologies()?;
     let total_devices = topos.iter().map(|(_, t)| t.devices.len()).sum();
     let workers = d.workers();
-    if workers.is_empty() {
+    if workers.is_empty() && local.is_none() {
         return Err(HicrError::Instance(
-            "taskfarm needs at least one worker (launch with --np 2 or more)"
+            "taskfarm needs at least one worker (launch with --np 2 or more) \
+             or a local task system to spill from"
                 .into(),
         ));
     }
     let mut per_worker: BTreeMap<u32, u64> =
         workers.iter().map(|&w| (w, 0)).collect();
     let mut checksum = 0u64;
+    let mut local_results: Vec<(u64, Arc<AtomicU64>)> = Vec::new();
+    let mut next_remote = 0usize;
     for i in 0..tasks {
-        let w = workers[(i % workers.len() as u64) as usize];
-        let ret = d.client(w)?.call(FN_TASK, &i.to_le_bytes())?;
-        let got =
-            u64::from_le_bytes(ret.as_slice().try_into().map_err(|_| {
-                HicrError::Transport(format!(
-                    "task {i}: short response ({} B) from worker {w}",
-                    ret.len()
-                ))
-            })?);
-        let want = task_value(i);
-        if got != want {
-            return Err(HicrError::InvalidState(format!(
-                "task {i} on worker {w}: got {got:#018x}, want {want:#018x}"
-            )));
+        let spill = !workers.is_empty()
+            && match local {
+                None => true,
+                Some((sys, policy)) => sys.ready_backlog() >= policy.backlog_threshold,
+            };
+        if spill {
+            let w = workers[next_remote % workers.len()];
+            next_remote += 1;
+            let ret = d.client(w)?.call(FN_TASK, &i.to_le_bytes())?;
+            let got =
+                u64::from_le_bytes(ret.as_slice().try_into().map_err(|_| {
+                    HicrError::Transport(format!(
+                        "task {i}: short response ({} B) from worker {w}",
+                        ret.len()
+                    ))
+                })?);
+            let want = task_value(i);
+            if got != want {
+                return Err(HicrError::InvalidState(format!(
+                    "task {i} on worker {w}: got {got:#018x}, want {want:#018x}"
+                )));
+            }
+            checksum = checksum.wrapping_add(got);
+            *per_worker.get_mut(&w).expect("dispatched to a known worker") += 1;
+        } else {
+            let (sys, _) = local.expect("spill=false implies a local system");
+            let cell = Arc::new(AtomicU64::new(0));
+            let out = Arc::clone(&cell);
+            sys.submit("farm-local", move |_| {
+                out.store(task_value(i), Ordering::Relaxed);
+            });
+            local_results.push((i, cell));
         }
-        checksum = checksum.wrapping_add(got);
-        *per_worker.get_mut(&w).expect("dispatched to a known worker") += 1;
     }
-    Ok((topos, total_devices, per_worker, checksum))
+    if let Some((sys, _)) = local {
+        sys.wait_idle()?;
+        for (i, cell) in &local_results {
+            let (got, want) = (cell.load(Ordering::Relaxed), task_value(*i));
+            if got != want {
+                return Err(HicrError::InvalidState(format!(
+                    "local task {i}: got {got:#018x}, want {want:#018x}"
+                )));
+            }
+            checksum = checksum.wrapping_add(got);
+        }
+    }
+    let local_tasks = local_results.len() as u64;
+    Ok((topos, total_devices, per_worker, checksum, local_tasks))
 }
 
 #[cfg(test)]
@@ -201,6 +300,91 @@ mod tests {
         assert_eq!(report.per_worker[0].1, 16); // rank 1 gets the extra task
         assert_eq!(report.per_worker[1].1, 15);
         let want: u64 = (0..31).map(task_value).fold(0, u64::wrapping_add);
+        assert_eq!(report.checksum, want);
+        // The pure remote farm spills everything.
+        assert_eq!(report.local_tasks, 0);
+        assert_eq!(report.spilled_tasks, 31);
+    }
+
+    /// Drive the spill farm with a given policy on the root and return
+    /// the root's report.
+    fn spill_farm(tasks: u64, policy: SpillPolicy) -> FarmReport {
+        let n = 3usize;
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let mut joins = Vec::new();
+        for im in local_world(n) {
+            let cmm = Arc::clone(&cmm);
+            joins.push(std::thread::spawn(move || {
+                if im.is_root() {
+                    let cm = crate::backends::registry()
+                        .builder()
+                        .compute("threads")
+                        .build()
+                        .unwrap()
+                        .compute()
+                        .unwrap();
+                    let sys = TaskSystem::new(cm, 2, false);
+                    let report = run_spill(
+                        &im,
+                        &cmm,
+                        Topology::default().serialize(),
+                        n,
+                        tasks,
+                        Some((sys.as_ref(), policy)),
+                    )
+                    .unwrap();
+                    sys.shutdown().unwrap();
+                    report
+                } else {
+                    run_spill(&im, &cmm, Topology::default().serialize(), n, tasks, None)
+                        .unwrap();
+                    None
+                }
+            }));
+        }
+        joins
+            .into_iter()
+            .filter_map(|j| j.join().unwrap())
+            .next()
+            .expect("root produced a report")
+    }
+
+    #[test]
+    fn spill_farm_all_local_when_threshold_unreachable() {
+        let report = spill_farm(24, SpillPolicy {
+            backlog_threshold: usize::MAX,
+        });
+        assert_eq!(report.local_tasks, 24);
+        assert_eq!(report.spilled_tasks, 0);
+        let want: u64 = (0..24).map(task_value).fold(0, u64::wrapping_add);
+        assert_eq!(report.checksum, want);
+    }
+
+    #[test]
+    fn spill_farm_all_remote_at_zero_threshold() {
+        let report = spill_farm(24, SpillPolicy {
+            backlog_threshold: 0,
+        });
+        assert_eq!(report.local_tasks, 0);
+        assert_eq!(report.spilled_tasks, 24);
+        let per: u64 = report.per_worker.iter().map(|(_, c)| c).sum();
+        assert_eq!(per, 24);
+        let want: u64 = (0..24).map(task_value).fold(0, u64::wrapping_add);
+        assert_eq!(report.checksum, want);
+    }
+
+    #[test]
+    fn spill_farm_mixed_accounts_every_task() {
+        // With a small threshold the split is timing-dependent, but the
+        // accounting and the verified checksum must be exact.
+        let report = spill_farm(64, SpillPolicy {
+            backlog_threshold: 2,
+        });
+        assert_eq!(report.local_tasks + report.spilled_tasks, 64);
+        let remote: u64 = report.per_worker.iter().map(|(_, c)| c).sum();
+        assert_eq!(remote, report.spilled_tasks);
+        let want: u64 = (0..64).map(task_value).fold(0, u64::wrapping_add);
         assert_eq!(report.checksum, want);
     }
 }

@@ -174,6 +174,11 @@ impl FiberExecutionState {
     /// Resume (or first-start) the fiber; blocks until it suspends or
     /// finishes, and returns the resulting status. This is the user-level
     /// context switch the Tasking frontend schedules with.
+    ///
+    /// Successive resumes may come from *different* caller threads: the
+    /// turn gate hands off to whichever thread is currently waiting, so
+    /// a work-stealing scheduler can legally migrate a suspended task to
+    /// another worker between resumes (suspension-aware stealing).
     pub fn resume(&self) -> Result<ExecStatus> {
         {
             let st = *self.status.lock().unwrap();
@@ -442,6 +447,35 @@ mod tests {
         trace.lock().unwrap().push("y");
         assert_eq!(fiber.resume().unwrap(), ExecStatus::Finished);
         assert_eq!(*trace.lock().unwrap(), vec!["a", "x", "b", "y", "c"]);
+    }
+
+    #[test]
+    fn suspended_fiber_migrates_across_resumer_threads() {
+        // The suspension-aware stealing contract: a fiber suspended under
+        // one worker thread may be resumed by a different one.
+        let cm = CoroComputeManager::new();
+        let hits = Arc::new(AtomicU32::new(0));
+        let h = Arc::clone(&hits);
+        let fiber = cm
+            .create_fiber(FnExecutionUnit::new("migrant", move |ctx| {
+                h.fetch_add(1, Ordering::SeqCst);
+                ctx.suspend();
+                h.fetch_add(1, Ordering::SeqCst);
+                ctx.suspend();
+                h.fetch_add(1, Ordering::SeqCst);
+            }) as Arc<dyn ExecutionUnit>)
+            .unwrap();
+        assert_eq!(fiber.resume().unwrap(), ExecStatus::Suspended);
+        // Second resume from a freshly spawned "thief" thread.
+        let f2 = Arc::clone(&fiber);
+        std::thread::spawn(move || {
+            assert_eq!(f2.resume().unwrap(), ExecStatus::Suspended);
+        })
+        .join()
+        .unwrap();
+        // Third resume back on the original thread finishes it.
+        assert_eq!(fiber.resume().unwrap(), ExecStatus::Finished);
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
     }
 
     #[test]

@@ -88,7 +88,14 @@ impl ProcessingUnit for NosvProcessingUnit {
                 thread_state.run_to_completion();
             })
             .map_err(|e| HicrError::InvalidState(format!("task thread spawn: {e}")))?;
-        self.live.lock().unwrap().push(state);
+        // Long-lived units (the tasking scheduler reuses one per worker
+        // across thousands of tasks) must not accumulate finished states:
+        // drop them opportunistically on every admission.
+        {
+            let mut live = self.live.lock().unwrap();
+            live.retain(|s| !s.is_finished());
+            live.push(state);
+        }
         Ok(())
     }
 

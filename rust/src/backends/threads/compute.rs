@@ -14,22 +14,10 @@ use crate::core::compute::{
 use crate::core::error::{HicrError, Result};
 use crate::core::topology::ComputeResource;
 
-/// Best-effort pin of the calling thread to one CPU (Linux only, behind
-/// the `affinity` feature which pulls in `libc` — the default build has
-/// zero external dependencies, DESIGN.md §2). With fewer physical cores
-/// than requested (this sandbox has one) failures are silently ignored —
-/// placement is a performance hint, not a semantic.
-pub fn pin_to_core(core: u32) {
-    #[cfg(all(feature = "affinity", target_os = "linux"))]
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_ZERO(&mut set);
-        libc::CPU_SET(core as usize, &mut set);
-        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
-    }
-    #[cfg(not(all(feature = "affinity", target_os = "linux")))]
-    let _ = core;
-}
+// Pinning moved to `util::affinity` so the tasking frontend can pin its
+// scheduler workers without importing a backend; re-exported here for
+// existing callers.
+pub use crate::util::affinity::pin_to_core;
 
 /// Execution state over a host closure: tracks Ready → Running → Finished
 /// (or Failed on panic) with condvar-based blocking waits.

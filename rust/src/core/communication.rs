@@ -58,7 +58,9 @@ impl CompletionHandle {
 /// instances via a collective exchange. Identified by its (tag, key) pair.
 #[derive(Debug, Clone)]
 pub struct GlobalMemorySlot {
+    /// The collective exchange this slot was published under.
     pub tag: Tag,
+    /// The slot's key within that exchange.
     pub key: Key,
     /// The instance owning the backing memory.
     pub owner: InstanceId,
@@ -78,11 +80,14 @@ impl GlobalMemorySlot {
 /// One endpoint of a memcpy: either a local slot or a global slot.
 #[derive(Debug, Clone)]
 pub enum DataEndpoint {
+    /// Memory owned by the current instance.
     Local(LocalMemorySlot),
+    /// Memory published through a collective exchange (possibly remote).
     Global(GlobalMemorySlot),
 }
 
 impl DataEndpoint {
+    /// Size of the endpoint's addressable segment in bytes.
     pub fn len(&self) -> usize {
         match self {
             DataEndpoint::Local(s) => s.len(),
@@ -90,6 +95,7 @@ impl DataEndpoint {
         }
     }
 
+    /// True for a zero-length endpoint.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -98,8 +104,11 @@ impl DataEndpoint {
 /// The three legal transfer directions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Direction {
+    /// Both endpoints owned by the current instance.
     LocalToLocal,
+    /// One-sided put into an exchanged (possibly remote) slot.
     LocalToGlobal,
+    /// One-sided get from an exchanged (possibly remote) slot.
     GlobalToLocal,
 }
 

@@ -68,6 +68,7 @@ impl Suspender for NoSuspend {
 
 /// Execution context handed to a running host task.
 pub struct ExecCtx<'a> {
+    /// The scheduler-provided yield interface for this execution.
     pub suspender: &'a dyn Suspender,
 }
 
@@ -86,6 +87,7 @@ pub struct FnExecutionUnit {
 }
 
 impl FnExecutionUnit {
+    /// Wrap a host closure as a shareable execution unit.
     pub fn new(
         name: impl Into<String>,
         f: impl Fn(&ExecCtx) + Send + Sync + 'static,
@@ -96,6 +98,7 @@ impl FnExecutionUnit {
         })
     }
 
+    /// The wrapped closure (backends instantiate states from it).
     pub fn func(&self) -> Arc<dyn Fn(&ExecCtx) + Send + Sync> {
         Arc::clone(&self.f)
     }
@@ -115,6 +118,7 @@ impl ExecutionUnit for FnExecutionUnit {
 /// query, (optionally) suspend/resume, and finish the execution. Stateful
 /// and single-use — a finished state cannot be restarted.
 pub trait ExecutionState: Send + Sync {
+    /// Current lifecycle status.
     fn status(&self) -> ExecStatus;
 
     /// Block until the state reaches `Finished` (or `Failed`).
@@ -144,6 +148,8 @@ pub trait ExecutionState: Send + Sync {
         ))
     }
 
+    /// Downcast hook: processing units accept only the state types their
+    /// backend produces.
     fn as_any(&self) -> &dyn Any;
 
     /// Owned downcast hook so processing units can take `Arc`s of their
@@ -166,6 +172,7 @@ pub trait ProcessingUnit: Send + Sync {
     /// Tear the unit down (joins/releases the underlying executor).
     fn terminate(&self) -> Result<()>;
 
+    /// Current lifecycle status of the unit itself.
     fn status(&self) -> ExecStatus;
 }
 

@@ -12,6 +12,7 @@ use crate::util::json::Json;
 /// Stateful: it represents a live process.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Instance {
+    /// The instance's system-wide identifier (its rank).
     pub id: InstanceId,
     /// Exactly one instance in the system is root: the first created (or
     /// one of the launch-time group), used solely for tie-breaking.
@@ -19,6 +20,7 @@ pub struct Instance {
 }
 
 impl Instance {
+    /// Whether this is the system's single root instance.
     pub fn is_root(&self) -> bool {
         self.is_root
     }
@@ -29,11 +31,14 @@ impl Instance {
 /// (paper: cloud host ramp-up requests).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct InstanceTemplate {
+    /// Minimal hardware the created instance must provide.
     pub requirements: TopologyRequirements,
+    /// Free-form metadata forwarded to the underlying technology.
     pub metadata: Option<Json>,
 }
 
 impl InstanceTemplate {
+    /// Template with the given hardware requirements and no metadata.
     pub fn new(requirements: TopologyRequirements) -> Self {
         Self {
             requirements,
@@ -41,11 +46,13 @@ impl InstanceTemplate {
         }
     }
 
+    /// Attach technology-specific metadata (builder style).
     pub fn with_metadata(mut self, metadata: Json) -> Self {
         self.metadata = Some(metadata);
         self
     }
 
+    /// JSON representation (the wire form of runtime-creation requests).
     pub fn to_json(&self) -> Json {
         Json::obj([
             ("requirements", self.requirements.to_json()),
@@ -56,6 +63,7 @@ impl InstanceTemplate {
         ])
     }
 
+    /// Parse a template back from its JSON form.
     pub fn from_json(v: &Json) -> Self {
         Self {
             requirements: TopologyRequirements::from_json(v.get("requirements")),

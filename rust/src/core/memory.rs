@@ -115,6 +115,8 @@ impl LocalMemorySlot {
         self.len
     }
 
+    /// True for a zero-capacity slot (never constructed today: `alloc`
+    /// and `register_vec` both reject empty buffers).
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

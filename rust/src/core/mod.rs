@@ -7,6 +7,7 @@
 //! templates) are plain serializable data. *Stateful* components (memory
 //! slots, processing units, execution states, instances) have a finite
 //! lifetime and cannot be replicated.
+#![warn(missing_docs)]
 
 pub mod communication;
 pub mod compute;

@@ -50,6 +50,7 @@ use crate::core::topology::TopologyManager;
 pub struct Capabilities(u16);
 
 impl Capabilities {
+    /// The empty capability set.
     pub const NONE: Capabilities = Capabilities(0);
     /// Hardware topology discovery (`TopologyManager`).
     pub const TOPOLOGY: Capabilities = Capabilities(1 << 0);
@@ -68,10 +69,12 @@ impl Capabilities {
     /// The five Table 1 columns (no extended flags).
     pub const TABLE1: Capabilities = Capabilities(0b1_1111);
 
+    /// True when every bit of `other` is present in `self`.
     pub fn contains(self, other: Capabilities) -> bool {
         self.0 & other.0 == other.0
     }
 
+    /// True for the empty capability set.
     pub fn is_empty(self) -> bool {
         self.0 == 0
     }
@@ -136,6 +139,7 @@ pub struct PluginContext {
 }
 
 impl PluginContext {
+    /// An empty context.
     pub fn new() -> Self {
         Self::default()
     }
@@ -151,6 +155,7 @@ impl PluginContext {
         self
     }
 
+    /// The context value of type `T`, if one was inserted.
     pub fn get<T: Send + Sync + 'static>(&self) -> Option<Arc<T>> {
         self.slots
             .get(&TypeId::of::<T>())
@@ -202,6 +207,8 @@ pub struct BackendPlugin {
 }
 
 impl BackendPlugin {
+    /// A descriptor with no factories attached yet (builder style:
+    /// chain `with_*` calls for each manager the backend provides).
     pub fn new(name: &'static str) -> Self {
         Self {
             name,
@@ -214,18 +221,22 @@ impl BackendPlugin {
         }
     }
 
+    /// The backend's registry name.
     pub fn name(&self) -> &'static str {
         self.name
     }
 
+    /// Capability set derived from the attached factories.
     pub fn capabilities(&self) -> Capabilities {
         self.capabilities
     }
 
+    /// True when this plugin provides every capability in `caps`.
     pub fn provides(&self, caps: Capabilities) -> bool {
         self.capabilities.contains(caps)
     }
 
+    /// Attach the topology-manager factory.
     pub fn with_topology(
         mut self,
         f: impl Fn(&PluginContext) -> Result<Arc<dyn TopologyManager>> + Send + Sync + 'static,
@@ -235,6 +246,7 @@ impl BackendPlugin {
         self
     }
 
+    /// Attach the instance-manager factory.
     pub fn with_instance(
         mut self,
         f: impl Fn(&PluginContext) -> Result<Arc<dyn InstanceManager>> + Send + Sync + 'static,
@@ -244,6 +256,7 @@ impl BackendPlugin {
         self
     }
 
+    /// Attach the communication-manager factory.
     pub fn with_communication(
         mut self,
         f: impl Fn(&PluginContext) -> Result<Arc<dyn CommunicationManager>>
@@ -256,6 +269,7 @@ impl BackendPlugin {
         self
     }
 
+    /// Attach the memory-manager factory.
     pub fn with_memory(
         mut self,
         f: impl Fn(&PluginContext) -> Result<Arc<dyn MemoryManager>> + Send + Sync + 'static,
@@ -265,6 +279,7 @@ impl BackendPlugin {
         self
     }
 
+    /// Attach the compute-manager factory.
     pub fn with_compute(
         mut self,
         f: impl Fn(&PluginContext) -> Result<Arc<dyn ComputeManager>> + Send + Sync + 'static,
@@ -292,6 +307,7 @@ impl BackendPlugin {
         ))
     }
 
+    /// Construct the topology manager (error if not provided).
     pub fn topology_manager(&self, ctx: &PluginContext) -> Result<Arc<dyn TopologyManager>> {
         match &self.topology {
             Some(f) => f(ctx),
@@ -299,6 +315,7 @@ impl BackendPlugin {
         }
     }
 
+    /// Construct the instance manager (error if not provided).
     pub fn instance_manager(&self, ctx: &PluginContext) -> Result<Arc<dyn InstanceManager>> {
         match &self.instance {
             Some(f) => f(ctx),
@@ -306,6 +323,7 @@ impl BackendPlugin {
         }
     }
 
+    /// Construct the communication manager (error if not provided).
     pub fn communication_manager(
         &self,
         ctx: &PluginContext,
@@ -316,6 +334,7 @@ impl BackendPlugin {
         }
     }
 
+    /// Construct the memory manager (error if not provided).
     pub fn memory_manager(&self, ctx: &PluginContext) -> Result<Arc<dyn MemoryManager>> {
         match &self.memory {
             Some(f) => f(ctx),
@@ -323,6 +342,7 @@ impl BackendPlugin {
         }
     }
 
+    /// Construct the compute manager (error if not provided).
     pub fn compute_manager(&self, ctx: &PluginContext) -> Result<Arc<dyn ComputeManager>> {
         match &self.compute {
             Some(f) => f(ctx),
@@ -345,11 +365,17 @@ impl fmt::Debug for BackendPlugin {
 /// `hicr backends`, asserted by the Table 1 integration test.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BackendCoverage {
+    /// Backend name (registry order = Table 1 order).
     pub name: &'static str,
+    /// Provides a `TopologyManager`.
     pub topology: bool,
+    /// Provides an `InstanceManager`.
     pub instance: bool,
+    /// Provides a `CommunicationManager`.
     pub communication: bool,
+    /// Provides a `MemoryManager`.
     pub memory: bool,
+    /// Provides a `ComputeManager`.
     pub compute: bool,
 }
 
@@ -380,6 +406,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -398,14 +425,17 @@ impl Registry {
         Ok(())
     }
 
+    /// The plugin registered under `name`, if any.
     pub fn get(&self, name: &str) -> Option<&BackendPlugin> {
         self.plugins.iter().find(|p| p.name() == name)
     }
 
+    /// All registered plugins in registration order.
     pub fn plugins(&self) -> &[BackendPlugin] {
         &self.plugins
     }
 
+    /// The registered backend names in registration order.
     pub fn names(&self) -> Vec<&'static str> {
         self.plugins.iter().map(|p| p.name()).collect()
     }
@@ -467,6 +497,8 @@ pub struct RuntimeBuilder<'r> {
 }
 
 impl<'r> RuntimeBuilder<'r> {
+    /// A builder with no roles requested (use the role setters or
+    /// `require`).
     pub fn new(registry: &'r Registry) -> Self {
         Self {
             registry,
@@ -492,26 +524,31 @@ impl<'r> RuntimeBuilder<'r> {
         self
     }
 
+    /// Resolve the topology role to the named backend.
     pub fn topology(mut self, backend: impl Into<String>) -> Self {
         self.topology = RoleSelection::Named(backend.into());
         self
     }
 
+    /// Resolve the instance role to the named backend.
     pub fn instance(mut self, backend: impl Into<String>) -> Self {
         self.instance = RoleSelection::Named(backend.into());
         self
     }
 
+    /// Resolve the communication role to the named backend.
     pub fn communication(mut self, backend: impl Into<String>) -> Self {
         self.communication = RoleSelection::Named(backend.into());
         self
     }
 
+    /// Resolve the memory role to the named backend.
     pub fn memory(mut self, backend: impl Into<String>) -> Self {
         self.memory = RoleSelection::Named(backend.into());
         self
     }
 
+    /// Resolve the compute role to the named backend.
     pub fn compute(mut self, backend: impl Into<String>) -> Self {
         self.compute = RoleSelection::Named(backend.into());
         self
@@ -677,24 +714,29 @@ impl ManagerSet {
         ))
     }
 
+    /// The resolved topology manager.
     pub fn topology(&self) -> Result<Arc<dyn TopologyManager>> {
         self.topology.clone().ok_or_else(|| Self::missing("topology"))
     }
 
+    /// The resolved instance manager.
     pub fn instance(&self) -> Result<Arc<dyn InstanceManager>> {
         self.instance.clone().ok_or_else(|| Self::missing("instance"))
     }
 
+    /// The resolved communication manager.
     pub fn communication(&self) -> Result<Arc<dyn CommunicationManager>> {
         self.communication
             .clone()
             .ok_or_else(|| Self::missing("communication"))
     }
 
+    /// The resolved memory manager.
     pub fn memory(&self) -> Result<Arc<dyn MemoryManager>> {
         self.memory.clone().ok_or_else(|| Self::missing("memory"))
     }
 
+    /// The resolved compute manager.
     pub fn compute(&self) -> Result<Arc<dyn ComputeManager>> {
         self.compute.clone().ok_or_else(|| Self::missing("compute"))
     }

@@ -49,6 +49,7 @@ pub enum MemorySpaceKind {
     DeviceHbm,
     /// Explicitly addressable scratchpad (VMEM-class).
     Scratchpad,
+    /// Anything else a third-party backend may expose.
     Other,
 }
 
@@ -76,7 +77,9 @@ impl MemorySpaceKind {
 /// size. Reports the *physical* capacity, not virtual address space.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MemorySpace {
+    /// Identifier, unique within the instance.
     pub id: MemorySpaceId,
+    /// What class of memory this space exposes.
     pub kind: MemorySpaceKind,
     /// Physical capacity in bytes (must be non-zero per the model).
     pub size_bytes: u64,
@@ -85,6 +88,8 @@ pub struct MemorySpace {
 }
 
 impl MemorySpace {
+    /// Construct a memory space; zero-size spaces are rejected (the
+    /// model requires physical, non-empty capacity).
     pub fn new(
         id: impl Into<MemorySpaceId>,
         kind: MemorySpaceKind,
@@ -109,6 +114,7 @@ impl MemorySpace {
 /// core/hyperthread, or an accelerator stream context.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ComputeResource {
+    /// Identifier, unique within the instance.
     pub id: ComputeResourceId,
     /// Free-form kind tag (e.g. "cpu-core", "pjrt-stream").
     pub kind: String,
@@ -122,20 +128,27 @@ pub struct ComputeResource {
 /// zero or more memory spaces and compute resources.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Device {
+    /// Identifier, unique within the instance's topology.
     pub id: DeviceId,
+    /// Hardware class (NUMA domain, accelerator, other).
     pub kind: DeviceKind,
+    /// Human-readable device name (e.g. "numa0", "xla-cpu").
     pub name: String,
+    /// Explicitly addressable memories this device exposes.
     pub memory_spaces: Vec<MemorySpace>,
+    /// Computation-capable elements this device exposes.
     pub compute_resources: Vec<ComputeResource>,
 }
 
 /// Full or partial information about an instance's available hardware.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Topology {
+    /// The discovered hardware elements.
     pub devices: Vec<Device>,
 }
 
 impl Topology {
+    /// An empty topology (merge managers' views into it).
     pub fn new() -> Self {
         Self::default()
     }
@@ -148,6 +161,16 @@ impl Topology {
     /// All compute resources across all devices.
     pub fn compute_resources(&self) -> impl Iterator<Item = &ComputeResource> {
         self.devices.iter().flat_map(|d| d.compute_resources.iter())
+    }
+
+    /// CPU compute resources (those of NUMA-domain devices), in device
+    /// order — the placement pool schedulers draw worker assignments
+    /// from (e.g. the tasking frontend's NUMA-aware steal order).
+    pub fn cpu_resources(&self) -> impl Iterator<Item = &ComputeResource> {
+        self.devices
+            .iter()
+            .filter(|d| d.kind == DeviceKind::NumaDomain)
+            .flat_map(|d| d.compute_resources.iter())
     }
 
     /// Find a memory space by id.
@@ -176,7 +199,7 @@ impl Topology {
         self.memory_spaces().map(|m| m.size_bytes).sum()
     }
 
-    /// Serialize for broadcast to other instances.
+    /// JSON representation for broadcast to other instances.
     pub fn to_json(&self) -> Json {
         Json::Obj(
             [(
@@ -188,6 +211,7 @@ impl Topology {
         )
     }
 
+    /// Compact-JSON serialization (the broadcast wire form).
     pub fn serialize(&self) -> String {
         self.to_json().to_string_compact()
     }
@@ -215,12 +239,16 @@ impl Topology {
 /// Minimal hardware requirements prescribed by an instance template.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TopologyRequirements {
+    /// Minimum number of compute resources across all devices.
     pub min_compute_resources: usize,
+    /// Minimum total memory across all memory spaces, in bytes.
     pub min_memory_bytes: u64,
+    /// Whether an accelerator-class device must be present.
     pub needs_accelerator: bool,
 }
 
 impl TopologyRequirements {
+    /// JSON representation (embedded in instance templates).
     pub fn to_json(&self) -> Json {
         Json::obj([
             ("min_compute_resources", self.min_compute_resources.into()),
@@ -229,6 +257,8 @@ impl TopologyRequirements {
         ])
     }
 
+    /// Parse requirements back from their JSON form (missing fields
+    /// default to "no requirement").
     pub fn from_json(v: &Json) -> Self {
         Self {
             min_compute_resources: v.get("min_compute_resources").as_usize().unwrap_or(0),
@@ -447,6 +477,15 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn cpu_resources_excludes_accelerator_streams() {
+        let t = sample_topology();
+        assert_eq!(t.compute_resources().count(), 5);
+        let cpus: Vec<_> = t.cpu_resources().collect();
+        assert_eq!(cpus.len(), 4);
+        assert!(cpus.iter().all(|c| c.kind == "cpu-core"));
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! Scheduler data structures: per-worker work-stealing deques, the
+//! counted global injection lane, per-worker parkers, and the atomic
+//! counter block behind [`super::system::SchedStats`].
+//!
+//! The deque discipline (DESIGN.md §5): the owning worker pushes and pops
+//! at the *bottom* (LIFO — depth-first execution, hot caches), thieves
+//! steal from the *top* (FIFO — they take the oldest, coarsest task).
+//! Each deque is lightly locked (one short-critical-section mutex per
+//! worker), with an atomic length word so thieves and parking workers can
+//! probe emptiness without ever touching a victim's lock. The only
+//! *global* mutex in the scheduler is the injection lane's, and every
+//! acquisition of it is counted so tests can assert the steady-state
+//! spawn→run→complete path never takes it.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// A per-worker double-ended work queue.
+///
+/// Lightly locked rather than lock-free: the mutex is per-worker (never
+/// global), the critical sections are a single `VecDeque` operation, and
+/// the `len` word lets every other thread probe emptiness lock-free.
+/// `len` is maintained with `SeqCst` stores *inside* the critical section
+/// so the parking re-check in `next_runnable` cannot miss a concurrent
+/// push (see the parking protocol note in DESIGN.md §5).
+pub(super) struct WorkDeque<T> {
+    len: AtomicUsize,
+    items: Mutex<VecDeque<T>>,
+}
+
+impl<T> WorkDeque<T> {
+    pub(super) fn new() -> Self {
+        Self {
+            len: AtomicUsize::new(0),
+            items: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Lock-free emptiness/backlog probe (may be momentarily stale).
+    pub(super) fn len(&self) -> usize {
+        self.len.load(Ordering::SeqCst)
+    }
+
+    /// Owner-side push at the bottom.
+    pub(super) fn push_bottom(&self, item: T) {
+        let mut q = self.items.lock().unwrap();
+        q.push_back(item);
+        self.len.store(q.len(), Ordering::SeqCst);
+    }
+
+    /// Owner-side pop at the bottom (LIFO).
+    pub(super) fn pop_bottom(&self) -> Option<T> {
+        if self.len() == 0 {
+            return None;
+        }
+        let mut q = self.items.lock().unwrap();
+        let item = q.pop_back();
+        self.len.store(q.len(), Ordering::SeqCst);
+        item
+    }
+
+    /// Thief-side steal from the top (FIFO). Probes the atomic length
+    /// first so scanning an empty victim costs one atomic load, not a
+    /// lock acquisition on the victim's hot path.
+    pub(super) fn steal_top(&self) -> Option<T> {
+        if self.len() == 0 {
+            return None;
+        }
+        let mut q = self.items.lock().unwrap();
+        let item = q.pop_front();
+        self.len.store(q.len(), Ordering::SeqCst);
+        item
+    }
+}
+
+/// The global injection/overflow lane: external submissions
+/// (`TaskSystem::submit` / `run`) and the `GlobalQueue` compatibility
+/// policy land here. Every mutex acquisition is counted — this is the
+/// lock-count instrument behind the "no global scheduler mutex in steady
+/// state" acceptance test.
+pub(super) struct Injector<T> {
+    len: AtomicUsize,
+    locks: AtomicU64,
+    items: Mutex<VecDeque<T>>,
+}
+
+impl<T> Injector<T> {
+    pub(super) fn new() -> Self {
+        Self {
+            len: AtomicUsize::new(0),
+            locks: AtomicU64::new(0),
+            items: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Lock-free backlog probe.
+    pub(super) fn len(&self) -> usize {
+        self.len.load(Ordering::SeqCst)
+    }
+
+    /// Total mutex acquisitions so far (push + non-empty pop).
+    pub(super) fn lock_count(&self) -> u64 {
+        self.locks.load(Ordering::Relaxed)
+    }
+
+    pub(super) fn push(&self, item: T) {
+        self.locks.fetch_add(1, Ordering::Relaxed);
+        let mut q = self.items.lock().unwrap();
+        q.push_back(item);
+        self.len.store(q.len(), Ordering::SeqCst);
+    }
+
+    /// FIFO pop. The empty case is decided by the atomic probe alone, so
+    /// idle workers scanning an empty lane never acquire the global lock.
+    pub(super) fn pop(&self) -> Option<T> {
+        if self.len() == 0 {
+            return None;
+        }
+        self.locks.fetch_add(1, Ordering::Relaxed);
+        let mut q = self.items.lock().unwrap();
+        let item = q.pop_front();
+        self.len.store(q.len(), Ordering::SeqCst);
+        item
+    }
+}
+
+/// Per-worker parker: a one-permit binary semaphore over (mutex, condvar).
+///
+/// Producers `unpark` a specific worker; a permit stored before the
+/// worker parks makes the next `park` return immediately, so the
+/// store-permit/park race is benign. Parks additionally time out (a few
+/// milliseconds) as a belt-and-braces bound: a theoretically missed wake
+/// degrades to one re-scan of the queues, never to a hang.
+pub(super) struct Parker {
+    permit: Mutex<bool>,
+    cv: Condvar,
+}
+
+/// Upper bound on one park interval; a missed wake costs at most this.
+/// Purely a backstop — every real wake path (push, shutdown) unparks
+/// explicitly — so it is sized for negligible idle churn (one queue
+/// re-scan per interval per idle worker), not for latency.
+const PARK_TIMEOUT: Duration = Duration::from_millis(50);
+
+impl Parker {
+    pub(super) fn new() -> Self {
+        Self {
+            permit: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until unparked (or the safety timeout elapses), consuming
+    /// the permit if one is present.
+    pub(super) fn park(&self) {
+        let mut permit = self.permit.lock().unwrap();
+        if !*permit {
+            let (guard, _timeout) = self
+                .cv
+                .wait_timeout(permit, PARK_TIMEOUT)
+                .unwrap();
+            permit = guard;
+        }
+        *permit = false;
+    }
+
+    /// Store a permit and wake the parked worker, if any.
+    pub(super) fn unpark(&self) {
+        let mut permit = self.permit.lock().unwrap();
+        *permit = true;
+        self.cv.notify_one();
+    }
+}
+
+/// Atomic scheduler counters (snapshotted into
+/// [`super::system::SchedStats`]).
+#[derive(Default)]
+pub(super) struct SchedCounters {
+    /// Pushes onto a worker-local deque (the steady-state spawn path).
+    pub(super) local_pushes: AtomicU64,
+    /// Pushes onto the global injection lane (external submits; every
+    /// spawn under the `GlobalQueue` policy).
+    pub(super) injection_pushes: AtomicU64,
+    /// Successful steals from another worker's deque.
+    pub(super) steals: AtomicU64,
+    /// Full victim-scan rounds that found nothing to steal.
+    pub(super) steal_failures: AtomicU64,
+    /// Times a worker parked after backoff escalated past spinning.
+    pub(super) parks: AtomicU64,
+    /// Times a producer woke a parked worker.
+    pub(super) wakes: AtomicU64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn deque_lifo_bottom_fifo_top() {
+        let d = WorkDeque::new();
+        d.push_bottom(1);
+        d.push_bottom(2);
+        d.push_bottom(3);
+        assert_eq!(d.len(), 3);
+        // Owner pops newest; thief steals oldest.
+        assert_eq!(d.pop_bottom(), Some(3));
+        assert_eq!(d.steal_top(), Some(1));
+        assert_eq!(d.pop_bottom(), Some(2));
+        assert_eq!(d.pop_bottom(), None);
+        assert_eq!(d.steal_top(), None);
+        assert_eq!(d.len(), 0);
+    }
+
+    #[test]
+    fn injector_counts_locks_and_skips_empty() {
+        let i = Injector::new();
+        let base = i.lock_count();
+        // Empty pops are decided by the atomic probe: no lock taken.
+        assert_eq!(i.pop(), None::<u32>);
+        assert_eq!(i.lock_count(), base);
+        i.push(7);
+        assert_eq!(i.lock_count(), base + 1);
+        assert_eq!(i.pop(), Some(7));
+        assert_eq!(i.lock_count(), base + 2);
+        assert_eq!(i.len(), 0);
+    }
+
+    #[test]
+    fn parker_permit_prevents_lost_wakeup() {
+        let p = Arc::new(Parker::new());
+        // Unpark before park: the stored permit makes park return at once
+        // (well under the 50 ms timeout backstop).
+        p.unpark();
+        let t0 = std::time::Instant::now();
+        p.park();
+        assert!(t0.elapsed() < Duration::from_millis(40));
+        // Cross-thread wake.
+        let p2 = Arc::clone(&p);
+        let h = std::thread::spawn(move || p2.park());
+        std::thread::sleep(Duration::from_millis(1));
+        p.unpark();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_steal_storm_loses_nothing() {
+        // 1 owner pushing, 3 thieves stealing: every item surfaces
+        // exactly once across pop/steal.
+        let d = Arc::new(WorkDeque::new());
+        let total = 10_000u64;
+        let seen = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let d = Arc::clone(&d);
+            let seen = Arc::clone(&seen);
+            handles.push(std::thread::spawn(move || {
+                let mut sum = 0u64;
+                while seen.load(Ordering::SeqCst) < total {
+                    if let Some(v) = d.steal_top() {
+                        sum += v;
+                        seen.fetch_add(1, Ordering::SeqCst);
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+                sum
+            }));
+        }
+        let mut owner_sum = 0u64;
+        for v in 1..=total {
+            d.push_bottom(v);
+            if let Some(x) = d.pop_bottom() {
+                owner_sum += x;
+                seen.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        while seen.load(Ordering::SeqCst) < total {
+            if let Some(x) = d.pop_bottom() {
+                owner_sum += x;
+                seen.fetch_add(1, Ordering::SeqCst);
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        let thief_sum: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(owner_sum + thief_sum, total * (total + 1) / 2);
+    }
+}

@@ -1,6 +1,15 @@
 //! Tasking frontend (paper §4.3): building blocks for task-based runtime
-//! systems — stateful tasks with state-change callbacks, pull-scheduled
-//! worker objects, and an OVNI-style execution tracer.
+//! systems — stateful tasks with DAG dependencies, work-stealing worker
+//! objects, and an OVNI-style execution tracer.
+//!
+//! The scheduler is built around **per-worker work-stealing deques**
+//! (owner pushes/pops at the bottom, topology-aware thieves steal from
+//! the top), with the global queue demoted to an injection/overflow lane
+//! and idle workers parking through [`crate::util::backoff`]. Tasks form
+//! explicit DAGs beyond the parent/child tree: [`TaskCtx::spawn_after`]
+//! gates on completed tasks, [`TaskCtx::spawn_dataflow`] on produced
+//! data keys. See DESIGN.md §5 for the deque discipline, steal order and
+//! parking protocol, and docs/ARCHITECTURE.md for the lock inventory.
 //!
 //! The frontend is written purely against the abstract compute API: it
 //! accepts **any** [`crate::core::compute::ComputeManager`] trait object
@@ -8,22 +17,25 @@
 //! instead of naming concrete backends:
 //!
 //! - A manager whose execution states *support suspension* (fiber-class,
-//!   e.g. the `coro` plugin) gets the parking scheduler: workers pull
-//!   tasks from a shared ready queue and drive them with user-level
-//!   `resume()`; a task waiting on children parks *without* occupying
-//!   its worker.
+//!   e.g. the `coro` plugin) gets the parking engine: workers drive
+//!   stolen tasks with user-level `resume()`; a task waiting on children
+//!   parks *without* occupying its worker.
 //! - A run-to-completion manager (e.g. the `threads` or `nosv` plugins)
-//!   gets the blocking scheduler: tasks are admitted into concurrency
-//!   slots and waiting on children blocks the kernel thread (releasing
-//!   its slot).
+//!   gets the blocking engine: each worker executes tasks through a
+//!   reusable processing unit, and a task blocking on children releases
+//!   its worker (the unit hosting it is retired and reclaimed later).
 //!
 //! The paper's Test Case 3/4 engine comparison is thus a pure plugin
 //! swap; the same application code (a body receiving a [`TaskCtx`]) runs
 //! on every compute backend — the Fibonacci and Jacobi apps are written
 //! once.
+#![warn(missing_docs)]
 
+mod deque;
 pub mod system;
 pub mod trace;
 
-pub use system::{TaskCtx, TaskSystem};
+pub use system::{
+    SchedConfig, SchedPolicy, SchedStats, TaskCtx, TaskHandle, TaskSystem,
+};
 pub use trace::{EventKind, Trace, TraceEvent};

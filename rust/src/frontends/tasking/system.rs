@@ -1,25 +1,58 @@
-//! The task system: stateful tasks, pull-scheduled workers, and two
+//! The task system: stateful tasks, work-stealing workers, and two
 //! scheduling engines — selected by *capability negotiation* against the
 //! injected compute manager, never by naming a concrete backend.
+//!
+//! # Scheduling architecture (DESIGN.md §5)
+//!
+//! Every worker owns a private ready deque: it pushes and pops at the
+//! bottom (LIFO — depth-first execution with hot caches) while idle
+//! workers steal from the top (FIFO — the oldest, coarsest task).
+//! Victims are scanned in a topology-aware order: same-NUMA workers
+//! first (per the `locality` of the compute resources assigned from an
+//! optional [`crate::core::topology::Topology`]), remote domains last.
+//! A single *injection lane* — the only globally locked structure —
+//! carries external submissions ([`TaskSystem::submit`] / `run`) and is
+//! demoted to an overflow path: the steady-state spawn→run→complete
+//! cycle of a task spawned *by* a task touches only per-worker state
+//! (asserted by the lock-count instrument, [`TaskSystem::sched_stats`]).
+//! Idle workers escalate through [`crate::util::backoff::Backoff`]
+//! (spin → yield) and then park on a per-worker parker; producers wake
+//! one parked worker per push, and waking costs one atomic load when
+//! nobody is parked.
+//!
+//! # Engines
 //!
 //! `TaskSystem::new` accepts any [`ComputeManager`] trait object:
 //!
 //! - If the manager's execution states support cooperative suspension
 //!   (`supports_suspension()`, e.g. the fiber-class `coro` plugin), tasks
-//!   run on the **parking scheduler**: pull-loop workers drive states
-//!   with [`ExecutionState::resume`], and a task waiting on children
-//!   parks *without* occupying its worker.
+//!   run on the **parking engine**: workers drive states with
+//!   [`ExecutionState::resume`], and a task waiting on children parks
+//!   *without* occupying its worker. A parked task's re-enqueue (and any
+//!   fresh task) may be stolen and resumed by a *different* worker — the
+//!   coro substrate explicitly supports cross-thread resume.
 //! - Otherwise (run-to-completion states, e.g. the `threads` or `nosv`
-//!   plugins) tasks run on the **blocking scheduler**: a dispatcher
-//!   admits queued tasks into `n_workers` concurrency slots and runs
-//!   each on its own processing unit; waiting on children blocks the
-//!   kernel thread after releasing its slot.
+//!   plugins) tasks run on the **blocking engine**: each worker executes
+//!   its tasks through a processing unit of the injected manager, reusing
+//!   one unit while tasks run to completion; a task that blocks in
+//!   [`TaskCtx::wait_children`] releases its worker (the unit hosting the
+//!   blocked task is retired to a zombie list and reclaimed when it
+//!   finishes), so deep DAGs cannot starve the scheduler.
+//!
+//! # Task graphs
+//!
+//! Beyond the parent/child tree (`spawn` + `wait_children`), tasks form
+//! explicit DAGs: [`TaskCtx::spawn_after`] gates a task on the completion
+//! of previously spawned tasks (by [`TaskHandle`]), and
+//! [`TaskCtx::spawn_dataflow`] expresses producer/consumer edges keyed by
+//! `u64` *data keys* (the same id space the dataobject frontend uses for
+//! its objects, so a task can be gated on the data it consumes).
 //!
 //! The paper's Test Case 3/4 engine comparison (Boost fibers vs nOS-V
-//! thread-per-task) is therefore a pure backend swap: the same
-//! application body runs under `--compute coro` or `--compute nosv`.
+//! thread-per-task) remains a pure backend swap: the same application
+//! body runs under `--compute coro` or `--compute nosv`.
 
-use std::collections::VecDeque;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -29,21 +62,83 @@ use crate::core::compute::{
 };
 use crate::core::error::{HicrError, Result};
 use crate::core::ids::ComputeResourceId;
-use crate::core::topology::ComputeResource;
+use crate::core::topology::{ComputeResource, Topology};
+use crate::frontends::tasking::deque::{Injector, Parker, SchedCounters, WorkDeque};
 use crate::frontends::tasking::trace::{EventKind, Trace};
+use crate::util::backoff::Backoff;
 
 /// Which scheduling engine drives the tasks — derived from the compute
 /// manager's capabilities, not chosen by the caller.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum EngineKind {
-    /// Suspendable states: pull workers + user-level parking.
+    /// Suspendable states: workers drive `resume()`, waiting tasks park.
     Suspending,
-    /// Run-to-completion states: slot-gated dispatch, blocking waits.
+    /// Run-to-completion states: per-worker processing units, blocking
+    /// waits release the worker.
     Blocking,
 }
 
 /// A task body: runs once, may spawn children and wait for them.
 pub type TaskBody = Box<dyn FnOnce(&TaskCtx) + Send + 'static>;
+
+/// How ready tasks are distributed across workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Per-worker deques with topology-aware stealing (the default).
+    WorkStealing,
+    /// Every task goes through the single global injection queue and
+    /// stealing is disabled — the seed scheduler's contention pattern,
+    /// kept as the *before* side of the fig9/sched_scaling ablations.
+    GlobalQueue,
+}
+
+/// Scheduler construction options (see [`TaskSystem::with_config`]).
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Ready-task distribution policy.
+    pub policy: SchedPolicy,
+    /// Hardware topology used to assign one compute resource per worker
+    /// (round-robin over the NUMA domains' CPU resources): its `locality`
+    /// drives the steal order and its `os_index` the optional pinning.
+    /// `None` synthesizes one resource per worker on locality 0.
+    pub topology: Option<Topology>,
+    /// Pin scheduler workers (and, through the compute manager's
+    /// processing units, task executors) to their resource's core.
+    /// Best-effort; a no-op without the `affinity` feature.
+    pub pin_workers: bool,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self {
+            policy: SchedPolicy::WorkStealing,
+            topology: None,
+            pin_workers: true,
+        }
+    }
+}
+
+/// Snapshot of the scheduler's counters — the lock-count instrument the
+/// acceptance tests (and the sched_scaling bench) read.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// Pushes onto worker-local deques (steady-state spawn path).
+    pub local_pushes: u64,
+    /// Pushes onto the global injection lane.
+    pub injection_pushes: u64,
+    /// Mutex acquisitions of the injection lane — the only global
+    /// scheduler lock. Steady-state task-to-task spawning must not move
+    /// this counter.
+    pub injection_locks: u64,
+    /// Successful steals.
+    pub steals: u64,
+    /// Victim-scan rounds that found nothing.
+    pub steal_failures: u64,
+    /// Worker park events.
+    pub parks: u64,
+    /// Producer-side wakes of parked workers.
+    pub wakes: u64,
+}
 
 /// Dependency/lifecycle bookkeeping shared by both engines.
 struct TaskSync {
@@ -55,6 +150,13 @@ struct TaskSync {
     parked: Option<SuspendableTask>,
 }
 
+/// Completion broadcast state for `spawn_after` edges.
+struct DepState {
+    finished: bool,
+    /// Dep-gated tasks waiting on this node's completion.
+    waiters: Vec<Arc<Pending>>,
+}
+
 struct TaskNode {
     #[allow(dead_code)]
     id: u64,
@@ -63,67 +165,89 @@ struct TaskNode {
     sync: Mutex<TaskSync>,
     /// Blocking engine: parents block here awaiting children.
     cv: Condvar,
+    /// Completion broadcast for `spawn_after` dependents.
+    dep: Mutex<DepState>,
+    /// Worker this task last executed on: the push target for its spawns
+    /// (kept fresh across steals/resumes by the executing worker).
+    home: AtomicUsize,
+    /// Data keys marked produced when this task completes.
+    produces: Vec<u64>,
+    /// Blocking engine: one-shot flag — the first `wait_children` releases
+    /// the worker; later waits by the same (resumed) task must not.
+    worker_released: AtomicBool,
 }
 
-/// A task bound to a suspendable execution state (parking scheduler).
+/// A dep-gated task that has not become ready yet. `remaining` starts at
+/// 1 (a registration sentinel released after all edges are wired), so a
+/// task whose dependencies all finished mid-registration is enqueued
+/// exactly once.
+struct Pending {
+    remaining: AtomicUsize,
+    slot: Mutex<Option<(TaskBody, Arc<TaskNode>)>>,
+}
+
+/// A task bound to a suspendable execution state (parking engine).
 #[derive(Clone)]
 struct SuspendableTask {
     node: Arc<TaskNode>,
     state: Arc<dyn ExecutionState>,
 }
 
-/// Counting semaphore handing out stable slot ids (blocking-engine
-/// concurrency slots).
-struct IdSemaphore {
-    free: Mutex<Vec<usize>>,
-    cv: Condvar,
+/// A ready unit of work in a deque or the injection lane.
+enum Runnable {
+    /// Not yet started: the execution state is created at pop time.
+    Fresh(TaskBody, Arc<TaskNode>),
+    /// A suspended task re-enqueued for resumption (parking engine).
+    Resume(SuspendableTask),
 }
 
-impl IdSemaphore {
-    fn new(n: usize) -> Self {
-        Self {
-            free: Mutex::new((0..n).rev().collect()),
-            cv: Condvar::new(),
-        }
-    }
+/// Completion handle for a spawned task: the dependency currency of
+/// [`TaskCtx::spawn_after`]. Cloneable and cheap; valid only within the
+/// [`TaskSystem`] that spawned it.
+#[derive(Clone)]
+pub struct TaskHandle {
+    node: Arc<TaskNode>,
+}
 
-    fn acquire(&self) -> usize {
-        let mut free = self.free.lock().unwrap();
-        loop {
-            if let Some(id) = free.pop() {
-                return id;
-            }
-            free = self.cv.wait(free).unwrap();
-        }
-    }
-
-    fn release(&self, id: usize) {
-        self.free.lock().unwrap().push(id);
-        self.cv.notify_one();
+impl TaskHandle {
+    /// True once the task has run to completion (its dependents have been
+    /// released).
+    pub fn is_finished(&self) -> bool {
+        self.node.dep.lock().unwrap().finished
     }
 }
 
-struct SuspendingEngine {
-    ready: Mutex<VecDeque<SuspendableTask>>,
-    ready_cv: Condvar,
+/// Producer/consumer state of one data key.
+enum KeyState {
+    /// The key's producer finished (or `mark_produced` was called).
+    Produced,
+    /// Consumers gated on the key.
+    Waiting(Vec<Arc<Pending>>),
+}
+
+/// One scheduler worker's shared state.
+struct Worker {
+    deque: WorkDeque<Runnable>,
+    parker: Parker,
+    parked: AtomicBool,
+    /// Victim scan order: same-locality workers first, ring-rotated so
+    /// thieves do not all converge on worker 0.
+    steal_order: Vec<usize>,
+    /// The compute resource this worker schedules onto (drives pinning
+    /// and the locality-aware steal order).
+    resource: ComputeResource,
+}
+
+struct Sched {
+    workers: Vec<Worker>,
+    injector: Injector<Runnable>,
+    /// Number of currently parked workers (wake fast-path probe).
+    idle: AtomicUsize,
     shutdown: AtomicBool,
-    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
-}
-
-struct BlockingEngine {
-    slots: IdSemaphore,
-    /// Submitted-but-unscheduled tasks. Thread-per-task backends
-    /// materialize a task's kernel thread when it is *scheduled*, not
-    /// when submitted — eager per-submission spawning would hold
-    /// thousands of live threads on a deep DAG (observed as EAGAIN at
-    /// F(20); EXPERIMENTS.md §Perf).
-    queue: Mutex<VecDeque<(TaskBody, Arc<TaskNode>)>>,
-    queue_cv: Condvar,
-    shutdown: AtomicBool,
-    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
-    /// Processing units with live states, garbage-collected as their
-    /// states finish (terminating a unit joins its executor).
-    live: Mutex<Vec<(Arc<dyn ProcessingUnit>, Arc<dyn ExecutionState>)>>,
+    policy: SchedPolicy,
+    counters: SchedCounters,
+    pin_workers: bool,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 struct Inner {
@@ -136,12 +260,54 @@ struct Inner {
     done_cv: Condvar,
     tasks_executed: AtomicU64,
     /// First task the backend rejected (wrong unit format, terminated
-    /// unit): surfaced as the error of the enclosing `run()` so a
-    /// mis-selected backend fails loudly instead of reporting wrong
-    /// results.
+    /// unit) or that panicked: surfaced as the error of the enclosing
+    /// `run()` so a mis-selected backend fails loudly instead of
+    /// reporting wrong results.
     first_error: Mutex<Option<HicrError>>,
-    suspending: Option<SuspendingEngine>,
-    blocking: Option<BlockingEngine>,
+    sched: Sched,
+    keys: Mutex<HashMap<u64, KeyState>>,
+}
+
+/// One-shot gate the blocking engine's worker waits on per started task:
+/// fired with `Blocked` by the first `wait_children` (the worker moves on
+/// and retires the task's processing unit) or with `Done` when the body
+/// returns. Only the first fire counts.
+struct StartGate {
+    state: Mutex<Option<GateEvent>>,
+    cv: Condvar,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum GateEvent {
+    Blocked,
+    Done,
+}
+
+impl StartGate {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn fire(&self, ev: GateEvent) {
+        let mut s = self.state.lock().unwrap();
+        if s.is_none() {
+            *s = Some(ev);
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) -> GateEvent {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(ev) = *s {
+                return ev;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
 }
 
 /// Handle task bodies use to spawn children and synchronize (the only
@@ -150,21 +316,158 @@ pub struct TaskCtx<'a> {
     inner: &'a Arc<Inner>,
     node: &'a Arc<TaskNode>,
     exec: Option<&'a crate::core::compute::ExecCtx<'a>>,
+    /// Blocking engine: the gate releasing this task's worker.
+    gate: Option<&'a StartGate>,
 }
 
 impl<'a> TaskCtx<'a> {
-    /// Spawn a child task. The child may itself spawn and wait.
-    pub fn spawn(&self, label: impl Into<String>, body: impl FnOnce(&TaskCtx) + Send + 'static) {
-        {
-            let mut sync = self.node.sync.lock().unwrap();
-            sync.pending_children += 1;
-        }
-        spawn_task(
+    /// Spawn a child task onto this worker's deque. The child may itself
+    /// spawn and wait; the returned [`TaskHandle`] can gate later
+    /// [`TaskCtx::spawn_after`] spawns.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use std::sync::atomic::{AtomicU64, Ordering};
+    /// use hicr::backends::threads::ThreadsComputeManager;
+    /// use hicr::frontends::tasking::TaskSystem;
+    ///
+    /// let sys = TaskSystem::new(Arc::new(ThreadsComputeManager::new()), 2, false);
+    /// let total = Arc::new(AtomicU64::new(0));
+    /// let t = Arc::clone(&total);
+    /// sys.run("root", move |ctx| {
+    ///     for _ in 0..4 {
+    ///         let t = Arc::clone(&t);
+    ///         ctx.spawn("leaf", move |_| {
+    ///             t.fetch_add(1, Ordering::Relaxed);
+    ///         });
+    ///     }
+    ///     ctx.wait_children();
+    /// })
+    /// .unwrap();
+    /// sys.shutdown().unwrap();
+    /// assert_eq!(total.load(Ordering::Relaxed), 4);
+    /// ```
+    pub fn spawn(
+        &self,
+        label: impl Into<String>,
+        body: impl FnOnce(&TaskCtx) + Send + 'static,
+    ) -> TaskHandle {
+        let node = create_node(self.inner, label.into(), Some(Arc::clone(self.node)), Vec::new());
+        let handle = TaskHandle {
+            node: Arc::clone(&node),
+        };
+        schedule(self.inner, self.home(), Runnable::Fresh(Box::new(body), node));
+        handle
+    }
+
+    /// Spawn a task that becomes ready only after every task in `deps`
+    /// has completed — an explicit DAG edge, independent of the
+    /// parent/child tree (the child still counts for
+    /// [`TaskCtx::wait_children`]).
+    ///
+    /// Handles from a *different* `TaskSystem` are a logic error: the
+    /// dependency would release into the wrong scheduler.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use std::sync::atomic::{AtomicU64, Ordering};
+    /// use hicr::backends::threads::ThreadsComputeManager;
+    /// use hicr::frontends::tasking::TaskSystem;
+    ///
+    /// let sys = TaskSystem::new(Arc::new(ThreadsComputeManager::new()), 2, false);
+    /// let value = Arc::new(AtomicU64::new(0));
+    /// let v = Arc::clone(&value);
+    /// sys.run("root", move |ctx| {
+    ///     let v1 = Arc::clone(&v);
+    ///     let a = ctx.spawn("producer-a", move |_| {
+    ///         v1.fetch_add(2, Ordering::SeqCst);
+    ///     });
+    ///     let v2 = Arc::clone(&v);
+    ///     let b = ctx.spawn("producer-b", move |_| {
+    ///         v2.fetch_add(3, Ordering::SeqCst);
+    ///     });
+    ///     let v3 = Arc::clone(&v);
+    ///     // Runs only after both producers: observes 2 + 3 = 5.
+    ///     ctx.spawn_after(&[a, b], "consumer", move |_| {
+    ///         assert_eq!(v3.load(Ordering::SeqCst), 5);
+    ///         v3.fetch_add(10, Ordering::SeqCst);
+    ///     });
+    ///     ctx.wait_children();
+    /// })
+    /// .unwrap();
+    /// sys.shutdown().unwrap();
+    /// assert_eq!(value.load(Ordering::SeqCst), 15);
+    /// ```
+    pub fn spawn_after(
+        &self,
+        deps: &[TaskHandle],
+        label: impl Into<String>,
+        body: impl FnOnce(&TaskCtx) + Send + 'static,
+    ) -> TaskHandle {
+        self.spawn_gated(deps, &[], &[], label.into(), Box::new(body))
+    }
+
+    /// Spawn a task gated on data keys: it becomes ready once every key
+    /// in `consumes` has been produced (by a completed producer task or
+    /// [`TaskSystem::mark_produced`]), and marks every key in `produces`
+    /// produced when it completes. Keys are produce-once; they share the
+    /// dataobject frontend's `u64` id space so a pipeline stage can be
+    /// gated on the object it consumes.
+    pub fn spawn_dataflow(
+        &self,
+        label: impl Into<String>,
+        consumes: &[u64],
+        produces: &[u64],
+        body: impl FnOnce(&TaskCtx) + Send + 'static,
+    ) -> TaskHandle {
+        self.spawn_gated(&[], consumes, produces, label.into(), Box::new(body))
+    }
+
+    /// Common gated-spawn path for handle and data-key edges.
+    fn spawn_gated(
+        &self,
+        deps: &[TaskHandle],
+        consumes: &[u64],
+        produces: &[u64],
+        label: String,
+        body: TaskBody,
+    ) -> TaskHandle {
+        let node = create_node(
             self.inner,
-            label.into(),
-            Box::new(body),
+            label,
             Some(Arc::clone(self.node)),
+            produces.to_vec(),
         );
+        let handle = TaskHandle {
+            node: Arc::clone(&node),
+        };
+        let pending = Arc::new(Pending {
+            // The +1 sentinel is released after registration, so deps
+            // finishing concurrently cannot double-enqueue.
+            remaining: AtomicUsize::new(1),
+            slot: Mutex::new(Some((body, node))),
+        });
+        for dep in deps {
+            let mut d = dep.node.dep.lock().unwrap();
+            if !d.finished {
+                pending.remaining.fetch_add(1, Ordering::AcqRel);
+                d.waiters.push(Arc::clone(&pending));
+            }
+        }
+        if !consumes.is_empty() {
+            let mut keys = self.inner.keys.lock().unwrap();
+            for &key in consumes {
+                match keys.entry(key).or_insert_with(|| KeyState::Waiting(Vec::new())) {
+                    KeyState::Produced => {}
+                    KeyState::Waiting(v) => {
+                        pending.remaining.fetch_add(1, Ordering::AcqRel);
+                        v.push(Arc::clone(&pending));
+                    }
+                }
+            }
+        }
+        release_pending(self.inner, &pending, self.home());
+        handle
     }
 
     /// Wait until every child spawned by this task has finished.
@@ -186,56 +489,77 @@ impl<'a> TaskCtx<'a> {
                 }
             }
             EngineKind::Blocking => {
-                // Release our concurrency slot and block the kernel
-                // thread.
-                let engine = self.inner.blocking.as_ref().expect("blocking engine");
-                let slot = current_task_slot();
-                if let Some(s) = slot {
-                    engine.slots.release(s);
-                }
                 {
-                    let mut sync = self.node.sync.lock().unwrap();
-                    while sync.pending_children > 0 {
-                        sync = self.node.cv.wait(sync).unwrap();
+                    let sync = self.node.sync.lock().unwrap();
+                    if sync.pending_children == 0 {
+                        return;
                     }
                 }
-                if slot.is_some() {
-                    let s = engine.slots.acquire();
-                    set_task_slot(Some(s));
+                // Release our worker (one-shot) so it schedules other
+                // tasks — including our children — then block this
+                // kernel thread until they finish.
+                if !self.node.worker_released.swap(true, Ordering::AcqRel) {
+                    if let Some(gate) = self.gate {
+                        gate.fire(GateEvent::Blocked);
+                    }
+                }
+                let mut sync = self.node.sync.lock().unwrap();
+                while sync.pending_children > 0 {
+                    sync = self.node.cv.wait(sync).unwrap();
                 }
             }
         }
     }
-}
 
-thread_local! {
-    /// The blocking-engine concurrency slot the current task thread holds.
-    static TASK_SLOT: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
-}
-
-fn current_task_slot() -> Option<usize> {
-    TASK_SLOT.with(|s| s.get())
-}
-
-fn set_task_slot(v: Option<usize>) {
-    TASK_SLOT.with(|s| s.set(v));
+    /// The worker this task last executed on (its spawn push target).
+    fn home(&self) -> Option<usize> {
+        let h = self.node.home.load(Ordering::Relaxed);
+        (h != usize::MAX).then_some(h)
+    }
 }
 
 /// The task system facade.
+///
+/// ```
+/// use std::sync::Arc;
+/// use hicr::backends::threads::ThreadsComputeManager;
+/// use hicr::frontends::tasking::TaskSystem;
+///
+/// // Any compute manager works; the engine is negotiated from its
+/// // suspension capability (threads → blocking engine).
+/// let sys = TaskSystem::new(Arc::new(ThreadsComputeManager::new()), 2, false);
+/// assert_eq!(sys.n_workers(), 2);
+/// sys.run("hello", |_ctx| {}).unwrap();
+/// sys.shutdown().unwrap();
+/// ```
 pub struct TaskSystem {
     inner: Arc<Inner>,
     n_workers: usize,
 }
 
 impl TaskSystem {
-    /// Create a system with `n_workers` workers/slots executing through
-    /// `cm`. Any compute manager whose execution units are host closures
-    /// works; the scheduling engine is negotiated from the manager's
-    /// suspension capability.
+    /// Create a system with `n_workers` work-stealing workers executing
+    /// through `cm`. Any compute manager whose execution units are host
+    /// closures works; the scheduling engine is negotiated from the
+    /// manager's suspension capability. Equivalent to
+    /// [`TaskSystem::with_config`] with the default [`SchedConfig`].
     pub fn new(
         cm: Arc<dyn ComputeManager>,
         n_workers: usize,
         trace_enabled: bool,
+    ) -> Arc<TaskSystem> {
+        Self::with_config(cm, n_workers, trace_enabled, SchedConfig::default())
+    }
+
+    /// Create a system with explicit scheduler options: the distribution
+    /// policy (work-stealing vs the global-queue ablation baseline) and
+    /// an optional hardware topology assigning workers to compute
+    /// resources (NUMA-aware steal order + pinning).
+    pub fn with_config(
+        cm: Arc<dyn ComputeManager>,
+        n_workers: usize,
+        trace_enabled: bool,
+        config: SchedConfig,
     ) -> Arc<TaskSystem> {
         assert!(n_workers > 0, "need at least one worker");
         let engine = if cm.supports_suspension() {
@@ -244,6 +568,37 @@ impl TaskSystem {
             EngineKind::Blocking
         };
         let trace = Arc::new(Trace::new(trace_enabled));
+        // Assign one compute resource per worker: round-robin over the
+        // topology's CPU resources, synthesized when none are available.
+        let cpu: Vec<ComputeResource> = config
+            .topology
+            .as_ref()
+            .map(|t| t.cpu_resources().cloned().collect())
+            .unwrap_or_default();
+        let resources: Vec<ComputeResource> = (0..n_workers)
+            .map(|w| {
+                cpu.get(w % cpu.len().max(1)).cloned().unwrap_or_else(|| {
+                    ComputeResource {
+                        id: ComputeResourceId(w as u64),
+                        kind: "cpu-core".into(),
+                        os_index: w as u32,
+                        locality: 0,
+                    }
+                })
+            })
+            .collect();
+        let localities: Vec<u32> = resources.iter().map(|r| r.locality).collect();
+        let workers: Vec<Worker> = resources
+            .into_iter()
+            .enumerate()
+            .map(|(w, resource)| Worker {
+                deque: WorkDeque::new(),
+                parker: Parker::new(),
+                parked: AtomicBool::new(false),
+                steal_order: steal_order(&localities, w),
+                resource,
+            })
+            .collect();
         let inner = Arc::new(Inner {
             cm,
             engine,
@@ -254,48 +609,29 @@ impl TaskSystem {
             done_cv: Condvar::new(),
             tasks_executed: AtomicU64::new(0),
             first_error: Mutex::new(None),
-            suspending: match engine {
-                EngineKind::Suspending => Some(SuspendingEngine {
-                    ready: Mutex::new(VecDeque::new()),
-                    ready_cv: Condvar::new(),
-                    shutdown: AtomicBool::new(false),
-                    workers: Mutex::new(Vec::new()),
-                }),
-                EngineKind::Blocking => None,
+            sched: Sched {
+                workers,
+                injector: Injector::new(),
+                idle: AtomicUsize::new(0),
+                shutdown: AtomicBool::new(false),
+                policy: config.policy,
+                counters: SchedCounters::default(),
+                pin_workers: config.pin_workers,
+                handles: Mutex::new(Vec::new()),
             },
-            blocking: match engine {
-                EngineKind::Blocking => Some(BlockingEngine {
-                    slots: IdSemaphore::new(n_workers),
-                    queue: Mutex::new(VecDeque::new()),
-                    queue_cv: Condvar::new(),
-                    shutdown: AtomicBool::new(false),
-                    dispatcher: Mutex::new(None),
-                    live: Mutex::new(Vec::new()),
-                }),
-                EngineKind::Suspending => None,
-            },
+            keys: Mutex::new(HashMap::new()),
         });
-        if engine == EngineKind::Blocking {
-            // The system-wide scheduler pump: admits queued tasks onto
-            // processing units as slots free up.
-            let inner2 = Arc::clone(&inner);
-            let handle = std::thread::Builder::new()
-                .name("hicr-task-sched".into())
-                .spawn(move || blocking_dispatcher_loop(inner2))
-                .expect("spawn task dispatcher");
-            *inner.blocking.as_ref().unwrap().dispatcher.lock().unwrap() = Some(handle);
-        }
-        if engine == EngineKind::Suspending {
-            // Start the pull-loop workers (paper: "a simple loop that
-            // calls a pull function").
-            let eng = inner.suspending.as_ref().unwrap();
-            let mut workers = eng.workers.lock().unwrap();
+        {
+            let mut handles = inner.sched.handles.lock().unwrap();
             for w in 0..n_workers {
                 let inner2 = Arc::clone(&inner);
-                workers.push(
+                handles.push(
                     std::thread::Builder::new()
                         .name(format!("hicr-task-worker-{w}"))
-                        .spawn(move || suspending_worker_loop(inner2, w))
+                        .spawn(move || match inner2.engine {
+                            EngineKind::Suspending => suspending_worker_loop(inner2, w),
+                            EngineKind::Blocking => blocking_worker_loop(inner2, w),
+                        })
                         .expect("spawn task worker"),
                 );
             }
@@ -308,15 +644,18 @@ impl TaskSystem {
         self.inner.cm.backend_name()
     }
 
-    /// True when the parking (user-level suspension) scheduler is active.
+    /// True when the parking (user-level suspension) engine is active.
     pub fn suspending(&self) -> bool {
         self.inner.engine == EngineKind::Suspending
     }
 
+    /// The execution tracer (records per-worker run intervals when the
+    /// system was built with tracing enabled).
     pub fn trace(&self) -> Arc<Trace> {
         Arc::clone(&self.inner.trace)
     }
 
+    /// Number of scheduler workers.
     pub fn n_workers(&self) -> usize {
         self.n_workers
     }
@@ -326,11 +665,53 @@ impl TaskSystem {
         self.inner.tasks_executed.load(Ordering::Relaxed)
     }
 
-    /// Spawn a root task and block until the whole task graph quiesces.
-    /// Fails if the backend rejected any task (e.g. a compute plugin
-    /// that does not prescribe host-closure execution units).
-    pub fn run(&self, label: impl Into<String>, body: impl FnOnce(&TaskCtx) + Send + 'static) -> Result<()> {
-        spawn_task(&self.inner, label.into(), Box::new(body), None);
+    /// Snapshot of the scheduler counters (the lock-count instrument).
+    pub fn sched_stats(&self) -> SchedStats {
+        let c = &self.inner.sched.counters;
+        SchedStats {
+            local_pushes: c.local_pushes.load(Ordering::Relaxed),
+            injection_pushes: c.injection_pushes.load(Ordering::Relaxed),
+            injection_locks: self.inner.sched.injector.lock_count(),
+            steals: c.steals.load(Ordering::Relaxed),
+            steal_failures: c.steal_failures.load(Ordering::Relaxed),
+            parks: c.parks.load(Ordering::Relaxed),
+            wakes: c.wakes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Ready tasks currently queued (injection lane + every worker
+    /// deque). The saturation signal the taskfarm app's distributed
+    /// spill path keys on.
+    pub fn ready_backlog(&self) -> usize {
+        let s = &self.inner.sched;
+        s.injector.len() + s.workers.iter().map(|w| w.deque.len()).sum::<usize>()
+    }
+
+    /// Submit a root task through the injection lane without waiting.
+    /// Use [`TaskSystem::wait_idle`] to block until the graph quiesces.
+    pub fn submit(
+        &self,
+        label: impl Into<String>,
+        body: impl FnOnce(&TaskCtx) + Send + 'static,
+    ) -> TaskHandle {
+        let node = create_node(&self.inner, label.into(), None, Vec::new());
+        let handle = TaskHandle {
+            node: Arc::clone(&node),
+        };
+        schedule(&self.inner, None, Runnable::Fresh(Box::new(body), node));
+        handle
+    }
+
+    /// Mark a data key produced from outside the task graph (e.g. when a
+    /// dataobject arrives over a channel), releasing every
+    /// [`TaskCtx::spawn_dataflow`] consumer gated on it.
+    pub fn mark_produced(&self, key: u64) {
+        produce_key(&self.inner, key, None);
+    }
+
+    /// Block until every outstanding task (including dep-gated ones) has
+    /// completed; surfaces the first backend rejection or task panic.
+    pub fn wait_idle(&self) -> Result<()> {
         let mut guard = self.inner.done_mx.lock().unwrap();
         while self.inner.outstanding.load(Ordering::Acquire) != 0 {
             guard = self.inner.done_cv.wait(guard).unwrap();
@@ -342,27 +723,153 @@ impl TaskSystem {
         Ok(())
     }
 
-    /// Stop workers (suspending) / the scheduler pump (blocking). Call
-    /// after the last `run`.
+    /// Spawn a root task and block until the whole task graph quiesces.
+    /// Fails if the backend rejected any task (e.g. a compute plugin
+    /// that does not prescribe host-closure execution units) or any task
+    /// panicked.
+    pub fn run(
+        &self,
+        label: impl Into<String>,
+        body: impl FnOnce(&TaskCtx) + Send + 'static,
+    ) -> Result<()> {
+        self.submit(label, body);
+        self.wait_idle()
+    }
+
+    /// Stop and join the workers. Call after the last `run`; idempotent,
+    /// and also invoked by `Drop`. Parked workers are woken (even when a
+    /// task error was recorded) so shutdown can never strand a worker on
+    /// an empty deque.
     pub fn shutdown(&self) -> Result<()> {
-        if let Some(engine) = &self.inner.suspending {
-            engine.shutdown.store(true, Ordering::SeqCst);
-            engine.ready_cv.notify_all();
-            let mut workers = engine.workers.lock().unwrap();
-            for w in workers.drain(..) {
-                w.join()
-                    .map_err(|_| HicrError::InvalidState("task worker panicked".into()))?;
-            }
+        let sched = &self.inner.sched;
+        sched.shutdown.store(true, Ordering::SeqCst);
+        for w in &sched.workers {
+            w.parker.unpark();
         }
-        if let Some(engine) = &self.inner.blocking {
-            engine.shutdown.store(true, Ordering::SeqCst);
-            engine.queue_cv.notify_all();
-            if let Some(d) = engine.dispatcher.lock().unwrap().take() {
-                d.join()
-                    .map_err(|_| HicrError::InvalidState("task dispatcher panicked".into()))?;
-            }
+        let mut handles = sched.handles.lock().unwrap();
+        for h in handles.drain(..) {
+            h.join()
+                .map_err(|_| HicrError::InvalidState("task worker panicked".into()))?;
         }
         Ok(())
+    }
+}
+
+impl Drop for TaskSystem {
+    fn drop(&mut self) {
+        // Last-resort cleanup: joins workers even when the caller forgot
+        // (or an error path skipped) `shutdown()`.
+        let _ = self.shutdown();
+    }
+}
+
+/// Victim scan order for worker `w`: same-locality workers first, each
+/// group in ring order starting after `w` (so thieves spread instead of
+/// converging on worker 0).
+fn steal_order(localities: &[u32], w: usize) -> Vec<usize> {
+    let n = localities.len();
+    let mut order: Vec<usize> = (0..n).filter(|&v| v != w).collect();
+    order.sort_by_key(|&v| (localities[v] != localities[w], (v + n - w) % n));
+    order
+}
+
+/// Allocate a task node and account it as outstanding (dep-gated tasks
+/// count from creation so `run`/`wait_idle` cannot quiesce early).
+fn create_node(
+    inner: &Arc<Inner>,
+    label: String,
+    parent: Option<Arc<TaskNode>>,
+    produces: Vec<u64>,
+) -> Arc<TaskNode> {
+    if let Some(p) = &parent {
+        p.sync.lock().unwrap().pending_children += 1;
+    }
+    inner.outstanding.fetch_add(1, Ordering::AcqRel);
+    Arc::new(TaskNode {
+        id: inner.next_task_id.fetch_add(1, Ordering::Relaxed),
+        label,
+        parent,
+        sync: Mutex::new(TaskSync {
+            pending_children: 0,
+            waiting: false,
+            ready_now: false,
+            parked: None,
+        }),
+        cv: Condvar::new(),
+        dep: Mutex::new(DepState {
+            finished: false,
+            waiters: Vec::new(),
+        }),
+        home: AtomicUsize::new(usize::MAX),
+        produces,
+        worker_released: AtomicBool::new(false),
+    })
+}
+
+/// Push a ready runnable: onto `worker`'s deque under work-stealing (the
+/// steady-state, global-lock-free path), or the injection lane otherwise;
+/// then wake one parked worker if any.
+fn schedule(inner: &Arc<Inner>, worker: Option<usize>, runnable: Runnable) {
+    let sched = &inner.sched;
+    match (sched.policy, worker) {
+        (SchedPolicy::WorkStealing, Some(w)) => {
+            sched.workers[w].deque.push_bottom(runnable);
+            sched.counters.local_pushes.fetch_add(1, Ordering::Relaxed);
+        }
+        _ => {
+            sched.injector.push(runnable);
+            sched
+                .counters
+                .injection_pushes
+                .fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    wake_one(sched);
+}
+
+/// Wake one parked worker; costs a single atomic load when nobody is
+/// parked (the steady-state case). The waker *claims* the target's
+/// `parked` flag (CAS true→false) so a burst of pushes fans out across
+/// distinct parked workers instead of repeatedly waking the first one
+/// before it has been scheduled to clear its own flag.
+fn wake_one(sched: &Sched) {
+    if sched.idle.load(Ordering::SeqCst) == 0 {
+        return;
+    }
+    for w in &sched.workers {
+        if w.parked
+            .compare_exchange(true, false, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            sched.counters.wakes.fetch_add(1, Ordering::Relaxed);
+            w.parker.unpark();
+            return;
+        }
+    }
+}
+
+/// Release one edge of a dep-gated task; the release dropping `remaining`
+/// to zero schedules it (near the releasing worker when known).
+fn release_pending(inner: &Arc<Inner>, pending: &Arc<Pending>, worker: Option<usize>) {
+    if pending.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        if let Some((body, node)) = pending.slot.lock().unwrap().take() {
+            schedule(inner, worker, Runnable::Fresh(body, node));
+        }
+    }
+}
+
+/// Mark `key` produced, releasing gated consumers. Produce-once: a second
+/// production is a no-op.
+fn produce_key(inner: &Arc<Inner>, key: u64, worker: Option<usize>) {
+    let waiters = {
+        let mut keys = inner.keys.lock().unwrap();
+        match keys.insert(key, KeyState::Produced) {
+            Some(KeyState::Waiting(v)) => v,
+            _ => Vec::new(),
+        }
+    };
+    for p in &waiters {
+        release_pending(inner, p, worker);
     }
 }
 
@@ -375,189 +882,21 @@ fn record_first_error(inner: &Arc<Inner>, e: HicrError) {
     }
 }
 
-/// Engine-independent task spawn.
-fn spawn_task(inner: &Arc<Inner>, label: String, body: TaskBody, parent: Option<Arc<TaskNode>>) {
-    inner.outstanding.fetch_add(1, Ordering::AcqRel);
-    let node = Arc::new(TaskNode {
-        id: inner.next_task_id.fetch_add(1, Ordering::Relaxed),
-        label,
-        parent,
-        sync: Mutex::new(TaskSync {
-            pending_children: 0,
-            waiting: false,
-            ready_now: false,
-            parked: None,
-        }),
-        cv: Condvar::new(),
-    });
-    match inner.engine {
-        EngineKind::Suspending => {
-            let engine = inner.suspending.as_ref().expect("suspending engine");
-            let inner2 = Arc::clone(inner);
-            let node2 = Arc::clone(&node);
-            let body_cell = Mutex::new(Some(body));
-            let unit = FnExecutionUnit::new(node.label.clone(), move |ctx| {
-                let body = body_cell.lock().unwrap().take().expect("body runs once");
-                let tctx = TaskCtx {
-                    inner: &inner2,
-                    node: &node2,
-                    exec: Some(ctx),
-                };
-                body(&tctx);
-            });
-            match inner.cm.create_execution_state(unit as Arc<dyn ExecutionUnit>) {
-                Ok(state) => {
-                    debug_assert!(state.supports_suspension());
-                    enqueue(engine, SuspendableTask { node, state });
-                }
-                Err(e) => {
-                    // Keep bookkeeping sound and surface the rejection
-                    // through run() — a panic here would kill a worker
-                    // thread mid-task and hang the system.
-                    record_first_error(
-                        inner,
-                        HicrError::InvalidState(format!(
-                            "backend '{}' rejected task '{}': {e}",
-                            inner.cm.backend_name(),
-                            node.label
-                        )),
-                    );
-                    finish_task(inner, &node);
-                }
-            }
-        }
-        EngineKind::Blocking => {
-            // Submit to the system-wide scheduler; the dispatcher
-            // materializes a processing unit when a slot frees up.
-            let engine = inner.blocking.as_ref().expect("blocking engine");
-            engine.queue.lock().unwrap().push_back((body, node));
-            engine.queue_cv.notify_one();
-        }
-    }
+fn record_rejection(inner: &Arc<Inner>, node: &TaskNode, e: &HicrError) {
+    record_first_error(
+        inner,
+        HicrError::InvalidState(format!(
+            "backend '{}' rejected task '{}': {e}",
+            inner.cm.backend_name(),
+            node.label
+        )),
+    );
 }
 
-/// The blocking-engine scheduler pump: pop a submitted task, acquire a
-/// slot, and run it on a dedicated processing unit of the injected
-/// compute manager (thread-per-task at *schedule* time for backends like
-/// nosv; a fresh queue-worker thread for the threads backend).
-fn blocking_dispatcher_loop(inner: Arc<Inner>) {
-    let engine = inner.blocking.as_ref().expect("blocking engine");
-    loop {
-        let next = {
-            let mut queue = engine.queue.lock().unwrap();
-            loop {
-                if let Some(t) = queue.pop_back() {
-                    break Some(t);
-                }
-                if engine.shutdown.load(Ordering::SeqCst) {
-                    break None;
-                }
-                queue = engine.queue_cv.wait(queue).unwrap();
-            }
-        };
-        let Some((body, node)) = next else {
-            // Shutdown: join the executors of every finished task.
-            let mut live = engine.live.lock().unwrap();
-            for (pu, _state) in live.drain(..) {
-                let _ = pu.terminate();
-            }
-            return;
-        };
-        let slot = engine.slots.acquire();
-        // Garbage-collect processing units whose states finished.
-        {
-            let mut live = engine.live.lock().unwrap();
-            live.retain(|(pu, state)| {
-                if state.is_finished() {
-                    let _ = pu.terminate();
-                    false
-                } else {
-                    true
-                }
-            });
-        }
-        let inner2 = Arc::clone(&inner);
-        let node2 = Arc::clone(&node);
-        let body_cell = Mutex::new(Some(body));
-        let unit = FnExecutionUnit::new(node.label.clone(), move |ctx| {
-            let body = body_cell.lock().unwrap().take().expect("body runs once");
-            let engine = inner2.blocking.as_ref().expect("blocking engine");
-            set_task_slot(Some(slot));
-            let t0 = inner2.trace.now_ns();
-            let tctx = TaskCtx {
-                inner: &inner2,
-                node: &node2,
-                exec: Some(ctx),
-            };
-            // Catch panics so bookkeeping always runs: a lost
-            // finish_task would hang the whole system. The panic is not
-            // swallowed — it surfaces as the run()'s error.
-            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                body(&tctx)
-            }));
-            if outcome.is_err() {
-                record_first_error(
-                    &inner2,
-                    HicrError::InvalidState(format!("task '{}' panicked", node2.label)),
-                );
-            }
-            inner2.trace.record(
-                current_task_slot().unwrap_or(slot),
-                EventKind::Run,
-                &node2.label,
-                t0,
-            );
-            if let Some(s) = current_task_slot() {
-                engine.slots.release(s);
-                set_task_slot(None);
-            }
-            finish_task(&inner2, &node2);
-        });
-        // Route through the abstract manager: state + processing unit.
-        let started = inner
-            .cm
-            .create_execution_state(unit as Arc<dyn ExecutionUnit>)
-            .and_then(|state| {
-                let resource = ComputeResource {
-                    id: ComputeResourceId(slot as u64),
-                    kind: "cpu-core".into(),
-                    os_index: slot as u32,
-                    locality: 0,
-                };
-                let pu = inner.cm.create_processing_unit(&resource)?;
-                pu.start(Arc::clone(&state))?;
-                Ok((pu, state))
-            });
-        match started {
-            Ok(pair) => engine.live.lock().unwrap().push(pair),
-            Err(e) => {
-                // The manager rejected the task (wrong unit format /
-                // terminated unit). Record the first rejection so the
-                // enclosing `run()` fails loudly — silently dropping work
-                // would report wrong results with a clean exit — while
-                // keeping the graph bookkeeping sound so `run()` returns.
-                record_first_error(
-                    &inner,
-                    HicrError::InvalidState(format!(
-                        "backend '{}' rejected task '{}': {e}",
-                        inner.cm.backend_name(),
-                        node.label
-                    )),
-                );
-                engine.slots.release(slot);
-                finish_task(&inner, &node);
-            }
-        }
-    }
-}
-
-fn enqueue(engine: &SuspendingEngine, task: SuspendableTask) {
-    engine.ready.lock().unwrap().push_back(task);
-    engine.ready_cv.notify_one();
-}
-
-/// Common completion path: notify the parent and the system.
-fn finish_task(inner: &Arc<Inner>, node: &Arc<TaskNode>) {
+/// Common completion path: notify the parent, release dependents and
+/// produced keys, and signal quiescence. `worker` is the completing
+/// worker — released work is scheduled near it.
+fn finish_task(inner: &Arc<Inner>, node: &Arc<TaskNode>, worker: Option<usize>) {
     inner.tasks_executed.fetch_add(1, Ordering::Relaxed);
     if let Some(parent) = &node.parent {
         let to_enqueue = {
@@ -580,9 +919,19 @@ fn finish_task(inner: &Arc<Inner>, node: &Arc<TaskNode>) {
         };
         parent.cv.notify_all();
         if let Some(task) = to_enqueue {
-            let engine = inner.suspending.as_ref().expect("parked implies suspending");
-            enqueue(engine, task);
+            schedule(inner, worker, Runnable::Resume(task));
         }
+    }
+    let waiters = {
+        let mut dep = node.dep.lock().unwrap();
+        dep.finished = true;
+        std::mem::take(&mut dep.waiters)
+    };
+    for p in &waiters {
+        release_pending(inner, p, worker);
+    }
+    for &key in &node.produces {
+        produce_key(inner, key, worker);
     }
     if inner.outstanding.fetch_sub(1, Ordering::AcqRel) == 1 {
         let _g = inner.done_mx.lock().unwrap();
@@ -590,25 +939,268 @@ fn finish_task(inner: &Arc<Inner>, node: &Arc<TaskNode>) {
     }
 }
 
-/// The suspending-engine worker pull loop (paper §4.3 Tasking: worker
-/// objects), driving opaque `dyn ExecutionState`s via `resume()`.
-fn suspending_worker_loop(inner: Arc<Inner>, worker_id: usize) {
-    let engine = inner.suspending.as_ref().expect("suspending engine");
+/// Pull the next runnable for worker `w`: own deque (LIFO) → injection
+/// lane → steal round (topology order) → backoff, then park. Returns
+/// `None` on shutdown with all visible work drained. `on_idle` runs once
+/// per park cycle, before parking (the blocking engine reaps its retired
+/// processing units there, so an idle system does not hold finished
+/// executors until the next task arrives).
+fn next_runnable(
+    inner: &Arc<Inner>,
+    w: usize,
+    mut on_idle: impl FnMut(),
+) -> Option<Runnable> {
+    let sched = &inner.sched;
+    let me = &sched.workers[w];
+    let mut backoff = Backoff::new();
     loop {
-        // Pull the next ready task.
-        let task = {
-            let mut ready = engine.ready.lock().unwrap();
-            loop {
-                if let Some(t) = ready.pop_back() {
-                    break Some(t);
+        if let Some(r) = me.deque.pop_bottom() {
+            return Some(r);
+        }
+        if let Some(r) = sched.injector.pop() {
+            return Some(r);
+        }
+        if sched.policy == SchedPolicy::WorkStealing {
+            let mut stolen = None;
+            for &v in &me.steal_order {
+                if let Some(r) = sched.workers[v].deque.steal_top() {
+                    stolen = Some(r);
+                    break;
                 }
-                if engine.shutdown.load(Ordering::SeqCst) {
-                    break None;
+            }
+            match stolen {
+                Some(r) => {
+                    sched.counters.steals.fetch_add(1, Ordering::Relaxed);
+                    return Some(r);
                 }
-                ready = engine.ready_cv.wait(ready).unwrap();
+                None => {
+                    sched
+                        .counters
+                        .steal_failures
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        if sched.shutdown.load(Ordering::SeqCst) {
+            return None;
+        }
+        if backoff.is_sleeping() {
+            // Park until a producer wakes us. The pre-park re-check (with
+            // `parked` already published) closes the lost-wakeup window:
+            // either the producer sees us parked, or we see its push.
+            // The backoff is deliberately NOT reset afterwards: a
+            // timeout wake re-scans the queues once and parks again
+            // immediately, so a long-idle worker costs one scan per park
+            // interval instead of re-running the whole spin/yield
+            // escalation
+            on_idle();
+            sched.counters.parks.fetch_add(1, Ordering::Relaxed);
+            me.parked.store(true, Ordering::SeqCst);
+            sched.idle.fetch_add(1, Ordering::SeqCst);
+            // The worker scan covers our own deque too.
+            let work_visible = sched.injector.len() > 0
+                || sched.workers.iter().any(|wk| wk.deque.len() > 0)
+                || sched.shutdown.load(Ordering::SeqCst);
+            if !work_visible {
+                me.parker.park();
+            }
+            me.parked.store(false, Ordering::SeqCst);
+            sched.idle.fetch_sub(1, Ordering::SeqCst);
+        } else {
+            backoff.wait();
+        }
+    }
+}
+
+/// Terminate and drop retired processing units whose (previously
+/// blocked) tasks have since finished.
+fn reap_zombies(zombies: &mut Vec<(Arc<dyn ProcessingUnit>, Arc<dyn ExecutionState>)>) {
+    zombies.retain(|(pu, state)| {
+        if state.is_finished() {
+            let _ = pu.terminate();
+            false
+        } else {
+            true
+        }
+    });
+}
+
+/// The blocking-engine worker: executes each popped task on a processing
+/// unit of the injected compute manager. The unit is reused across tasks
+/// that run to completion; a task that blocks keeps its unit's kernel
+/// thread, so the unit is retired to the zombie list and reclaimed
+/// (terminated and joined) once its task finishes.
+fn blocking_worker_loop(inner: Arc<Inner>, w: usize) {
+    if inner.sched.pin_workers {
+        crate::util::affinity::pin_to_core(inner.sched.workers[w].resource.os_index);
+    }
+    let mut current_pu: Option<Arc<dyn ProcessingUnit>> = None;
+    let mut zombies: Vec<(Arc<dyn ProcessingUnit>, Arc<dyn ExecutionState>)> = Vec::new();
+    loop {
+        let next = next_runnable(&inner, w, || reap_zombies(&mut zombies));
+        let Some(runnable) = next else {
+            break;
+        };
+        let (body, node) = match runnable {
+            Runnable::Fresh(body, node) => (body, node),
+            Runnable::Resume(task) => {
+                // Run-to-completion states never park; a Resume here is a
+                // scheduler bug — fail the run loudly instead of hanging.
+                debug_assert!(false, "blocking engine received a parked task");
+                record_first_error(
+                    &inner,
+                    HicrError::InvalidState(
+                        "blocking engine cannot resume a parked task".into(),
+                    ),
+                );
+                finish_task(&inner, &task.node, Some(w));
+                continue;
             }
         };
-        let Some(task) = task else { return };
+        node.home.store(w, Ordering::Relaxed);
+        // Reap retired units whose (previously blocked) tasks finished
+        // (also done in the idle path, so a quiesced system does not
+        // hold finished executors until the next task arrives).
+        reap_zombies(&mut zombies);
+        if current_pu.is_none() {
+            match inner
+                .cm
+                .create_processing_unit(&inner.sched.workers[w].resource)
+            {
+                Ok(pu) => current_pu = Some(pu),
+                Err(e) => {
+                    record_rejection(&inner, &node, &e);
+                    finish_task(&inner, &node, Some(w));
+                    continue;
+                }
+            }
+        }
+        let gate = Arc::new(StartGate::new());
+        let inner2 = Arc::clone(&inner);
+        let node2 = Arc::clone(&node);
+        let gate2 = Arc::clone(&gate);
+        let body_cell = Mutex::new(Some(body));
+        let unit = FnExecutionUnit::new(node.label.clone(), move |ctx| {
+            let body = body_cell.lock().unwrap().take().expect("body runs once");
+            let t0 = inner2.trace.now_ns();
+            let tctx = TaskCtx {
+                inner: &inner2,
+                node: &node2,
+                exec: Some(ctx),
+                gate: Some(&gate2),
+            };
+            // Catch panics so bookkeeping always runs: a lost finish_task
+            // (or an unfired gate) would hang the whole system. The panic
+            // is not swallowed — it surfaces as the run()'s error.
+            let outcome =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&tctx)));
+            if outcome.is_err() {
+                record_first_error(
+                    &inner2,
+                    HicrError::InvalidState(format!("task '{}' panicked", node2.label)),
+                );
+            }
+            inner2.trace.record(
+                node2.home.load(Ordering::Relaxed),
+                EventKind::Run,
+                &node2.label,
+                t0,
+            );
+            finish_task(&inner2, &node2, Some(node2.home.load(Ordering::Relaxed)));
+            gate2.fire(GateEvent::Done);
+        });
+        let started = inner
+            .cm
+            .create_execution_state(unit as Arc<dyn ExecutionUnit>)
+            .and_then(|state| {
+                current_pu
+                    .as_ref()
+                    .expect("unit ensured above")
+                    .start(Arc::clone(&state))?;
+                Ok(state)
+            });
+        match started {
+            Ok(state) => match gate.wait() {
+                GateEvent::Done => {
+                    // Unit idle again: reuse it for the next task (the
+                    // steady-state leaf path spawns no kernel thread on
+                    // thread-pool backends).
+                }
+                GateEvent::Blocked => {
+                    // The blocked task occupies the unit's executor;
+                    // retire it and take a fresh unit next time.
+                    zombies.push((
+                        current_pu.take().expect("unit ensured above"),
+                        state,
+                    ));
+                }
+            },
+            Err(e) => {
+                // The manager rejected the task (wrong unit format /
+                // terminated unit). Record the first rejection so the
+                // enclosing `run()` fails loudly — silently dropping work
+                // would report wrong results with a clean exit — while
+                // keeping the graph bookkeeping sound so `run()` returns.
+                record_rejection(&inner, &node, &e);
+                finish_task(&inner, &node, Some(w));
+            }
+        }
+    }
+    // Shutdown (all runs quiesced): tear down the executors.
+    if let Some(pu) = current_pu.take() {
+        let _ = pu.terminate();
+    }
+    for (pu, _state) in zombies.drain(..) {
+        let _ = pu.terminate();
+    }
+}
+
+/// The suspending-engine worker: drives opaque suspendable
+/// `dyn ExecutionState`s via `resume()` (paper §4.3 Tasking: worker
+/// objects). Fresh tasks get their state created at pop time; a stolen
+/// or re-enqueued task may be resumed by any worker (cross-thread resume
+/// is part of the fiber substrate's contract).
+fn suspending_worker_loop(inner: Arc<Inner>, w: usize) {
+    if inner.sched.pin_workers {
+        crate::util::affinity::pin_to_core(inner.sched.workers[w].resource.os_index);
+    }
+    loop {
+        let Some(runnable) = next_runnable(&inner, w, || {}) else {
+            return;
+        };
+        let task = match runnable {
+            Runnable::Resume(task) => task,
+            Runnable::Fresh(body, node) => {
+                let inner2 = Arc::clone(&inner);
+                let node2 = Arc::clone(&node);
+                let body_cell = Mutex::new(Some(body));
+                let unit = FnExecutionUnit::new(node.label.clone(), move |ctx| {
+                    let body =
+                        body_cell.lock().unwrap().take().expect("body runs once");
+                    let tctx = TaskCtx {
+                        inner: &inner2,
+                        node: &node2,
+                        exec: Some(ctx),
+                        gate: None,
+                    };
+                    body(&tctx);
+                });
+                match inner.cm.create_execution_state(unit as Arc<dyn ExecutionUnit>) {
+                    Ok(state) => {
+                        debug_assert!(state.supports_suspension());
+                        SuspendableTask { node, state }
+                    }
+                    Err(e) => {
+                        // Keep bookkeeping sound and surface the
+                        // rejection through run().
+                        record_rejection(&inner, &node, &e);
+                        finish_task(&inner, &node, Some(w));
+                        continue;
+                    }
+                }
+            }
+        };
+        task.node.home.store(w, Ordering::Relaxed);
         let t0 = inner.trace.now_ns();
         let status = match task.state.resume() {
             Ok(s) => s,
@@ -625,10 +1217,10 @@ fn suspending_worker_loop(inner: Arc<Inner>, worker_id: usize) {
         };
         inner
             .trace
-            .record(worker_id, EventKind::Run, &task.node.label, t0);
+            .record(w, EventKind::Run, &task.node.label, t0);
         match status {
             ExecStatus::Finished => {
-                finish_task(&inner, &task.node);
+                finish_task(&inner, &task.node, Some(w));
             }
             ExecStatus::Failed => {
                 // A failed state means the task body panicked (or the
@@ -641,7 +1233,7 @@ fn suspending_worker_loop(inner: Arc<Inner>, worker_id: usize) {
                         task.node.label
                     )),
                 );
-                finish_task(&inner, &task.node);
+                finish_task(&inner, &task.node, Some(w));
             }
             ExecStatus::Suspended => {
                 let mut sync = task.node.sync.lock().unwrap();
@@ -649,19 +1241,19 @@ fn suspending_worker_loop(inner: Arc<Inner>, worker_id: usize) {
                     // Children finished before we could park.
                     sync.ready_now = false;
                     drop(sync);
-                    enqueue(engine, task);
+                    schedule(&inner, Some(w), Runnable::Resume(task));
                 } else if sync.waiting && sync.pending_children > 0 {
                     // Park; child completion re-enqueues.
                     sync.parked = Some(task.clone());
                 } else {
                     // Voluntary yield.
                     drop(sync);
-                    enqueue(engine, task);
+                    schedule(&inner, Some(w), Runnable::Resume(task));
                 }
             }
             other => {
                 debug_assert!(false, "unexpected resume status {other:?}");
-                finish_task(&inner, &task.node);
+                finish_task(&inner, &task.node, Some(w));
             }
         }
     }
@@ -673,6 +1265,30 @@ mod tests {
     use crate::backends::coro::CoroComputeManager;
     use crate::backends::nosv::NosvComputeManager;
     use crate::backends::threads::ThreadsComputeManager;
+    use crate::core::ids::DeviceId;
+    use crate::core::topology::{Device, DeviceKind};
+
+    /// Two NUMA domains with two CPU cores each.
+    fn two_numa_topology() -> Topology {
+        Topology {
+            devices: (0..2u32)
+                .map(|d| Device {
+                    id: DeviceId(d),
+                    kind: DeviceKind::NumaDomain,
+                    name: format!("numa{d}"),
+                    memory_spaces: Vec::new(),
+                    compute_resources: (0..2u64)
+                        .map(|c| ComputeResource {
+                            id: ComputeResourceId(u64::from(d) * 2 + c),
+                            kind: "cpu-core".into(),
+                            os_index: (u64::from(d) * 2 + c) as u32,
+                            locality: d,
+                        })
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
 
     fn coro_cm() -> Arc<dyn ComputeManager> {
         Arc::new(CoroComputeManager::new())
@@ -730,6 +1346,39 @@ mod tests {
         assert_eq!(run_tree(threads_cm()), 136);
     }
 
+    #[test]
+    fn global_queue_policy_still_correct() {
+        // The ablation baseline funnels everything through the injection
+        // lane; results must be identical, just contended.
+        for cm in [coro_cm(), threads_cm()] {
+            let sys = TaskSystem::with_config(
+                cm,
+                4,
+                false,
+                SchedConfig {
+                    policy: SchedPolicy::GlobalQueue,
+                    ..SchedConfig::default()
+                },
+            );
+            let total = Arc::new(AtomicU64::new(0));
+            let t = Arc::clone(&total);
+            sys.run("root", move |ctx| {
+                for _ in 0..16 {
+                    let t = Arc::clone(&t);
+                    ctx.spawn("leaf", move |_| {
+                        t.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+                ctx.wait_children();
+            })
+            .unwrap();
+            sys.shutdown().unwrap();
+            assert_eq!(total.load(Ordering::SeqCst), 16);
+            // Every spawn took the global lane: 1 root + 16 leaves.
+            assert!(sys.sched_stats().injection_pushes >= 17);
+        }
+    }
+
     /// A compute manager that rejects every execution unit (stand-in for
     /// selecting a plugin that does not prescribe host closures).
     struct RejectingCompute;
@@ -762,6 +1411,31 @@ mod tests {
         let err = sys.run("r", |_| {}).unwrap_err();
         assert!(err.to_string().contains("rejected task"), "{err}");
         sys.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shutdown_joins_parked_workers_even_after_error() {
+        // The satellite fix: first_error set + workers parked on empty
+        // deques must not prevent shutdown/Drop from joining them.
+        let sys = TaskSystem::new(Arc::new(RejectingCompute), 4, false);
+        assert!(sys.run("r", |_| {}).is_err());
+        // Give workers time to escalate into their parked state.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        sys.shutdown().unwrap();
+        // Idempotent: a second shutdown (and the implicit Drop) is a
+        // no-op, not a hang or double-join.
+        sys.shutdown().unwrap();
+    }
+
+    #[test]
+    fn drop_without_shutdown_joins_workers() {
+        let sys = TaskSystem::new(threads_cm(), 2, false);
+        sys.run("r", |ctx| {
+            ctx.spawn("c", |_| {});
+            ctx.wait_children();
+        })
+        .unwrap();
+        drop(sys); // must join, not leak or hang
     }
 
     #[test]
@@ -861,8 +1535,8 @@ mod tests {
     #[test]
     fn deep_recursion_no_worker_starvation() {
         // A chain of depth 50 where every level waits on its child: far
-        // deeper than the worker count — only user-level parking survives
-        // this without deadlock.
+        // deeper than the worker count — user-level parking (coro) and
+        // worker-releasing blocking waits (threads) both survive this.
         fn chain(ctx: &TaskCtx, depth: u32, hits: Arc<AtomicU64>) {
             if depth == 0 {
                 hits.fetch_add(1, Ordering::SeqCst);
@@ -872,11 +1546,303 @@ mod tests {
             ctx.spawn("link", move |c| chain(c, depth - 1, h));
             ctx.wait_children();
         }
-        let sys = TaskSystem::new(coro_cm(), 2, false);
-        let hits = Arc::new(AtomicU64::new(0));
-        let h = Arc::clone(&hits);
-        sys.run("chain", move |ctx| chain(ctx, 50, h)).unwrap();
+        for cm in [coro_cm(), threads_cm()] {
+            let sys = TaskSystem::new(cm, 2, false);
+            let hits = Arc::new(AtomicU64::new(0));
+            let h = Arc::clone(&hits);
+            sys.run("chain", move |ctx| chain(ctx, 50, h)).unwrap();
+            sys.shutdown().unwrap();
+            assert_eq!(hits.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn steady_state_spawn_is_global_lock_free() {
+        // The acceptance instrument: after warmup, a root whose children
+        // all spawn task-to-task must drive the injection lane exactly
+        // once (the root submit) — every child push is worker-local.
+        let sys = TaskSystem::new(threads_cm(), 2, false);
+        sys.run("warmup", |ctx| {
+            ctx.spawn("w", |_| {});
+            ctx.wait_children();
+        })
+        .unwrap();
+        let before = sys.sched_stats();
+        let n = 500u64;
+        let total = Arc::new(AtomicU64::new(0));
+        let t = Arc::clone(&total);
+        sys.run("root", move |ctx| {
+            for _ in 0..n {
+                let t = Arc::clone(&t);
+                ctx.spawn("leaf", move |_| {
+                    t.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            ctx.wait_children();
+        })
+        .unwrap();
+        let after = sys.sched_stats();
         sys.shutdown().unwrap();
-        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        assert_eq!(total.load(Ordering::Relaxed), n);
+        assert_eq!(
+            after.local_pushes - before.local_pushes,
+            n,
+            "every task-to-task spawn must stay on a worker-local deque"
+        );
+        assert_eq!(
+            after.injection_pushes - before.injection_pushes,
+            1,
+            "only the root submit may use the injection lane"
+        );
+        // The global lane was locked O(1) times (root push + pop), not
+        // O(n): the global-mutex ceiling is structurally gone.
+        let lane_locks = after.injection_locks - before.injection_locks;
+        assert!(lane_locks <= 4, "injection lane locked {lane_locks} times");
+    }
+
+    #[test]
+    fn steal_storm_no_lost_or_duplicated_tasks() {
+        // N workers, 1 producer: every other worker only eats via steals.
+        let sys = TaskSystem::new(threads_cm(), 4, false);
+        let n = 4000usize;
+        let hits: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+        let before = sys.sched_stats();
+        let h = Arc::clone(&hits);
+        sys.run("producer", move |ctx| {
+            for i in 0..n {
+                let h = Arc::clone(&h);
+                ctx.spawn("leaf", move |_| {
+                    h[i].fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            ctx.wait_children();
+        })
+        .unwrap();
+        let after = sys.sched_stats();
+        sys.shutdown().unwrap();
+        for (i, hit) in hits.iter().enumerate() {
+            assert_eq!(hit.load(Ordering::SeqCst), 1, "task {i} lost or duplicated");
+        }
+        // Steal failures stay bounded: idle workers park instead of
+        // spinning unboundedly against empty victims.
+        let failures = after.steal_failures - before.steal_failures;
+        assert!(failures < 2_000_000, "unbounded steal spinning: {failures}");
+    }
+
+    #[test]
+    fn spawn_after_respects_dependencies() {
+        for cm in [coro_cm(), threads_cm(), nosv_cm()] {
+            let sys = TaskSystem::new(cm, 4, false);
+            let order = Arc::new(Mutex::new(Vec::new()));
+            let o = Arc::clone(&order);
+            sys.run("root", move |ctx| {
+                let o1 = Arc::clone(&o);
+                let a = ctx.spawn("a", move |_| o1.lock().unwrap().push("a"));
+                let o2 = Arc::clone(&o);
+                let b = ctx.spawn("b", move |_| o2.lock().unwrap().push("b"));
+                let o3 = Arc::clone(&o);
+                let c = ctx.spawn_after(&[a, b], "c", move |_| {
+                    o3.lock().unwrap().push("c")
+                });
+                let o4 = Arc::clone(&o);
+                ctx.spawn_after(&[c], "d", move |_| o4.lock().unwrap().push("d"));
+                ctx.wait_children();
+            })
+            .unwrap();
+            sys.shutdown().unwrap();
+            let order = order.lock().unwrap();
+            assert_eq!(order.len(), 4);
+            let pos = |x: &str| order.iter().position(|&v| v == x).unwrap();
+            assert!(pos("c") > pos("a") && pos("c") > pos("b"));
+            assert_eq!(pos("d"), 3);
+        }
+    }
+
+    #[test]
+    fn spawn_after_finished_dependency_fires_immediately() {
+        let sys = TaskSystem::new(threads_cm(), 2, false);
+        let hit = Arc::new(AtomicU64::new(0));
+        let h = Arc::clone(&hit);
+        sys.run("root", move |ctx| {
+            let a = ctx.spawn("a", |_| {});
+            // Let `a` finish before the dependent is registered.
+            while !a.is_finished() {
+                std::thread::yield_now();
+            }
+            let h = Arc::clone(&h);
+            ctx.spawn_after(&[a], "b", move |_| {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+            ctx.wait_children();
+        })
+        .unwrap();
+        sys.shutdown().unwrap();
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn dag_ordering_property_under_both_engines() {
+        // Deterministic DAG-ordering property: on a random DAG (edges
+        // only i → j with i < j), every task observes all of its
+        // dependencies completed before it starts — under both the
+        // suspending and blocking engines, whatever the interleaving.
+        crate::prop_check!("spawn-after-dag-order", |g| {
+            let n = g.sized(2, 24).max(2);
+            let mut deps: Vec<Vec<usize>> = Vec::with_capacity(n);
+            for j in 0..n {
+                let mut dj = Vec::new();
+                for i in 0..j {
+                    if g.rng.bool() {
+                        dj.push(i);
+                    }
+                }
+                deps.push(dj);
+            }
+            for cm in [coro_cm(), threads_cm()] {
+                let sys = TaskSystem::new(cm, 3, false);
+                let done: Arc<Vec<AtomicBool>> =
+                    Arc::new((0..n).map(|_| AtomicBool::new(false)).collect());
+                let violated = Arc::new(AtomicBool::new(false));
+                let deps2 = deps.clone();
+                let d2 = Arc::clone(&done);
+                let v2 = Arc::clone(&violated);
+                sys.run("dag-root", move |ctx| {
+                    let mut handles: Vec<TaskHandle> = Vec::with_capacity(n);
+                    for (j, dj) in deps2.iter().enumerate() {
+                        let dep_handles: Vec<TaskHandle> =
+                            dj.iter().map(|&i| handles[i].clone()).collect();
+                        let d = Arc::clone(&d2);
+                        let v = Arc::clone(&v2);
+                        let dj = dj.clone();
+                        let h = ctx.spawn_after(&dep_handles, "node", move |_| {
+                            for &i in &dj {
+                                if !d[i].load(Ordering::SeqCst) {
+                                    v.store(true, Ordering::SeqCst);
+                                }
+                            }
+                            d[j].store(true, Ordering::SeqCst);
+                        });
+                        handles.push(h);
+                    }
+                    ctx.wait_children();
+                })
+                .map_err(|e| e.to_string())?;
+                sys.shutdown().map_err(|e| e.to_string())?;
+                if violated.load(Ordering::SeqCst) {
+                    return Err(format!("dependency order violated (n={n})"));
+                }
+                if !done.iter().all(|d| d.load(Ordering::SeqCst)) {
+                    return Err(format!("lost DAG task (n={n})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dataflow_keys_gate_consumers() {
+        let sys = TaskSystem::new(threads_cm(), 2, false);
+        const K: u64 = 42;
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let o = Arc::clone(&order);
+        sys.run("root", move |ctx| {
+            // Consumer registered first; must wait for the producer.
+            let o1 = Arc::clone(&o);
+            ctx.spawn_dataflow("consumer", &[K], &[], move |_| {
+                o1.lock().unwrap().push("consume")
+            });
+            let o2 = Arc::clone(&o);
+            ctx.spawn_dataflow("producer", &[], &[K], move |_| {
+                o2.lock().unwrap().push("produce")
+            });
+            ctx.wait_children();
+        })
+        .unwrap();
+        sys.shutdown().unwrap();
+        assert_eq!(*order.lock().unwrap(), vec!["produce", "consume"]);
+    }
+
+    #[test]
+    fn mark_produced_releases_external_consumers() {
+        let sys = TaskSystem::new(threads_cm(), 2, false);
+        const K: u64 = 7;
+        let hit = Arc::new(AtomicU64::new(0));
+        let h = Arc::clone(&hit);
+        let root = sys.submit("root", move |ctx| {
+            let h = Arc::clone(&h);
+            ctx.spawn_dataflow("consumer", &[K], &[], move |_| {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        while !root.is_finished() {
+            std::thread::yield_now();
+        }
+        assert_eq!(hit.load(Ordering::SeqCst), 0, "consumer must be gated");
+        sys.mark_produced(K);
+        sys.wait_idle().unwrap();
+        sys.shutdown().unwrap();
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn steal_order_prefers_same_locality_ring() {
+        // 4 workers over 2 NUMA domains: same-domain victims first, ring
+        // rotated per thief.
+        let loc = [0, 0, 1, 1];
+        assert_eq!(steal_order(&loc, 0), vec![1, 2, 3]);
+        assert_eq!(steal_order(&loc, 1), vec![0, 2, 3]);
+        assert_eq!(steal_order(&loc, 2), vec![3, 0, 1]);
+        assert_eq!(steal_order(&loc, 3), vec![2, 0, 1]);
+        // Single-domain ring spreads thieves.
+        assert_eq!(steal_order(&[0, 0, 0], 1), vec![2, 0]);
+    }
+
+    #[test]
+    fn topology_config_assigns_worker_localities() {
+        let topo = two_numa_topology();
+        let sys = TaskSystem::with_config(
+            threads_cm(),
+            4,
+            false,
+            SchedConfig {
+                topology: Some(topo),
+                ..SchedConfig::default()
+            },
+        );
+        let locs: Vec<u32> = sys
+            .inner
+            .sched
+            .workers
+            .iter()
+            .map(|w| w.resource.locality)
+            .collect();
+        // Round-robin over 2 domains × 2 cores each.
+        assert_eq!(locs.iter().filter(|&&l| l == 0).count(), 2);
+        assert_eq!(locs.iter().filter(|&&l| l == 1).count(), 2);
+        // Still runs correctly.
+        let hit = Arc::new(AtomicU64::new(0));
+        let h = Arc::clone(&hit);
+        sys.run("r", move |ctx| {
+            for _ in 0..8 {
+                let h = Arc::clone(&h);
+                ctx.spawn("leaf", move |_| {
+                    h.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            ctx.wait_children();
+        })
+        .unwrap();
+        sys.shutdown().unwrap();
+        assert_eq!(hit.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn ready_backlog_reports_queued_tasks() {
+        let sys = TaskSystem::new(threads_cm(), 1, false);
+        assert_eq!(sys.ready_backlog(), 0);
+        sys.run("r", |_| {}).unwrap();
+        assert_eq!(sys.ready_backlog(), 0);
+        sys.shutdown().unwrap();
     }
 }

@@ -19,10 +19,15 @@ pub enum EventKind {
 /// One closed interval on a worker's timeline.
 #[derive(Debug, Clone)]
 pub struct TraceEvent {
+    /// Worker the interval was recorded on.
     pub worker: usize,
+    /// Work vs idle classification.
     pub kind: EventKind,
+    /// Task label (free-form, set by the spawner).
     pub label: String,
+    /// Interval start, nanoseconds since trace creation.
     pub start_ns: u64,
+    /// Interval end, nanoseconds since trace creation.
     pub end_ns: u64,
 }
 
@@ -34,6 +39,7 @@ pub struct Trace {
 }
 
 impl Trace {
+    /// Create a collector; a disabled trace records nothing (zero cost).
     pub fn new(enabled: bool) -> Self {
         Self {
             epoch: Instant::now(),
@@ -62,6 +68,7 @@ impl Trace {
         });
     }
 
+    /// Snapshot of all recorded events.
     pub fn events(&self) -> Vec<TraceEvent> {
         self.events.lock().unwrap().clone()
     }

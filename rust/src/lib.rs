@@ -7,6 +7,13 @@
 //! technology-specific detail. Applications written against the abstract
 //! managers in [`core`] run unchanged on any combination of backends.
 //!
+//! A guided tour of the layering — the module map, the tag-namespace
+//! registry shared by the frontends, and the lock inventory ("which lock
+//! protects what") for the threads backend and the tasking scheduler —
+//! lives in `docs/ARCHITECTURE.md` at the repository root, with the
+//! design rationale in `DESIGN.md` and the measured trajectory in
+//! `EXPERIMENTS.md`.
+//!
 //! Layout mirrors the paper's architecture (Fig. 3):
 //!
 //! - [`core`] — the model: five manager traits plus the stateless

@@ -376,7 +376,7 @@ fn cmd_worker() -> Result<()> {
                 })
                 .unwrap_or(2);
             let tasks: u64 = words.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
-            worker_taskfarm(im.as_ref(), &cmm, &registry, total, tasks)
+            worker_taskfarm(im.as_ref(), &cmm, &registry, &compute, total, tasks)
         }
         other => Err(err(format!("unknown app {other:?}"))),
     };
@@ -445,20 +445,38 @@ fn worker_jacobi(
 
 /// The full Fig. 7 deployment: elastic ramp-up to `total` instances,
 /// worker-topology gathering over the built-in `topology` RPC, and a
-/// verified master/worker task farm across the RPC mesh.
+/// verified master/worker task farm across the RPC mesh. The root runs
+/// tasks on a local work-stealing `TaskSystem` and spills the overflow
+/// over the mesh whenever its scheduler backlog saturates.
 fn worker_taskfarm(
     im: &dyn InstanceManager,
     cmm: &Arc<dyn CommunicationManager>,
     registry: &Registry,
+    compute: &str,
     total: usize,
     tasks: u64,
 ) -> Result<()> {
+    use hicr::apps::taskfarm::{run_spill, SpillPolicy};
     // Serialize this instance's device tree for the topology RPC; an
     // environment with no discoverable topology still farms (empty tree).
     let topology_json = hicr::backends::merged_topology(registry, &PluginContext::new())
         .map(|t| t.serialize())
         .unwrap_or_else(|_| hicr::Topology::default().serialize());
-    match hicr::apps::taskfarm::run(im, cmm, topology_json, total, tasks)? {
+    // Only the root dispatches; it gets the local execution lane.
+    let local_sys = if im.is_root() {
+        let cm = registry.builder().compute(compute).build()?.compute()?;
+        Some(TaskSystem::new(cm, 2, false))
+    } else {
+        None
+    };
+    let local = local_sys
+        .as_deref()
+        .map(|sys| (sys, SpillPolicy::default()));
+    let result = run_spill(im, cmm, topology_json, total, tasks, local)?;
+    if let Some(sys) = &local_sys {
+        sys.shutdown()?;
+    }
+    match result {
         None => Ok(()), // worker: served until shutdown
         Some(report) => {
             let spread: Vec<String> = report
@@ -468,11 +486,13 @@ fn worker_taskfarm(
                 .collect();
             println!(
                 "taskfarm world={} workers={} tasks={} ok checksum={:#018x} \
-                 topologies={} devices={} elapsed={:.3}s",
+                 local={} spilled={} topologies={} devices={} elapsed={:.3}s",
                 report.world,
                 report.workers,
                 report.tasks,
                 report.checksum,
+                report.local_tasks,
+                report.spilled_tasks,
                 report.gathered_topologies,
                 report.total_devices,
                 report.elapsed_s

@@ -1,0 +1,34 @@
+//! Best-effort CPU pinning, shared by the threads backend's processing
+//! units and the tasking frontend's scheduler workers.
+//!
+//! Lives in `util` (not in a backend) so frontends can pin without
+//! importing `crate::backends::*` — the backend-agnosticism grep test
+//! covers `frontends/`, and placement is a portability-neutral hint, not
+//! a backend semantic.
+
+/// Best-effort pin of the calling thread to one CPU (Linux only, behind
+/// the `affinity` feature which pulls in `libc` — the default build has
+/// zero external dependencies, DESIGN.md §2). With fewer physical cores
+/// than requested (this sandbox has one) failures are silently ignored —
+/// placement is a performance hint, not a semantic.
+pub fn pin_to_core(core: u32) {
+    #[cfg(all(feature = "affinity", target_os = "linux"))]
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        libc::CPU_SET(core as usize, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+    }
+    #[cfg(not(all(feature = "affinity", target_os = "linux")))]
+    let _ = core;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn pinning_is_a_hint_never_a_failure() {
+        // Out-of-range cores must be silently ignored on every build.
+        super::pin_to_core(0);
+        super::pin_to_core(10_000);
+    }
+}

@@ -2,6 +2,7 @@
 //! JSON serialization, PRNG, property-test harness, statistics, and the
 //! benchmark runner (substituting serde/proptest/criterion — DESIGN.md §2).
 
+pub mod affinity;
 pub mod backoff;
 pub mod bench;
 pub mod json;

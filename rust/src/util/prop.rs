@@ -7,10 +7,10 @@
 //! bounded "size shrink" by re-running with progressively smaller size
 //! hints so the minimal failing magnitude is reported.
 //!
-//! Used across the crate for the model invariants DESIGN.md §5 lists:
-//! channel FIFO/capacity, topology serialization round-trips, exchange
-//! tag/key uniqueness, memcpy legality, fence counting, and allocator
-//! state machines.
+//! Used across the crate for the model invariants: channel
+//! FIFO/capacity, topology serialization round-trips, exchange tag/key
+//! uniqueness, memcpy legality, fence counting, allocator state
+//! machines, and the task scheduler's DAG-ordering property.
 
 use crate::util::rng::Rng;
 
