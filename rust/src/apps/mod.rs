@@ -11,9 +11,13 @@
 //! - [`taskfarm`] — the Fig. 7 deployment pattern as an app: elastic
 //!   ramp-up, topology gathering and master/worker farming over the RPC
 //!   mesh.
+//! - [`serve`] — the ROADMAP north-star composition: a multi-instance
+//!   inference serving tier (sharded router + continuous-batching
+//!   workers) with a built-in verifying closed-loop client.
 
 pub mod fibonacci;
 pub mod inference;
 pub mod jacobi;
 pub mod pingpong;
+pub mod serve;
 pub mod taskfarm;

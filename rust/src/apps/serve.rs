@@ -1,0 +1,383 @@
+//! Multi-instance inference serving (`hicr serve --np N`): the ROADMAP's
+//! north-star composition as a runnable app. The root instance runs one
+//! router shard of the serving frontend; every other instance is a
+//! serving worker running continuous batching. The deployment/RPC mesh
+//! is the control plane (membership, shutdown); the serving channel
+//! rings are the data plane.
+//!
+//! Elasticity follows the two-phase protocol of DESIGN.md §7: the worker
+//! *pool* is provisioned up front by `deploy`'s `ensure_world` ramp
+//! (runtime spawn is impossible after the world's first barrier), and an
+//! [`ElasticController`] activates/deactivates workers within the pool,
+//! driven by the router's aggregate in-flight depth.
+//!
+//! The built-in closed-loop client submits `requests` verifiable
+//! requests with a bounded in-flight window, counts typed [`Overloaded`]
+//! rejections (retrying the logical request — closed-loop clients
+//! experience backpressure as added latency, not loss), checks every
+//! payload against [`expected_output`], and reports p50/p99 latency and
+//! goodput.
+//!
+//! [`Overloaded`]: crate::frontends::serving::Overloaded
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::core::communication::CommunicationManager;
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::MemorySpaceId;
+use crate::core::instance::{InstanceManager, InstanceTemplate};
+use crate::core::memory::LocalMemorySlot;
+use crate::core::topology::TopologyRequirements;
+use crate::frontends::deployment::{deploy, Deployment, DeploymentConfig};
+use crate::frontends::serving::{
+    build_mesh, payload_f32, ElasticController, RouterShard, ServingConfig, ServingNode,
+    ServingRole, ServingWorker, ST_OK,
+};
+use crate::runtime::batcher::BatchExecutor;
+use crate::util::backoff::Backoff;
+
+/// Closed-loop client + tier geometry for one serve run.
+#[derive(Debug, Clone)]
+pub struct ServeParams {
+    /// Desired world size (1 router + N−1 workers), reached via the
+    /// deploy-time `ensure_world` ramp.
+    pub total: usize,
+    /// Requests the built-in closed-loop client completes.
+    pub requests: u64,
+    /// Client in-flight window (closed-loop concurrency).
+    pub window: usize,
+    /// Elastic activation floor (workers initially active). The
+    /// controller is engaged only when the pool has room to scale.
+    pub min_active: usize,
+    /// Engage the elastic controller at all.
+    pub elastic: bool,
+    pub cfg: ServingConfig,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        Self {
+            total: 3,
+            requests: 512,
+            window: 32,
+            min_active: 1,
+            elastic: true,
+            cfg: ServingConfig::default(),
+        }
+    }
+}
+
+/// What the root observed (workers return `None`).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// World size after the ramp-up.
+    pub world: usize,
+    /// Worker pool size.
+    pub workers: usize,
+    /// Requests completed (and payload-verified).
+    pub requests: u64,
+    /// Typed `Overloaded` rejections the closed-loop client absorbed.
+    pub rejected: u64,
+    /// Requests whose preferred worker was shed to a sibling.
+    pub shed: u64,
+    /// Completions whose payload failed verification (must be 0).
+    pub checksum_failures: u64,
+    /// Router-observed request latency percentiles, milliseconds.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Completed requests per second of serve-phase wall clock.
+    pub goodput_rps: f64,
+    /// Elastic activation events (scale-out, scale-in).
+    pub scale_out_events: u64,
+    pub scale_in_events: u64,
+    /// Wall-clock seconds for this instance's whole run.
+    pub elapsed_s: f64,
+}
+
+/// The app's verifiable model: out[j] = sum(inputs) × (j+1) per example
+/// — cheap, deterministic, and sensitive to payload corruption, so the
+/// router can check every completion against [`expected_output`].
+pub fn reference_executor(input_dim: usize, output_dim: usize) -> BatchExecutor {
+    Arc::new(move |input: &[f32]| {
+        let examples = input.len() / input_dim;
+        let mut out = vec![0f32; examples * output_dim];
+        for e in 0..examples {
+            let s: f32 = input[e * input_dim..(e + 1) * input_dim].iter().sum();
+            for j in 0..output_dim {
+                out[e * output_dim + j] = s * (j + 1) as f32;
+            }
+        }
+        Ok(out)
+    })
+}
+
+/// What [`reference_executor`] returns for `input` at output index `j`.
+pub fn expected_output(input: &[f32], j: usize) -> f32 {
+    input.iter().sum::<f32>() * (j + 1) as f32
+}
+
+/// Deterministic client input for request `i`.
+pub fn request_input(i: u64, input_dim: usize) -> Vec<f32> {
+    (0..input_dim)
+        .map(|j| ((i % 97) as f32) + j as f32 * 0.5)
+        .collect()
+}
+
+/// Run this instance's side of the serving tier. Collective across the
+/// world: the root returns `Some(report)`, workers serve until shutdown
+/// and return `None`. `topology_json` is this instance's serialized
+/// device tree (for the deployment mesh's topology RPC).
+pub fn run(
+    im: &dyn InstanceManager,
+    cmm: &Arc<dyn CommunicationManager>,
+    topology_json: String,
+    params: &ServeParams,
+) -> Result<Option<ServeReport>> {
+    let t0 = Instant::now();
+    let alloc = |len| LocalMemorySlot::alloc(MemorySpaceId(1), len);
+    let template = InstanceTemplate::new(TopologyRequirements::default());
+    let mut d = deploy(
+        im,
+        cmm,
+        params.total,
+        &template,
+        &DeploymentConfig::default(),
+        topology_json,
+        alloc,
+    )?;
+    let shards = vec![d.root];
+    let workers = d.workers();
+    if workers.is_empty() {
+        return Err(HicrError::Instance(
+            "serving needs at least one worker (launch with --np 2 or more)".into(),
+        ));
+    }
+
+    if !d.is_root {
+        let node = build_mesh(
+            cmm,
+            ServingRole::Worker { rank: d.me },
+            &shards,
+            &workers,
+            &params.cfg,
+            alloc,
+            Some(reference_executor(params.cfg.input_dim, params.cfg.output_dim)),
+        )?;
+        let ServingNode::Worker(worker) = node else {
+            return Err(HicrError::InvalidState(
+                "worker role resolved to a non-worker node".into(),
+            ));
+        };
+        worker_loop(&mut d, worker)?;
+        // Exit in lockstep with the root's post-shutdown barrier.
+        im.barrier()?;
+        return Ok(None);
+    }
+
+    let node = build_mesh(
+        cmm,
+        ServingRole::Router { shard: d.root },
+        &shards,
+        &workers,
+        &params.cfg,
+        alloc,
+        None,
+    )?;
+    let ServingNode::Router(mut router) = node else {
+        return Err(HicrError::InvalidState(
+            "router role resolved to a non-router node".into(),
+        ));
+    };
+    let elastic = if params.elastic
+        && workers.len() > 1
+        && params.cfg.high_watermark >= 2
+        && params.min_active < workers.len()
+    {
+        let ctl = ElasticController::new(
+            1,
+            workers.len(),
+            params.min_active.max(1),
+            params.cfg.high_watermark,
+            (params.cfg.high_watermark / 4).max(1),
+        )?;
+        router.set_elastic(Arc::clone(&ctl), 0);
+        Some(ctl)
+    } else {
+        None
+    };
+
+    match closed_loop(&mut router, params) {
+        Ok(client) => {
+            d.shutdown_workers()?;
+            im.barrier()?;
+            let rs = router.stats();
+            let (scale_out_events, scale_in_events) = elastic
+                .map(|c| c.scale_events())
+                .unwrap_or((0, 0));
+            Ok(Some(ServeReport {
+                world: d.ranks.len(),
+                workers: workers.len(),
+                requests: client.completed,
+                rejected: rs.rejected,
+                shed: rs.shed,
+                checksum_failures: client.checksum_failures,
+                p50_ms: client.p50_s * 1e3,
+                p99_ms: client.p99_s * 1e3,
+                goodput_rps: client.goodput_rps,
+                scale_out_events,
+                scale_in_events,
+                elapsed_s: t0.elapsed().as_secs_f64(),
+            }))
+        }
+        Err(e) => {
+            // Best-effort release so live workers do not sit in their
+            // serve loops forever while the launcher reports the error.
+            if d.shutdown_workers().is_ok() {
+                let _ = im.barrier();
+            }
+            Err(e)
+        }
+    }
+}
+
+/// Worker side: interleave the RPC control plane (so the shutdown call
+/// is observed) with the serving data plane, then drain the batcher.
+fn worker_loop(d: &mut Deployment, mut worker: ServingWorker) -> Result<()> {
+    let mut backoff = Backoff::new();
+    loop {
+        let served = d.mesh.server.try_serve_one()?;
+        let moved = worker.pump()?;
+        if d.shutdown_requested() {
+            break;
+        }
+        if !served && moved == 0 {
+            backoff.wait();
+        } else {
+            backoff.reset();
+        }
+    }
+    worker.shutdown()?;
+    Ok(())
+}
+
+struct ClientOutcome {
+    completed: u64,
+    checksum_failures: u64,
+    p50_s: f64,
+    p99_s: f64,
+    goodput_rps: f64,
+}
+
+/// The built-in closed-loop client: `window` requests in flight, every
+/// completion payload-verified, rejections retried (the rejected state
+/// is visible in the router stats).
+fn closed_loop(router: &mut RouterShard, params: &ServeParams) -> Result<ClientOutcome> {
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(params.requests as usize);
+    let mut expected: HashMap<u64, f32> = HashMap::new();
+    let mut checksum_failures = 0u64;
+    let mut in_flight = 0usize;
+    let mut submitted = 0u64;
+    let mut completed = 0u64;
+    let mut backoff = Backoff::new();
+    while completed < params.requests {
+        let mut progressed = false;
+        while in_flight < params.window && submitted < params.requests {
+            let input = request_input(submitted, params.cfg.input_dim);
+            match router.try_submit(&input)? {
+                Ok(id) => {
+                    expected.insert(id, expected_output(&input, 0));
+                    in_flight += 1;
+                    submitted += 1;
+                    progressed = true;
+                }
+                Err(_overloaded) => break, // absorb backpressure; retry after a drain
+            }
+        }
+        router.flush()?;
+        let n = router.drain(|done| {
+            latencies.push(done.latency.as_secs_f64());
+            let want = expected.get(&done.req_id).copied();
+            let ok = done.status == ST_OK
+                && want.is_some_and(|w| payload_f32(done.payload, 0) == w);
+            if !ok {
+                checksum_failures += 1;
+            }
+        })?;
+        in_flight -= n as usize;
+        completed += n;
+        if n > 0 || progressed {
+            backoff.reset();
+        } else {
+            backoff.wait();
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let summary = crate::util::stats::Summary::of(&latencies)
+        .ok_or_else(|| HicrError::InvalidState("no latency samples".into()))?;
+    Ok(ClientOutcome {
+        completed,
+        checksum_failures,
+        p50_s: summary.p50,
+        p99_s: summary.p99,
+        goodput_rps: completed as f64 / elapsed.max(1e-9),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::threads::ThreadsCommunicationManager;
+    use crate::core::instance::testworld::local_world;
+    use crate::core::topology::Topology;
+
+    #[test]
+    fn request_inputs_are_deterministic_and_verifiable() {
+        let a = request_input(7, 8);
+        let b = request_input(7, 8);
+        assert_eq!(a, b);
+        let exec = reference_executor(8, 2);
+        let out = exec(&a).unwrap();
+        assert_eq!(out[0], expected_output(&a, 0));
+        assert_eq!(out[1], expected_output(&a, 1));
+    }
+
+    /// Full serve tier over the in-process threads world: 1 router +
+    /// 2 workers, closed-loop client, verified payloads, elastic
+    /// controller engaged.
+    #[test]
+    fn serve_roundtrip_threads_world() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let params = ServeParams {
+            total: 3,
+            requests: 96,
+            window: 8,
+            ..ServeParams::default()
+        };
+        let mut handles = Vec::new();
+        for im in local_world(3) {
+            let cmm = Arc::clone(&cmm);
+            let params = params.clone();
+            handles.push(std::thread::spawn(move || {
+                run(&im, &cmm, Topology::default().serialize(), &params)
+            }));
+        }
+        let mut reports = Vec::new();
+        for h in handles {
+            if let Some(r) = h.join().unwrap().unwrap() {
+                reports.push(r);
+            }
+        }
+        assert_eq!(reports.len(), 1, "exactly the root reports");
+        let r = &reports[0];
+        assert_eq!(r.world, 3);
+        assert_eq!(r.workers, 2);
+        assert_eq!(r.requests, 96);
+        assert_eq!(r.checksum_failures, 0);
+        assert!(r.goodput_rps > 0.0);
+        assert!(r.p50_ms >= 0.0 && r.p99_ms >= r.p50_ms);
+    }
+}

@@ -12,6 +12,9 @@
 //!   consume and backend plugins implement.
 //! - [`rpc`] — remote procedure registration, listening and execution
 //!   over an any-to-any mesh of per-caller rings.
+//! - [`serving`] — the production inference tier: sharded router,
+//!   continuous batching workers, watermark admission control and
+//!   activation-based elasticity over the channel/RPC substrate.
 //! - [`tasking`] — building blocks for task-based runtime systems
 //!   (stateful tasks with callbacks, pull-scheduled workers, and an
 //!   OVNI-style execution tracer).
@@ -21,4 +24,5 @@ pub mod dataobject;
 pub mod deployment;
 pub mod kernels;
 pub mod rpc;
+pub mod serving;
 pub mod tasking;

@@ -1,0 +1,1632 @@
+//! Serving frontend: the production inference tier composed from the
+//! pieces the lower layers ship in isolation — a **sharded router**
+//! load-balancing requests over N worker instances, each worker running
+//! [`runtime::batcher`](crate::runtime::batcher) continuous batching,
+//! with requests and responses streamed over the zero-copy SPSC channels
+//! of the channels frontend (batch-granular doorbells, no per-request
+//! allocation or registry lock on the steady-state router hot path).
+//!
+//! ## Topology
+//!
+//! Every (router shard, worker) pair is joined by a private channel pair:
+//! a request ring (shard produces, worker consumes) and a response ring
+//! (worker produces, shard consumes). Shards therefore never contend
+//! with each other, and a worker serves each shard on its own ring — the
+//! same non-locking MPSC-by-construction pattern as the RPC mesh. The
+//! RPC/deployment mesh remains the *control* plane (membership, topology,
+//! shutdown); these rings are the *data* plane.
+//!
+//! ## Wire format
+//!
+//! Fixed-size envelopes (little-endian), `msg_size` a function of the
+//! configured dimensions so both sides validate geometry at link setup:
+//!
+//! ```text
+//! request:  [u64 req_id][u32 origin_shard][u32 magic][input_dim × f32]
+//! response: [u64 req_id][u32 status      ][u32 magic][output_dim × f32]
+//! ```
+//!
+//! `req_id` encodes the shard-local pending-table slot in its low 32 bits
+//! and a monotone sequence number in its high 32 bits, so response demux
+//! is an array index plus a staleness check — no map lookup, no
+//! allocation. Executor failures travel back as `status =`
+//! [`ST_EXEC_ERR`] (the batcher's typed-error contract made wire-visible)
+//! rather than as dropped envelopes.
+//!
+//! ## Admission control and backpressure
+//!
+//! Each link carries at most `ring_capacity` requests in flight (the ring
+//! is the credit window), and the router refuses to queue more than
+//! `high_watermark` behind any one worker: a request whose preferred
+//! worker is over the watermark **sheds** to the least-loaded active
+//! sibling, and when every active worker is at the watermark the router
+//! returns a typed [`Overloaded`] rejection — callers see backpressure,
+//! nothing is silently dropped. The watermark defaults to the scheduler's
+//! spill threshold ([`SpillPolicy`](crate::apps::taskfarm::SpillPolicy)):
+//! one backlog policy decides both when a task farm spills work off-node
+//! and when the serving tier stops accepting it.
+//!
+//! ## Elasticity
+//!
+//! mpisim (faithfully to MPI) rejects instance spawn after the world's
+//! first barrier, so the worker *pool* is provisioned up front — apps
+//! ramp the world to its maximum with `ensure_world` at deploy time — and
+//! elasticity is **activation-based**: an [`ElasticController`] grows and
+//! shrinks the set of workers the router dispatches to, driven by the
+//! aggregate in-flight depth with high/low hysteresis watermarks.
+//! Deactivated workers keep their rings (draining any residue) and cost
+//! nothing; activation is a router-local atomic, not a collective.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::core::communication::CommunicationManager;
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::Tag;
+use crate::core::memory::LocalMemorySlot;
+use crate::frontends::channels::spsc::{SpscConsumer, SpscProducer};
+use crate::runtime::batcher::{BatchExecutor, BatchResponse, Batcher, BatcherConfig};
+
+/// Reserved tag namespace for all serving rings (bits 52..64 = 0x5EB;
+/// registry: docs/ARCHITECTURE.md §2). Disjoint from the RPC (0xA9C) and
+/// DataObject (0x0D0B…) namespaces.
+pub const SERVING_TAG_BASE: u64 = 0x5EB << 52;
+
+const LANE_SHIFT: u32 = 48;
+const SHARD_SHIFT: u32 = 24;
+const LANE_REQUEST: u64 = 0;
+const LANE_RESPONSE: u64 = 1;
+
+/// Serving shard/worker ranks must fit the 24-bit tag fields.
+pub const MAX_SERVING_RANK: u32 = 0xFF_FFFF;
+
+/// Frame marker embedded in every serving envelope ("HSRV").
+pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"HSRV");
+
+/// Header bytes of a request envelope.
+pub const REQ_HDR: usize = 16;
+/// Header bytes of a response envelope.
+pub const RSP_HDR: usize = 16;
+
+/// Response status: the executor produced this output.
+pub const ST_OK: u32 = 0;
+/// Response status: the batch executor failed (typed error at the
+/// worker); the payload is zeroed.
+pub const ST_EXEC_ERR: u32 = 1;
+
+/// Request envelope size for a given input dimension.
+pub fn request_msg_size(input_dim: usize) -> usize {
+    REQ_HDR + input_dim * 4
+}
+
+/// Response envelope size for a given output dimension.
+pub fn response_msg_size(output_dim: usize) -> usize {
+    RSP_HDR + output_dim * 4
+}
+
+/// The (request, response) ring tags of the serving link between router
+/// `shard` and `worker`. Shard and worker ids live in disjoint bit
+/// fields under the reserved namespace, so no two links alias and the
+/// shard/worker numbering spaces are independent.
+pub fn serving_link_tags(shard: u32, worker: u32) -> Result<(Tag, Tag)> {
+    if shard > MAX_SERVING_RANK || worker > MAX_SERVING_RANK {
+        return Err(HicrError::Bounds(format!(
+            "serving ranks must fit 24 bits (shard {shard}, worker {worker})"
+        )));
+    }
+    let link = ((shard as u64) << SHARD_SHIFT) | worker as u64;
+    Ok((
+        Tag(SERVING_TAG_BASE | (LANE_REQUEST << LANE_SHIFT) | link),
+        Tag(SERVING_TAG_BASE | (LANE_RESPONSE << LANE_SHIFT) | link),
+    ))
+}
+
+/// How a shard picks the preferred worker for a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Rotate through the active workers.
+    RoundRobin,
+    /// Pick the active worker with the fewest requests in flight.
+    LeastLoaded,
+    /// Hash the request sequence number onto the active set (keyed
+    /// deployments would hash the request key for affinity).
+    ConsistentHash,
+}
+
+impl DispatchPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "rr",
+            DispatchPolicy::LeastLoaded => "ll",
+            DispatchPolicy::ConsistentHash => "hash",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rr" | "round-robin" => Some(DispatchPolicy::RoundRobin),
+            "ll" | "least-loaded" => Some(DispatchPolicy::LeastLoaded),
+            "hash" | "consistent-hash" => Some(DispatchPolicy::ConsistentHash),
+            _ => None,
+        }
+    }
+}
+
+/// Typed admission rejection: every active worker is at the watermark
+/// (or out of ring credit). Plain copyable data — returning one performs
+/// no allocation, so the rejection path is as cheap as the accept path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Overloaded {
+    /// Smallest in-flight depth observed among the active workers.
+    pub min_depth: usize,
+    /// Number of workers that were active (and saturated).
+    pub active: usize,
+}
+
+impl From<Overloaded> for HicrError {
+    fn from(o: Overloaded) -> Self {
+        HicrError::Rejected(format!(
+            "serving tier overloaded: {} active workers all at depth >= {}",
+            o.active, o.min_depth
+        ))
+    }
+}
+
+/// Outcome of [`RouterShard::try_submit`]: the request id, or the typed
+/// backpressure signal.
+pub type AdmitResult = std::result::Result<u64, Overloaded>;
+
+/// Serving-tier geometry and policy. Identical on every participant
+/// (ring geometry is validated at link setup by the channels frontend).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Input feature dimension (fixes the request envelope size).
+    pub input_dim: usize,
+    /// Output dimension (fixes the response envelope size).
+    pub output_dim: usize,
+    /// Per-link ring depth — the credit window bounding each worker's
+    /// queue of outstanding requests from one shard.
+    pub ring_capacity: u64,
+    /// Admission watermark: the router never queues more than this many
+    /// requests behind one worker; past it, requests shed to siblings
+    /// and ultimately reject as [`Overloaded`].
+    pub high_watermark: usize,
+    pub policy: DispatchPolicy,
+    /// Worker-side continuous-batching batch size.
+    pub max_batch: usize,
+    /// Worker-side batching window (how long a partial batch waits).
+    pub batch_window: Duration,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            input_dim: 16,
+            output_dim: 4,
+            ring_capacity: 64,
+            // One backlog policy across the stack: the serving admission
+            // watermark is the scheduler's spill threshold.
+            high_watermark: crate::apps::taskfarm::SpillPolicy::default().backlog_threshold,
+            policy: DispatchPolicy::LeastLoaded,
+            max_batch: 16,
+            batch_window: Duration::from_micros(200),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elastic activation controller
+// ---------------------------------------------------------------------------
+
+/// Activation-based elasticity over a fixed deploy-time worker pool (see
+/// the module docs for why the pool itself cannot grow mid-flight).
+/// Shards publish their in-flight depth; the controller grows the active
+/// set one worker at a time while the aggregate depth exceeds
+/// `high × active`, and shrinks it while the aggregate would still fit
+/// under `low × (active − 1)`. `low < high` gives hysteresis so the
+/// active set does not flap at a steady offered load.
+pub struct ElasticController {
+    total: usize,
+    min_active: usize,
+    high: usize,
+    low: usize,
+    active: AtomicUsize,
+    /// Per-shard last-published in-flight depth.
+    depths: Vec<AtomicUsize>,
+    scale_out_events: AtomicU64,
+    scale_in_events: AtomicU64,
+}
+
+impl ElasticController {
+    pub fn new(
+        shards: usize,
+        total_workers: usize,
+        min_active: usize,
+        high: usize,
+        low: usize,
+    ) -> Result<Arc<ElasticController>> {
+        if shards == 0 || total_workers == 0 {
+            return Err(HicrError::Bounds(
+                "elastic controller needs >=1 shard and >=1 worker".into(),
+            ));
+        }
+        if min_active == 0 || min_active > total_workers {
+            return Err(HicrError::Bounds(format!(
+                "min_active {min_active} out of range 1..={total_workers}"
+            )));
+        }
+        if low >= high {
+            return Err(HicrError::Bounds(format!(
+                "elastic watermarks need low < high (got {low} >= {high})"
+            )));
+        }
+        Ok(Arc::new(ElasticController {
+            total: total_workers,
+            min_active,
+            high,
+            low,
+            active: AtomicUsize::new(min_active),
+            depths: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
+            scale_out_events: AtomicU64::new(0),
+            scale_in_events: AtomicU64::new(0),
+        }))
+    }
+
+    /// Workers the routers currently dispatch to.
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Acquire)
+    }
+
+    /// (scale-out events, scale-in events) so far.
+    pub fn scale_events(&self) -> (u64, u64) {
+        (
+            self.scale_out_events.load(Ordering::Relaxed),
+            self.scale_in_events.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Publish shard `slot`'s in-flight depth and take at most one
+    /// rescale step. Lock-free and allocation-free — safe on the router
+    /// hot path.
+    pub fn observe(&self, slot: usize, in_flight: usize) {
+        self.depths[slot].store(in_flight, Ordering::Relaxed);
+        let agg: usize = self.depths.iter().map(|d| d.load(Ordering::Relaxed)).sum();
+        let a = self.active.load(Ordering::Acquire);
+        if agg > self.high * a && a < self.total {
+            if self
+                .active
+                .compare_exchange(a, a + 1, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.scale_out_events.fetch_add(1, Ordering::Relaxed);
+            }
+        } else if a > self.min_active && agg <= self.low * (a - 1) {
+            if self
+                .active
+                .compare_exchange(a, a - 1, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.scale_in_events.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router shard
+// ---------------------------------------------------------------------------
+
+/// Router-side counters (all monotonic).
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Typed [`Overloaded`] rejections returned to callers.
+    pub rejected: u64,
+    /// Requests whose preferred worker was over the watermark and that
+    /// were shed to a sibling instead.
+    pub shed: u64,
+    /// Completions that carried [`ST_EXEC_ERR`].
+    pub exec_errors: u64,
+    /// Responses that failed validation (bad magic / dead slot / stale
+    /// sequence) — counted, never trusted.
+    pub stale_responses: u64,
+}
+
+/// One completed request, borrowed from the shard's pop buffer — valid
+/// for the duration of the [`RouterShard::drain`] callback only.
+pub struct Completion<'a> {
+    pub req_id: u64,
+    pub worker: u32,
+    /// [`ST_OK`] or [`ST_EXEC_ERR`].
+    pub status: u32,
+    /// Submit-to-completion latency as observed by the router.
+    pub latency: Duration,
+    /// `output_dim` little-endian f32s (zeroed when `status != ST_OK`).
+    pub payload: &'a [u8],
+}
+
+/// Read the `j`-th little-endian f32 from a completion payload.
+pub fn payload_f32(payload: &[u8], j: usize) -> f32 {
+    let at = j * 4;
+    f32::from_le_bytes([
+        payload[at],
+        payload[at + 1],
+        payload[at + 2],
+        payload[at + 3],
+    ])
+}
+
+struct Link {
+    worker: u32,
+    tx: SpscProducer,
+    rx: SpscConsumer,
+    in_flight: usize,
+}
+
+#[derive(Clone, Copy)]
+struct Pending {
+    req_id: u64,
+    /// Rank of the worker the request went to (validated on response).
+    worker: u32,
+    submitted: Instant,
+    live: bool,
+}
+
+/// One router shard: owns a private channel pair to every worker, a
+/// preallocated pending table, and the admission state. Single-threaded
+/// by design (one shard per router thread); shards share nothing but the
+/// optional [`ElasticController`].
+///
+/// Steady-state `try_submit` + `flush` + `drain` perform **zero** heap
+/// allocations, **zero** memory-slot allocations and **zero** registry
+/// locks on a directly addressable backend (asserted by
+/// `steady_state_route_zero_alloc_zero_locks`): envelopes are staged in
+/// preallocated scratch, written into the ring through reserve/commit
+/// grants, and demuxed by pending-slot index.
+pub struct RouterShard {
+    shard: u32,
+    input_dim: usize,
+    output_dim: usize,
+    ring_capacity: u64,
+    high_watermark: usize,
+    policy: DispatchPolicy,
+    links: Vec<Link>,
+    slots: Vec<Pending>,
+    free: Vec<u32>,
+    seq: u64,
+    rr: usize,
+    req_scratch: Vec<u8>,
+    rsp_scratch: Vec<u8>,
+    elastic: Option<(Arc<ElasticController>, usize)>,
+    stats: RouterStats,
+}
+
+fn make_router_link(
+    cmm: &Arc<dyn CommunicationManager>,
+    shard: u32,
+    worker: u32,
+    cfg: &ServingConfig,
+    alloc: &mut dyn FnMut(usize) -> Result<LocalMemorySlot>,
+) -> Result<Link> {
+    let (req_tag, rsp_tag) = serving_link_tags(shard, worker)?;
+    let tx = SpscProducer::create(
+        Arc::clone(cmm),
+        req_tag,
+        0,
+        request_msg_size(cfg.input_dim),
+        cfg.ring_capacity,
+        alloc(8)?,
+    )?;
+    let rsp_msg = response_msg_size(cfg.output_dim);
+    let rx = SpscConsumer::create(
+        cmm.as_ref(),
+        alloc(rsp_msg * cfg.ring_capacity as usize)?,
+        alloc(16)?,
+        rsp_tag,
+        0,
+        rsp_msg,
+        cfg.ring_capacity,
+    )?;
+    Ok(Link {
+        worker,
+        tx,
+        rx,
+        in_flight: 0,
+    })
+}
+
+impl RouterShard {
+    /// Create shard `shard` with links to `workers` (collective with the
+    /// matching [`ServingWorker::create`] calls; for distributed backends
+    /// use [`build_mesh`], which adds the canonical-order bystander
+    /// choreography).
+    pub fn create(
+        cmm: &Arc<dyn CommunicationManager>,
+        shard: u32,
+        workers: &[u32],
+        cfg: &ServingConfig,
+        mut alloc: impl FnMut(usize) -> Result<LocalMemorySlot>,
+    ) -> Result<RouterShard> {
+        let mut links = Vec::with_capacity(workers.len());
+        for &w in workers {
+            links.push(make_router_link(cmm, shard, w, cfg, &mut alloc)?);
+        }
+        Self::from_links(shard, links, cfg)
+    }
+
+    fn from_links(shard: u32, links: Vec<Link>, cfg: &ServingConfig) -> Result<RouterShard> {
+        if links.is_empty() {
+            return Err(HicrError::Bounds("router shard with zero workers".into()));
+        }
+        if cfg.high_watermark == 0 {
+            return Err(HicrError::Bounds("zero admission watermark".into()));
+        }
+        let depth = links.len() * cfg.ring_capacity as usize;
+        Ok(RouterShard {
+            shard,
+            input_dim: cfg.input_dim,
+            output_dim: cfg.output_dim,
+            ring_capacity: cfg.ring_capacity,
+            high_watermark: cfg.high_watermark,
+            policy: cfg.policy,
+            links,
+            slots: vec![
+                Pending {
+                    req_id: 0,
+                    worker: 0,
+                    submitted: Instant::now(),
+                    live: false,
+                };
+                depth
+            ],
+            free: (0..depth as u32).rev().collect(),
+            seq: 0,
+            rr: 0,
+            req_scratch: vec![0u8; request_msg_size(cfg.input_dim)],
+            rsp_scratch: vec![
+                0u8;
+                response_msg_size(cfg.output_dim) * cfg.ring_capacity as usize
+            ],
+            elastic: None,
+            stats: RouterStats::default(),
+        })
+    }
+
+    /// Drive this shard's dispatch from a shared elastic controller;
+    /// `slot` is the shard's index in the controller's depth table.
+    pub fn set_elastic(&mut self, ctl: Arc<ElasticController>, slot: usize) {
+        self.elastic = Some((ctl, slot));
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        self.stats.clone()
+    }
+
+    /// Total requests currently in flight across all links.
+    pub fn in_flight(&self) -> usize {
+        self.links.iter().map(|l| l.in_flight).sum()
+    }
+
+    /// Workers this shard currently dispatches to.
+    pub fn active_workers(&self) -> usize {
+        match &self.elastic {
+            Some((ctl, _)) => ctl.active().clamp(1, self.links.len()),
+            None => self.links.len(),
+        }
+    }
+
+    fn admissible(&self, i: usize) -> bool {
+        let d = self.links[i].in_flight;
+        d < self.high_watermark && (d as u64) < self.ring_capacity
+    }
+
+    /// Index of the least-loaded worker among the first `active` links.
+    fn least_loaded(&self, active: usize) -> usize {
+        self.links[..active]
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.in_flight)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    fn observe_elastic(&self) {
+        if let Some((ctl, slot)) = &self.elastic {
+            ctl.observe(*slot, self.in_flight());
+        }
+    }
+
+    /// Route one request: admission check, worker choice, envelope write
+    /// into the chosen ring. Returns the request id, or the typed
+    /// [`Overloaded`] backpressure signal (outer `Err` is reserved for
+    /// transport/geometry failures). Messages become visible to workers
+    /// at the next [`flush`](Self::flush) — submit a burst, then flush
+    /// once (one doorbell per touched link).
+    pub fn try_submit(&mut self, input: &[f32]) -> Result<AdmitResult> {
+        if input.len() != self.input_dim {
+            return Err(HicrError::Bounds(format!(
+                "input dim {} != {}",
+                input.len(),
+                self.input_dim
+            )));
+        }
+        let active = self.active_workers();
+        let preferred = match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let p = self.rr % active;
+                self.rr = self.rr.wrapping_add(1);
+                p
+            }
+            DispatchPolicy::LeastLoaded => self.least_loaded(active),
+            DispatchPolicy::ConsistentHash => {
+                ((self.seq.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 33) % active as u64) as usize
+            }
+        };
+        let mut target = preferred;
+        if !self.admissible(target) {
+            // Watermark crossed: shed to the least-loaded active sibling.
+            let best = self.least_loaded(active);
+            let min_depth = self.links[best].in_flight;
+            if !self.admissible(best) {
+                // Every active worker saturated: typed rejection, and
+                // still publish the depth — saturation is exactly the
+                // signal that must drive elastic scale-out.
+                self.stats.rejected += 1;
+                self.observe_elastic();
+                return Ok(Err(Overloaded { min_depth, active }));
+            }
+            self.stats.shed += 1;
+            target = best;
+        }
+        let Some(slot) = self.free.pop() else {
+            // Unreachable while per-link credit holds (table depth =
+            // links × ring_capacity); treat as saturation, not a panic.
+            self.stats.rejected += 1;
+            self.observe_elastic();
+            return Ok(Err(Overloaded {
+                min_depth: self.high_watermark,
+                active,
+            }));
+        };
+        self.seq = self.seq.wrapping_add(1);
+        let req_id = (self.seq << 32) | slot as u64;
+        self.req_scratch[0..8].copy_from_slice(&req_id.to_le_bytes());
+        self.req_scratch[8..12].copy_from_slice(&self.shard.to_le_bytes());
+        self.req_scratch[12..16].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+        for (j, v) in input.iter().enumerate() {
+            let at = REQ_HDR + j * 4;
+            self.req_scratch[at..at + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        match self.links[target].tx.reserve()? {
+            Some(mut grant) => {
+                grant.write(0, &self.req_scratch)?;
+                grant.commit()?;
+            }
+            None => {
+                // Ring full despite credit accounting (cannot happen
+                // while in_flight < ring_capacity, but a rollback beats
+                // a wedged shard if the invariant ever breaks).
+                self.free.push(slot);
+                self.stats.rejected += 1;
+                self.observe_elastic();
+                return Ok(Err(Overloaded {
+                    min_depth: self.links[target].in_flight,
+                    active,
+                }));
+            }
+        }
+        self.slots[slot as usize] = Pending {
+            req_id,
+            worker: self.links[target].worker,
+            submitted: Instant::now(),
+            live: true,
+        };
+        self.links[target].in_flight += 1;
+        self.stats.submitted += 1;
+        self.observe_elastic();
+        Ok(Ok(req_id))
+    }
+
+    /// Publish every staged request (one coalesced doorbell per link with
+    /// pending messages; links with nothing staged pay nothing).
+    pub fn flush(&mut self) -> Result<()> {
+        for l in &mut self.links {
+            l.tx.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Collect completed responses from every link (active or not — a
+    /// deactivated worker still drains its residue), invoking
+    /// `on_complete` per response. Returns the number of completions.
+    pub fn drain(&mut self, mut on_complete: impl FnMut(&Completion<'_>)) -> Result<u64> {
+        let rsp_msg = response_msg_size(self.output_dim);
+        let mut total = 0u64;
+        for link in self.links.iter_mut() {
+            let n = link.rx.pop_batch(&mut self.rsp_scratch)?;
+            for k in 0..n as usize {
+                let at = k * rsp_msg;
+                let req_id =
+                    u64::from_le_bytes(self.rsp_scratch[at..at + 8].try_into().unwrap());
+                let status =
+                    u32::from_le_bytes(self.rsp_scratch[at + 8..at + 12].try_into().unwrap());
+                let magic =
+                    u32::from_le_bytes(self.rsp_scratch[at + 12..at + 16].try_into().unwrap());
+                let slot = (req_id & 0xFFFF_FFFF) as usize;
+                if magic != WIRE_MAGIC
+                    || slot >= self.slots.len()
+                    || !self.slots[slot].live
+                    || self.slots[slot].req_id != req_id
+                    || self.slots[slot].worker != link.worker
+                {
+                    self.stats.stale_responses += 1;
+                    continue;
+                }
+                let latency = self.slots[slot].submitted.elapsed();
+                self.slots[slot].live = false;
+                self.free.push(slot as u32);
+                link.in_flight = link.in_flight.saturating_sub(1);
+                self.stats.completed += 1;
+                if status != ST_OK {
+                    self.stats.exec_errors += 1;
+                }
+                total += 1;
+                on_complete(&Completion {
+                    req_id,
+                    worker: link.worker,
+                    status,
+                    latency,
+                    payload: &self.rsp_scratch[at + RSP_HDR..at + RSP_HDR + self.output_dim * 4],
+                });
+            }
+        }
+        // Publish the (possibly now lower) depth even on idle drains so
+        // the controller can scale the active set back in.
+        self.observe_elastic();
+        Ok(total)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving worker
+// ---------------------------------------------------------------------------
+
+/// Worker-side counters (all monotonic).
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    /// Requests ingested from shard rings into the batcher.
+    pub requests: u64,
+    /// Response envelopes pushed back.
+    pub responses: u64,
+    /// Request envelopes that failed validation (bad magic / wrong
+    /// origin) — counted and dropped.
+    pub malformed: u64,
+    /// Responses sent with [`ST_EXEC_ERR`].
+    pub exec_errors: u64,
+}
+
+/// One serving worker: consumes request rings (one per shard), feeds the
+/// continuous batcher, and streams responses back on per-shard response
+/// rings. Completions travel from the batcher thread to the worker loop
+/// over an in-process queue so each `SpscProducer` stays single-threaded.
+pub struct ServingWorker {
+    shard_ids: Vec<u32>,
+    rx: Vec<SpscConsumer>,
+    tx: Vec<SpscProducer>,
+    input_dim: usize,
+    output_dim: usize,
+    batcher: Arc<Batcher>,
+    done_tx: Sender<(usize, u64, BatchResponse)>,
+    done_rx: Receiver<(usize, u64, BatchResponse)>,
+    req_buf: Vec<u8>,
+    out_bufs: Vec<Vec<u8>>,
+    stats: WorkerStats,
+}
+
+struct WorkerLink {
+    rx: SpscConsumer,
+    tx: SpscProducer,
+}
+
+fn make_worker_link(
+    cmm: &Arc<dyn CommunicationManager>,
+    shard: u32,
+    worker: u32,
+    cfg: &ServingConfig,
+    alloc: &mut dyn FnMut(usize) -> Result<LocalMemorySlot>,
+) -> Result<WorkerLink> {
+    let (req_tag, rsp_tag) = serving_link_tags(shard, worker)?;
+    let req_msg = request_msg_size(cfg.input_dim);
+    let rx = SpscConsumer::create(
+        cmm.as_ref(),
+        alloc(req_msg * cfg.ring_capacity as usize)?,
+        alloc(16)?,
+        req_tag,
+        0,
+        req_msg,
+        cfg.ring_capacity,
+    )?;
+    let tx = SpscProducer::create(
+        Arc::clone(cmm),
+        rsp_tag,
+        0,
+        response_msg_size(cfg.output_dim),
+        cfg.ring_capacity,
+        alloc(8)?,
+    )?;
+    Ok(WorkerLink { rx, tx })
+}
+
+impl ServingWorker {
+    /// Create worker `rank` serving `shards` (collective with the
+    /// matching [`RouterShard::create`]; for distributed backends use
+    /// [`build_mesh`]).
+    pub fn create(
+        cmm: &Arc<dyn CommunicationManager>,
+        rank: u32,
+        shards: &[u32],
+        cfg: &ServingConfig,
+        mut alloc: impl FnMut(usize) -> Result<LocalMemorySlot>,
+        exec: BatchExecutor,
+    ) -> Result<ServingWorker> {
+        let mut links = Vec::with_capacity(shards.len());
+        for &s in shards {
+            links.push(make_worker_link(cmm, s, rank, cfg, &mut alloc)?);
+        }
+        Self::from_links(shards.to_vec(), links, cfg, exec)
+    }
+
+    fn from_links(
+        shard_ids: Vec<u32>,
+        links: Vec<WorkerLink>,
+        cfg: &ServingConfig,
+        exec: BatchExecutor,
+    ) -> Result<ServingWorker> {
+        if links.is_empty() {
+            return Err(HicrError::Bounds("serving worker with zero shards".into()));
+        }
+        let batcher = Batcher::start(
+            BatcherConfig {
+                max_batch: cfg.max_batch,
+                max_wait: cfg.batch_window,
+                input_dim: cfg.input_dim,
+                output_dim: cfg.output_dim,
+            },
+            exec,
+        );
+        let (done_tx, done_rx) = channel();
+        let cap = cfg.ring_capacity as usize;
+        let (mut rx, mut tx) = (Vec::new(), Vec::new());
+        for l in links {
+            rx.push(l.rx);
+            tx.push(l.tx);
+        }
+        let out_bufs = (0..tx.len())
+            .map(|_| Vec::with_capacity(response_msg_size(cfg.output_dim) * cap))
+            .collect();
+        Ok(ServingWorker {
+            shard_ids,
+            rx,
+            tx,
+            input_dim: cfg.input_dim,
+            output_dim: cfg.output_dim,
+            batcher,
+            done_tx,
+            done_rx,
+            req_buf: vec![0u8; request_msg_size(cfg.input_dim) * cap],
+            out_bufs,
+            stats: WorkerStats::default(),
+        })
+    }
+
+    /// Requests currently waiting in this worker's request rings.
+    pub fn queue_depth(&self) -> Result<u64> {
+        let mut d = 0;
+        for c in &self.rx {
+            d += c.depth()?;
+        }
+        Ok(d)
+    }
+
+    pub fn stats(&self) -> WorkerStats {
+        self.stats.clone()
+    }
+
+    /// The underlying batcher's packing counters.
+    pub fn batch_stats(&self) -> crate::runtime::batcher::BatchStats {
+        self.batcher.stats()
+    }
+
+    /// One scheduling quantum: ingest request batches from every shard
+    /// ring into the batcher, then stage and push any completed
+    /// responses. Returns the number of messages moved (0 = idle; callers
+    /// should back off).
+    pub fn pump(&mut self) -> Result<u64> {
+        let req_msg = request_msg_size(self.input_dim);
+        let mut moved = 0u64;
+        for si in 0..self.rx.len() {
+            let n = self.rx[si].pop_batch(&mut self.req_buf)?;
+            for k in 0..n as usize {
+                let at = k * req_msg;
+                let req_id =
+                    u64::from_le_bytes(self.req_buf[at..at + 8].try_into().unwrap());
+                let origin =
+                    u32::from_le_bytes(self.req_buf[at + 8..at + 12].try_into().unwrap());
+                let magic =
+                    u32::from_le_bytes(self.req_buf[at + 12..at + 16].try_into().unwrap());
+                if magic != WIRE_MAGIC || origin != self.shard_ids[si] {
+                    self.stats.malformed += 1;
+                    continue;
+                }
+                let mut input = Vec::with_capacity(self.input_dim);
+                for j in 0..self.input_dim {
+                    let v = REQ_HDR + at + j * 4;
+                    input.push(f32::from_le_bytes(
+                        self.req_buf[v..v + 4].try_into().unwrap(),
+                    ));
+                }
+                let done = self.done_tx.clone();
+                self.batcher.submit_with(input, move |r| {
+                    // The worker loop owns the response rings; completions
+                    // cross threads through this queue. A send after the
+                    // loop stopped is discarded by `shutdown`'s drain.
+                    let _ = done.send((si, req_id, r));
+                })?;
+                self.stats.requests += 1;
+            }
+            moved += n;
+        }
+        moved += self.stage_completions();
+        self.push_staged()?;
+        Ok(moved)
+    }
+
+    /// Move batcher completions into the per-shard staging buffers.
+    fn stage_completions(&mut self) -> u64 {
+        let rsp_msg = response_msg_size(self.output_dim);
+        let mut staged = 0u64;
+        while let Ok((si, req_id, resp)) = self.done_rx.try_recv() {
+            let buf = &mut self.out_bufs[si];
+            let base = buf.len();
+            buf.resize(base + rsp_msg, 0);
+            buf[base..base + 8].copy_from_slice(&req_id.to_le_bytes());
+            let status = match &resp {
+                Ok((out, _latency)) => {
+                    for (j, v) in out.iter().take(self.output_dim).enumerate() {
+                        let at = base + RSP_HDR + j * 4;
+                        buf[at..at + 4].copy_from_slice(&v.to_le_bytes());
+                    }
+                    ST_OK
+                }
+                Err(_) => {
+                    self.stats.exec_errors += 1;
+                    ST_EXEC_ERR
+                }
+            };
+            buf[base + 8..base + 12].copy_from_slice(&status.to_le_bytes());
+            buf[base + 12..base + 16].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+            staged += 1;
+        }
+        staged
+    }
+
+    /// Push staged responses (one batch = one doorbell per shard). The
+    /// router's credit window (≤ ring_capacity in flight per link)
+    /// guarantees the response ring has room, so the blocking push
+    /// returns without spinning in steady state.
+    fn push_staged(&mut self) -> Result<()> {
+        let rsp_msg = response_msg_size(self.output_dim);
+        for si in 0..self.tx.len() {
+            if !self.out_bufs[si].is_empty() {
+                self.tx[si].push_batch_blocking(&self.out_bufs[si])?;
+                self.stats.responses += (self.out_bufs[si].len() / rsp_msg) as u64;
+                self.out_bufs[si].clear();
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain and stop: ingest any straggler request envelopes, shut the
+    /// batcher down (its contract resolves every accepted request — a
+    /// response or a typed error, never a hung waiter), and push every
+    /// resulting response before returning.
+    pub fn shutdown(&mut self) -> Result<WorkerStats> {
+        self.pump()?;
+        self.batcher.shutdown();
+        self.stage_completions();
+        self.push_staged()?;
+        Ok(self.stats.clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Collective mesh assembly
+// ---------------------------------------------------------------------------
+
+/// This instance's role in the serving mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingRole {
+    Router { shard: u32 },
+    Worker { rank: u32 },
+    /// Participates in the collective exchanges without owning rings
+    /// (e.g. a monitoring instance in the same world).
+    Observer,
+}
+
+/// The node [`build_mesh`] hands back for this instance's role.
+pub enum ServingNode {
+    Router(RouterShard),
+    Worker(ServingWorker),
+    Observer,
+}
+
+/// Assemble the full shards × workers link set collectively. **Every**
+/// instance of the world calls this with identical `shards`/`workers`/
+/// `cfg` and its own role; instances that are not a given link's shard
+/// or worker participate in that link's slot exchanges as bystanders
+/// (`exchange_global_slots(tag, &[])`), which the blocking collectives
+/// of the distributed backends require. Link order is canonical (sorted
+/// shards outer, sorted workers inner; request ring before response
+/// ring), so every instance walks the same exchange sequence.
+///
+/// `exec` is consulted only when `role` is a worker.
+pub fn build_mesh(
+    cmm: &Arc<dyn CommunicationManager>,
+    role: ServingRole,
+    shards: &[u32],
+    workers: &[u32],
+    cfg: &ServingConfig,
+    mut alloc: impl FnMut(usize) -> Result<LocalMemorySlot>,
+    exec: Option<BatchExecutor>,
+) -> Result<ServingNode> {
+    if shards.is_empty() || workers.is_empty() {
+        return Err(HicrError::Bounds(
+            "serving mesh needs >=1 shard and >=1 worker".into(),
+        ));
+    }
+    let mut shards_sorted = shards.to_vec();
+    shards_sorted.sort_unstable();
+    shards_sorted.dedup();
+    let mut workers_sorted = workers.to_vec();
+    workers_sorted.sort_unstable();
+    workers_sorted.dedup();
+    match role {
+        ServingRole::Router { shard } if !shards_sorted.contains(&shard) => {
+            return Err(HicrError::Bounds(format!(
+                "router shard {shard} not in the shard set"
+            )));
+        }
+        ServingRole::Worker { rank } if !workers_sorted.contains(&rank) => {
+            return Err(HicrError::Bounds(format!(
+                "worker rank {rank} not in the worker set"
+            )));
+        }
+        _ => {}
+    }
+    let mut router_links = Vec::new();
+    let mut worker_links = Vec::new();
+    let mut worker_shards = Vec::new();
+    for &s in &shards_sorted {
+        for &w in &workers_sorted {
+            match role {
+                ServingRole::Router { shard } if shard == s => {
+                    router_links.push(make_router_link(cmm, s, w, cfg, &mut alloc)?);
+                }
+                ServingRole::Worker { rank } if rank == w => {
+                    worker_links.push(make_worker_link(cmm, s, w, cfg, &mut alloc)?);
+                    worker_shards.push(s);
+                }
+                _ => {
+                    let (req_tag, rsp_tag) = serving_link_tags(s, w)?;
+                    cmm.exchange_global_slots(req_tag, &[])?;
+                    cmm.exchange_global_slots(rsp_tag, &[])?;
+                }
+            }
+        }
+    }
+    match role {
+        ServingRole::Router { shard } => Ok(ServingNode::Router(RouterShard::from_links(
+            shard,
+            router_links,
+            cfg,
+        )?)),
+        ServingRole::Worker { .. } => {
+            let exec = exec.ok_or_else(|| {
+                HicrError::Bounds("worker role needs a batch executor".into())
+            })?;
+            Ok(ServingNode::Worker(ServingWorker::from_links(
+                worker_shards,
+                worker_links,
+                cfg,
+                exec,
+            )?))
+        }
+        ServingRole::Observer => Ok(ServingNode::Observer),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::threads::ThreadsCommunicationManager;
+    use crate::core::ids::MemorySpaceId;
+    use std::sync::atomic::AtomicBool;
+
+    fn alloc(len: usize) -> Result<LocalMemorySlot> {
+        LocalMemorySlot::alloc(MemorySpaceId(1), len)
+    }
+
+    fn cfg(cap: u64, watermark: usize, policy: DispatchPolicy) -> ServingConfig {
+        ServingConfig {
+            input_dim: 4,
+            output_dim: 2,
+            ring_capacity: cap,
+            high_watermark: watermark,
+            policy,
+            max_batch: 4,
+            batch_window: Duration::from_micros(100),
+        }
+    }
+
+    /// Deterministic executor: out[j] = sum(inputs) * (j+1) per example.
+    fn sum_exec(input_dim: usize, output_dim: usize) -> BatchExecutor {
+        Arc::new(move |input: &[f32]| {
+            let examples = input.len() / input_dim;
+            let mut out = vec![0f32; examples * output_dim];
+            for e in 0..examples {
+                let s: f32 = input[e * input_dim..(e + 1) * input_dim].iter().sum();
+                for j in 0..output_dim {
+                    out[e * output_dim + j] = s * (j + 1) as f32;
+                }
+            }
+            Ok(out)
+        })
+    }
+
+    fn spawn_worker(
+        cmm: &Arc<dyn CommunicationManager>,
+        rank: u32,
+        shards: Vec<u32>,
+        scfg: ServingConfig,
+        exec: BatchExecutor,
+        stop: Arc<AtomicBool>,
+    ) -> std::thread::JoinHandle<WorkerStats> {
+        let cmm = Arc::clone(cmm);
+        std::thread::spawn(move || {
+            let mut w =
+                ServingWorker::create(&cmm, rank, &shards, &scfg, alloc, exec).unwrap();
+            let mut backoff = crate::util::backoff::Backoff::new();
+            while !stop.load(Ordering::Acquire) {
+                if w.pump().unwrap() == 0 {
+                    backoff.wait();
+                } else {
+                    backoff.reset();
+                }
+            }
+            w.shutdown().unwrap()
+        })
+    }
+
+    #[test]
+    fn link_tags_are_disjoint_and_namespaced() {
+        let mut seen = std::collections::HashSet::new();
+        for s in [0u32, 1, 7] {
+            for w in [0u32, 1, 9] {
+                let (req, rsp) = serving_link_tags(s, w).unwrap();
+                assert!(seen.insert(req.0), "request tag aliased");
+                assert!(seen.insert(rsp.0), "response tag aliased");
+                assert_eq!(req.0 >> 52, 0x5EB);
+                assert_eq!(rsp.0 >> 52, 0x5EB);
+                // Disjoint from the RPC and DataObject namespaces.
+                assert_ne!(req.0 >> 52, crate::frontends::rpc::RPC_TAG_BASE >> 52);
+                assert_ne!(
+                    req.0 >> 48,
+                    crate::frontends::dataobject::DATAOBJECT_TAG_BASE >> 48
+                );
+            }
+        }
+        assert!(serving_link_tags(MAX_SERVING_RANK + 1, 0).is_err());
+        assert!(serving_link_tags(0, MAX_SERVING_RANK + 1).is_err());
+    }
+
+    #[test]
+    fn overloaded_converts_to_typed_error() {
+        let o = Overloaded {
+            min_depth: 8,
+            active: 2,
+        };
+        match HicrError::from(o) {
+            HicrError::Rejected(m) => assert!(m.contains("overloaded")),
+            other => panic!("wrong error kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_over_threads_backend() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let c = cfg(16, 8, DispatchPolicy::RoundRobin);
+        let stop = Arc::new(AtomicBool::new(false));
+        let workers: Vec<_> = (0..2)
+            .map(|w| {
+                spawn_worker(
+                    &cmm,
+                    w,
+                    vec![0],
+                    c.clone(),
+                    sum_exec(c.input_dim, c.output_dim),
+                    Arc::clone(&stop),
+                )
+            })
+            .collect();
+        let mut router = RouterShard::create(&cmm, 0, &[0, 1], &c, alloc).unwrap();
+        let mut expected = std::collections::HashMap::new();
+        let total = 64usize;
+        let mut submitted = 0usize;
+        let mut completed = 0usize;
+        let mut checked = 0usize;
+        while completed < total {
+            while submitted < total {
+                let input = vec![submitted as f32, 1.0, 2.0, 3.0];
+                match router.try_submit(&input).unwrap() {
+                    Ok(id) => {
+                        expected.insert(id, input.iter().sum::<f32>());
+                        submitted += 1;
+                    }
+                    Err(_) => break,
+                }
+            }
+            router.flush().unwrap();
+            completed += router
+                .drain(|done| {
+                    let sum = expected[&done.req_id];
+                    assert_eq!(done.status, ST_OK);
+                    assert_eq!(payload_f32(done.payload, 0), sum);
+                    assert_eq!(payload_f32(done.payload, 1), sum * 2.0);
+                    checked += 1;
+                })
+                .unwrap() as usize;
+        }
+        stop.store(true, Ordering::Release);
+        let mut wstats = WorkerStats::default();
+        for h in workers {
+            let s = h.join().unwrap();
+            wstats.requests += s.requests;
+            wstats.responses += s.responses;
+            wstats.malformed += s.malformed;
+        }
+        assert_eq!(checked, total);
+        assert_eq!(wstats.requests, total as u64);
+        assert_eq!(wstats.responses, total as u64);
+        assert_eq!(wstats.malformed, 0);
+        let rs = router.stats();
+        assert_eq!(rs.submitted, total as u64);
+        assert_eq!(rs.completed, total as u64);
+        assert_eq!(rs.exec_errors, 0);
+        assert_eq!(rs.stale_responses, 0);
+        assert_eq!(router.in_flight(), 0);
+    }
+
+    /// Satellite: saturate a 1-router/2-worker mesh past the watermark.
+    /// (a) Overloaded rejections are returned (typed), not dropped;
+    /// (b) every accepted request completes; (c) queue depth stays
+    /// bounded by active × watermark throughout.
+    #[test]
+    fn overload_returns_typed_rejection_and_bounds_depth() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let c = cfg(4, 2, DispatchPolicy::LeastLoaded);
+        let slow: BatchExecutor = {
+            let inner = sum_exec(c.input_dim, c.output_dim);
+            Arc::new(move |input: &[f32]| {
+                std::thread::sleep(Duration::from_millis(3));
+                inner(input)
+            })
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let workers: Vec<_> = (0..2)
+            .map(|w| {
+                spawn_worker(&cmm, w, vec![0], c.clone(), slow.clone(), Arc::clone(&stop))
+            })
+            .collect();
+        let mut router = RouterShard::create(&cmm, 0, &[0, 1], &c, alloc).unwrap();
+        let input = vec![1.0f32; c.input_dim];
+        let mut accepted = 0u64;
+        let mut rejected = 0u64;
+        for _ in 0..64 {
+            match router.try_submit(&input).unwrap() {
+                Ok(_) => accepted += 1,
+                Err(over) => {
+                    // The typed rejection reports genuine saturation.
+                    assert!(over.min_depth >= c.high_watermark);
+                    assert_eq!(over.active, 2);
+                    rejected += 1;
+                }
+            }
+            router.flush().unwrap();
+            // (c) bounded: never more than active × watermark in flight.
+            assert!(router.in_flight() <= 2 * c.high_watermark);
+        }
+        assert!(rejected > 0, "blast past the watermark must reject");
+        assert!(accepted >= 4, "watermark admits work before saturating");
+        // (b) every accepted request completes once workers catch up.
+        let mut completed = 0u64;
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while completed < accepted {
+            assert!(Instant::now() < deadline, "accepted requests never completed");
+            completed += router.drain(|done| assert_eq!(done.status, ST_OK)).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        stop.store(true, Ordering::Release);
+        for h in workers {
+            h.join().unwrap();
+        }
+        let rs = router.stats();
+        assert_eq!(rs.submitted, accepted);
+        assert_eq!(rs.rejected, rejected);
+        assert_eq!(rs.completed, accepted);
+        assert_eq!(router.in_flight(), 0);
+    }
+
+    /// A watermarked preferred worker sheds to its sibling instead of
+    /// rejecting while the sibling has room.
+    #[test]
+    fn watermarked_worker_sheds_to_sibling() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let c = cfg(8, 2, DispatchPolicy::RoundRobin);
+        let stop = Arc::new(AtomicBool::new(false));
+        // Only worker 0 pumps; worker 1 exists but never serves, so its
+        // in-flight count sticks at the watermark and round-robin picks
+        // of it must shed to worker 0.
+        let w0 = spawn_worker(
+            &cmm,
+            0,
+            vec![0],
+            c.clone(),
+            sum_exec(c.input_dim, c.output_dim),
+            Arc::clone(&stop),
+        );
+        let cmm2 = Arc::clone(&cmm);
+        let c2 = c.clone();
+        let stop2 = Arc::clone(&stop);
+        let idle = std::thread::spawn(move || {
+            // Create the rings (collective) but never pump them.
+            let mut w = ServingWorker::create(
+                &cmm2,
+                1,
+                &[0],
+                &c2,
+                alloc,
+                sum_exec(c2.input_dim, c2.output_dim),
+            )
+            .unwrap();
+            // Parked until the test ends so the consumer side stays alive.
+            while !stop2.load(Ordering::Acquire) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            w.shutdown().unwrap();
+        });
+        let mut router = RouterShard::create(&cmm, 0, &[0, 1], &c, alloc).unwrap();
+        let input = vec![1.0f32; c.input_dim];
+        let mut accepted = 0u64;
+        let mut completed = 0u64;
+        for _ in 0..40 {
+            if router.try_submit(&input).unwrap().is_ok() {
+                accepted += 1;
+            }
+            router.flush().unwrap();
+            completed += router.drain(|_| {}).unwrap();
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        // Drain worker 0's pipeline; only the stuck worker's requests
+        // (at most the watermark) remain in flight, everything else
+        // flowed through worker 0 via shedding.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while router.in_flight() > c.high_watermark && Instant::now() < deadline {
+            completed += router.drain(|_| {}).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let rs = router.stats();
+        assert!(rs.shed > 0, "round-robin picks of the stuck worker must shed");
+        assert_eq!(rs.rejected, 0, "sibling capacity means no rejections");
+        assert!(router.in_flight() <= c.high_watermark);
+        assert_eq!(completed + router.in_flight() as u64, accepted);
+        stop.store(true, Ordering::Release);
+        w0.join().unwrap();
+        idle.join().unwrap();
+    }
+
+    #[test]
+    fn elastic_controller_scales_out_and_in_with_hysteresis() {
+        let ctl = ElasticController::new(1, 4, 1, 4, 1).unwrap();
+        assert_eq!(ctl.active(), 1);
+        // Deep backlog: one scale-out step per observation.
+        ctl.observe(0, 20);
+        assert_eq!(ctl.active(), 2);
+        ctl.observe(0, 20);
+        ctl.observe(0, 20);
+        assert_eq!(ctl.active(), 4);
+        ctl.observe(0, 20);
+        assert_eq!(ctl.active(), 4, "never exceeds the provisioned pool");
+        // Load inside the hysteresis band: no flapping.
+        ctl.observe(0, 8);
+        assert_eq!(ctl.active(), 4);
+        // Idle: steps back down to the floor.
+        ctl.observe(0, 0);
+        ctl.observe(0, 0);
+        ctl.observe(0, 0);
+        assert_eq!(ctl.active(), 1);
+        ctl.observe(0, 0);
+        assert_eq!(ctl.active(), 1, "never drops below min_active");
+        let (out, inn) = ctl.scale_events();
+        assert_eq!(out, 3);
+        assert_eq!(inn, 3);
+        assert!(ElasticController::new(1, 4, 1, 2, 2).is_err(), "low < high");
+        assert!(ElasticController::new(1, 4, 0, 4, 1).is_err());
+        assert!(ElasticController::new(1, 4, 5, 4, 1).is_err());
+    }
+
+    /// Router + controller integration: flooding grows the active set,
+    /// drained-idle shrinks it back.
+    #[test]
+    fn router_activation_follows_aggregate_depth() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let c = cfg(8, 8, DispatchPolicy::LeastLoaded);
+        let stop = Arc::new(AtomicBool::new(false));
+        let workers: Vec<_> = (0..3)
+            .map(|w| {
+                spawn_worker(
+                    &cmm,
+                    w,
+                    vec![0],
+                    c.clone(),
+                    sum_exec(c.input_dim, c.output_dim),
+                    Arc::clone(&stop),
+                )
+            })
+            .collect();
+        let mut router = RouterShard::create(&cmm, 0, &[0, 1, 2], &c, alloc).unwrap();
+        let ctl = ElasticController::new(1, 3, 1, 2, 1).unwrap();
+        router.set_elastic(Arc::clone(&ctl), 0);
+        assert_eq!(router.active_workers(), 1);
+        let input = vec![1.0f32; c.input_dim];
+        let mut accepted = 0u64;
+        // Flood: depth > high × active drives activation up.
+        for _ in 0..24 {
+            if router.try_submit(&input).unwrap().is_ok() {
+                accepted += 1;
+            }
+        }
+        router.flush().unwrap();
+        assert_eq!(ctl.active(), 3, "sustained backlog activates the pool");
+        // Drain to idle: activation falls back to the floor.
+        let mut completed = 0u64;
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while completed < accepted && Instant::now() < deadline {
+            completed += router.drain(|_| {}).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(completed, accepted);
+        for _ in 0..4 {
+            router.drain(|_| {}).unwrap();
+        }
+        assert_eq!(ctl.active(), 1, "idle tier deactivates down to the floor");
+        let (out_events, in_events) = ctl.scale_events();
+        assert!(out_events >= 2 && in_events >= 2);
+        stop.store(true, Ordering::Release);
+        for h in workers {
+            h.join().unwrap();
+        }
+    }
+
+    /// Executor failures arrive as typed ST_EXEC_ERR completions — the
+    /// batcher drain contract made wire-visible.
+    #[test]
+    fn executor_failure_is_wire_visible() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let c = cfg(8, 8, DispatchPolicy::RoundRobin);
+        let fail: BatchExecutor = Arc::new(|_| Err(HicrError::Xla("device lost".into())));
+        let stop = Arc::new(AtomicBool::new(false));
+        let w = spawn_worker(&cmm, 0, vec![0], c.clone(), fail, Arc::clone(&stop));
+        let mut router = RouterShard::create(&cmm, 0, &[0], &c, alloc).unwrap();
+        let input = vec![1.0f32; c.input_dim];
+        let mut failures = 0u64;
+        for _ in 0..4 {
+            router.try_submit(&input).unwrap().unwrap();
+        }
+        router.flush().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while failures < 4 && Instant::now() < deadline {
+            failures += router
+                .drain(|done| {
+                    assert_eq!(done.status, ST_EXEC_ERR);
+                    assert_eq!(payload_f32(done.payload, 0), 0.0);
+                })
+                .unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(failures, 4);
+        assert_eq!(router.stats().exec_errors, 4);
+        stop.store(true, Ordering::Release);
+        let ws = w.join().unwrap();
+        assert_eq!(ws.exec_errors, 4);
+    }
+
+    /// Collective mesh assembly: 2 shards × 2 workers built through
+    /// `build_mesh` in four threads, each walking the same canonical
+    /// order; both shards roundtrip against both workers.
+    #[test]
+    fn build_mesh_assembles_all_roles() {
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let c = cfg(16, 8, DispatchPolicy::LeastLoaded);
+        let shards = vec![10u32, 11];
+        let workers = vec![20u32, 21];
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut worker_handles = Vec::new();
+        for &w in &workers {
+            let cmm = Arc::clone(&cmm);
+            let (c, shards, workers) = (c.clone(), shards.clone(), workers.clone());
+            let stop = Arc::clone(&stop);
+            worker_handles.push(std::thread::spawn(move || {
+                let node = build_mesh(
+                    &cmm,
+                    ServingRole::Worker { rank: w },
+                    &shards,
+                    &workers,
+                    &c,
+                    alloc,
+                    Some(sum_exec(c.input_dim, c.output_dim)),
+                )
+                .unwrap();
+                let ServingNode::Worker(mut sw) = node else {
+                    panic!("worker role must yield a worker node")
+                };
+                let mut backoff = crate::util::backoff::Backoff::new();
+                while !stop.load(Ordering::Acquire) {
+                    if sw.pump().unwrap() == 0 {
+                        backoff.wait();
+                    } else {
+                        backoff.reset();
+                    }
+                }
+                sw.shutdown().unwrap()
+            }));
+        }
+        let mut shard_handles = Vec::new();
+        for &s in &shards {
+            let cmm = Arc::clone(&cmm);
+            let (c, shards, workers) = (c.clone(), shards.clone(), workers.clone());
+            shard_handles.push(std::thread::spawn(move || {
+                let node = build_mesh(
+                    &cmm,
+                    ServingRole::Router { shard: s },
+                    &shards,
+                    &workers,
+                    &c,
+                    alloc,
+                    None,
+                )
+                .unwrap();
+                let ServingNode::Router(mut router) = node else {
+                    panic!("router role must yield a router node")
+                };
+                let total = 32usize;
+                let mut submitted = 0;
+                let mut completed = 0;
+                while completed < total {
+                    while submitted < total {
+                        let input = vec![s as f32, 1.0, 0.0, 0.0];
+                        match router.try_submit(&input).unwrap() {
+                            Ok(_) => submitted += 1,
+                            Err(_) => break,
+                        }
+                    }
+                    router.flush().unwrap();
+                    completed += router
+                        .drain(|done| {
+                            assert_eq!(done.status, ST_OK);
+                            assert_eq!(payload_f32(done.payload, 0), s as f32 + 1.0);
+                        })
+                        .unwrap() as usize;
+                }
+                let st = router.stats();
+                assert_eq!(st.completed, total as u64);
+                assert_eq!(st.stale_responses, 0);
+            }));
+        }
+        for h in shard_handles {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Release);
+        let mut served = 0;
+        for h in worker_handles {
+            served += h.join().unwrap().responses;
+        }
+        assert_eq!(served, 64, "both workers served both shards");
+    }
+
+    /// Acceptance: the steady-state router hot path — submit, flush,
+    /// drain — performs **0 heap allocations, 0 slot allocations and 0
+    /// registry-mutex acquisitions per routed request** on a directly
+    /// addressable backend. Mirrors the channels-frontend instrumented
+    /// assertion one layer up the stack.
+    #[test]
+    fn steady_state_route_zero_alloc_zero_locks() {
+        let cmm_impl = Arc::new(ThreadsCommunicationManager::new());
+        let cmm: Arc<dyn CommunicationManager> = Arc::clone(&cmm_impl) as _;
+        let c = cfg(16, 8, DispatchPolicy::LeastLoaded);
+        let stop = Arc::new(AtomicBool::new(false));
+        let workers: Vec<_> = (0..2)
+            .map(|w| {
+                spawn_worker(
+                    &cmm,
+                    w,
+                    vec![0],
+                    c.clone(),
+                    sum_exec(c.input_dim, c.output_dim),
+                    Arc::clone(&stop),
+                )
+            })
+            .collect();
+        let mut router = RouterShard::create(&cmm, 0, &[0, 1], &c, alloc).unwrap();
+        let input = vec![1.0f32; c.input_dim];
+        // Closed loop with a window below the watermark so neither the
+        // shed path nor the ring-full reserve slow path is entered.
+        let window = 4usize;
+        let mut run_loop = |requests: usize| {
+            let mut in_flight = 0usize;
+            let mut submitted = 0usize;
+            let mut completed = 0usize;
+            while completed < requests {
+                while in_flight < window && submitted < requests {
+                    match router.try_submit(&input).unwrap() {
+                        Ok(_) => {
+                            in_flight += 1;
+                            submitted += 1;
+                        }
+                        Err(_) => break,
+                    }
+                }
+                router.flush().unwrap();
+                let n = router.drain(|done| assert_eq!(done.status, ST_OK)).unwrap() as usize;
+                in_flight -= n;
+                completed += n;
+            }
+        };
+        // Warmup resolves ring endpoints and fills every code path once.
+        run_loop(64);
+        let heap = crate::test_alloc::thread_heap_allocations();
+        let slots = crate::core::memory::thread_slot_allocations();
+        let locks = cmm_impl.registry_lock_count();
+        run_loop(1000);
+        assert_eq!(
+            crate::test_alloc::thread_heap_allocations(),
+            heap,
+            "steady-state routing performed heap allocations"
+        );
+        assert_eq!(
+            crate::core::memory::thread_slot_allocations(),
+            slots,
+            "steady-state routing allocated memory slots"
+        );
+        assert_eq!(
+            cmm_impl.registry_lock_count(),
+            locks,
+            "steady-state routing acquired the registry mutex"
+        );
+        stop.store(true, Ordering::Release);
+        for h in workers {
+            h.join().unwrap();
+        }
+        let rs = router.stats();
+        assert_eq!(rs.rejected, 0);
+        assert_eq!(rs.stale_responses, 0);
+    }
+}

@@ -11,6 +11,11 @@
 //! - `launch --np N [--comm C] [--compute C] -- <app> [args]`
 //!                         start the hub, spawn N instance processes, run
 //!                         the named distributed app in each
+//! - `serve --np N [--requests R] [--window W]`
+//!                         sugar for `launch --np N -- serve …`: bring up
+//!                         the inference serving tier (root router +
+//!                         N−1 continuous-batching workers) and drive it
+//!                         with the built-in verifying closed-loop client
 //! - `worker`              internal: instance-process entrypoint (spawned
 //!                         by `launch`; configured via HICR_* env vars)
 //!
@@ -56,15 +61,21 @@ fn main() -> Result<()> {
         Some("backends") => cmd_backends(),
         Some("run") => cmd_run(&args[2..]),
         Some("launch") => cmd_launch(&args[2..]),
+        Some("serve") => cmd_serve(&args[2..]),
         Some("worker") => cmd_worker(),
         _ => {
             eprintln!(
                 "usage: hicr <topology|backends|run <app> [flags]|launch --np N \
-                 [--comm C] [--compute C] -- <app> [args]>\n\
+                 [--comm C] [--compute C] -- <app> [args]|serve --np N \
+                 [--requests R] [--window W]>\n\
                  run apps:    fibonacci [--n N] | jacobi [--n N --iters I] | \
                  inference [--images M]   (+ --compute <name> --workers W)\n\
                  launch apps: pingpong | jacobi [n iters] | spawntest | \
-                 taskfarm [total] [tasks]\n\
+                 taskfarm [total] [tasks] | serve [total] [requests] [window]\n\
+                 serve: root runs a sharded request router, every other \
+                 instance a continuous-batching inference worker; the root's \
+                 closed-loop client verifies each response payload and \
+                 reports p50/p99 latency + goodput\n\
                  taskfarm: root ensures `total` instances (default --np; \
                  spawning the difference at runtime), gathers worker \
                  topologies by RPC, farms `tasks` (default 100) verified \
@@ -239,6 +250,62 @@ fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `hicr serve --np N [--comm C] [--compute C] [--requests R]
+/// [--window W]` — sugar for `launch --np N -- serve N R W`.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let mut np = 3usize;
+    let mut comm = "lpfsim".to_string();
+    let mut compute = "coro".to_string();
+    let mut requests = 256u64;
+    let mut window = 16usize;
+    let mut i = 0;
+    while i < args.len() {
+        let flag = args[i].as_str();
+        let value = |args: &[String], i: usize| -> Result<String> {
+            args.get(i + 1)
+                .cloned()
+                .ok_or_else(|| err(format!("{flag} needs a value")))
+        };
+        match flag {
+            "--np" => np = value(args, i)?.parse().map_err(|e| err(format!("bad --np: {e}")))?,
+            "--comm" => comm = value(args, i)?,
+            "--compute" => compute = value(args, i)?,
+            "--requests" => {
+                requests = value(args, i)?
+                    .parse()
+                    .map_err(|e| err(format!("bad --requests: {e}")))?
+            }
+            "--window" => {
+                window = value(args, i)?
+                    .parse()
+                    .map_err(|e| err(format!("bad --window: {e}")))?
+            }
+            other => return Err(err(format!("unknown serve flag {other}"))),
+        }
+        i += 2;
+    }
+    if np < 2 {
+        return Err(err("serve needs --np >= 2 (one router + >=1 worker)"));
+    }
+    let launch_args: Vec<String> = [
+        "--np",
+        &np.to_string(),
+        "--comm",
+        &comm,
+        "--compute",
+        &compute,
+        "--",
+        "serve",
+        &np.to_string(),
+        &requests.to_string(),
+        &window.to_string(),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    cmd_launch(&launch_args)
+}
+
 /// `hicr launch --np N [--comm C] [--compute C] -- <app> [args]`
 fn cmd_launch(args: &[String]) -> Result<()> {
     let mut np = 2usize;
@@ -378,6 +445,21 @@ fn cmd_worker() -> Result<()> {
             let tasks: u64 = words.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
             worker_taskfarm(im.as_ref(), &cmm, &registry, &compute, total, tasks)
         }
+        Some("serve") => {
+            let total: usize = words
+                .get(1)
+                .and_then(|s| s.parse().ok())
+                .or_else(|| {
+                    std::env::var(ENV_WORLD)
+                        .ok()
+                        .and_then(|w| w.parse().ok())
+                        .filter(|w| *w > 0)
+                })
+                .unwrap_or(3);
+            let requests: u64 = words.get(2).and_then(|s| s.parse().ok()).unwrap_or(256);
+            let window: usize = words.get(3).and_then(|s| s.parse().ok()).unwrap_or(16);
+            worker_serve(im.as_ref(), &cmm, &registry, total, requests, window)
+        }
         other => Err(err(format!("unknown app {other:?}"))),
     };
     endpoint.bye();
@@ -498,6 +580,56 @@ fn worker_taskfarm(
                 report.elapsed_s
             );
             println!("taskfarm spread: {}", spread.join(" "));
+            Ok(())
+        }
+    }
+}
+
+/// The serving tier end-to-end: the root instance routes, every other
+/// instance batches; the root's built-in closed-loop client verifies
+/// every response payload against the reference executor.
+fn worker_serve(
+    im: &dyn InstanceManager,
+    cmm: &Arc<dyn CommunicationManager>,
+    registry: &Registry,
+    total: usize,
+    requests: u64,
+    window: usize,
+) -> Result<()> {
+    use hicr::apps::serve::{run, ServeParams};
+    let topology_json = hicr::backends::merged_topology(registry, &PluginContext::new())
+        .map(|t| t.serialize())
+        .unwrap_or_else(|_| hicr::Topology::default().serialize());
+    let params = ServeParams {
+        total,
+        requests,
+        window,
+        ..ServeParams::default()
+    };
+    match run(im, cmm, topology_json, &params)? {
+        None => Ok(()), // worker: served until shutdown
+        Some(r) => {
+            if r.checksum_failures > 0 {
+                return Err(err(format!(
+                    "serve: {} of {} responses failed payload verification",
+                    r.checksum_failures, r.requests
+                )));
+            }
+            println!(
+                "serve world={} workers={} requests={} ok p50={:.3}ms p99={:.3}ms \
+                 goodput={:.0}req/s rejected={} shed={} scale=+{}/-{} elapsed={:.3}s",
+                r.world,
+                r.workers,
+                r.requests,
+                r.p50_ms,
+                r.p99_ms,
+                r.goodput_rps,
+                r.rejected,
+                r.shed,
+                r.scale_out_events,
+                r.scale_in_events,
+                r.elapsed_s
+            );
             Ok(())
         }
     }

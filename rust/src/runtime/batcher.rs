@@ -1,19 +1,66 @@
 //! Dynamic request batcher for the serving path (the vLLM-router-style L3
 //! hot loop): requests are queued, packed into the largest exported batch
 //! size within a deadline, padded, executed once, and de-multiplexed.
+//!
+//! ## Completion contract
+//!
+//! Every request the batcher accepts is **resolved exactly once** with a
+//! [`BatchResponse`] — a successful `(output, queue_latency)` pair or a
+//! typed [`HicrError`] — no matter how the batch ends:
+//!
+//! - executor success → `Ok((output_slice, latency))` per request;
+//! - executor `Err` → `Err(InvalidState("batch executor failed: …"))`
+//!   per request (the error is fanned out, not swallowed);
+//! - executor **panic** → caught (`catch_unwind`) and fanned out the same
+//!   way, so a poisoned model never strands waiters on a dead thread;
+//! - executor returning a wrong-sized buffer → typed error per request
+//!   (a silent short buffer would otherwise panic mid-demux and strand
+//!   the rest of the batch);
+//! - [`Batcher::shutdown`] → the worker drains every request queued
+//!   before the close flag, executing them in final (possibly partial)
+//!   batches; `shutdown` returns only after the queue is empty.
+//!
+//! A receiver returned by [`Batcher::submit`] therefore never hangs and
+//! never observes a bare disconnect in normal operation; a callback
+//! passed to [`Batcher::submit_with`] always fires. The serving tier
+//! (frontends/serving.rs) relies on this to turn executor failures into
+//! wire-visible response statuses instead of dropped envelopes.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::core::error::{HicrError, Result};
 
+/// What every accepted request resolves to: the per-request output slice
+/// and its queue latency, or a typed error.
+pub type BatchResponse = Result<(Vec<f32>, Duration)>;
+
+/// How a request's resolution is delivered: a channel send (the
+/// [`Batcher::submit`] path) or an owned callback ([`Batcher::submit_with`],
+/// the serving tier's allocation-frugal completion route).
+enum Respond {
+    Channel(Sender<BatchResponse>),
+    Callback(Box<dyn FnOnce(BatchResponse) + Send>),
+}
+
+impl Respond {
+    fn resolve(self, r: BatchResponse) {
+        match self {
+            // A gone receiver is the caller's choice; nothing to do.
+            Respond::Channel(tx) => drop(tx.send(r)),
+            Respond::Callback(f) => f(r),
+        }
+    }
+}
+
 /// One queued inference request.
 pub struct BatchRequest {
     pub input: Vec<f32>,
     pub enqueued: Instant,
-    respond: Sender<(Vec<f32>, Duration)>,
+    respond: Respond,
 }
 
 /// Batching policy.
@@ -53,6 +100,9 @@ pub struct BatchStats {
     pub batches: u64,
     pub requests: u64,
     pub padded_slots: u64,
+    /// Requests resolved with a typed error (executor failure/panic/
+    /// malformed output).
+    pub failed_requests: u64,
 }
 
 impl Batcher {
@@ -79,8 +129,7 @@ impl Batcher {
         b
     }
 
-    /// Submit one request; returns a receiver for (output, queue_latency).
-    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<(Vec<f32>, Duration)>> {
+    fn enqueue(&self, input: Vec<f32>, respond: Respond) -> Result<()> {
         if input.len() != self.cfg.input_dim {
             return Err(HicrError::Bounds(format!(
                 "input dim {} != {}",
@@ -88,7 +137,6 @@ impl Batcher {
                 self.cfg.input_dim
             )));
         }
-        let (tx, rx) = channel();
         let (q, cv) = &*self.queue;
         let mut queue = q.lock().unwrap();
         if queue.closed {
@@ -97,24 +145,46 @@ impl Batcher {
         queue.pending.push_back(BatchRequest {
             input,
             enqueued: Instant::now(),
-            respond: tx,
+            respond,
         });
         cv.notify_all();
+        Ok(())
+    }
+
+    /// Submit one request; returns a receiver that always resolves with a
+    /// [`BatchResponse`] (see the module-level completion contract).
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<BatchResponse>> {
+        let (tx, rx) = channel();
+        self.enqueue(input, Respond::Channel(tx))?;
         Ok(rx)
+    }
+
+    /// Submit with a completion callback instead of a channel — the
+    /// serving tier's route: no per-request channel pair, and the worker
+    /// loop decides where the resolution goes (e.g. a response ring).
+    /// The callback fires exactly once, on the batcher worker thread.
+    pub fn submit_with(
+        &self,
+        input: Vec<f32>,
+        completion: impl FnOnce(BatchResponse) + Send + 'static,
+    ) -> Result<()> {
+        self.enqueue(input, Respond::Callback(Box::new(completion)))
     }
 
     /// Convenience: submit and block for the result.
     pub fn infer(&self, input: Vec<f32>) -> Result<(Vec<f32>, Duration)> {
         let rx = self.submit(input)?;
         rx.recv()
-            .map_err(|_| HicrError::InvalidState("batcher dropped request".into()))
+            .map_err(|_| HicrError::InvalidState("batcher dropped request".into()))?
     }
 
     pub fn stats(&self) -> BatchStats {
         self.stats.lock().unwrap().clone()
     }
 
-    /// Drain and stop the worker.
+    /// Drain and stop the worker. Requests already queued are executed
+    /// (final partial batches included) and resolved before this returns;
+    /// requests submitted after the close flag are rejected at `submit`.
     pub fn shutdown(&self) {
         {
             let (q, cv) = &*self.queue;
@@ -136,7 +206,8 @@ fn batch_loop(
     let (q, cv) = &*queue;
     loop {
         // Collect up to max_batch requests, waiting up to max_wait after
-        // the first arrives.
+        // the first arrives. Once closed, never wait: drain whatever is
+        // queued in immediate (possibly partial) batches until empty.
         let mut batch: Vec<BatchRequest> = Vec::new();
         {
             let mut queue = q.lock().unwrap();
@@ -147,14 +218,14 @@ fn batch_loop(
                         break;
                     }
                 }
-                if batch.len() >= cfg.max_batch || (queue.closed && batch.is_empty()) {
+                if batch.len() >= cfg.max_batch || queue.closed {
                     break;
                 }
                 if !batch.is_empty() {
                     // Partial batch: wait out the deadline for stragglers.
                     let deadline = batch[0].enqueued + cfg.max_wait;
                     let now = Instant::now();
-                    if now >= deadline || queue.closed {
+                    if now >= deadline {
                         break;
                     }
                     let (g, _t) = cv.wait_timeout(queue, deadline - now).unwrap();
@@ -173,24 +244,51 @@ fn batch_loop(
         for (i, r) in batch.iter().enumerate() {
             input[i * cfg.input_dim..(i + 1) * cfg.input_dim].copy_from_slice(&r.input);
         }
-        let out = exec(&input);
+        // A panicking executor must not kill the worker thread: queued
+        // and future waiters would hang forever. Catch it and fan the
+        // failure out as a typed per-request error instead.
+        let out = match catch_unwind(AssertUnwindSafe(|| exec(&input))) {
+            Ok(r) => r,
+            Err(_) => Err(HicrError::InvalidState("batch executor panicked".into())),
+        };
+        // A short output buffer would panic in the demux slice below —
+        // same stranded-waiter failure mode; treat it as executor failure.
+        let out = out.and_then(|o| {
+            if o.len() >= cfg.max_batch * cfg.output_dim {
+                Ok(o)
+            } else {
+                Err(HicrError::Bounds(format!(
+                    "batch executor returned {} values, expected {}",
+                    o.len(),
+                    cfg.max_batch * cfg.output_dim
+                )))
+            }
+        });
         {
             let mut s = stats.lock().unwrap();
             s.batches += 1;
             s.requests += n as u64;
             s.padded_slots += (cfg.max_batch - n) as u64;
+            if out.is_err() {
+                s.failed_requests += n as u64;
+            }
         }
         match out {
             Ok(out) => {
                 for (i, r) in batch.into_iter().enumerate() {
                     let slice =
                         out[i * cfg.output_dim..(i + 1) * cfg.output_dim].to_vec();
-                    let _ = r.respond.send((slice, r.enqueued.elapsed()));
+                    r.respond.resolve(Ok((slice, r.enqueued.elapsed())));
                 }
             }
-            Err(_) => {
-                // Drop senders: receivers observe RecvError.
-                drop(batch);
+            Err(e) => {
+                // Fan the failure out: every request in the batch resolves
+                // with a typed error, never a silently dropped sender.
+                let msg = format!("batch executor failed: {e}");
+                for r in batch {
+                    r.respond
+                        .resolve(Err(HicrError::InvalidState(msg.clone())));
+                }
             }
         }
     }
@@ -240,7 +338,7 @@ mod tests {
             rxs.push(b.submit(vec![i as f32, 0.0]).unwrap());
         }
         for (i, rx) in rxs.into_iter().enumerate() {
-            let (out, _) = rx.recv().unwrap();
+            let (out, _) = rx.recv().unwrap().unwrap();
             assert_eq!(out[0], i as f32 * 10.0);
         }
         let s = b.stats();
@@ -264,11 +362,116 @@ mod tests {
     }
 
     #[test]
-    fn executor_failure_drops_requests() {
+    fn executor_failure_returns_typed_error() {
         let fail: BatchExecutor = Arc::new(|_| Err(HicrError::Xla("device lost".into())));
         let b = Batcher::start(echo_cfg(2), fail);
         let rx = b.submit(vec![1.0, 2.0]).unwrap();
-        assert!(rx.recv().is_err());
+        // The waiter resolves with a typed error — not a dropped sender.
+        match rx.recv().unwrap() {
+            Err(HicrError::InvalidState(msg)) => {
+                assert!(msg.contains("device lost"), "cause preserved: {msg}")
+            }
+            other => panic!("expected typed executor error, got {other:?}"),
+        }
+        assert_eq!(b.stats().failed_requests, 1);
         b.shutdown();
+    }
+
+    #[test]
+    fn executor_panic_resolves_waiters() {
+        let boom: BatchExecutor = Arc::new(|_| panic!("kernel fault"));
+        let b = Batcher::start(echo_cfg(2), boom);
+        let rx = b.submit(vec![1.0, 2.0]).unwrap();
+        assert!(matches!(
+            rx.recv().unwrap(),
+            Err(HicrError::InvalidState(_))
+        ));
+        // The worker survived the panic: further requests still resolve.
+        let rx2 = b.submit(vec![3.0, 4.0]).unwrap();
+        assert!(rx2.recv().unwrap().is_err());
+        b.shutdown();
+    }
+
+    #[test]
+    fn short_executor_output_is_typed_error() {
+        let short: BatchExecutor = Arc::new(|_| Ok(vec![0.0])); // < max_batch*output_dim
+        let b = Batcher::start(echo_cfg(2), short);
+        let rx = b.submit(vec![1.0, 2.0]).unwrap();
+        assert!(matches!(rx.recv().unwrap(), Err(HicrError::Bounds(_))));
+        b.shutdown();
+    }
+
+    #[test]
+    fn submit_with_fires_callback() {
+        let b = Batcher::start(echo_cfg(4), times10());
+        let (tx, rx) = channel();
+        b.submit_with(vec![1.0, 2.0], move |r| {
+            tx.send(r).unwrap();
+        })
+        .unwrap();
+        let (out, _) = rx.recv().unwrap().unwrap();
+        assert_eq!(out, vec![10.0, 20.0]);
+        b.shutdown();
+    }
+
+    /// Regression (drain semantics): requests queued at shutdown must all
+    /// resolve — a response or a typed error, never a hung receiver.
+    #[test]
+    fn shutdown_drains_every_queued_waiter() {
+        // Slow executor so a backlog builds up behind the first batch.
+        let slow: BatchExecutor = Arc::new(|input: &[f32]| {
+            std::thread::sleep(Duration::from_millis(10));
+            Ok(input.iter().map(|v| v + 1.0).collect())
+        });
+        let b = Batcher::start(
+            BatcherConfig {
+                max_wait: Duration::from_millis(1),
+                ..echo_cfg(2)
+            },
+            slow,
+        );
+        let mut rxs = Vec::new();
+        for i in 0..16 {
+            rxs.push(b.submit(vec![i as f32, 0.0]).unwrap());
+        }
+        // Shut down immediately: most of the 16 are still queued.
+        b.shutdown();
+        let mut resolved = 0;
+        for (i, rx) in rxs.into_iter().enumerate() {
+            // recv_timeout: a drain bug must fail the test, not hang it.
+            let r = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("waiter must resolve at shutdown");
+            let (out, _) = r.expect("drained request executes successfully");
+            assert_eq!(out[0], i as f32 + 1.0);
+            resolved += 1;
+        }
+        assert_eq!(resolved, 16);
+        assert_eq!(b.stats().requests, 16);
+    }
+
+    /// Shutdown drains callback submissions too (the serving-tier route).
+    #[test]
+    fn shutdown_drains_callback_waiters() {
+        let slow: BatchExecutor = Arc::new(|input: &[f32]| {
+            std::thread::sleep(Duration::from_millis(5));
+            Ok(input.to_vec())
+        });
+        let b = Batcher::start(echo_cfg(4), slow);
+        let (tx, rx) = channel();
+        for i in 0..8 {
+            let tx = tx.clone();
+            b.submit_with(vec![i as f32, 0.0], move |r| {
+                tx.send(r).unwrap();
+            })
+            .unwrap();
+        }
+        drop(tx);
+        b.shutdown();
+        let mut fired = 0;
+        while rx.recv_timeout(Duration::from_secs(5)).is_ok() {
+            fired += 1;
+        }
+        assert_eq!(fired, 8);
     }
 }

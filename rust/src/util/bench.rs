@@ -161,8 +161,9 @@ impl Report {
         }
     }
 
-    /// The machine-readable export: name, reps, per-row median/p95
-    /// seconds and throughput (bytes/s or whatever the derived unit is).
+    /// The machine-readable export: name, reps, per-row median/p95/p99/
+    /// p999 seconds and throughput (bytes/s or whatever the derived unit
+    /// is).
     pub fn to_export_json(&self) -> Json {
         let reps = self.rows.iter().map(|r| r.samples_s.len()).max().unwrap_or(0);
         Json::obj([
@@ -189,6 +190,14 @@ impl Report {
                                 (
                                     "p95_s",
                                     t.as_ref().map(|s| Json::Num(s.p95)).unwrap_or(Json::Null),
+                                ),
+                                (
+                                    "p99_s",
+                                    t.as_ref().map(|s| Json::Num(s.p99)).unwrap_or(Json::Null),
+                                ),
+                                (
+                                    "p999_s",
+                                    t.as_ref().map(|s| Json::Num(s.p999)).unwrap_or(Json::Null),
                                 ),
                                 (
                                     "throughput",
@@ -341,6 +350,8 @@ mod tests {
         assert_eq!(rows[0].get("label").as_str(), Some("series-a"));
         assert!(rows[0].get("median_s").as_f64().is_some());
         assert!(rows[0].get("p95_s").as_f64().is_some());
+        assert!(rows[0].get("p99_s").as_f64().is_some());
+        assert!(rows[0].get("p999_s").as_f64().is_some());
         assert_eq!(
             rows[0].get("throughput").get("unit").as_str(),
             Some("bytes/s")

@@ -13,6 +13,7 @@ pub struct Summary {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    pub p999: f64,
 }
 
 impl Summary {
@@ -39,6 +40,7 @@ impl Summary {
             p50: percentile_sorted(&sorted, 0.50),
             p95: percentile_sorted(&sorted, 0.95),
             p99: percentile_sorted(&sorted, 0.99),
+            p999: percentile_sorted(&sorted, 0.999),
         })
     }
 }
@@ -126,6 +128,7 @@ mod tests {
         assert_eq!(s.mean, 7.5);
         assert_eq!(s.stddev, 0.0);
         assert_eq!(s.p99, 7.5);
+        assert_eq!(s.p999, 7.5);
     }
 
     #[test]

@@ -579,6 +579,26 @@ fn cli_launch_taskfarm_elastic_spawn() {
     assert!(text.contains("topologies=2"), "missing topology gather:\n{text}");
 }
 
+/// The serving tier end to end over real processes: `hicr serve --np 3`
+/// brings up 1 router + 2 continuous-batching workers, and the root's
+/// closed-loop client completes all requests with every response
+/// payload verified against the reference executor.
+#[test]
+fn cli_serve_three_processes() {
+    let cli = std::path::Path::new(env!("CARGO_BIN_EXE_hicr"));
+    let out = std::process::Command::new(cli)
+        .args(["serve", "--np", "3", "--requests", "120", "--window", "12"])
+        .output()
+        .expect("hicr serve");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("serve world=3 workers=2 requests=120 ok"),
+        "unexpected serve output:\n{text}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(text.contains("goodput="), "missing goodput:\n{text}");
+}
+
 /// End-to-end CLI launch: two real OS processes, channel ping-pong.
 #[test]
 fn cli_launch_pingpong_two_processes() {
