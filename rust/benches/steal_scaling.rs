@@ -1,0 +1,202 @@
+//! Distributed steal scaling — the imbalanced drain, pull vs push.
+//!
+//! Worlds of {2, 4, 8} in-process instances (quick: {2, 4}) over the
+//! threads backend, with EVERY task seeded on the root — the worst-case
+//! imbalance the distributed stealing of DESIGN.md §8 exists for. Three
+//! series per world size:
+//!
+//! - `spill/N` — the push-only ablation: the root round-robins each
+//!   task over the mesh as a synchronous stop-and-wait RPC
+//!   (`taskfarm::run`), so remote goodput is one task per round-trip and
+//!   the root burns its time in dispatch instead of execution.
+//! - `steal-flat/N` — pull-based stealing (`taskfarm::run_steal`) with
+//!   flat ring-ordered victim selection: thieves drain the root in
+//!   steal-half batches, payloads over the lazy threshold moving only at
+//!   dispatch time, while the root's own workers execute concurrently.
+//! - `steal-topo/N` — the same pull protocol with topology-ordered
+//!   victims over a synthetic two-host map (rank parity = host), pricing
+//!   the victim-order policy itself; on a single physical host the two
+//!   steal series should track each other, and a large gap is a bug
+//!   signal, not a win.
+//!
+//! Each run verifies every result against the splitmix oracle inside the
+//! farm (a silent loss or duplication fails the rep), and the steal
+//! series additionally assert that remote ranks actually executed work
+//! and that lazy payload bytes moved. Drain wall-clock and tasks/s
+//! goodput export as `BENCH_steal.json` for the CI bench-smoke gate;
+//! measured rows land in EXPERIMENTS.md §Steal.
+
+use std::sync::Arc;
+
+use hicr::apps::taskfarm::{run, run_steal, FarmReport};
+use hicr::backends::threads::ThreadsCommunicationManager;
+use hicr::core::instance::testworld::local_world;
+use hicr::frontends::tasking::{StealConfig, TaskSystem, VictimPolicy};
+use hicr::util::bench::{BenchArgs, Measurement, Report};
+use hicr::{CommunicationManager, Topology};
+
+fn task_system() -> Arc<TaskSystem> {
+    let cm = hicr::backends::registry()
+        .builder()
+        .compute("threads")
+        .build()
+        .expect("resolve threads plugin")
+        .compute()
+        .expect("compute manager");
+    TaskSystem::new(cm, 2, false)
+}
+
+/// One pull-mode world: every instance drives a steal pool, the root
+/// seeds all `tasks`. Returns the root's verified report.
+fn steal_world(
+    n: usize,
+    tasks: u64,
+    policy: VictimPolicy,
+    host_of: fn(u32) -> u64,
+) -> FarmReport {
+    let cmm: Arc<dyn CommunicationManager> =
+        Arc::new(ThreadsCommunicationManager::new());
+    let mut joins = Vec::new();
+    for im in local_world(n) {
+        let cmm = Arc::clone(&cmm);
+        joins.push(std::thread::spawn(move || {
+            let sys = task_system();
+            let report = run_steal(
+                &im,
+                &cmm,
+                Topology::default().serialize(),
+                n,
+                tasks,
+                Arc::clone(&sys),
+                StealConfig {
+                    victim_policy: policy,
+                    ..StealConfig::default()
+                },
+                host_of,
+            )
+            .expect("steal farm");
+            sys.shutdown().expect("shutdown");
+            report
+        }));
+    }
+    joins
+        .into_iter()
+        .filter_map(|j| j.join().expect("world thread"))
+        .next()
+        .expect("root report")
+}
+
+/// One push-mode world (the ablation): the root dispatches every task as
+/// a synchronous RPC, workers only serve.
+fn spill_world(n: usize, tasks: u64) -> FarmReport {
+    let cmm: Arc<dyn CommunicationManager> =
+        Arc::new(ThreadsCommunicationManager::new());
+    let mut joins = Vec::new();
+    for im in local_world(n) {
+        let cmm = Arc::clone(&cmm);
+        joins.push(std::thread::spawn(move || {
+            run(&im, &cmm, Topology::default().serialize(), n, tasks)
+                .expect("spill farm")
+        }));
+    }
+    joins
+        .into_iter()
+        .filter_map(|j| j.join().expect("world thread"))
+        .next()
+        .expect("root report")
+}
+
+fn main() {
+    let args = BenchArgs::parse(3);
+    let tasks: u64 = std::env::var("STEAL_TASKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if args.quick { 240 } else { 960 });
+    let sizes: &[usize] = if args.quick { &[2, 4] } else { &[2, 4, 8] };
+    println!(
+        "== Distributed steal scaling: {tasks} tasks, all seeded on the root =="
+    );
+
+    let mut report = Report::named("Distributed steal scaling", "steal");
+    for &n in sizes {
+        for mode in ["spill", "steal-flat", "steal-topo"] {
+            let mut samples = Vec::new();
+            let mut last: Option<FarmReport> = None;
+            for _ in 0..args.reps {
+                let r = match mode {
+                    "spill" => spill_world(n, tasks),
+                    "steal-flat" => {
+                        steal_world(n, tasks, VictimPolicy::Flat, |_| 0)
+                    }
+                    // Synthetic two-host map: rank parity = host key.
+                    _ => steal_world(
+                        n,
+                        tasks,
+                        VictimPolicy::TopologyOrdered,
+                        |r| (r % 2) as u64,
+                    ),
+                };
+                // Structural assertions (the checksum itself is verified
+                // inside the farm): push mode offloads everything, pull
+                // mode must actually migrate work and move bytes lazily.
+                assert_eq!(r.tasks, tasks);
+                if mode == "spill" {
+                    assert_eq!(r.spilled_tasks, tasks);
+                } else {
+                    assert_eq!(r.local_tasks + r.stolen_tasks, tasks);
+                    assert!(r.stolen_tasks > 0, "{mode}/{n}i: nothing stolen");
+                    assert!(
+                        r.lazy_payload_bytes > 0,
+                        "{mode}/{n}i: payloads did not move lazily"
+                    );
+                }
+                samples.push(r.elapsed_s);
+                last = Some(r);
+            }
+            let r = last.expect("at least one rep");
+            println!(
+                "{mode}/{n}i: local={} spilled={} stolen={} lazy_bytes={} \
+                 per_worker={:?}",
+                r.local_tasks,
+                r.spilled_tasks,
+                r.stolen_tasks,
+                r.lazy_payload_bytes,
+                r.per_worker
+            );
+            report.push(Measurement {
+                label: format!("{mode}/{n}i"),
+                samples_s: samples.clone(),
+                derived: samples.iter().map(|s| tasks as f64 / s).collect(),
+                derived_unit: "tasks/s",
+            });
+        }
+    }
+    report.finish(&args);
+
+    // Shape: pull-based stealing should beat stop-and-wait pushing on
+    // the imbalanced 4-instance drain (the root executes while thieves
+    // drain, and batches amortize round-trips). Deliberately a WARNING,
+    // not an assert: this bench gates the CI bench-smoke step, and
+    // wall-clock ratios on noisy shared runners must not fail the build
+    // — the JSON trajectory is the signal.
+    let med = |label: &str| {
+        report
+            .rows
+            .iter()
+            .find(|r| r.label == label)
+            .and_then(|r| r.time_summary())
+            .map(|s| s.p50)
+            .expect("series present")
+    };
+    let (spill4, steal4) = (med("spill/4i"), med("steal-topo/4i"));
+    println!(
+        "\nshape: spill/steal median drain ratio at 4 instances = {:.2}x",
+        spill4 / steal4
+    );
+    if steal4 > spill4 {
+        println!(
+            "WARN: pull-based stealing slower than stop-and-wait spill \
+             ({steal4:.4}s vs {spill4:.4}s) — investigate if reproducible"
+        );
+    }
+}

@@ -23,6 +23,13 @@
 //! lane drains concurrently; pipelined multi-link dispatch is future
 //! work (DESIGN.md §5).
 //!
+//! [`run_steal`] is the **pull-based** variant (PR 7), the default farm
+//! mode: the root seeds every task on its own remote-ready lane and
+//! idle instances *steal* them over the mesh — topology-ordered victim
+//! selection, steal-half batches, task payloads moving lazily only when
+//! the thief dispatches (DESIGN.md §8). `run_spill` survives as the
+//! push-only ablation the steal benches compare against.
+//!
 //! Written purely against the abstract managers and the deployment/RPC
 //! frontends: the same code farms over the threads backend (in-process)
 //! and over mpisim (real processes launched by `hicr launch`).
@@ -39,10 +46,48 @@ use crate::core::instance::{InstanceManager, InstanceTemplate};
 use crate::core::memory::LocalMemorySlot;
 use crate::core::topology::{Topology, TopologyRequirements};
 use crate::frontends::deployment::{deploy, Deployment, DeploymentConfig};
-use crate::frontends::tasking::TaskSystem;
+use crate::frontends::tasking::{StealConfig, StealPool, StealTopology, TaskSystem};
 
 /// The farmed RPC.
 pub const FN_TASK: &str = "taskfarm/execute";
+
+/// The steal-mode task body (registered on every instance's
+/// [`StealPool`], the RPC-farm idiom lifted to descriptor tasks).
+pub const FN_STEAL_TASK: &str = "taskfarm/steal-task";
+
+/// Argument blob size of a steal-mode task: an 8-byte index plus 88
+/// bytes of index-derived filler — deliberately above the default
+/// [`StealConfig::lazy_threshold`], so every stolen task exercises the
+/// lazy payload path.
+pub const STEAL_ARGS_LEN: usize = 96;
+
+/// Build the argument blob for steal-mode task `i`.
+pub fn steal_args(i: u64) -> Vec<u8> {
+    let mut args = i.to_le_bytes().to_vec();
+    args.extend((0..STEAL_ARGS_LEN - 8).map(|j| (i as u8).wrapping_add(j as u8)));
+    args
+}
+
+/// The steal-mode task body: verify the filler byte-for-byte (payload
+/// corruption in flight cannot hide) and return the splitmix value.
+fn steal_body(args: &[u8]) -> Result<Vec<u8>> {
+    if args.len() != STEAL_ARGS_LEN {
+        return Err(HicrError::Bounds(format!(
+            "steal task payload must be {STEAL_ARGS_LEN} B, got {}",
+            args.len()
+        )));
+    }
+    let x = u64::from_le_bytes(args[0..8].try_into().unwrap());
+    for (j, &b) in args[8..].iter().enumerate() {
+        let want = (x as u8).wrapping_add(j as u8);
+        if b != want {
+            return Err(HicrError::InvalidState(format!(
+                "task {x}: filler byte {j} is {b:#04x}, want {want:#04x}"
+            )));
+        }
+    }
+    Ok(task_value(x).to_le_bytes().to_vec())
+}
 
 /// The task kernel: a splitmix64 avalanche of the task index — cheap,
 /// deterministic, and sensitive to any payload corruption, so the root
@@ -87,8 +132,17 @@ pub struct FarmReport {
     pub checksum: u64,
     /// Tasks the root executed on its local task system.
     pub local_tasks: u64,
-    /// Tasks offloaded over the RPC mesh.
+    /// Tasks offloaded over the RPC mesh (push-based spill mode only).
     pub spilled_tasks: u64,
+    /// Tasks pulled off the root's lane by thieves (steal mode only).
+    pub stolen_tasks: u64,
+    /// Steal RPCs the root's own pool issued (it too escalates to
+    /// stealing when its lane runs dry).
+    pub steal_rpcs_attempted: u64,
+    /// Root-issued steal RPCs that returned at least one task.
+    pub steal_rpcs_succeeded: u64,
+    /// Argument bytes the root parked for lazy transfer to thieves.
+    pub lazy_payload_bytes: u64,
     /// Worker topologies gathered through the built-in RPC.
     pub gathered_topologies: usize,
     /// Devices across all gathered topologies.
@@ -162,6 +216,10 @@ pub fn run_spill(
                 checksum,
                 local_tasks,
                 spilled_tasks: tasks - local_tasks,
+                stolen_tasks: 0,
+                steal_rpcs_attempted: 0,
+                steal_rpcs_succeeded: 0,
+                lazy_payload_bytes: 0,
                 gathered_topologies: topos.len(),
                 total_devices,
                 elapsed_s: t0.elapsed().as_secs_f64(),
@@ -256,6 +314,143 @@ fn orchestrate(
     }
     let local_tasks = local_results.len() as u64;
     Ok((topos, total_devices, per_worker, checksum, local_tasks))
+}
+
+/// The **pull-based** farm (PR 7, subsuming [`run_spill`] as the push
+/// ablation): every instance fronts its local task system with a
+/// [`StealPool`]; the root seeds *all* tasks on its own remote-ready
+/// lane and idle instances steal them over the mesh — victim selection
+/// in topology order, payloads moving lazily. Collective across the
+/// world: the root returns `Some(report)`, workers drive their pools
+/// until the root's shutdown RPC and return `None`.
+///
+/// `sys` is this instance's local execution engine (every rank executes
+/// in steal mode, so every rank brings one); `host_of` maps each rank
+/// to an opaque host key for [`StealTopology`] — pass `|_| 0` for
+/// single-host deployments.
+pub fn run_steal(
+    im: &dyn InstanceManager,
+    cmm: &Arc<dyn CommunicationManager>,
+    topology_json: String,
+    total: usize,
+    tasks: u64,
+    sys: Arc<TaskSystem>,
+    config: StealConfig,
+    host_of: impl Fn(u32) -> u64,
+) -> Result<Option<FarmReport>> {
+    let t0 = Instant::now();
+    let alloc = |len| LocalMemorySlot::alloc(MemorySpaceId(1), len);
+    let template = InstanceTemplate::new(TopologyRequirements::default());
+    let mut d = deploy(
+        im,
+        cmm,
+        total,
+        &template,
+        &DeploymentConfig::default(),
+        topology_json,
+        alloc,
+    )?;
+    let topo = StealTopology {
+        me: d.me,
+        hosts: d.ranks.iter().map(|&r| (r, host_of(r))).collect(),
+    };
+    let pool = StealPool::new(sys, &topo, config);
+    pool.register(FN_STEAL_TASK, steal_body)?;
+    pool.install(&mut d.mesh.server)?;
+
+    if !d.is_root {
+        // Drive the pool — dispatching stolen work locally, serving
+        // peers, escalating to steals — until the root's shutdown RPC
+        // flips the flag (served by our own drive loop). The flag is the
+        // cancel signal too, so a shutdown observed mid-steal aborts the
+        // wait instead of hanging on an already-departed victim.
+        let flag = d.shutdown_signal();
+        pool.drive_while(&mut d.mesh, || !flag.load(Ordering::Acquire))?;
+        im.barrier()?;
+        return Ok(None);
+    }
+
+    let orchestrated = (|| -> Result<(Vec<(u32, Topology)>, usize, u64)> {
+        // Seed the whole workload on the root's lane *before* gathering
+        // topologies: thieves start probing the moment they deploy, and
+        // the gather round-trips give their first steals a full lane.
+        let mut ids = Vec::with_capacity(tasks as usize);
+        for i in 0..tasks {
+            ids.push((i, pool.spawn(FN_STEAL_TASK, steal_args(i))?));
+        }
+        let topos = d.gather_topologies()?;
+        let total_devices = topos.iter().map(|(_, t)| t.devices.len()).sum();
+        pool.drive_until_drained(&mut d.mesh)?;
+        let mut checksum = 0u64;
+        for (i, id) in ids {
+            let got = pool.take_result(id)?.ok_or_else(|| {
+                HicrError::InvalidState(format!("task {i} lost after drain"))
+            })?;
+            let got = u64::from_le_bytes(got.as_slice().try_into().map_err(
+                |_| {
+                    HicrError::Transport(format!(
+                        "task {i}: short result ({} B)",
+                        got.len()
+                    ))
+                },
+            )?);
+            let want = task_value(i);
+            if got != want {
+                return Err(HicrError::InvalidState(format!(
+                    "task {i}: got {got:#018x}, want {want:#018x}"
+                )));
+            }
+            checksum = checksum.wrapping_add(got);
+        }
+        Ok((topos, total_devices, checksum))
+    })();
+
+    match orchestrated {
+        Ok((topos, total_devices, checksum)) => {
+            // Pumped shutdown: thieves may still be probing our lane, so
+            // the root keeps answering (empty batches) while the
+            // shutdown calls are in flight.
+            d.shutdown_workers_pumped()?;
+            im.barrier()?;
+            let stats = pool.sched_stats();
+            let mut local_tasks = 0u64;
+            let mut stolen_tasks = 0u64;
+            let mut per_worker = Vec::new();
+            for (rank, count) in pool.completed_by() {
+                if rank == d.me {
+                    local_tasks = count;
+                } else {
+                    stolen_tasks += count;
+                    per_worker.push((rank, count));
+                }
+            }
+            Ok(Some(FarmReport {
+                world: d.ranks.len(),
+                workers: d.workers().len(),
+                tasks,
+                per_worker,
+                checksum,
+                local_tasks,
+                spilled_tasks: 0,
+                stolen_tasks,
+                steal_rpcs_attempted: stats.remote_steal_attempts,
+                steal_rpcs_succeeded: stats.remote_steals,
+                lazy_payload_bytes: stats.lazy_payload_bytes,
+                gathered_topologies: topos.len(),
+                total_devices,
+                elapsed_s: t0.elapsed().as_secs_f64(),
+            }))
+        }
+        Err(e) => {
+            // Same best-effort release as run_spill: without it, live
+            // workers would drive forever and the launcher would hang
+            // instead of reporting the orchestration error.
+            if d.shutdown_workers_pumped().is_ok() {
+                let _ = im.barrier();
+            }
+            Err(e)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -386,5 +581,85 @@ mod tests {
         assert_eq!(remote, report.spilled_tasks);
         let want: u64 = (0..64).map(task_value).fold(0, u64::wrapping_add);
         assert_eq!(report.checksum, want);
+        // Push-mode reports carry no steal telemetry.
+        assert_eq!(report.stolen_tasks, 0);
+        assert_eq!(report.steal_rpcs_attempted, 0);
+        assert_eq!(report.lazy_payload_bytes, 0);
+    }
+
+    #[test]
+    fn steal_args_roundtrip_through_body() {
+        let got = steal_body(&steal_args(17)).unwrap();
+        assert_eq!(
+            u64::from_le_bytes(got.try_into().unwrap()),
+            task_value(17)
+        );
+        // Corruption anywhere in the filler is caught, not silently run.
+        let mut bad = steal_args(17);
+        bad[50] ^= 0xFF;
+        assert!(steal_body(&bad).is_err());
+        assert!(steal_body(&steal_args(17)[..8]).is_err());
+    }
+
+    fn task_system() -> Arc<TaskSystem> {
+        let cm = crate::backends::registry()
+            .builder()
+            .compute("threads")
+            .build()
+            .unwrap()
+            .compute()
+            .unwrap();
+        TaskSystem::new(cm, 2, false)
+    }
+
+    /// The tentpole acceptance test: a 4-instance world where EVERY task
+    /// is seeded on the root. Pull-based stealing must drain the
+    /// imbalance with zero lost or duplicated tasks (the splitmix
+    /// checksum covers both), remote ranks must actually execute work,
+    /// and the over-threshold payloads must move lazily.
+    #[test]
+    fn steal_farm_drains_all_on_root_imbalance() {
+        let n = 4usize;
+        let tasks = 60u64;
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let mut joins = Vec::new();
+        for im in local_world(n) {
+            let cmm = Arc::clone(&cmm);
+            joins.push(std::thread::spawn(move || {
+                let sys = task_system();
+                let report = run_steal(
+                    &im,
+                    &cmm,
+                    Topology::default().serialize(),
+                    n,
+                    tasks,
+                    Arc::clone(&sys),
+                    StealConfig::default(),
+                    |_| 0,
+                )
+                .unwrap();
+                sys.shutdown().unwrap();
+                report
+            }));
+        }
+        let report = joins
+            .into_iter()
+            .filter_map(|j| j.join().unwrap())
+            .next()
+            .expect("root produced a report");
+        assert_eq!(report.world, 4);
+        assert_eq!(report.workers, 3);
+        assert_eq!(report.tasks, 60);
+        // Zero lost, zero duplicated: every task verified exactly once.
+        assert_eq!(report.local_tasks + report.stolen_tasks, 60);
+        let want: u64 = (0..60).map(task_value).fold(0, u64::wrapping_add);
+        assert_eq!(report.checksum, want);
+        // The imbalance was actually drained by thieves, lazily.
+        assert!(report.stolen_tasks > 0, "{report:?}");
+        let per: u64 = report.per_worker.iter().map(|(_, c)| c).sum();
+        assert_eq!(per, report.stolen_tasks);
+        assert!(report.lazy_payload_bytes > 0, "{report:?}");
+        assert_eq!(report.spilled_tasks, 0);
     }
 }

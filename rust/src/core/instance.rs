@@ -157,17 +157,21 @@ pub fn ensure_world(
     Ok(all)
 }
 
-/// Shared test double: a fixed-size in-process world of thread
+/// Shared test/bench double: a fixed-size in-process world of thread
 /// "instances" (rank 0 is root) synchronized by a real join barrier —
-/// used by the deployment frontend's and the taskfarm app's tests.
-#[cfg(test)]
-pub(crate) mod testworld {
+/// used by the deployment frontend's and the taskfarm app's tests and
+/// by the multi-instance benches (`benches/steal_scaling.rs`), which is
+/// why it is compiled in, not `#[cfg(test)]`.
+pub mod testworld {
     use super::{Instance, InstanceManager, InstanceTemplate};
     use crate::core::error::{HicrError, Result};
     use crate::core::ids::InstanceId;
     use std::sync::{Arc, Barrier};
 
-    pub(crate) struct LocalIm {
+    /// An [`InstanceManager`] for one rank of the in-process world: a
+    /// fixed membership and a real join barrier; runtime spawning is
+    /// unsupported by design.
+    pub struct LocalIm {
         me: Instance,
         n: usize,
         barrier: Arc<Barrier>,
@@ -206,7 +210,7 @@ pub(crate) mod testworld {
     }
 
     /// One `LocalIm` per rank, all sharing one `n`-party barrier.
-    pub(crate) fn local_world(n: usize) -> Vec<LocalIm> {
+    pub fn local_world(n: usize) -> Vec<LocalIm> {
         let barrier = Arc::new(Barrier::new(n));
         (0..n)
             .map(|i| LocalIm {

@@ -13,7 +13,8 @@
 //! enters — publishers volunteering the slot, consumers volunteering
 //! nothing.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::core::communication::{CommunicationManager, DataEndpoint, GlobalMemorySlot};
 use crate::core::error::{HicrError, Result};
@@ -131,6 +132,89 @@ pub fn participate(cmm: &dyn CommunicationManager, id: u64) -> Result<()> {
     Ok(())
 }
 
+/// RPC through which a [`PayloadStore`] serves lazy fetches: 8-byte
+/// little-endian key in, the published blob out (take semantics).
+pub const FN_FETCH: &str = "hicr/dataobject/fetch";
+
+/// Non-collective keyed blob store — the lazy half of the distributed
+/// work-stealing protocol (DESIGN.md §8, the DARMA keyed-store idiom).
+///
+/// [`DataObject::publish`]/[`DataObjectHandle::get_handle`] are
+/// *collectives*: every instance must enter the exchange, which is
+/// exactly wrong for payloads that move only if (and when) some thief
+/// decides to run the task. `PayloadStore` keeps the blob local under a
+/// 64-bit key and serves it point-to-point over the RPC mesh via
+/// [`FN_FETCH`] — data moves lazily, once, to whichever instance asks.
+///
+/// Fetches **take**: a key is served at most once, so a duplicated fetch
+/// (a lost/duplicated stolen task) surfaces as a loud handler error
+/// instead of silently running twice.
+#[derive(Clone, Default)]
+pub struct PayloadStore {
+    blobs: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+}
+
+impl PayloadStore {
+    /// An empty store.
+    pub fn new() -> PayloadStore {
+        PayloadStore::default()
+    }
+
+    /// Stash `bytes` under `key` for a later [`FN_FETCH`] (or local
+    /// [`PayloadStore::take`]). Duplicate keys are rejected loudly — two
+    /// live payloads under one key means a task id was reused.
+    pub fn publish(&self, key: u64, bytes: Vec<u8>) -> Result<()> {
+        let mut blobs = self.blobs.lock().unwrap();
+        if blobs.contains_key(&key) {
+            return Err(HicrError::Rejected(format!(
+                "payload key {key:#x} already published"
+            )));
+        }
+        blobs.insert(key, bytes);
+        Ok(())
+    }
+
+    /// Remove and return the blob under `key`, if present.
+    pub fn take(&self, key: u64) -> Option<Vec<u8>> {
+        self.blobs.lock().unwrap().remove(&key)
+    }
+
+    /// Number of blobs currently held.
+    pub fn len(&self) -> usize {
+        self.blobs.lock().unwrap().len()
+    }
+
+    /// True when no blob is held.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Register [`FN_FETCH`] on `server`, serving this store's blobs to
+    /// remote fetchers. A fetch of an unknown (or already-taken) key is
+    /// a handler error carrying the key.
+    pub fn register_fetch(
+        &self,
+        server: &mut crate::frontends::rpc::RpcServer,
+    ) -> Result<()> {
+        let store = self.clone();
+        server.register(FN_FETCH, move |args| {
+            let key: [u8; 8] = args.try_into().map_err(|_| {
+                HicrError::Bounds(format!(
+                    "fetch key must be 8 B, got {}",
+                    args.len()
+                ))
+            })?;
+            let key = u64::from_le_bytes(key);
+            store.take(key).ok_or_else(|| {
+                HicrError::InvalidState(format!(
+                    "no payload published under key {key:#x} \
+                     (already fetched, or never published)"
+                ))
+            })
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,5 +278,44 @@ mod tests {
         let h6 = DataObjectHandle::get_handle(cmm.as_ref(), 6).unwrap();
         assert_eq!(h5.len(), 5);
         assert_eq!(h6.len(), 6);
+    }
+
+    #[test]
+    fn payload_store_publish_take_once() {
+        let store = PayloadStore::new();
+        store.publish(9, b"blob".to_vec()).unwrap();
+        assert_eq!(store.len(), 1);
+        // Duplicate keys are rejected, not overwritten.
+        let err = store.publish(9, b"other".to_vec()).unwrap_err();
+        assert!(err.to_string().contains("already published"), "{err}");
+        // Take semantics: served once, then gone.
+        assert_eq!(store.take(9).unwrap(), b"blob");
+        assert!(store.take(9).is_none());
+        assert!(store.is_empty());
+    }
+
+    /// The lazy-fetch RPC end to end: publisher registers `FN_FETCH`, a
+    /// remote fetcher pulls the blob point-to-point, a second fetch of
+    /// the same key fails loudly (take semantics over the wire).
+    #[test]
+    fn payload_store_serves_fetch_rpc() {
+        use crate::frontends::rpc::{RpcClient, RpcServer};
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let alloc = |len| LocalMemorySlot::alloc(MemorySpaceId(1), len);
+        let mut server =
+            RpcServer::create(Arc::clone(&cmm), 30, 0, &[1], 256, alloc).unwrap();
+        let store = PayloadStore::new();
+        store.publish(0xBEEF, vec![7u8; 100]).unwrap();
+        store.register_fetch(&mut server).unwrap();
+        let h = std::thread::spawn(move || server.serve(2).unwrap());
+        let mut client = RpcClient::create(cmm, 30, 0, 1, 256, alloc).unwrap();
+        let blob = client.call(FN_FETCH, &0xBEEFu64.to_le_bytes()).unwrap();
+        assert_eq!(blob, vec![7u8; 100]);
+        let err = client
+            .call(FN_FETCH, &0xBEEFu64.to_le_bytes())
+            .unwrap_err();
+        assert!(err.to_string().contains("no payload"), "{err}");
+        h.join().unwrap();
     }
 }

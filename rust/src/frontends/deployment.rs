@@ -155,6 +155,13 @@ impl Deployment {
         self.shutdown.load(Ordering::Acquire)
     }
 
+    /// The shutdown flag itself, for drive loops that need to observe it
+    /// while holding a disjoint `&mut` borrow of [`Deployment::mesh`]
+    /// (e.g. a steal pool's `drive_while(&mut d.mesh, || !flag.load(..))`).
+    pub fn shutdown_signal(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
     /// The client for calls into `rank`'s server.
     pub fn client(&mut self, rank: u32) -> Result<&mut RpcClient> {
         self.mesh.client(rank)
@@ -198,6 +205,51 @@ impl Deployment {
             let attempt = self
                 .client(rank)
                 .and_then(|client| client.call(FN_SHUTDOWN, b""));
+            if let Err(e) = attempt {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// [`Deployment::shutdown_workers`] for a root that must keep
+    /// serving while the calls are in flight: each shutdown RPC pumps
+    /// the root's own server between polls. Required when workers may
+    /// still be calling *into* the root during teardown — e.g. a steal
+    /// pool's thieves probing the root's lane — where a blocking
+    /// shutdown call would deadlock the pair.
+    pub fn shutdown_workers_pumped(&mut self) -> Result<()> {
+        let RpcMesh {
+            server, clients, ..
+        } = &mut self.mesh;
+        let workers: Vec<u32> = self
+            .ranks
+            .iter()
+            .copied()
+            .filter(|&r| r != self.root)
+            .collect();
+        let mut first_err = None;
+        for rank in workers {
+            let attempt = clients
+                .get_mut(&rank)
+                .ok_or_else(|| {
+                    HicrError::Rejected(format!("rank {rank} is not in the mesh"))
+                })
+                .and_then(|client| {
+                    client
+                        .call_pumped(
+                            FN_SHUTDOWN,
+                            b"",
+                            || server.try_serve_one(),
+                            || false,
+                        )
+                        .map(|resp| {
+                            resp.expect("uncancelable call");
+                        })
+                });
             if let Err(e) = attempt {
                 first_err.get_or_insert(e);
             }

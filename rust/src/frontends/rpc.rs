@@ -340,6 +340,13 @@ impl RpcServer {
         self.served
     }
 
+    /// The per-message payload limit this server's links negotiated.
+    /// Handlers that assemble batched responses (e.g. the steal-take
+    /// protocol) size their greedy packing against this.
+    pub fn max_payload(&self) -> usize {
+        self.max_payload
+    }
+
     /// Register `name` before callers invoke it (paper: "the function
     /// must be pre-registered on the receiving instance"). Re-registering
     /// a name, or registering a name whose FNV-1a id collides with an
@@ -567,6 +574,30 @@ impl RpcClient {
     /// `max_payload`, out-of-sync sequence number) are wire-protocol
     /// errors — payloads are never truncated to fit.
     pub fn call(&mut self, name: &str, args: &[u8]) -> Result<Vec<u8>> {
+        self.call_pumped(name, args, || Ok(false), || false)?
+            .ok_or_else(|| {
+                HicrError::InvalidState(format!(
+                    "RPC '{name}' abandoned without a cancel predicate"
+                ))
+            })
+    }
+
+    /// [`RpcClient::call`] for symmetric call patterns: while waiting for
+    /// the response, `pump` is driven between polls (returning whether it
+    /// made progress — typically `server.try_serve_one()` on this
+    /// instance's own [`RpcServer`], so two instances calling *each
+    /// other* simultaneously keep serving instead of deadlocking), and
+    /// `cancel` may abandon the wait (`Ok(None)`; e.g. a shutdown flag
+    /// flipped by a request `pump` just served). A response that arrives
+    /// after its call was abandoned is discarded by sequence number on a
+    /// later call, so an abandoned call never desynchronizes the link.
+    pub fn call_pumped(
+        &mut self,
+        name: &str,
+        args: &[u8],
+        mut pump: impl FnMut() -> Result<bool>,
+        mut cancel: impl FnMut() -> bool,
+    ) -> Result<Option<Vec<u8>>> {
         if args.len() > self.max_payload {
             return Err(HicrError::Bounds(format!(
                 "args {} B > link max payload {}",
@@ -583,14 +614,35 @@ impl RpcClient {
         self.next_seq += 1;
         encode_request(&mut self.sbuf, fn_id(name), self.me, seq, args);
         self.requests.push_blocking(&self.sbuf)?;
-        self.responses.pop_blocking(&mut self.rbuf)?;
-        let (status, rseq, len) =
-            decode_response(&self.rbuf, self.max_payload).map_err(|fault| {
-                HicrError::Transport(format!(
-                    "RPC '{name}' to instance {}: wire protocol violation: {fault}",
-                    self.server
-                ))
-            })?;
+        let mut backoff = Backoff::new();
+        let (status, rseq, len) = loop {
+            if self.responses.pop(&mut self.rbuf)? {
+                let decoded = decode_response(&self.rbuf, self.max_payload)
+                    .map_err(|fault| {
+                        HicrError::Transport(format!(
+                            "RPC '{name}' to instance {}: wire protocol \
+                             violation: {fault}",
+                            self.server
+                        ))
+                    })?;
+                // A stale frame (response to an abandoned earlier call)
+                // is dropped; malformed reports echo whatever sat in the
+                // corrupt frame's seq field, so they always surface.
+                if decoded.1 >= seq || decoded.0 == ST_MALFORMED {
+                    break decoded;
+                }
+                backoff.reset();
+                continue;
+            }
+            if cancel() {
+                return Ok(None);
+            }
+            if pump()? {
+                backoff.reset();
+            } else {
+                backoff.wait();
+            }
+        };
         let payload = self.rbuf[HDR..HDR + len].to_vec();
         // A malformed-request report echoes whatever sat in the seq
         // field of the corrupt frame, so surface the server's diagnostic
@@ -609,7 +661,7 @@ impl RpcClient {
             )));
         }
         if status == ST_OK {
-            return Ok(payload);
+            return Ok(Some(payload));
         }
         let text = String::from_utf8_lossy(&payload).into_owned();
         match status {
@@ -991,6 +1043,70 @@ mod tests {
         for j in joins {
             j.join().unwrap();
         }
+    }
+
+    /// Two instances calling each other *simultaneously*, no dedicated
+    /// serve threads: each side's `call_pumped` drives its own server
+    /// while waiting, so the symmetric pattern (mutual steal requests)
+    /// cannot deadlock the way plain blocking `call`s would.
+    #[test]
+    fn pumped_mutual_calls_do_not_deadlock() {
+        let cmm = cmm();
+        let mut joins = Vec::new();
+        for me in [0u32, 1] {
+            let cmm = Arc::clone(&cmm);
+            joins.push(std::thread::spawn(move || {
+                let mut mesh =
+                    RpcMesh::build(&cmm, 25, me, &[0, 1], 64, alloc).unwrap();
+                mesh.server
+                    .register("whoami", move |_| Ok(me.to_le_bytes().to_vec()))
+                    .unwrap();
+                let peer = 1 - me;
+                let RpcMesh {
+                    server, clients, ..
+                } = &mut mesh;
+                for _ in 0..20 {
+                    let ret = clients
+                        .get_mut(&peer)
+                        .unwrap()
+                        .call_pumped(
+                            "whoami",
+                            b"",
+                            || server.try_serve_one(),
+                            || false,
+                        )
+                        .unwrap()
+                        .unwrap();
+                    assert_eq!(u32::from_le_bytes(ret.try_into().unwrap()), peer);
+                }
+                // Drain the peer's possibly still-outstanding last call.
+                while server.served() < 20 {
+                    server.serve_one().unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    /// An abandoned call (cancel fired before the response arrived) must
+    /// not desynchronize the link: the late response is discarded by
+    /// sequence number and the next call completes normally.
+    #[test]
+    fn abandoned_call_resynchronizes_by_sequence() {
+        let (mut server, mut client) = link(17);
+        server.register("echo", |a| Ok(a.to_vec())).unwrap();
+        // Nobody serves yet: the first call is abandoned immediately.
+        let none = client
+            .call_pumped("echo", b"stale", || Ok(false), || true)
+            .unwrap();
+        assert!(none.is_none());
+        // The server now answers both the abandoned and the live request.
+        let h = std::thread::spawn(move || server.serve(2).unwrap());
+        let ret = client.call("echo", b"live").unwrap();
+        assert_eq!(ret, b"live");
+        h.join().unwrap();
     }
 
     #[test]

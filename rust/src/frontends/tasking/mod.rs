@@ -10,6 +10,10 @@
 //! gates on completed tasks, [`TaskCtx::spawn_dataflow`] on produced
 //! data keys. See DESIGN.md §5 for the deque discipline, steal order and
 //! parking protocol, and docs/ARCHITECTURE.md for the lock inventory.
+//! The [`steal`] module lifts the same escalate-then-park ladder across
+//! instances: an instance whose workers run dry issues pull-based steal
+//! RPCs over the deployment mesh, victims ordered by topology, task
+//! payloads moving lazily (DESIGN.md §8).
 //!
 //! The frontend is written purely against the abstract compute API: it
 //! accepts **any** [`crate::core::compute::ComputeManager`] trait object
@@ -32,9 +36,13 @@
 #![warn(missing_docs)]
 
 mod deque;
+pub mod steal;
 pub mod system;
 pub mod trace;
 
+pub use steal::{
+    DescTask, StealConfig, StealPool, StealTopology, TaskPayload, VictimPolicy,
+};
 pub use system::{
     SchedConfig, SchedPolicy, SchedStats, TaskCtx, TaskHandle, TaskSystem,
 };

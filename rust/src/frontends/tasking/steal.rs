@@ -1,0 +1,1078 @@
+//! Distributed work stealing over the RPC mesh (DESIGN.md §8).
+//!
+//! The PR 5 scheduler steals only *within* one instance: when a worker's
+//! deque and its same-NUMA victims run dry, it backs off and parks. This
+//! module extends that escalation ladder across the deployment: an
+//! instance whose remote-ready lane and in-flight set are empty issues
+//! **steal RPCs** over the PR 4 mesh — pull-based, initiated by the idle
+//! side — before settling into its bounded park. The design composes
+//! four existing layers without touching the local hot path:
+//!
+//! - **Descriptor tasks.** Closures cannot cross the wire, so the unit
+//!   of migration is a [`DescTask`]: a pre-registered function id (the
+//!   RPC farm idiom) plus argument bytes, held in an instance-level
+//!   *remote-ready lane*. The local [`TaskSystem`] deques never hold
+//!   descriptors; stolen work enters through the injection lane like any
+//!   root task, so `steady_state_spawn_is_global_lock_free` is
+//!   preserved by construction.
+//! - **Steal-half batches.** A victim answers `hicr/steal/take` with
+//!   ⌈lane/2⌉ tasks (capped by the thief's request and the link's
+//!   payload budget), oldest first — the thief-FIFO end of the lane,
+//!   mirroring the deque discipline where owners work newest-first.
+//! - **Lazy payloads.** Arguments larger than
+//!   [`StealConfig::lazy_threshold`] do not travel in the steal
+//!   response: the victim parks them in its [`PayloadStore`] keyed by
+//!   task id and ships a [`TaskPayload::Lazy`] descriptor. The thief
+//!   fetches the blob point-to-point (`hicr/dataobject/fetch`) only
+//!   when it actually dispatches the task — a re-stolen descriptor
+//!   forwards with its original owner, so the bytes move at most once.
+//! - **Topology-ordered victims.** [`StealTopology::victim_order`]
+//!   prefers same-host instances before cross-fabric ones, ring-rotated
+//!   by own rank so thieves spread — the NUMA-first order of
+//!   `steal_order` lifted to the deployment level.
+//!
+//! Every blocking RPC a [`StealPool`] issues goes through
+//! [`crate::frontends::rpc::RpcClient::call_pumped`], serving this
+//! instance's own requests while waiting, so two instances stealing
+//! from each other simultaneously make progress instead of
+//! deadlocking.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::core::error::{HicrError, Result};
+use crate::frontends::dataobject::{PayloadStore, FN_FETCH};
+use crate::frontends::rpc::{fn_id, RpcMesh, RpcServer};
+use crate::frontends::tasking::{SchedStats, TaskSystem};
+use crate::util::backoff::Backoff;
+
+/// Steal RPC: hand the caller up to half of the victim's remote-ready
+/// lane. Request `[u32 max_tasks][u32 thief]`; response `[u32 count]`
+/// followed by `count` encoded [`DescTask`] records.
+pub const FN_STEAL_TAKE: &str = "hicr/steal/take";
+
+/// Completion RPC: deliver a finished task's result to its origin.
+/// Request `[u64 id][u32 executor][u8 ok][payload…]`; empty response.
+pub const FN_STEAL_COMPLETE: &str = "hicr/steal/complete";
+
+/// Fixed bytes of one encoded [`DescTask`] record before any inline
+/// payload: `[u64 id][u64 fn_id][u32 origin][u32 owner][u32 len][u8 kind]`.
+const DESC_HDR: usize = 29;
+
+/// How a [`StealPool`] orders its victims.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VictimPolicy {
+    /// Ring order by rank, topology ignored (the ablation baseline).
+    Flat,
+    /// Same-host victims first, each group in ring order — the NUMA-first
+    /// ring of the local scheduler lifted to the deployment level.
+    TopologyOrdered,
+}
+
+/// The deployment-level locality map a pool orders its victims by:
+/// every member rank paired with an opaque host key (instances sharing
+/// a key are "same host / same NUMA fabric"; distinct keys mean the
+/// steal crosses the fabric).
+#[derive(Debug, Clone)]
+pub struct StealTopology {
+    /// This instance's rank.
+    pub me: u32,
+    /// `(rank, host key)` for every world member, `me` included.
+    pub hosts: Vec<(u32, u64)>,
+}
+
+impl StealTopology {
+    /// A topology where every member shares one host (the in-process /
+    /// simulated-hub deployments, where all instances are co-located).
+    pub fn uniform(me: u32, ranks: &[u32]) -> StealTopology {
+        StealTopology {
+            me,
+            hosts: ranks.iter().map(|&r| (r, 0)).collect(),
+        }
+    }
+
+    /// Victim ranks in steal order under `policy`: peers sorted by
+    /// (cross-host, ring distance from `me`) — for [`VictimPolicy::Flat`]
+    /// by ring distance alone. Ring rotation by own rank spreads
+    /// concurrent thieves instead of converging them on the lowest rank,
+    /// exactly like the local scheduler's `steal_order`.
+    pub fn victim_order(&self, policy: VictimPolicy) -> Vec<u32> {
+        let mut members: Vec<u32> = self.hosts.iter().map(|&(r, _)| r).collect();
+        members.sort_unstable();
+        members.dedup();
+        let n = members.len();
+        let my_pos = members.iter().position(|&r| r == self.me).unwrap_or(0);
+        let host_of = |rank: u32| -> u64 {
+            self.hosts
+                .iter()
+                .find(|&&(r, _)| r == rank)
+                .map(|&(_, h)| h)
+                .unwrap_or(0)
+        };
+        let my_host = host_of(self.me);
+        let mut peers: Vec<u32> =
+            members.iter().copied().filter(|&r| r != self.me).collect();
+        peers.sort_by_key(|&v| {
+            let pos = members.iter().position(|&r| r == v).unwrap();
+            let ring = (pos + n - my_pos) % n;
+            match policy {
+                VictimPolicy::Flat => (false, ring),
+                VictimPolicy::TopologyOrdered => (host_of(v) != my_host, ring),
+            }
+        });
+        peers
+    }
+}
+
+/// Tuning knobs of a [`StealPool`].
+#[derive(Debug, Clone, Copy)]
+pub struct StealConfig {
+    /// Victim ordering policy.
+    pub victim_policy: VictimPolicy,
+    /// Inline payloads strictly larger than this travel lazily: the
+    /// bytes stay in the victim's [`PayloadStore`] and the thief fetches
+    /// them only at dispatch time.
+    pub lazy_threshold: usize,
+    /// Upper bound on tasks requested per steal RPC (the victim further
+    /// caps at half its lane and the link's payload budget).
+    pub max_batch: u32,
+    /// Descriptor tasks dispatched into the local [`TaskSystem`] at
+    /// once. `0` resolves to `2 × n_workers` — enough to keep every
+    /// worker busy plus a refill margin, small enough that a thief can
+    /// still relieve this instance of a burst.
+    pub max_inflight: usize,
+}
+
+impl Default for StealConfig {
+    fn default() -> Self {
+        Self {
+            victim_policy: VictimPolicy::TopologyOrdered,
+            lazy_threshold: 64,
+            max_batch: 16,
+            max_inflight: 0,
+        }
+    }
+}
+
+/// How a descriptor task's argument bytes travel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskPayload {
+    /// Arguments carried in the steal response itself.
+    Inline(Vec<u8>),
+    /// Arguments parked in the *owner*'s [`PayloadStore`] under the task
+    /// id; `len` is their size (telemetry + fetch validation).
+    Lazy {
+        /// Size of the parked blob in bytes.
+        len: u32,
+    },
+}
+
+/// A migratable task: a pre-registered function plus its arguments.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DescTask {
+    /// Globally unique id: `origin rank << 32 | per-origin sequence`.
+    pub id: u64,
+    /// FNV-1a id of the registered function (see [`StealPool::register`]).
+    pub fn_id: u64,
+    /// Rank the result must be delivered to.
+    pub origin: u32,
+    /// Rank holding the payload (only meaningful for lazy payloads; a
+    /// re-stolen descriptor forwards with its original owner).
+    pub owner: u32,
+    /// The argument bytes, inline or lazy.
+    pub payload: TaskPayload,
+}
+
+fn encoded_len(t: &DescTask) -> usize {
+    DESC_HDR
+        + match &t.payload {
+            TaskPayload::Inline(b) => b.len(),
+            TaskPayload::Lazy { .. } => 0,
+        }
+}
+
+fn encode_task(out: &mut Vec<u8>, t: &DescTask) {
+    out.extend_from_slice(&t.id.to_le_bytes());
+    out.extend_from_slice(&t.fn_id.to_le_bytes());
+    out.extend_from_slice(&t.origin.to_le_bytes());
+    out.extend_from_slice(&t.owner.to_le_bytes());
+    match &t.payload {
+        TaskPayload::Inline(b) => {
+            out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+            out.push(0);
+            out.extend_from_slice(b);
+        }
+        TaskPayload::Lazy { len } => {
+            out.extend_from_slice(&len.to_le_bytes());
+            out.push(1);
+        }
+    }
+}
+
+fn wire_err(what: &str) -> HicrError {
+    HicrError::Transport(format!("malformed steal batch: {what}"))
+}
+
+fn decode_tasks(buf: &[u8]) -> Result<Vec<DescTask>> {
+    if buf.len() < 4 {
+        return Err(wire_err("missing count"));
+    }
+    let count = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    let mut tasks = Vec::with_capacity(count);
+    let mut at = 4usize;
+    for _ in 0..count {
+        if buf.len() < at + DESC_HDR {
+            return Err(wire_err("truncated record header"));
+        }
+        let id = u64::from_le_bytes(buf[at..at + 8].try_into().unwrap());
+        let fid = u64::from_le_bytes(buf[at + 8..at + 16].try_into().unwrap());
+        let origin = u32::from_le_bytes(buf[at + 16..at + 20].try_into().unwrap());
+        let owner = u32::from_le_bytes(buf[at + 20..at + 24].try_into().unwrap());
+        let len = u32::from_le_bytes(buf[at + 24..at + 28].try_into().unwrap());
+        let kind = buf[at + 28];
+        at += DESC_HDR;
+        let payload = match kind {
+            0 => {
+                if buf.len() < at + len as usize {
+                    return Err(wire_err("truncated inline payload"));
+                }
+                let bytes = buf[at..at + len as usize].to_vec();
+                at += len as usize;
+                TaskPayload::Inline(bytes)
+            }
+            1 => TaskPayload::Lazy { len },
+            other => return Err(wire_err(&format!("unknown payload kind {other}"))),
+        };
+        tasks.push(DescTask {
+            id,
+            fn_id: fid,
+            origin,
+            owner,
+            payload,
+        });
+    }
+    if at != buf.len() {
+        return Err(wire_err("trailing bytes after last record"));
+    }
+    Ok(tasks)
+}
+
+/// A finished task's result (or its error text) on its way home.
+type Outcome = std::result::Result<Vec<u8>, String>;
+
+struct Completion {
+    id: u64,
+    origin: u32,
+    executor: u32,
+    outcome: Outcome,
+}
+
+fn encode_complete(c: &Completion) -> Vec<u8> {
+    let (ok, bytes): (u8, &[u8]) = match &c.outcome {
+        Ok(b) => (1, b),
+        Err(e) => (0, e.as_bytes()),
+    };
+    let mut out = Vec::with_capacity(13 + bytes.len());
+    out.extend_from_slice(&c.id.to_le_bytes());
+    out.extend_from_slice(&c.executor.to_le_bytes());
+    out.push(ok);
+    out.extend_from_slice(bytes);
+    out
+}
+
+fn decode_complete(args: &[u8]) -> Result<(u64, u32, Outcome)> {
+    if args.len() < 13 {
+        return Err(wire_err("short completion"));
+    }
+    let id = u64::from_le_bytes(args[0..8].try_into().unwrap());
+    let executor = u32::from_le_bytes(args[8..12].try_into().unwrap());
+    let outcome = match args[12] {
+        1 => Ok(args[13..].to_vec()),
+        _ => Err(String::from_utf8_lossy(&args[13..]).into_owned()),
+    };
+    Ok((id, executor, outcome))
+}
+
+type StealHandler = Arc<dyn Fn(&[u8]) -> Result<Vec<u8>> + Send + Sync>;
+
+/// State shared between the drive loop, the RPC handlers, and the task
+/// bodies executing on the local [`TaskSystem`]'s workers.
+struct Shared {
+    me: u32,
+    lazy_threshold: usize,
+    /// The remote-ready lane: descriptor tasks runnable here or
+    /// stealable by peers. Owner side dispatches newest-first (back),
+    /// thieves take oldest-first (front) — the deque discipline.
+    lane: Mutex<VecDeque<DescTask>>,
+    /// Lock-free mirror of `lane.len()` for the drive loop's idle check.
+    lane_len: AtomicUsize,
+    /// Parked lazy payloads served point-to-point via `FN_FETCH`.
+    store: PayloadStore,
+    /// `fn_id → (name, handler)` — the pre-registered task bodies.
+    handlers: Mutex<HashMap<u64, (String, StealHandler)>>,
+    /// Results of tasks *this* instance originated: `None` until the
+    /// completion lands. Doubles as the lost/duplicated-task detector.
+    outstanding: Mutex<HashMap<u64, Option<Outcome>>>,
+    /// Originated tasks not yet completed.
+    pending: AtomicUsize,
+    /// Finished-here results awaiting delivery to their origins.
+    completions: Mutex<VecDeque<Completion>>,
+    /// Descriptor tasks currently inside the local [`TaskSystem`].
+    inflight: AtomicUsize,
+    next_seq: AtomicU64,
+    /// Tasks completed per executor rank (origin-side attribution).
+    completed_by: Mutex<HashMap<u32, u64>>,
+    // Remote-steal telemetry (SchedStats growth).
+    attempts: AtomicU64,
+    successes: AtomicU64,
+    migrated_in: AtomicU64,
+    migrated_out: AtomicU64,
+    lazy_bytes: AtomicU64,
+}
+
+impl Shared {
+    /// Victim side of `FN_STEAL_TAKE`: pop up to ⌈lane/2⌉ tasks (capped
+    /// by the thief's request and the response `budget`), oldest first,
+    /// converting over-threshold inline payloads to lazy ones parked in
+    /// the store. Tasks that no longer fit the response go back to the
+    /// lane front in order.
+    fn take_batch(&self, max_tasks: usize, budget: usize) -> Result<Vec<u8>> {
+        let mut lane = self.lane.lock().unwrap();
+        let want = lane.len().div_ceil(2).min(max_tasks);
+        let mut out = vec![0u8; 4];
+        let mut taken = 0u32;
+        while (taken as usize) < want {
+            let Some(mut t) = lane.pop_front() else { break };
+            let mut parked = 0u64;
+            if let TaskPayload::Inline(bytes) = &t.payload {
+                if bytes.len() > self.lazy_threshold {
+                    let TaskPayload::Inline(bytes) = std::mem::replace(
+                        &mut t.payload,
+                        TaskPayload::Lazy {
+                            len: bytes.len() as u32,
+                        },
+                    ) else {
+                        unreachable!("matched Inline above");
+                    };
+                    parked = bytes.len() as u64;
+                    // Publishing under a live key means a task id was
+                    // duplicated — surface it, never overwrite.
+                    self.store.publish(t.id, bytes)?;
+                    t.owner = self.me;
+                }
+            }
+            if out.len() + encoded_len(&t) > budget {
+                lane.push_front(t);
+                break;
+            }
+            encode_task(&mut out, &t);
+            // Count lazy bytes on the victim side, when the task is
+            // actually handed out: these are the bytes the steal response
+            // deferred, which the thief will pull at dispatch time.
+            self.lazy_bytes.fetch_add(parked, Ordering::Relaxed);
+            taken += 1;
+        }
+        self.lane_len.store(lane.len(), Ordering::Relaxed);
+        drop(lane);
+        self.migrated_out.fetch_add(taken as u64, Ordering::Relaxed);
+        out[0..4].copy_from_slice(&taken.to_le_bytes());
+        Ok(out)
+    }
+
+    /// Origin side: record a completed task exactly once. An unknown id
+    /// (lost bookkeeping) or an already-completed id (duplicated
+    /// execution) is a loud error — the zero-lost/zero-duplicated
+    /// guarantee the integration tests assert.
+    fn fulfill(&self, id: u64, executor: u32, outcome: Outcome) -> Result<()> {
+        let mut out = self.outstanding.lock().unwrap();
+        match out.get_mut(&id) {
+            None => Err(HicrError::InvalidState(format!(
+                "completion for unknown task {id:#x} (executor {executor})"
+            ))),
+            Some(Some(_)) => Err(HicrError::InvalidState(format!(
+                "duplicate completion for task {id:#x} (executor {executor})"
+            ))),
+            Some(slot) => {
+                *slot = Some(outcome);
+                drop(out);
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                *self
+                    .completed_by
+                    .lock()
+                    .unwrap()
+                    .entry(executor)
+                    .or_insert(0) += 1;
+                Ok(())
+            }
+        }
+    }
+
+    fn push_lane_back(&self, tasks: Vec<DescTask>) {
+        let mut lane = self.lane.lock().unwrap();
+        lane.extend(tasks);
+        self.lane_len.store(lane.len(), Ordering::Relaxed);
+    }
+}
+
+/// Instance-level distributed stealing pool: a remote-ready lane of
+/// descriptor tasks in front of a local [`TaskSystem`], wired into the
+/// deployment's [`RpcMesh`]. See the module docs for the protocol.
+pub struct StealPool {
+    sys: Arc<TaskSystem>,
+    shared: Arc<Shared>,
+    /// Victim ranks in steal order (fixed at construction).
+    victims: Vec<u32>,
+    max_batch: u32,
+    max_inflight: usize,
+}
+
+impl StealPool {
+    /// Build a pool executing on `sys`, stealing per `topo` and `config`.
+    /// Call [`StealPool::install`] on the deployment's server before
+    /// driving, and register every task function on every instance.
+    pub fn new(
+        sys: Arc<TaskSystem>,
+        topo: &StealTopology,
+        config: StealConfig,
+    ) -> StealPool {
+        let max_inflight = if config.max_inflight == 0 {
+            2 * sys.n_workers()
+        } else {
+            config.max_inflight
+        };
+        StealPool {
+            shared: Arc::new(Shared {
+                me: topo.me,
+                lazy_threshold: config.lazy_threshold,
+                lane: Mutex::new(VecDeque::new()),
+                lane_len: AtomicUsize::new(0),
+                store: PayloadStore::new(),
+                handlers: Mutex::new(HashMap::new()),
+                outstanding: Mutex::new(HashMap::new()),
+                pending: AtomicUsize::new(0),
+                completions: Mutex::new(VecDeque::new()),
+                inflight: AtomicUsize::new(0),
+                next_seq: AtomicU64::new(0),
+                completed_by: Mutex::new(HashMap::new()),
+                attempts: AtomicU64::new(0),
+                successes: AtomicU64::new(0),
+                migrated_in: AtomicU64::new(0),
+                migrated_out: AtomicU64::new(0),
+                lazy_bytes: AtomicU64::new(0),
+            }),
+            victims: topo.victim_order(config.victim_policy),
+            max_batch: config.max_batch,
+            max_inflight,
+            sys,
+        }
+    }
+
+    /// Pre-register the task body callable as `name` (every instance
+    /// must register the same names — the RPC farm idiom). Duplicate
+    /// names and fn-id collisions are rejected loudly.
+    pub fn register(
+        &self,
+        name: &str,
+        f: impl Fn(&[u8]) -> Result<Vec<u8>> + Send + Sync + 'static,
+    ) -> Result<()> {
+        let id = fn_id(name);
+        let mut handlers = self.shared.handlers.lock().unwrap();
+        if let Some((existing, _)) = handlers.get(&id) {
+            return Err(HicrError::Rejected(if existing == name {
+                format!("steal task '{name}' already registered")
+            } else {
+                format!(
+                    "steal task fn_id collision: '{name}' hashes to {id:#018x}, \
+                     already taken by '{existing}'"
+                )
+            }));
+        }
+        handlers.insert(id, (name.to_string(), Arc::new(f)));
+        Ok(())
+    }
+
+    /// Register the steal fn-id family (`FN_STEAL_TAKE`,
+    /// `FN_STEAL_COMPLETE`, `FN_FETCH`) on the deployment's server —
+    /// the world-bring-up step that makes this instance a valid victim,
+    /// origin, and payload owner.
+    pub fn install(&self, server: &mut RpcServer) -> Result<()> {
+        let budget = server.max_payload();
+        let shared = Arc::clone(&self.shared);
+        server.register(FN_STEAL_TAKE, move |args| {
+            if args.len() != 8 {
+                return Err(HicrError::Bounds(format!(
+                    "steal-take request must be 8 B, got {}",
+                    args.len()
+                )));
+            }
+            let max_tasks = u32::from_le_bytes(args[0..4].try_into().unwrap());
+            shared.take_batch(max_tasks as usize, budget)
+        })?;
+        let shared = Arc::clone(&self.shared);
+        server.register(FN_STEAL_COMPLETE, move |args| {
+            let (id, executor, outcome) = decode_complete(args)?;
+            shared.fulfill(id, executor, outcome)?;
+            Ok(Vec::new())
+        })?;
+        self.shared.store.register_fetch(server)
+    }
+
+    /// Enqueue a task for `name` (which must be registered) with `args`
+    /// onto the remote-ready lane and return its id. The task runs here
+    /// unless a thief takes it first; fetch the result with
+    /// [`StealPool::take_result`] after driving.
+    pub fn spawn(&self, name: &str, args: Vec<u8>) -> Result<u64> {
+        let fid = fn_id(name);
+        if !self.shared.handlers.lock().unwrap().contains_key(&fid) {
+            return Err(HicrError::Rejected(format!(
+                "steal task '{name}' spawned before registration"
+            )));
+        }
+        let seq = self.shared.next_seq.fetch_add(1, Ordering::Relaxed);
+        let id = (self.shared.me as u64) << 32 | seq;
+        self.shared.outstanding.lock().unwrap().insert(id, None);
+        self.shared.pending.fetch_add(1, Ordering::AcqRel);
+        self.shared.push_lane_back(vec![DescTask {
+            id,
+            fn_id: fid,
+            origin: self.shared.me,
+            owner: self.shared.me,
+            payload: TaskPayload::Inline(args),
+        }]);
+        Ok(id)
+    }
+
+    /// Tasks this instance originated that have not completed yet.
+    pub fn pending(&self) -> usize {
+        self.shared.pending.load(Ordering::Acquire)
+    }
+
+    /// Descriptor tasks currently queued on the remote-ready lane.
+    pub fn lane_len(&self) -> usize {
+        self.shared.lane_len.load(Ordering::Relaxed)
+    }
+
+    /// Take the result of an originated task: `Ok(None)` while it is
+    /// still running (or for an unknown/already-taken id); a task whose
+    /// body failed surfaces its error.
+    pub fn take_result(&self, id: u64) -> Result<Option<Vec<u8>>> {
+        let mut out = self.shared.outstanding.lock().unwrap();
+        match out.get(&id) {
+            None | Some(None) => Ok(None),
+            Some(Some(_)) => {
+                let outcome = out.remove(&id).unwrap().unwrap();
+                drop(out);
+                outcome.map(Some).map_err(|e| {
+                    HicrError::InvalidState(format!(
+                        "steal task {id:#x} failed remotely: {e}"
+                    ))
+                })
+            }
+        }
+    }
+
+    /// Tasks completed per executor rank, as observed by this origin
+    /// (rank `me` entries are tasks that ran locally). Sorted by rank.
+    pub fn completed_by(&self) -> Vec<(u32, u64)> {
+        let mut v: Vec<(u32, u64)> = self
+            .shared
+            .completed_by
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&r, &c)| (r, c))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Local scheduler counters merged with this pool's remote-steal
+    /// telemetry (the `SchedStats` growth of PR 7).
+    pub fn sched_stats(&self) -> SchedStats {
+        let s = &self.shared;
+        SchedStats {
+            remote_steal_attempts: s.attempts.load(Ordering::Relaxed),
+            remote_steals: s.successes.load(Ordering::Relaxed),
+            tasks_migrated_in: s.migrated_in.load(Ordering::Relaxed),
+            tasks_migrated_out: s.migrated_out.load(Ordering::Relaxed),
+            lazy_payload_bytes: s.lazy_bytes.load(Ordering::Relaxed),
+            ..self.sys.sched_stats()
+        }
+    }
+
+    /// Drive this instance's side of the protocol until `keep` returns
+    /// false: deliver finished results, dispatch lane tasks into the
+    /// local [`TaskSystem`], answer peers' requests, and — once the lane
+    /// and the in-flight set are empty — escalate to remote stealing
+    /// before settling into the bounded park (capped [`Backoff`]
+    /// sleeps). `keep` is also the cancel signal for in-flight steal
+    /// RPCs, so a shutdown served mid-steal aborts the wait cleanly.
+    pub fn drive_while(
+        &self,
+        mesh: &mut RpcMesh,
+        mut keep: impl FnMut() -> bool,
+    ) -> Result<()> {
+        let RpcMesh {
+            server, clients, ..
+        } = mesh;
+        let mut backoff = Backoff::new();
+        while keep() {
+            // Ship finished results home and refill the local system.
+            let mut progress = self.flush_completions(server, clients)?;
+            if self.dispatch_ready(server, clients)? {
+                progress = true;
+            }
+            // Answer peers (steal-takes, fetches, completions, shutdown).
+            while server.try_serve_one()? {
+                progress = true;
+            }
+            if progress {
+                backoff.reset();
+                continue;
+            }
+            // Escalation: local lane and in-flight set empty — try the
+            // victims in topology order before parking.
+            if self.shared.lane_len.load(Ordering::Relaxed) == 0
+                && self.shared.inflight.load(Ordering::Acquire) == 0
+                && !self.victims.is_empty()
+            {
+                let stole = self.steal_round(server, clients, &mut keep)?;
+                if stole {
+                    backoff.reset();
+                    continue;
+                }
+            }
+            // Bounded park: capped sleeps, still re-polling everything.
+            backoff.wait();
+        }
+        Ok(())
+    }
+
+    /// Drive until every task this instance originated has completed
+    /// and every foreign result has been delivered (the root's side of
+    /// a drain).
+    pub fn drive_until_drained(&self, mesh: &mut RpcMesh) -> Result<()> {
+        let shared = Arc::clone(&self.shared);
+        self.drive_while(mesh, move || {
+            shared.pending.load(Ordering::Acquire) > 0
+                || shared.lane_len.load(Ordering::Relaxed) > 0
+                || shared.inflight.load(Ordering::Acquire) > 0
+                || !shared.completions.lock().unwrap().is_empty()
+        })
+    }
+
+    /// Deliver queued completions: local fulfillment for own tasks, a
+    /// pumped `FN_STEAL_COMPLETE` call home for stolen ones.
+    fn flush_completions(
+        &self,
+        server: &mut RpcServer,
+        clients: &mut std::collections::BTreeMap<u32, crate::frontends::rpc::RpcClient>,
+    ) -> Result<bool> {
+        let mut progress = false;
+        loop {
+            // Popped in its own statement so the lane lock never spans
+            // the pumped delivery call below.
+            let next = self.shared.completions.lock().unwrap().pop_front();
+            let Some(c) = next else { break };
+            if c.origin == self.shared.me {
+                self.shared.fulfill(c.id, c.executor, c.outcome)?;
+            } else {
+                let payload = encode_complete(&c);
+                let client = clients.get_mut(&c.origin).ok_or_else(|| {
+                    HicrError::Rejected(format!(
+                        "no RPC link to origin {} of task {:#x}",
+                        c.origin, c.id
+                    ))
+                })?;
+                client
+                    .call_pumped(
+                        FN_STEAL_COMPLETE,
+                        &payload,
+                        || server.try_serve_one(),
+                        || false,
+                    )?
+                    .expect("uncancelable call");
+            }
+            progress = true;
+        }
+        Ok(progress)
+    }
+
+    /// Move lane tasks (newest first — the owner side of the deque
+    /// discipline) into the local [`TaskSystem`], fetching lazy payloads
+    /// at dispatch time, up to the in-flight cap.
+    fn dispatch_ready(
+        &self,
+        server: &mut RpcServer,
+        clients: &mut std::collections::BTreeMap<u32, crate::frontends::rpc::RpcClient>,
+    ) -> Result<bool> {
+        let mut progress = false;
+        while self.shared.inflight.load(Ordering::Acquire) < self.max_inflight {
+            let task = {
+                let mut lane = self.shared.lane.lock().unwrap();
+                let t = lane.pop_back();
+                self.shared.lane_len.store(lane.len(), Ordering::Relaxed);
+                t
+            };
+            let Some(t) = task else { break };
+            let args = match t.payload {
+                TaskPayload::Inline(bytes) => bytes,
+                TaskPayload::Lazy { len } => {
+                    let bytes = if t.owner == self.shared.me {
+                        self.shared.store.take(t.id).ok_or_else(|| {
+                            HicrError::InvalidState(format!(
+                                "lazy payload of own task {:#x} missing",
+                                t.id
+                            ))
+                        })?
+                    } else {
+                        let client =
+                            clients.get_mut(&t.owner).ok_or_else(|| {
+                                HicrError::Rejected(format!(
+                                    "no RPC link to payload owner {} of task {:#x}",
+                                    t.owner, t.id
+                                ))
+                            })?;
+                        client
+                            .call_pumped(
+                                FN_FETCH,
+                                &t.id.to_le_bytes(),
+                                || server.try_serve_one(),
+                                || false,
+                            )?
+                            .expect("uncancelable call")
+                    };
+                    if bytes.len() != len as usize {
+                        return Err(HicrError::Transport(format!(
+                            "task {:#x}: lazy payload is {} B, descriptor \
+                             promised {len} B",
+                            t.id,
+                            bytes.len()
+                        )));
+                    }
+                    bytes
+                }
+            };
+            let handler = {
+                let handlers = self.shared.handlers.lock().unwrap();
+                let (_, h) = handlers.get(&t.fn_id).ok_or_else(|| {
+                    HicrError::Rejected(format!(
+                        "stolen task {:#x} references unregistered fn \
+                         {:#018x} (register the same names on every instance)",
+                        t.id, t.fn_id
+                    ))
+                })?;
+                Arc::clone(h)
+            };
+            let shared = Arc::clone(&self.shared);
+            let (id, origin) = (t.id, t.origin);
+            self.shared.inflight.fetch_add(1, Ordering::AcqRel);
+            self.sys.submit("steal-task", move |_| {
+                let outcome = handler(&args).map_err(|e| e.to_string());
+                shared.completions.lock().unwrap().push_back(Completion {
+                    id,
+                    origin,
+                    executor: shared.me,
+                    outcome,
+                });
+                shared.inflight.fetch_sub(1, Ordering::AcqRel);
+            });
+            progress = true;
+        }
+        Ok(progress)
+    }
+
+    /// One scan over the victims in topology order; returns whether any
+    /// steal landed tasks on the lane. `keep` doubles as the cancel
+    /// predicate: a shutdown observed mid-call abandons the round.
+    fn steal_round(
+        &self,
+        server: &mut RpcServer,
+        clients: &mut std::collections::BTreeMap<u32, crate::frontends::rpc::RpcClient>,
+        keep: &mut impl FnMut() -> bool,
+    ) -> Result<bool> {
+        let mut req = [0u8; 8];
+        req[0..4].copy_from_slice(&self.max_batch.to_le_bytes());
+        req[4..8].copy_from_slice(&self.shared.me.to_le_bytes());
+        for &victim in &self.victims {
+            self.shared.attempts.fetch_add(1, Ordering::Relaxed);
+            let client = clients.get_mut(&victim).ok_or_else(|| {
+                HicrError::Rejected(format!("no RPC link to victim {victim}"))
+            })?;
+            let Some(resp) = client.call_pumped(
+                FN_STEAL_TAKE,
+                &req,
+                || server.try_serve_one(),
+                || !keep(),
+            )?
+            else {
+                return Ok(false); // canceled (e.g. shutdown mid-steal)
+            };
+            let tasks = decode_tasks(&resp)?;
+            if !tasks.is_empty() {
+                self.shared.successes.fetch_add(1, Ordering::Relaxed);
+                self.shared
+                    .migrated_in
+                    .fetch_add(tasks.len() as u64, Ordering::Relaxed);
+                self.shared.push_lane_back(tasks);
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::threads::ThreadsCommunicationManager;
+    use crate::core::communication::CommunicationManager;
+    use crate::core::ids::MemorySpaceId;
+    use crate::core::memory::LocalMemorySlot;
+    use std::sync::atomic::AtomicBool;
+
+    fn alloc(len: usize) -> Result<LocalMemorySlot> {
+        LocalMemorySlot::alloc(MemorySpaceId(1), len)
+    }
+
+    fn task_system(workers: usize) -> Arc<TaskSystem> {
+        TaskSystem::new(
+            Arc::new(crate::backends::threads::ThreadsComputeManager::new()),
+            workers,
+            false,
+        )
+    }
+
+    /// Satellite: same-host victims come before cross-fabric ones, both
+    /// groups ring-rotated past own rank; Flat ignores the hosts.
+    #[test]
+    fn victim_order_prefers_same_host_before_cross_fabric() {
+        let topo = StealTopology {
+            me: 0,
+            hosts: vec![(0, 0xA), (1, 0xB), (2, 0xA), (3, 0xB), (4, 0xA)],
+        };
+        assert_eq!(
+            topo.victim_order(VictimPolicy::TopologyOrdered),
+            vec![2, 4, 1, 3]
+        );
+        assert_eq!(topo.victim_order(VictimPolicy::Flat), vec![1, 2, 3, 4]);
+    }
+
+    /// Ring rotation: a middle rank scans forward first, wrapping, so
+    /// concurrent thieves spread instead of converging on rank 0.
+    #[test]
+    fn victim_order_ring_rotates_past_own_rank() {
+        let topo = StealTopology::uniform(2, &[0, 1, 2, 3, 4]);
+        assert_eq!(
+            topo.victim_order(VictimPolicy::TopologyOrdered),
+            vec![3, 4, 0, 1]
+        );
+        // Same-host grouping survives the rotation.
+        let topo = StealTopology {
+            me: 2,
+            hosts: vec![(0, 7), (1, 9), (2, 7), (3, 9), (4, 7)],
+        };
+        assert_eq!(
+            topo.victim_order(VictimPolicy::TopologyOrdered),
+            vec![4, 0, 3, 1]
+        );
+    }
+
+    #[test]
+    fn task_wire_roundtrip() {
+        let tasks = vec![
+            DescTask {
+                id: 0x1_0000_0007,
+                fn_id: fn_id("t/a"),
+                origin: 1,
+                owner: 1,
+                payload: TaskPayload::Inline(vec![1, 2, 3]),
+            },
+            DescTask {
+                id: 0x2_0000_0009,
+                fn_id: fn_id("t/b"),
+                origin: 2,
+                owner: 3,
+                payload: TaskPayload::Lazy { len: 4096 },
+            },
+        ];
+        let mut buf = vec![0u8; 4];
+        for t in &tasks {
+            encode_task(&mut buf, t);
+        }
+        buf[0..4].copy_from_slice(&2u32.to_le_bytes());
+        assert_eq!(decode_tasks(&buf).unwrap(), tasks);
+        // Truncations and garbage kinds are wire errors, not panics.
+        assert!(decode_tasks(&buf[..buf.len() - 1]).is_err());
+        assert!(decode_tasks(&[]).is_err());
+        let mut bad = buf.clone();
+        bad[4 + DESC_HDR - 1] = 9;
+        assert!(decode_tasks(&bad).is_err());
+    }
+
+    /// Steal-half on the victim lane: 7 queued → 4 handed out (oldest
+    /// first), 3 kept; over-threshold payloads convert to lazy records
+    /// parked in the store.
+    #[test]
+    fn take_batch_steals_half_and_parks_large_payloads() {
+        let sys = task_system(1);
+        let topo = StealTopology::uniform(0, &[0, 1]);
+        let pool = StealPool::new(
+            Arc::clone(&sys),
+            &topo,
+            StealConfig {
+                lazy_threshold: 8,
+                ..StealConfig::default()
+            },
+        );
+        pool.register("t/echo", |a| Ok(a.to_vec())).unwrap();
+        for i in 0..7u64 {
+            // Task 0 gets a big payload (lazy), the rest stay inline.
+            let len = if i == 0 { 32 } else { 4 };
+            pool.spawn("t/echo", vec![i as u8; len]).unwrap();
+        }
+        let batch = pool.shared.take_batch(16, 32 * 1024).unwrap();
+        let tasks = decode_tasks(&batch).unwrap();
+        assert_eq!(tasks.len(), 4, "ceil(7/2)");
+        assert_eq!(pool.lane_len(), 3);
+        assert_eq!(tasks[0].payload, TaskPayload::Lazy { len: 32 });
+        assert_eq!(tasks[0].owner, 0);
+        assert_eq!(pool.shared.store.take(tasks[0].id).unwrap(), vec![0u8; 32]);
+        assert!(matches!(tasks[1].payload, TaskPayload::Inline(_)));
+        // The thief's cap is honored too.
+        let batch = pool.shared.take_batch(1, 32 * 1024).unwrap();
+        assert_eq!(decode_tasks(&batch).unwrap().len(), 1);
+        sys.shutdown().unwrap();
+    }
+
+    /// A response budget too small for the whole half re-queues the
+    /// overflow at the lane front in order — tasks are never dropped.
+    #[test]
+    fn take_batch_respects_response_budget() {
+        let sys = task_system(1);
+        let topo = StealTopology::uniform(0, &[0, 1]);
+        let pool = StealPool::new(Arc::clone(&sys), &topo, StealConfig::default());
+        pool.register("t/echo", |a| Ok(a.to_vec())).unwrap();
+        for i in 0..8u64 {
+            pool.spawn("t/echo", vec![i as u8; 16]).unwrap();
+        }
+        // Budget fits the count word + two 45-byte records only.
+        let batch = pool.shared.take_batch(16, 4 + 2 * (DESC_HDR + 16)).unwrap();
+        let tasks = decode_tasks(&batch).unwrap();
+        assert_eq!(tasks.len(), 2);
+        assert_eq!(pool.lane_len(), 6);
+        // The overflow kept its order: the next take starts at task 2.
+        let batch = pool.shared.take_batch(16, 32 * 1024).unwrap();
+        let next = decode_tasks(&batch).unwrap();
+        assert_eq!(next[0].payload, TaskPayload::Inline(vec![2u8; 16]));
+        sys.shutdown().unwrap();
+    }
+
+    #[test]
+    fn fulfill_rejects_unknown_and_duplicate_completions() {
+        let sys = task_system(1);
+        let topo = StealTopology::uniform(0, &[0, 1]);
+        let pool = StealPool::new(Arc::clone(&sys), &topo, StealConfig::default());
+        pool.register("t/echo", |a| Ok(a.to_vec())).unwrap();
+        let id = pool.spawn("t/echo", vec![1]).unwrap();
+        assert!(pool.shared.fulfill(999, 1, Ok(vec![])).is_err());
+        pool.shared.fulfill(id, 1, Ok(vec![7])).unwrap();
+        let err = pool.shared.fulfill(id, 2, Ok(vec![8])).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        assert_eq!(pool.take_result(id).unwrap(), Some(vec![7]));
+        assert_eq!(pool.pending(), 0);
+        sys.shutdown().unwrap();
+    }
+
+    #[test]
+    fn spawn_requires_registration() {
+        let sys = task_system(1);
+        let topo = StealTopology::uniform(0, &[0]);
+        let pool = StealPool::new(Arc::clone(&sys), &topo, StealConfig::default());
+        assert!(pool.spawn("t/missing", vec![]).is_err());
+        pool.register("t/x", |_| Ok(vec![])).unwrap();
+        let err = pool.register("t/x", |_| Ok(vec![])).unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err}");
+        sys.shutdown().unwrap();
+    }
+
+    /// The tentpole end to end, mesh-only (no deployment layer): a
+    /// 4-instance world where EVERY task is seeded on instance 0 with a
+    /// 96-byte payload (over the lazy threshold). Stealing must drain
+    /// the imbalance with zero lost or duplicated tasks, results
+    /// splitmix-verified, payload bytes moving lazily.
+    #[test]
+    fn imbalanced_world_drains_by_stealing() {
+        let n = 4u32;
+        let tasks = 48u64;
+        let cmm: Arc<dyn CommunicationManager> =
+            Arc::new(ThreadsCommunicationManager::new());
+        let done = Arc::new(AtomicBool::new(false));
+        let ranks: Vec<u32> = (0..n).collect();
+        let mut joins = Vec::new();
+        for me in 0..n {
+            let cmm = Arc::clone(&cmm);
+            let done = Arc::clone(&done);
+            let ranks = ranks.clone();
+            joins.push(std::thread::spawn(move || -> Result<SchedStats> {
+                let mut mesh =
+                    RpcMesh::build(&cmm, 0xE1, me, &ranks, 4096, alloc)?;
+                let sys = task_system(2);
+                let topo = StealTopology::uniform(me, &ranks);
+                let pool = StealPool::new(Arc::clone(&sys), &topo, StealConfig::default());
+                pool.register("t/value", |args| {
+                    // 8-byte index + 88 bytes of index-derived filler the
+                    // body verifies, so payload corruption cannot hide.
+                    let x = u64::from_le_bytes(args[0..8].try_into().unwrap());
+                    for (j, &b) in args[8..].iter().enumerate() {
+                        assert_eq!(b, (x as u8).wrapping_add(j as u8));
+                    }
+                    Ok(crate::apps::taskfarm::task_value(x).to_le_bytes().to_vec())
+                })?;
+                pool.install(&mut mesh.server)?;
+                if me == 0 {
+                    let mut ids = Vec::new();
+                    for i in 0..tasks {
+                        let mut args = i.to_le_bytes().to_vec();
+                        args.extend((0..88).map(|j| (i as u8).wrapping_add(j as u8)));
+                        ids.push((i, pool.spawn("t/value", args)?));
+                    }
+                    pool.drive_until_drained(&mut mesh)?;
+                    for (i, id) in ids {
+                        let got = pool.take_result(id)?.expect("task completed");
+                        assert_eq!(
+                            u64::from_le_bytes(got.try_into().unwrap()),
+                            crate::apps::taskfarm::task_value(i),
+                            "task {i} corrupted"
+                        );
+                    }
+                    done.store(true, Ordering::Release);
+                } else {
+                    pool.drive_while(&mut mesh, || !done.load(Ordering::Acquire))?;
+                }
+                let stats = pool.sched_stats();
+                sys.shutdown()?;
+                Ok(stats)
+            }));
+        }
+        let stats: Vec<SchedStats> =
+            joins.into_iter().map(|j| j.join().unwrap().unwrap()).collect();
+        let root = &stats[0];
+        // Every task completed exactly once (fulfill would have errored
+        // on duplicates; take_result verified none were lost).
+        let migrated_out: u64 = stats.iter().map(|s| s.tasks_migrated_out).sum();
+        let migrated_in: u64 = stats.iter().map(|s| s.tasks_migrated_in).sum();
+        assert_eq!(migrated_in, migrated_out, "no task lost in flight");
+        assert!(
+            root.tasks_migrated_out > 0,
+            "an all-on-root imbalance must trigger stealing: {root:?}"
+        );
+        let lazy: u64 = stats.iter().map(|s| s.lazy_payload_bytes).sum();
+        assert!(lazy > 0, "96-byte payloads must move lazily: {stats:?}");
+        let attempts: u64 = stats.iter().map(|s| s.remote_steal_attempts).sum();
+        let successes: u64 = stats.iter().map(|s| s.remote_steals).sum();
+        assert!(attempts >= successes);
+        assert!(successes > 0);
+    }
+}

@@ -138,6 +138,20 @@ pub struct SchedStats {
     pub parks: u64,
     /// Producer-side wakes of parked workers.
     pub wakes: u64,
+    /// Steal RPCs issued to remote instances (distributed stealing;
+    /// always 0 for a plain local [`TaskSystem`] — filled by
+    /// [`super::steal::StealPool::sched_stats`]).
+    pub remote_steal_attempts: u64,
+    /// Steal RPCs that returned at least one task.
+    pub remote_steals: u64,
+    /// Descriptor tasks stolen *into* this instance.
+    pub tasks_migrated_in: u64,
+    /// Descriptor tasks stolen *out of* this instance's remote-ready
+    /// lane by thieves.
+    pub tasks_migrated_out: u64,
+    /// Argument bytes this instance parked for lazy transfer: payloads a
+    /// steal response deferred, pulled by the thief only at dispatch.
+    pub lazy_payload_bytes: u64,
 }
 
 /// Dependency/lifecycle bookkeeping shared by both engines.
@@ -676,6 +690,9 @@ impl TaskSystem {
             steal_failures: c.steal_failures.load(Ordering::Relaxed),
             parks: c.parks.load(Ordering::Relaxed),
             wakes: c.wakes.load(Ordering::Relaxed),
+            // Remote-steal telemetry lives in the instance-level
+            // StealPool, not in the (purely local) scheduler core.
+            ..SchedStats::default()
         }
     }
 

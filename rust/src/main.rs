@@ -443,7 +443,8 @@ fn cmd_worker() -> Result<()> {
                 })
                 .unwrap_or(2);
             let tasks: u64 = words.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
-            worker_taskfarm(im.as_ref(), &cmm, &registry, &compute, total, tasks)
+            let mode = words.get(3).copied().unwrap_or("steal");
+            worker_taskfarm(im.as_ref(), &cmm, &registry, &compute, total, tasks, mode)
         }
         Some("serve") => {
             let total: usize = words
@@ -527,9 +528,12 @@ fn worker_jacobi(
 
 /// The full Fig. 7 deployment: elastic ramp-up to `total` instances,
 /// worker-topology gathering over the built-in `topology` RPC, and a
-/// verified master/worker task farm across the RPC mesh. The root runs
-/// tasks on a local work-stealing `TaskSystem` and spills the overflow
-/// over the mesh whenever its scheduler backlog saturates.
+/// verified master/worker task farm across the RPC mesh. The default
+/// `steal` mode seeds every task on the root and lets idle instances
+/// pull work over the mesh (topology-ordered victims, lazy payloads);
+/// `spill` mode is the push-only ablation, where the root runs tasks on
+/// a local work-stealing `TaskSystem` and pushes the overflow whenever
+/// its scheduler backlog saturates.
 fn worker_taskfarm(
     im: &dyn InstanceManager,
     cmm: &Arc<dyn CommunicationManager>,
@@ -537,27 +541,57 @@ fn worker_taskfarm(
     compute: &str,
     total: usize,
     tasks: u64,
+    mode: &str,
 ) -> Result<()> {
-    use hicr::apps::taskfarm::{run_spill, SpillPolicy};
+    use hicr::apps::taskfarm::{run_spill, run_steal, SpillPolicy};
+    use hicr::frontends::tasking::StealConfig;
     // Serialize this instance's device tree for the topology RPC; an
     // environment with no discoverable topology still farms (empty tree).
     let topology_json = hicr::backends::merged_topology(registry, &PluginContext::new())
         .map(|t| t.serialize())
         .unwrap_or_else(|_| hicr::Topology::default().serialize());
-    // Only the root dispatches; it gets the local execution lane.
-    let local_sys = if im.is_root() {
-        let cm = registry.builder().compute(compute).build()?.compute()?;
-        Some(TaskSystem::new(cm, 2, false))
-    } else {
-        None
+    let result = match mode {
+        "steal" => {
+            // Every instance executes in steal mode, so every instance
+            // brings a local task system.
+            let cm = registry.builder().compute(compute).build()?.compute()?;
+            let sys = TaskSystem::new(cm, 2, false);
+            let result = run_steal(
+                im,
+                cmm,
+                topology_json,
+                total,
+                tasks,
+                Arc::clone(&sys),
+                StealConfig::default(),
+                |_| 0, // launched worlds are single-host
+            )?;
+            sys.shutdown()?;
+            result
+        }
+        "spill" => {
+            // Only the root dispatches; it gets the local execution lane.
+            let local_sys = if im.is_root() {
+                let cm = registry.builder().compute(compute).build()?.compute()?;
+                Some(TaskSystem::new(cm, 2, false))
+            } else {
+                None
+            };
+            let local = local_sys
+                .as_deref()
+                .map(|sys| (sys, SpillPolicy::default()));
+            let result = run_spill(im, cmm, topology_json, total, tasks, local)?;
+            if let Some(sys) = &local_sys {
+                sys.shutdown()?;
+            }
+            result
+        }
+        other => {
+            return Err(err(format!(
+                "unknown taskfarm mode '{other}' (use steal or spill)"
+            )))
+        }
     };
-    let local = local_sys
-        .as_deref()
-        .map(|sys| (sys, SpillPolicy::default()));
-    let result = run_spill(im, cmm, topology_json, total, tasks, local)?;
-    if let Some(sys) = &local_sys {
-        sys.shutdown()?;
-    }
     match result {
         None => Ok(()), // worker: served until shutdown
         Some(report) => {
@@ -568,13 +602,18 @@ fn worker_taskfarm(
                 .collect();
             println!(
                 "taskfarm world={} workers={} tasks={} ok checksum={:#018x} \
-                 local={} spilled={} topologies={} devices={} elapsed={:.3}s",
+                 local={} spilled={} stolen={} steal_rpcs={}/{} lazy_bytes={} \
+                 topologies={} devices={} elapsed={:.3}s",
                 report.world,
                 report.workers,
                 report.tasks,
                 report.checksum,
                 report.local_tasks,
                 report.spilled_tasks,
+                report.stolen_tasks,
+                report.steal_rpcs_attempted,
+                report.steal_rpcs_succeeded,
+                report.lazy_payload_bytes,
                 report.gathered_topologies,
                 report.total_devices,
                 report.elapsed_s

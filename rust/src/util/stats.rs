@@ -30,7 +30,10 @@ impl Summary {
             0.0
         };
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: NaN samples sort to the end instead of panicking, so
+        // one bad measurement degrades the summary rather than killing a
+        // whole JSON export mid-bench.
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Some(Summary {
             n,
             mean,
@@ -129,6 +132,23 @@ mod tests {
         assert_eq!(s.stddev, 0.0);
         assert_eq!(s.p99, 7.5);
         assert_eq!(s.p999, 7.5);
+    }
+
+    /// Regression: the percentile sort used `partial_cmp(..).unwrap()`,
+    /// which panics on a NaN sample. A single bad observation must not
+    /// abort summarization (and with it a whole bench JSON export).
+    #[test]
+    fn summary_survives_nan_samples() {
+        let s = Summary::of(&[2.0, f64::NAN, 1.0, 3.0]).unwrap();
+        assert_eq!(s.n, 4);
+        // total_cmp orders NaN after every finite value: the finite
+        // percentiles stay meaningful, the max reflects the bad sample.
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert_eq!(s.p50, 2.5);
+        // All-NaN input still summarizes without panicking.
+        let s = Summary::of(&[f64::NAN]).unwrap();
+        assert!(s.mean.is_nan());
     }
 
     #[test]
