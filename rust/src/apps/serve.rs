@@ -234,10 +234,20 @@ pub fn run(
         Err(e) => {
             // Best-effort release so live workers do not sit in their
             // serve loops forever while the launcher reports the error.
-            if d.shutdown_workers().is_ok() {
-                let _ = im.barrier();
+            // The shutdown calls carry the RPC deadline, so a dead
+            // worker surfaces as a typed Timeout/PeerLost — and a failed
+            // release is reported alongside the primary error instead of
+            // being silently swallowed.
+            match d.shutdown_workers() {
+                Ok(()) => {
+                    let _ = im.barrier();
+                    Err(e)
+                }
+                Err(shut) => Err(HicrError::Instance(format!(
+                    "serving tier failed: {e}; releasing the workers \
+                     also failed: {shut}"
+                ))),
             }
-            Err(e)
         }
     }
 }

@@ -30,6 +30,11 @@
 //! the thief dispatches (DESIGN.md §8). `run_spill` survives as the
 //! push-only ablation the steal benches compare against.
 //!
+//! [`run_steal_chaos`] is the **fault-injected** farm (PR 8): a chosen
+//! worker crashes mid-drain and the root's supervised drain must
+//! detect it, quarantine it, replay its stolen descriptors from the
+//! crash ledger, and still verify every splitmix result (DESIGN.md §9).
+//!
 //! Written purely against the abstract managers and the deployment/RPC
 //! frontends: the same code farms over the threads backend (in-process)
 //! and over mpisim (real processes launched by `hicr launch`).
@@ -99,6 +104,34 @@ pub fn task_value(x: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Fault-injection mode of the taskfarm app (the `--chaos` CLI flag).
+/// Only meaningful over a multi-process backend (mpisim): the injected
+/// "crash" is a real `process::exit`, which in an in-process world
+/// would take the whole harness down.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosMode {
+    /// The highest-rank worker kills its own process — no goodbye, no
+    /// teardown — immediately after its first successful steal: mid-
+    /// drain, provably holding stolen descriptors it has not yet
+    /// dispatched. The surviving mesh must detect the abnormal
+    /// departure, re-enqueue the victim's descriptors from the crash
+    /// ledger, and still complete every task with a correct splitmix
+    /// result (DESIGN.md §9 acceptance scenario).
+    KillOne,
+}
+
+impl ChaosMode {
+    /// Parse the CLI spelling of a chaos mode (`--chaos kill-one`).
+    pub fn parse(s: &str) -> Result<ChaosMode> {
+        match s {
+            "kill-one" => Ok(ChaosMode::KillOne),
+            other => Err(HicrError::Rejected(format!(
+                "unknown chaos mode '{other}' (expected: kill-one)"
+            ))),
+        }
+    }
+}
+
 /// When the root offloads work to remote instances instead of running
 /// it on its local task system.
 #[derive(Debug, Clone, Copy)]
@@ -136,6 +169,11 @@ pub struct FarmReport {
     pub spilled_tasks: u64,
     /// Tasks pulled off the root's lane by thieves (steal mode only).
     pub stolen_tasks: u64,
+    /// Descriptors re-enqueued after a holder crashed — crash-ledger
+    /// replays plus payload-lost re-spawns (steal mode only; the
+    /// `recovered=` figure of the CLI summary, asserted by the chaos
+    /// launch smoke).
+    pub recovered: u64,
     /// Steal RPCs the root's own pool issued (it too escalates to
     /// stealing when its lane runs dry).
     pub steal_rpcs_attempted: u64,
@@ -217,6 +255,7 @@ pub fn run_spill(
                 local_tasks,
                 spilled_tasks: tasks - local_tasks,
                 stolen_tasks: 0,
+                recovered: 0,
                 steal_rpcs_attempted: 0,
                 steal_rpcs_succeeded: 0,
                 lazy_payload_bytes: 0,
@@ -228,13 +267,21 @@ pub fn run_spill(
         Err(e) => {
             // Best-effort release: without this, live workers would sit
             // in their serve loops forever and the launcher would hang
-            // instead of reporting the orchestration error. (A worker
-            // that died mid-farm can still stall its own shutdown call;
-            // per-call deadlines are future work.)
-            if d.shutdown_workers().is_ok() {
-                let _ = im.barrier();
+            // instead of reporting the orchestration error. The shutdown
+            // calls carry the RPC deadline, so a worker that died
+            // mid-farm surfaces as a typed Timeout/PeerLost here instead
+            // of stalling — and a failed release is reported alongside
+            // the primary error, never silently swallowed.
+            match d.shutdown_workers() {
+                Ok(()) => {
+                    let _ = im.barrier();
+                    Err(e)
+                }
+                Err(shut) => Err(HicrError::Instance(format!(
+                    "taskfarm orchestration failed: {e}; releasing the \
+                     workers also failed: {shut}"
+                ))),
             }
-            Err(e)
         }
     }
 }
@@ -338,6 +385,32 @@ pub fn run_steal(
     config: StealConfig,
     host_of: impl Fn(u32) -> u64,
 ) -> Result<Option<FarmReport>> {
+    run_steal_chaos(
+        im, cmm, topology_json, total, tasks, sys, config, host_of, None,
+    )
+}
+
+/// [`run_steal`] with optional fault injection: under
+/// [`ChaosMode::KillOne`] the highest-rank worker crashes its own
+/// process mid-drain, and the farm must still complete — the root's
+/// supervised drain polls the backend's failure detector between drive
+/// rounds ([`crate::frontends::deployment::Supervisor`]), quarantines
+/// the dead rank, replays its stolen descriptors from the crash ledger,
+/// and reports the count in [`FarmReport::recovered`]. With `chaos =
+/// None` this *is* `run_steal` (supervision still runs; on backends
+/// without a failure detector it is a no-op).
+#[allow(clippy::too_many_arguments)]
+pub fn run_steal_chaos(
+    im: &dyn InstanceManager,
+    cmm: &Arc<dyn CommunicationManager>,
+    topology_json: String,
+    total: usize,
+    tasks: u64,
+    sys: Arc<TaskSystem>,
+    config: StealConfig,
+    host_of: impl Fn(u32) -> u64,
+    chaos: Option<ChaosMode>,
+) -> Result<Option<FarmReport>> {
     let t0 = Instant::now();
     let alloc = |len| LocalMemorySlot::alloc(MemorySpaceId(1), len);
     let template = InstanceTemplate::new(TopologyRequirements::default());
@@ -363,9 +436,33 @@ pub fn run_steal(
         // peers, escalating to steals — until the root's shutdown RPC
         // flips the flag (served by our own drive loop). The flag is the
         // cancel signal too, so a shutdown observed mid-steal aborts the
-        // wait instead of hanging on an already-departed victim.
+        // wait instead of hanging on an already-departed victim. Each
+        // round also polls the backend's failure detector, so a crashed
+        // sibling is quarantined (no more steal probes at it) instead of
+        // timed out against.
         let flag = d.shutdown_signal();
-        pool.drive_while(&mut d.mesh, || !flag.load(Ordering::Acquire))?;
+        let mut sup = d.supervisor();
+        let chaos_victim = chaos == Some(ChaosMode::KillOne)
+            && d.workers().into_iter().max() == Some(d.me);
+        pool.drive_while(&mut d.mesh, || {
+            if chaos_victim && pool.sched_stats().tasks_migrated_in > 0 {
+                // Injected crash: die *now*, holding stolen descriptors
+                // we have not dispatched — no goodbye frame, no
+                // destructors (`process::exit` skips Drop), so the hub
+                // observes an abnormal departure and the root must
+                // recover the work from its crash ledger (DESIGN.md §9).
+                // Status 0 because the *launcher* should still count
+                // this child as clean: the crash is between the instance
+                // and the hub, not between the process and its parent.
+                std::process::exit(0);
+            }
+            if let Ok(events) = sup.poll(im) {
+                for e in events {
+                    pool.note_peer_lost(e.rank);
+                }
+            }
+            !flag.load(Ordering::Acquire)
+        })?;
         im.barrier()?;
         return Ok(None);
     }
@@ -380,7 +477,20 @@ pub fn run_steal(
         }
         let topos = d.gather_topologies()?;
         let total_devices = topos.iter().map(|(_, t)| t.devices.len()).sum();
-        pool.drive_until_drained(&mut d.mesh)?;
+        // Supervised drain: between drive rounds, poll the backend's
+        // failure detector. A dead thief's stolen descriptors re-enter
+        // the lane (crash-ledger replay in the pool), and the drain
+        // predicate then naturally waits for their re-execution too —
+        // produce-once task keys make the replay safe (DESIGN.md §9).
+        let mut sup = d.supervisor();
+        pool.drive_while(&mut d.mesh, || {
+            if let Ok(events) = sup.poll(im) {
+                for e in events {
+                    pool.note_peer_lost(e.rank);
+                }
+            }
+            !pool.drained()
+        })?;
         let mut checksum = 0u64;
         for (i, id) in ids {
             let got = pool.take_result(id)?.ok_or_else(|| {
@@ -407,6 +517,12 @@ pub fn run_steal(
 
     match orchestrated {
         Ok((topos, total_devices, checksum)) => {
+            // Quarantine dead workers on the mesh before the release
+            // round: their clients fast-fail with PeerLost and the
+            // shutdown fan-out skips them instead of timing out.
+            for r in d.lost_ranks() {
+                d.note_worker_lost(r);
+            }
             // Pumped shutdown: thieves may still be probing our lane, so
             // the root keeps answering (empty batches) while the
             // shutdown calls are in flight.
@@ -433,6 +549,7 @@ pub fn run_steal(
                 local_tasks,
                 spilled_tasks: 0,
                 stolen_tasks,
+                recovered: stats.tasks_recovered,
                 steal_rpcs_attempted: stats.remote_steal_attempts,
                 steal_rpcs_succeeded: stats.remote_steals,
                 lazy_payload_bytes: stats.lazy_payload_bytes,
@@ -442,13 +559,24 @@ pub fn run_steal(
             }))
         }
         Err(e) => {
-            // Same best-effort release as run_spill: without it, live
-            // workers would drive forever and the launcher would hang
-            // instead of reporting the orchestration error.
-            if d.shutdown_workers_pumped().is_ok() {
-                let _ = im.barrier();
+            // Same best-effort release as run_spill — quarantine known
+            // casualties first so the fan-out skips them, surface (never
+            // swallow) a secondary release failure, and keep the
+            // orchestration error as the primary result when the release
+            // itself succeeds.
+            for r in d.lost_ranks() {
+                d.note_worker_lost(r);
             }
-            Err(e)
+            match d.shutdown_workers_pumped() {
+                Ok(()) => {
+                    let _ = im.barrier();
+                    Err(e)
+                }
+                Err(shut) => Err(HicrError::Instance(format!(
+                    "taskfarm orchestration failed: {e}; releasing the \
+                     workers also failed: {shut}"
+                ))),
+            }
         }
     }
 }
@@ -661,5 +789,14 @@ mod tests {
         assert_eq!(per, report.stolen_tasks);
         assert!(report.lazy_payload_bytes > 0, "{report:?}");
         assert_eq!(report.spilled_tasks, 0);
+        // No crashes in this world → nothing recovered (and the
+        // supervised drain over a detector-less backend is a no-op).
+        assert_eq!(report.recovered, 0);
+    }
+
+    #[test]
+    fn chaos_mode_parses_cli_spelling() {
+        assert_eq!(ChaosMode::parse("kill-one").unwrap(), ChaosMode::KillOne);
+        assert!(ChaosMode::parse("kill-two").is_err());
     }
 }

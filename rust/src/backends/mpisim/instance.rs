@@ -101,6 +101,12 @@ impl InstanceManager for MpiInstanceManager {
         self.endpoint.barrier()
     }
 
+    fn departed_instances(&self) -> Result<Vec<u32>> {
+        // The hub broadcasts `Departed` on abnormal connection loss; the
+        // endpoint's receiver thread accumulates them (DESIGN.md §9).
+        Ok(self.endpoint.departed_ranks())
+    }
+
     fn backend_name(&self) -> &'static str {
         "mpisim"
     }

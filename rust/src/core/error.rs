@@ -42,6 +42,16 @@ pub enum HicrError {
     /// Instance management failure (spawn, detection, template).
     Instance(String),
 
+    /// A deadline elapsed before the remote side responded. The request
+    /// may still execute on the peer — callers must treat timed-out
+    /// operations as *in doubt*, not as failed (DESIGN.md §9).
+    Timeout(String),
+
+    /// The peer instance is known to have departed (crash or abnormal
+    /// exit observed by the supervision layer); the operation was not
+    /// attempted. Unlike [`HicrError::Timeout`] this is definitive.
+    PeerLost(String),
+
     /// XLA / PJRT runtime failure.
     Xla(String),
 
@@ -65,6 +75,8 @@ impl fmt::Display for HicrError {
             HicrError::Collective(m) => write!(f, "collective mismatch: {m}"),
             HicrError::Transport(m) => write!(f, "transport error: {m}"),
             HicrError::Instance(m) => write!(f, "instance error: {m}"),
+            HicrError::Timeout(m) => write!(f, "deadline exceeded: {m}"),
+            HicrError::PeerLost(m) => write!(f, "peer instance lost: {m}"),
             HicrError::Xla(m) => write!(f, "xla runtime error: {m}"),
             HicrError::Artifact(m) => write!(f, "artifact error: {m}"),
             HicrError::Io(e) => write!(f, "io error: {e}"),
@@ -99,5 +111,12 @@ impl HicrError {
     /// failure) — used by property tests asserting legality rules.
     pub fn is_rejection(&self) -> bool {
         matches!(self, HicrError::Rejected(_) | HicrError::Unsupported(_))
+    }
+
+    /// True when the error is a peer-lifecycle outcome (`Timeout` or
+    /// `PeerLost`) that supervision-aware callers recover from by
+    /// skipping or re-executing, rather than a local logic failure.
+    pub fn is_peer_failure(&self) -> bool {
+        matches!(self, HicrError::Timeout(_) | HicrError::PeerLost(_))
     }
 }

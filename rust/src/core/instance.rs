@@ -110,6 +110,16 @@ pub trait InstanceManager: Send + Sync {
     /// coordination; backends may reject if unsupported).
     fn barrier(&self) -> Result<()>;
 
+    /// Ranks of instances known to have departed **abnormally** (crash,
+    /// kill, connection loss — *not* an orderly goodbye). The
+    /// supervision input of DESIGN.md §9: backends with a failure
+    /// detector report every rank observed dead so far; backends
+    /// without one (in-process worlds, where a crash takes the whole
+    /// process) report none.
+    fn departed_instances(&self) -> Result<Vec<u32>> {
+        Ok(Vec::new())
+    }
+
     /// Human-readable backend name.
     fn backend_name(&self) -> &'static str;
 }

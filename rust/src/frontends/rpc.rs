@@ -44,6 +44,7 @@
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::core::communication::CommunicationManager;
 use crate::core::error::{HicrError, Result};
@@ -90,6 +91,14 @@ const LANE_RESPONSE: u64 = 1;
 
 /// RPC instance ranks must fit the 16-bit tag field.
 pub const MAX_RPC_RANK: u32 = 0xFFFF;
+
+/// Default per-call deadline of every [`RpcClient`] (DESIGN.md §9): a
+/// dead peer yields a typed [`HicrError::Timeout`] instead of an
+/// infinite pump loop. Generous enough for any in-tree workload, and
+/// below the netsim endpoint's 60 s deadlock timeout so the RPC layer
+/// reports first with the better diagnosis. Tune per client with
+/// [`RpcClient::set_call_deadline`].
+pub const DEFAULT_CALL_DEADLINE: Duration = Duration::from_secs(30);
 
 /// Fixed ring depth of every RPC link. A protocol constant rather than a
 /// per-link knob: each caller has at most one call outstanding, and a
@@ -234,6 +243,12 @@ pub struct RpcClient {
     next_seq: u64,
     /// Request ring geometry verified against this link's negotiation.
     validated: bool,
+    /// Per-call deadline ([`DEFAULT_CALL_DEADLINE`]; `None` = wait
+    /// forever, the pre-supervision behavior).
+    deadline: Option<Duration>,
+    /// Set once the supervision layer declares the server dead: calls
+    /// fail fast with [`HicrError::PeerLost`] instead of timing out.
+    peer_lost: bool,
     sbuf: Vec<u8>,
     rbuf: Vec<u8>,
 }
@@ -539,6 +554,8 @@ impl RpcClient {
             max_payload,
             next_seq: 0,
             validated: false,
+            deadline: Some(DEFAULT_CALL_DEADLINE),
+            peer_lost: false,
             sbuf: vec![0u8; msg],
             rbuf: vec![0u8; msg],
         };
@@ -552,6 +569,27 @@ impl RpcClient {
     /// The server instance this client calls into.
     pub fn server_instance(&self) -> u32 {
         self.server
+    }
+
+    /// Set the per-call deadline (`None` = wait forever). The default is
+    /// [`DEFAULT_CALL_DEADLINE`]; a call that exceeds it returns a typed
+    /// [`HicrError::Timeout`] and must be treated as *in doubt* — the
+    /// request may still execute on the peer. A response that arrives
+    /// after its call timed out is discarded by sequence number on the
+    /// next call, so timing out never desynchronizes the link.
+    pub fn set_call_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
+    }
+
+    /// Declare the server dead (supervision input): every subsequent
+    /// call fails fast with [`HicrError::PeerLost`].
+    pub fn mark_peer_lost(&mut self) {
+        self.peer_lost = true;
+    }
+
+    /// True once [`RpcClient::mark_peer_lost`] was called.
+    pub fn is_peer_lost(&self) -> bool {
+        self.peer_lost
     }
 
     fn check_geometry(&self, got: usize) -> Result<()> {
@@ -598,6 +636,12 @@ impl RpcClient {
         mut pump: impl FnMut() -> Result<bool>,
         mut cancel: impl FnMut() -> bool,
     ) -> Result<Option<Vec<u8>>> {
+        if self.peer_lost {
+            return Err(HicrError::PeerLost(format!(
+                "RPC '{name}': instance {} was declared lost by supervision",
+                self.server
+            )));
+        }
         if args.len() > self.max_payload {
             return Err(HicrError::Bounds(format!(
                 "args {} B > link max payload {}",
@@ -613,7 +657,33 @@ impl RpcClient {
         let seq = self.next_seq;
         self.next_seq += 1;
         encode_request(&mut self.sbuf, fn_id(name), self.me, seq, args);
-        self.requests.push_blocking(&self.sbuf)?;
+        let start = Instant::now();
+        // Deadline-bounded admission: a dead peer stops popping its
+        // request ring, so after RPC_RING_CAPACITY timed-out calls an
+        // unbounded blocking push would never return.
+        let mut backoff = Backoff::new();
+        loop {
+            if self.requests.push(&self.sbuf)? {
+                break;
+            }
+            if cancel() {
+                return Ok(None);
+            }
+            if let Some(d) = self.deadline {
+                if start.elapsed() >= d {
+                    return Err(HicrError::Timeout(format!(
+                        "RPC '{name}' to instance {}: request ring full for \
+                         {d:?} (peer crashed or stalled)",
+                        self.server
+                    )));
+                }
+            }
+            if pump()? {
+                backoff.reset();
+            } else {
+                backoff.wait();
+            }
+        }
         let mut backoff = Backoff::new();
         let (status, rseq, len) = loop {
             if self.responses.pop(&mut self.rbuf)? {
@@ -636,6 +706,16 @@ impl RpcClient {
             }
             if cancel() {
                 return Ok(None);
+            }
+            if let Some(d) = self.deadline {
+                if start.elapsed() >= d {
+                    return Err(HicrError::Timeout(format!(
+                        "RPC '{name}' to instance {}: no response within \
+                         {d:?} (peer crashed or stalled); the call is in \
+                         doubt and may still execute",
+                        self.server
+                    )));
+                }
             }
             if pump()? {
                 backoff.reset();
@@ -771,6 +851,24 @@ impl RpcMesh {
         self.clients.get_mut(&rank).ok_or_else(|| {
             HicrError::Rejected(format!("no RPC link to instance {rank}"))
         })
+    }
+
+    /// Quarantine a dead peer (supervision input): its client fails fast
+    /// with [`HicrError::PeerLost`] from now on. Idempotent; unknown
+    /// ranks are ignored (the peer may simply not be a mesh member).
+    pub fn mark_peer_lost(&mut self, rank: u32) {
+        if let Some(c) = self.clients.get_mut(&rank) {
+            c.mark_peer_lost();
+        }
+    }
+
+    /// Ranks this mesh still considers callable.
+    pub fn live_peers(&self) -> Vec<u32> {
+        self.clients
+            .iter()
+            .filter(|(_, c)| !c.is_peer_lost())
+            .map(|(r, _)| *r)
+            .collect()
     }
 }
 

@@ -36,8 +36,22 @@
 //! instance's own requests while waiting, so two instances stealing
 //! from each other simultaneously make progress instead of
 //! deadlocking.
+//!
+//! **Crash safety** (DESIGN.md §9): dataflow keys are produce-once, so
+//! re-running a lost producer is safe by construction. The origin
+//! retains every spawned task's `(fn_id, args)` until its completion
+//! lands, and every victim records which descriptors it handed to which
+//! thief; when supervision reports a peer dead
+//! ([`StealPool::note_peer_lost`]) the victim re-enqueues that thief's
+//! undelivered descriptors onto its own lane — rebuilding payloads the
+//! dead thief had already fetched from the retained args when it is the
+//! origin, or reporting them home as [`PAYLOAD_LOST`] for the origin to
+//! re-spawn. A completion arriving later from a zombie executor is
+//! detected in `fulfill` and discarded (produce-once means both results
+//! are identical, so first-wins is correct) — counted in
+//! [`SchedStats::completions_discarded`], never a loud error.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -55,6 +69,14 @@ pub const FN_STEAL_TAKE: &str = "hicr/steal/take";
 /// Completion RPC: deliver a finished task's result to its origin.
 /// Request `[u64 id][u32 executor][u8 ok][payload…]`; empty response.
 pub const FN_STEAL_COMPLETE: &str = "hicr/steal/complete";
+
+/// Error-text prefix of a completion that means "the task did not run
+/// because its lazy payload is unrecoverable" (the bytes died with a
+/// crashed instance before any survivor could fetch them). The origin —
+/// which retains every spawned task's argument bytes — reacts by
+/// re-enqueueing the task from the retained args instead of recording a
+/// failure.
+pub const PAYLOAD_LOST: &str = "payload-lost:";
 
 /// Fixed bytes of one encoded [`DescTask`] record before any inline
 /// payload: `[u64 id][u64 fn_id][u32 origin][u32 owner][u32 len][u8 kind]`.
@@ -296,6 +318,16 @@ fn decode_complete(args: &[u8]) -> Result<(u64, u32, Outcome)> {
 
 type StealHandler = Arc<dyn Fn(&[u8]) -> Result<Vec<u8>> + Send + Sync>;
 
+/// Origin-side record of a spawned task: the result slot plus enough to
+/// re-create the task from scratch (`fn_id` + argument bytes, retained
+/// until the completion lands) if every copy in flight dies with a
+/// crashed instance.
+struct Retained {
+    fn_id: u64,
+    args: Vec<u8>,
+    outcome: Option<Outcome>,
+}
+
 /// State shared between the drive loop, the RPC handlers, and the task
 /// bodies executing on the local [`TaskSystem`]'s workers.
 struct Shared {
@@ -311,9 +343,9 @@ struct Shared {
     store: PayloadStore,
     /// `fn_id → (name, handler)` — the pre-registered task bodies.
     handlers: Mutex<HashMap<u64, (String, StealHandler)>>,
-    /// Results of tasks *this* instance originated: `None` until the
-    /// completion lands. Doubles as the lost/duplicated-task detector.
-    outstanding: Mutex<HashMap<u64, Option<Outcome>>>,
+    /// Tasks *this* instance originated: retained args + result slot.
+    /// Doubles as the lost/duplicated-task detector.
+    outstanding: Mutex<HashMap<u64, Retained>>,
     /// Originated tasks not yet completed.
     pending: AtomicUsize,
     /// Finished-here results awaiting delivery to their origins.
@@ -323,12 +355,23 @@ struct Shared {
     next_seq: AtomicU64,
     /// Tasks completed per executor rank (origin-side attribution).
     completed_by: Mutex<HashMap<u32, u64>>,
+    /// Victim-side crash ledger: thief rank → descriptors handed out and
+    /// not yet seen completed. [`Shared::note_peer_lost`] drains a dead
+    /// thief's entry back onto the lane.
+    handed: Mutex<HashMap<u32, HashMap<u64, DescTask>>>,
+    /// Peers supervision has declared dead: never stolen from, never
+    /// handed work, their queued completions dropped.
+    dead: Mutex<HashSet<u32>>,
     // Remote-steal telemetry (SchedStats growth).
     attempts: AtomicU64,
     successes: AtomicU64,
     migrated_in: AtomicU64,
     migrated_out: AtomicU64,
     lazy_bytes: AtomicU64,
+    /// Descriptors re-enqueued after their holder crashed.
+    recovered: AtomicU64,
+    /// Zombie completions (unknown or already-completed ids) discarded.
+    discarded: AtomicU64,
 }
 
 impl Shared {
@@ -336,8 +379,14 @@ impl Shared {
     /// by the thief's request and the response `budget`), oldest first,
     /// converting over-threshold inline payloads to lazy ones parked in
     /// the store. Tasks that no longer fit the response go back to the
-    /// lane front in order.
-    fn take_batch(&self, max_tasks: usize, budget: usize) -> Result<Vec<u8>> {
+    /// lane front in order. Every handed-out descriptor is recorded in
+    /// the per-thief crash ledger until its completion is observed; a
+    /// thief already declared dead (a zombie whose request was in flight
+    /// when supervision caught up) gets an empty batch.
+    fn take_batch(&self, max_tasks: usize, thief: u32, budget: usize) -> Result<Vec<u8>> {
+        if self.dead.lock().unwrap().contains(&thief) {
+            return Ok(vec![0u8; 4]);
+        }
         let mut lane = self.lane.lock().unwrap();
         let want = lane.len().div_ceil(2).min(max_tasks);
         let mut out = vec![0u8; 4];
@@ -371,6 +420,12 @@ impl Shared {
             // actually handed out: these are the bytes the steal response
             // deferred, which the thief will pull at dispatch time.
             self.lazy_bytes.fetch_add(parked, Ordering::Relaxed);
+            self.handed
+                .lock()
+                .unwrap()
+                .entry(thief)
+                .or_default()
+                .insert(t.id, t);
             taken += 1;
         }
         self.lane_len.store(lane.len(), Ordering::Relaxed);
@@ -380,21 +435,27 @@ impl Shared {
         Ok(out)
     }
 
-    /// Origin side: record a completed task exactly once. An unknown id
-    /// (lost bookkeeping) or an already-completed id (duplicated
-    /// execution) is a loud error — the zero-lost/zero-duplicated
-    /// guarantee the integration tests assert.
-    fn fulfill(&self, id: u64, executor: u32, outcome: Outcome) -> Result<()> {
+    /// Origin side: record a completed task exactly once — first wins.
+    /// An unknown id or an already-completed id is a *zombie* completion
+    /// (a crashed-and-recovered task's original executor resurfacing, or
+    /// a double-delivery race around a crash): dataflow keys are
+    /// produce-once, so both results are identical by construction and
+    /// the duplicate is counted and discarded, never a loud error. A
+    /// [`PAYLOAD_LOST`] failure re-enqueues the task from the retained
+    /// args instead of recording a failure.
+    fn fulfill(&self, id: u64, executor: u32, outcome: Outcome) {
+        if matches!(&outcome, Err(m) if m.starts_with(PAYLOAD_LOST)) {
+            self.respawn_from_retained(id);
+            return;
+        }
         let mut out = self.outstanding.lock().unwrap();
         match out.get_mut(&id) {
-            None => Err(HicrError::InvalidState(format!(
-                "completion for unknown task {id:#x} (executor {executor})"
-            ))),
-            Some(Some(_)) => Err(HicrError::InvalidState(format!(
-                "duplicate completion for task {id:#x} (executor {executor})"
-            ))),
-            Some(slot) => {
-                *slot = Some(outcome);
+            None | Some(Retained { outcome: Some(_), .. }) => {
+                drop(out);
+                self.discarded.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(r) => {
+                r.outcome = Some(outcome);
                 drop(out);
                 self.pending.fetch_sub(1, Ordering::AcqRel);
                 *self
@@ -403,9 +464,101 @@ impl Shared {
                     .unwrap()
                     .entry(executor)
                     .or_insert(0) += 1;
-                Ok(())
+                // The task is done: drop it from every crash ledger so a
+                // later peer loss cannot re-enqueue it.
+                let mut handed = self.handed.lock().unwrap();
+                for ledger in handed.values_mut() {
+                    ledger.remove(&id);
+                }
             }
         }
+    }
+
+    /// Re-enqueue an originated task from its retained args (the
+    /// [`PAYLOAD_LOST`] path: every copy of the argument bytes in flight
+    /// died with a crashed instance). A task already completed — the
+    /// loss report raced a zombie's result — is discarded instead.
+    fn respawn_from_retained(&self, id: u64) {
+        let rebuilt = {
+            let out = self.outstanding.lock().unwrap();
+            match out.get(&id) {
+                Some(Retained { outcome: None, fn_id, args }) => Some(DescTask {
+                    id,
+                    fn_id: *fn_id,
+                    origin: self.me,
+                    owner: self.me,
+                    payload: TaskPayload::Inline(args.clone()),
+                }),
+                _ => None,
+            }
+        };
+        match rebuilt {
+            Some(t) => {
+                self.recovered.fetch_add(1, Ordering::Relaxed);
+                self.push_lane_back(vec![t]);
+            }
+            None => {
+                self.discarded.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Supervision input: `rank` is dead. Quarantine it (no more steals
+    /// from it, no more work handed to it, its queued completions
+    /// dropped) and re-enqueue every descriptor it was holding. Returns
+    /// the number of tasks recovered onto the lane; idempotent — a
+    /// second report of the same rank is a no-op.
+    ///
+    /// Payload recovery per descriptor: inline payloads travel in the
+    /// ledger entry and re-enqueue as-is. Lazy payloads this instance
+    /// owns are pulled back from the [`PayloadStore`] — unless the dead
+    /// thief already fetched them, in which case the bytes are rebuilt
+    /// from the retained args when this instance is also the origin, or
+    /// reported home as [`PAYLOAD_LOST`] otherwise (the origin re-spawns
+    /// from its own retained copy). Lazy payloads owned elsewhere
+    /// forward unchanged; if the owner has also lost the bytes the fetch
+    /// at dispatch time degrades into the same [`PAYLOAD_LOST`] report.
+    fn note_peer_lost(&self, rank: u32) -> u64 {
+        if !self.dead.lock().unwrap().insert(rank) {
+            return 0;
+        }
+        let ledger = self
+            .handed
+            .lock()
+            .unwrap()
+            .remove(&rank)
+            .unwrap_or_default();
+        let mut requeue = Vec::new();
+        for (_, mut t) in ledger {
+            match &t.payload {
+                TaskPayload::Inline(_) => requeue.push(t),
+                TaskPayload::Lazy { .. } if t.owner == self.me => {
+                    if let Some(bytes) = self.store.take(t.id) {
+                        t.payload = TaskPayload::Inline(bytes);
+                        requeue.push(t);
+                    } else if t.origin == self.me {
+                        self.respawn_from_retained(t.id);
+                    } else {
+                        self.completions.lock().unwrap().push_back(Completion {
+                            id: t.id,
+                            origin: t.origin,
+                            executor: self.me,
+                            outcome: Err(format!(
+                                "{PAYLOAD_LOST} task {:#x}: payload died \
+                                 with instance {rank} before any survivor \
+                                 fetched it",
+                                t.id
+                            )),
+                        });
+                    }
+                }
+                TaskPayload::Lazy { .. } => requeue.push(t),
+            }
+        }
+        let n = requeue.len() as u64;
+        self.recovered.fetch_add(n, Ordering::Relaxed);
+        self.push_lane_back(requeue);
+        n
     }
 
     fn push_lane_back(&self, tasks: Vec<DescTask>) {
@@ -455,11 +608,15 @@ impl StealPool {
                 inflight: AtomicUsize::new(0),
                 next_seq: AtomicU64::new(0),
                 completed_by: Mutex::new(HashMap::new()),
+                handed: Mutex::new(HashMap::new()),
+                dead: Mutex::new(HashSet::new()),
                 attempts: AtomicU64::new(0),
                 successes: AtomicU64::new(0),
                 migrated_in: AtomicU64::new(0),
                 migrated_out: AtomicU64::new(0),
                 lazy_bytes: AtomicU64::new(0),
+                recovered: AtomicU64::new(0),
+                discarded: AtomicU64::new(0),
             }),
             victims: topo.victim_order(config.victim_policy),
             max_batch: config.max_batch,
@@ -507,12 +664,13 @@ impl StealPool {
                 )));
             }
             let max_tasks = u32::from_le_bytes(args[0..4].try_into().unwrap());
-            shared.take_batch(max_tasks as usize, budget)
+            let thief = u32::from_le_bytes(args[4..8].try_into().unwrap());
+            shared.take_batch(max_tasks as usize, thief, budget)
         })?;
         let shared = Arc::clone(&self.shared);
         server.register(FN_STEAL_COMPLETE, move |args| {
             let (id, executor, outcome) = decode_complete(args)?;
-            shared.fulfill(id, executor, outcome)?;
+            shared.fulfill(id, executor, outcome);
             Ok(Vec::new())
         })?;
         self.shared.store.register_fetch(server)
@@ -531,7 +689,16 @@ impl StealPool {
         }
         let seq = self.shared.next_seq.fetch_add(1, Ordering::Relaxed);
         let id = (self.shared.me as u64) << 32 | seq;
-        self.shared.outstanding.lock().unwrap().insert(id, None);
+        // Retain the args until the completion lands: the raw material
+        // for re-spawning if every in-flight copy dies (DESIGN.md §9).
+        self.shared.outstanding.lock().unwrap().insert(
+            id,
+            Retained {
+                fn_id: fid,
+                args: args.clone(),
+                outcome: None,
+            },
+        );
         self.shared.pending.fetch_add(1, Ordering::AcqRel);
         self.shared.push_lane_back(vec![DescTask {
             id,
@@ -548,6 +715,24 @@ impl StealPool {
         self.shared.pending.load(Ordering::Acquire)
     }
 
+    /// Supervision input: `rank` crashed. Quarantines the peer (no more
+    /// steals from it, no work handed to it, its queued completions
+    /// dropped) and re-enqueues every descriptor the victim-side crash
+    /// ledger says it was holding — rebuilding lazy payloads the dead
+    /// thief had already fetched from the retained args, or reporting
+    /// them home as [`PAYLOAD_LOST`]. Returns the number of descriptors
+    /// recovered onto the lane; idempotent per rank.
+    pub fn note_peer_lost(&self, rank: u32) -> u64 {
+        self.shared.note_peer_lost(rank)
+    }
+
+    /// Descriptors re-enqueued after a holder crashed (both ledger
+    /// replays and [`PAYLOAD_LOST`] re-spawns) — the `recovered=` figure
+    /// the taskfarm summary reports.
+    pub fn recovered(&self) -> u64 {
+        self.shared.recovered.load(Ordering::Relaxed)
+    }
+
     /// Descriptor tasks currently queued on the remote-ready lane.
     pub fn lane_len(&self) -> usize {
         self.shared.lane_len.load(Ordering::Relaxed)
@@ -559,9 +744,9 @@ impl StealPool {
     pub fn take_result(&self, id: u64) -> Result<Option<Vec<u8>>> {
         let mut out = self.shared.outstanding.lock().unwrap();
         match out.get(&id) {
-            None | Some(None) => Ok(None),
-            Some(Some(_)) => {
-                let outcome = out.remove(&id).unwrap().unwrap();
+            None | Some(Retained { outcome: None, .. }) => Ok(None),
+            Some(Retained { outcome: Some(_), .. }) => {
+                let outcome = out.remove(&id).unwrap().outcome.unwrap();
                 drop(out);
                 outcome.map(Some).map_err(|e| {
                     HicrError::InvalidState(format!(
@@ -597,6 +782,8 @@ impl StealPool {
             tasks_migrated_in: s.migrated_in.load(Ordering::Relaxed),
             tasks_migrated_out: s.migrated_out.load(Ordering::Relaxed),
             lazy_payload_bytes: s.lazy_bytes.load(Ordering::Relaxed),
+            tasks_recovered: s.recovered.load(Ordering::Relaxed),
+            completions_discarded: s.discarded.load(Ordering::Relaxed),
             ..self.sys.sched_stats()
         }
     }
@@ -649,21 +836,34 @@ impl StealPool {
         Ok(())
     }
 
+    /// True when this instance has nothing left to drive: no originated
+    /// task pending, an empty lane, no in-flight dispatches, and no
+    /// undelivered completions. This is the drain condition of
+    /// [`StealPool::drive_until_drained`], exposed so callers can run a
+    /// *supervised* drain — their own [`StealPool::drive_while`]
+    /// predicate that also polls a failure detector between rounds and
+    /// feeds [`StealPool::note_peer_lost`].
+    pub fn drained(&self) -> bool {
+        self.shared.pending.load(Ordering::Acquire) == 0
+            && self.shared.lane_len.load(Ordering::Relaxed) == 0
+            && self.shared.inflight.load(Ordering::Acquire) == 0
+            && self.shared.completions.lock().unwrap().is_empty()
+    }
+
     /// Drive until every task this instance originated has completed
     /// and every foreign result has been delivered (the root's side of
     /// a drain).
     pub fn drive_until_drained(&self, mesh: &mut RpcMesh) -> Result<()> {
-        let shared = Arc::clone(&self.shared);
-        self.drive_while(mesh, move || {
-            shared.pending.load(Ordering::Acquire) > 0
-                || shared.lane_len.load(Ordering::Relaxed) > 0
-                || shared.inflight.load(Ordering::Acquire) > 0
-                || !shared.completions.lock().unwrap().is_empty()
-        })
+        self.drive_while(mesh, || !self.drained())
     }
 
     /// Deliver queued completions: local fulfillment for own tasks, a
-    /// pumped `FN_STEAL_COMPLETE` call home for stolen ones.
+    /// pumped `FN_STEAL_COMPLETE` call home for stolen ones. Results
+    /// whose origin is dead are dropped (there is nowhere to deliver
+    /// them — the origin's retained-args ledger died with it); a
+    /// delivery that times out is re-queued and retried next round, so
+    /// an origin that is merely slow (or about to be declared dead)
+    /// never wedges the drive loop.
     fn flush_completions(
         &self,
         server: &mut RpcServer,
@@ -676,7 +876,9 @@ impl StealPool {
             let next = self.shared.completions.lock().unwrap().pop_front();
             let Some(c) = next else { break };
             if c.origin == self.shared.me {
-                self.shared.fulfill(c.id, c.executor, c.outcome)?;
+                self.shared.fulfill(c.id, c.executor, c.outcome);
+            } else if self.shared.dead.lock().unwrap().contains(&c.origin) {
+                self.shared.discarded.fetch_add(1, Ordering::Relaxed);
             } else {
                 let payload = encode_complete(&c);
                 let client = clients.get_mut(&c.origin).ok_or_else(|| {
@@ -685,14 +887,24 @@ impl StealPool {
                         c.origin, c.id
                     ))
                 })?;
-                client
-                    .call_pumped(
-                        FN_STEAL_COMPLETE,
-                        &payload,
-                        || server.try_serve_one(),
-                        || false,
-                    )?
-                    .expect("uncancelable call");
+                match client.call_pumped(
+                    FN_STEAL_COMPLETE,
+                    &payload,
+                    || server.try_serve_one(),
+                    || false,
+                ) {
+                    Ok(r) => {
+                        r.expect("uncancelable call");
+                    }
+                    Err(e) if e.is_peer_failure() => {
+                        // In doubt: requeue and stop flushing this round.
+                        // If the origin really is dead, supervision will
+                        // mark it and the retry drops the result instead.
+                        self.shared.completions.lock().unwrap().push_back(c);
+                        break;
+                    }
+                    Err(e) => return Err(e),
+                }
             }
             progress = true;
         }
@@ -719,13 +931,18 @@ impl StealPool {
             let args = match t.payload {
                 TaskPayload::Inline(bytes) => bytes,
                 TaskPayload::Lazy { len } => {
-                    let bytes = if t.owner == self.shared.me {
+                    let fetched: Result<Vec<u8>> = if t.owner == self.shared.me {
                         self.shared.store.take(t.id).ok_or_else(|| {
                             HicrError::InvalidState(format!(
                                 "lazy payload of own task {:#x} missing",
                                 t.id
                             ))
-                        })?
+                        })
+                    } else if self.shared.dead.lock().unwrap().contains(&t.owner) {
+                        Err(HicrError::PeerLost(format!(
+                            "payload owner {} of task {:#x} is dead",
+                            t.owner, t.id
+                        )))
                     } else {
                         let client =
                             clients.get_mut(&t.owner).ok_or_else(|| {
@@ -740,18 +957,42 @@ impl StealPool {
                                 &t.id.to_le_bytes(),
                                 || server.try_serve_one(),
                                 || false,
-                            )?
-                            .expect("uncancelable call")
+                            )
+                            .map(|r| r.expect("uncancelable call"))
                     };
-                    if bytes.len() != len as usize {
-                        return Err(HicrError::Transport(format!(
-                            "task {:#x}: lazy payload is {} B, descriptor \
-                             promised {len} B",
-                            t.id,
-                            bytes.len()
-                        )));
+                    match fetched {
+                        Ok(bytes) if bytes.len() == len as usize => bytes,
+                        Ok(bytes) => {
+                            return Err(HicrError::Transport(format!(
+                                "task {:#x}: lazy payload is {} B, descriptor \
+                                 promised {len} B",
+                                t.id,
+                                bytes.len()
+                            )));
+                        }
+                        // A foreign payload that cannot be pulled (owner
+                        // dead, fetch timed out, or the blob already
+                        // consumed by a crashed thief) is unrecoverable
+                        // from here: report it home so the origin
+                        // re-spawns the task from its retained args.
+                        Err(e) if t.owner != self.shared.me => {
+                            self.shared.completions.lock().unwrap().push_back(
+                                Completion {
+                                    id: t.id,
+                                    origin: t.origin,
+                                    executor: self.shared.me,
+                                    outcome: Err(format!(
+                                        "{PAYLOAD_LOST} task {:#x}: fetch \
+                                         from owner {} failed: {e}",
+                                        t.id, t.owner
+                                    )),
+                                },
+                            );
+                            progress = true;
+                            continue;
+                        }
+                        Err(e) => return Err(e),
                     }
-                    bytes
                 }
             };
             let handler = {
@@ -785,7 +1026,10 @@ impl StealPool {
 
     /// One scan over the victims in topology order; returns whether any
     /// steal landed tasks on the lane. `keep` doubles as the cancel
-    /// predicate: a shutdown observed mid-call abandons the round.
+    /// predicate: a shutdown observed mid-call abandons the round. Dead
+    /// victims are skipped; a victim that times out mid-steal is simply
+    /// passed over this round (it is either slow — try again later — or
+    /// about to be declared dead by supervision).
     fn steal_round(
         &self,
         server: &mut RpcServer,
@@ -796,18 +1040,23 @@ impl StealPool {
         req[0..4].copy_from_slice(&self.max_batch.to_le_bytes());
         req[4..8].copy_from_slice(&self.shared.me.to_le_bytes());
         for &victim in &self.victims {
+            if self.shared.dead.lock().unwrap().contains(&victim) {
+                continue;
+            }
             self.shared.attempts.fetch_add(1, Ordering::Relaxed);
             let client = clients.get_mut(&victim).ok_or_else(|| {
                 HicrError::Rejected(format!("no RPC link to victim {victim}"))
             })?;
-            let Some(resp) = client.call_pumped(
+            let resp = match client.call_pumped(
                 FN_STEAL_TAKE,
                 &req,
                 || server.try_serve_one(),
                 || !keep(),
-            )?
-            else {
-                return Ok(false); // canceled (e.g. shutdown mid-steal)
+            ) {
+                Ok(Some(resp)) => resp,
+                Ok(None) => return Ok(false), // canceled (e.g. shutdown mid-steal)
+                Err(e) if e.is_peer_failure() => continue,
+                Err(e) => return Err(e),
             };
             let tasks = decode_tasks(&resp)?;
             if !tasks.is_empty() {
@@ -932,7 +1181,7 @@ mod tests {
             let len = if i == 0 { 32 } else { 4 };
             pool.spawn("t/echo", vec![i as u8; len]).unwrap();
         }
-        let batch = pool.shared.take_batch(16, 32 * 1024).unwrap();
+        let batch = pool.shared.take_batch(16, 1, 32 * 1024).unwrap();
         let tasks = decode_tasks(&batch).unwrap();
         assert_eq!(tasks.len(), 4, "ceil(7/2)");
         assert_eq!(pool.lane_len(), 3);
@@ -941,7 +1190,7 @@ mod tests {
         assert_eq!(pool.shared.store.take(tasks[0].id).unwrap(), vec![0u8; 32]);
         assert!(matches!(tasks[1].payload, TaskPayload::Inline(_)));
         // The thief's cap is honored too.
-        let batch = pool.shared.take_batch(1, 32 * 1024).unwrap();
+        let batch = pool.shared.take_batch(1, 1, 32 * 1024).unwrap();
         assert_eq!(decode_tasks(&batch).unwrap().len(), 1);
         sys.shutdown().unwrap();
     }
@@ -958,30 +1207,135 @@ mod tests {
             pool.spawn("t/echo", vec![i as u8; 16]).unwrap();
         }
         // Budget fits the count word + two 45-byte records only.
-        let batch = pool.shared.take_batch(16, 4 + 2 * (DESC_HDR + 16)).unwrap();
+        let batch = pool.shared.take_batch(16, 1, 4 + 2 * (DESC_HDR + 16)).unwrap();
         let tasks = decode_tasks(&batch).unwrap();
         assert_eq!(tasks.len(), 2);
         assert_eq!(pool.lane_len(), 6);
         // The overflow kept its order: the next take starts at task 2.
-        let batch = pool.shared.take_batch(16, 32 * 1024).unwrap();
+        let batch = pool.shared.take_batch(16, 1, 32 * 1024).unwrap();
         let next = decode_tasks(&batch).unwrap();
         assert_eq!(next[0].payload, TaskPayload::Inline(vec![2u8; 16]));
         sys.shutdown().unwrap();
     }
 
+    /// Crash semantics: unknown and duplicate completions are zombies —
+    /// counted and discarded, never loud errors (produce-once makes
+    /// first-wins correct; DESIGN.md §9). The first result stands.
     #[test]
-    fn fulfill_rejects_unknown_and_duplicate_completions() {
+    fn fulfill_discards_unknown_and_duplicate_completions() {
         let sys = task_system(1);
         let topo = StealTopology::uniform(0, &[0, 1]);
         let pool = StealPool::new(Arc::clone(&sys), &topo, StealConfig::default());
         pool.register("t/echo", |a| Ok(a.to_vec())).unwrap();
         let id = pool.spawn("t/echo", vec![1]).unwrap();
-        assert!(pool.shared.fulfill(999, 1, Ok(vec![])).is_err());
-        pool.shared.fulfill(id, 1, Ok(vec![7])).unwrap();
-        let err = pool.shared.fulfill(id, 2, Ok(vec![8])).unwrap_err();
-        assert!(err.to_string().contains("duplicate"), "{err}");
+        pool.shared.fulfill(999, 1, Ok(vec![])); // unknown id: zombie
+        pool.shared.fulfill(id, 1, Ok(vec![7])); // first wins
+        pool.shared.fulfill(id, 2, Ok(vec![8])); // duplicate: discarded
+        assert_eq!(pool.sched_stats().completions_discarded, 2);
         assert_eq!(pool.take_result(id).unwrap(), Some(vec![7]));
         assert_eq!(pool.pending(), 0);
+        sys.shutdown().unwrap();
+    }
+
+    /// The crash ledger end to end: a thief dies holding stolen
+    /// descriptors; the victim re-enqueues them all — inline ones
+    /// as-is, the lazy one pulled back from the store — and refuses to
+    /// hand the zombie more work afterwards.
+    #[test]
+    fn lost_thief_descriptors_requeue_onto_the_lane() {
+        let sys = task_system(1);
+        let topo = StealTopology::uniform(0, &[0, 1]);
+        let pool = StealPool::new(
+            Arc::clone(&sys),
+            &topo,
+            StealConfig {
+                lazy_threshold: 8,
+                ..StealConfig::default()
+            },
+        );
+        pool.register("t/echo", |a| Ok(a.to_vec())).unwrap();
+        pool.spawn("t/echo", vec![9u8; 32]).unwrap(); // lazy when stolen
+        for i in 1..6u64 {
+            pool.spawn("t/echo", vec![i as u8; 4]).unwrap();
+        }
+        let batch = pool.shared.take_batch(16, 1, 32 * 1024).unwrap();
+        assert_eq!(decode_tasks(&batch).unwrap().len(), 3, "ceil(6/2)");
+        assert_eq!(pool.lane_len(), 3);
+        assert_eq!(pool.shared.store.len(), 1, "lazy payload parked");
+        // Thief 1 crashes before delivering anything.
+        assert_eq!(pool.note_peer_lost(1), 3);
+        assert_eq!(pool.lane_len(), 6, "everything back on the lane");
+        assert!(pool.shared.store.is_empty(), "lazy bytes reclaimed");
+        assert_eq!(pool.recovered(), 3);
+        assert_eq!(pool.pending(), 6, "nothing lost or double-counted");
+        // Idempotent, and the zombie gets no more work.
+        assert_eq!(pool.note_peer_lost(1), 0);
+        let empty = pool.shared.take_batch(16, 1, 32 * 1024).unwrap();
+        assert!(decode_tasks(&empty).unwrap().is_empty());
+        // The requeued lazy task is inline again, payload intact.
+        let lane = pool.shared.lane.lock().unwrap();
+        assert!(lane
+            .iter()
+            .any(|t| t.payload == TaskPayload::Inline(vec![9u8; 32])));
+        drop(lane);
+        sys.shutdown().unwrap();
+    }
+
+    /// A dead thief that had already *fetched* its lazy payload: the
+    /// bytes are gone from the store, so the origin rebuilds the task
+    /// from the retained args — same id, same bytes, inline again.
+    #[test]
+    fn fetched_payload_rebuilds_from_retained_args() {
+        let sys = task_system(1);
+        let topo = StealTopology::uniform(0, &[0, 1]);
+        let pool = StealPool::new(
+            Arc::clone(&sys),
+            &topo,
+            StealConfig {
+                lazy_threshold: 8,
+                ..StealConfig::default()
+            },
+        );
+        pool.register("t/echo", |a| Ok(a.to_vec())).unwrap();
+        let id = pool.spawn("t/echo", vec![5u8; 64]).unwrap();
+        pool.spawn("t/echo", vec![1u8; 64]).unwrap();
+        let stolen =
+            decode_tasks(&pool.shared.take_batch(1, 1, 32 * 1024).unwrap()).unwrap();
+        assert_eq!(stolen[0].id, id, "oldest first");
+        // The thief fetches the payload… then dies.
+        assert_eq!(pool.shared.store.take(id).unwrap(), vec![5u8; 64]);
+        pool.note_peer_lost(1);
+        let lane = pool.shared.lane.lock().unwrap();
+        assert!(lane
+            .iter()
+            .any(|t| t.id == id && t.payload == TaskPayload::Inline(vec![5u8; 64])));
+        drop(lane);
+        assert_eq!(pool.recovered(), 1);
+        sys.shutdown().unwrap();
+    }
+
+    /// A payload-lost report re-spawns the task from retained args
+    /// under the same id (pending is not double-counted); once the
+    /// re-run completes, a zombie result for the same id is discarded.
+    #[test]
+    fn payload_lost_report_respawns_and_zombie_is_discarded() {
+        let sys = task_system(1);
+        let topo = StealTopology::uniform(0, &[0, 1]);
+        let pool = StealPool::new(Arc::clone(&sys), &topo, StealConfig::default());
+        pool.register("t/echo", |a| Ok(a.to_vec())).unwrap();
+        let id = pool.spawn("t/echo", vec![3u8; 16]).unwrap();
+        let _ = pool.shared.take_batch(1, 1, 32 * 1024).unwrap();
+        assert_eq!(pool.lane_len(), 0, "task is away with the thief");
+        pool.shared
+            .fulfill(id, 2, Err(format!("{PAYLOAD_LOST} test")));
+        assert_eq!(pool.lane_len(), 1, "re-spawned from retained args");
+        assert_eq!(pool.pending(), 1, "still counted exactly once");
+        assert_eq!(pool.recovered(), 1);
+        pool.shared.fulfill(id, 0, Ok(vec![1]));
+        assert_eq!(pool.pending(), 0);
+        pool.shared.fulfill(id, 2, Ok(vec![1])); // the zombie resurfaces
+        assert_eq!(pool.sched_stats().completions_discarded, 1);
+        assert_eq!(pool.take_result(id).unwrap(), Some(vec![1]));
         sys.shutdown().unwrap();
     }
 
@@ -1059,8 +1413,10 @@ mod tests {
         let stats: Vec<SchedStats> =
             joins.into_iter().map(|j| j.join().unwrap().unwrap()).collect();
         let root = &stats[0];
-        // Every task completed exactly once (fulfill would have errored
-        // on duplicates; take_result verified none were lost).
+        // Every task completed exactly once: take_result verified none
+        // were lost, and a crash-free run must discard no zombies.
+        let discarded: u64 = stats.iter().map(|s| s.completions_discarded).sum();
+        assert_eq!(discarded, 0, "no duplicates in a crash-free run");
         let migrated_out: u64 = stats.iter().map(|s| s.tasks_migrated_out).sum();
         let migrated_in: u64 = stats.iter().map(|s| s.tasks_migrated_in).sum();
         assert_eq!(migrated_in, migrated_out, "no task lost in flight");

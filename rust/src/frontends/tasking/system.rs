@@ -152,6 +152,14 @@ pub struct SchedStats {
     /// Argument bytes this instance parked for lazy transfer: payloads a
     /// steal response deferred, pulled by the thief only at dispatch.
     pub lazy_payload_bytes: u64,
+    /// Descriptor tasks re-enqueued after the instance holding them
+    /// crashed (crash-ledger replays plus payload-lost re-spawns from
+    /// retained args — DESIGN.md §9).
+    pub tasks_recovered: u64,
+    /// Completions discarded as zombies: results for unknown or
+    /// already-completed task ids, surfacing when a task re-executed
+    /// after a crash *and* its original executor's result still arrived.
+    pub completions_discarded: u64,
 }
 
 /// Dependency/lifecycle bookkeeping shared by both engines.

@@ -71,7 +71,8 @@ fn main() -> Result<()> {
                  run apps:    fibonacci [--n N] | jacobi [--n N --iters I] | \
                  inference [--images M]   (+ --compute <name> --workers W)\n\
                  launch apps: pingpong | jacobi [n iters] | spawntest | \
-                 taskfarm [total] [tasks] | serve [total] [requests] [window]\n\
+                 taskfarm [total] [tasks] [steal|spill] [--chaos kill-one] | \
+                 serve [total] [requests] [window]\n\
                  serve: root runs a sharded request router, every other \
                  instance a continuous-batching inference worker; the root's \
                  closed-loop client verifies each response payload and \
@@ -432,8 +433,24 @@ fn cmd_worker() -> Result<()> {
         }
         Some("spawntest") => worker_spawntest(im.as_ref()),
         Some("taskfarm") => {
-            let total: usize = words
-                .get(1)
+            // `--chaos <mode>` may appear anywhere after the app name;
+            // strip it before reading the positional words.
+            let mut positional: Vec<&str> = Vec::new();
+            let mut chaos: Option<&str> = None;
+            let mut it = words[1..].iter();
+            while let Some(&w) = it.next() {
+                if w == "--chaos" {
+                    chaos = Some(
+                        it.next()
+                            .copied()
+                            .ok_or_else(|| err("--chaos needs a value"))?,
+                    );
+                } else {
+                    positional.push(w);
+                }
+            }
+            let total: usize = positional
+                .first()
                 .and_then(|s| s.parse().ok())
                 .or_else(|| {
                     std::env::var(ENV_WORLD)
@@ -442,9 +459,18 @@ fn cmd_worker() -> Result<()> {
                         .filter(|w| *w > 0)
                 })
                 .unwrap_or(2);
-            let tasks: u64 = words.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
-            let mode = words.get(3).copied().unwrap_or("steal");
-            worker_taskfarm(im.as_ref(), &cmm, &registry, &compute, total, tasks, mode)
+            let tasks: u64 = positional.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
+            let mode = positional.get(2).copied().unwrap_or("steal");
+            worker_taskfarm(
+                im.as_ref(),
+                &cmm,
+                &registry,
+                &compute,
+                total,
+                tasks,
+                mode,
+                chaos,
+            )
         }
         Some("serve") => {
             let total: usize = words
@@ -533,7 +559,10 @@ fn worker_jacobi(
 /// pull work over the mesh (topology-ordered victims, lazy payloads);
 /// `spill` mode is the push-only ablation, where the root runs tasks on
 /// a local work-stealing `TaskSystem` and pushes the overflow whenever
-/// its scheduler backlog saturates.
+/// its scheduler backlog saturates. `--chaos kill-one` (steal mode
+/// only) injects a worker crash mid-drain; the farm must recover the
+/// victim's stolen tasks and still verify every result.
+#[allow(clippy::too_many_arguments)]
 fn worker_taskfarm(
     im: &dyn InstanceManager,
     cmm: &Arc<dyn CommunicationManager>,
@@ -542,9 +571,16 @@ fn worker_taskfarm(
     total: usize,
     tasks: u64,
     mode: &str,
+    chaos: Option<&str>,
 ) -> Result<()> {
-    use hicr::apps::taskfarm::{run_spill, run_steal, SpillPolicy};
+    use hicr::apps::taskfarm::{run_spill, run_steal_chaos, ChaosMode, SpillPolicy};
     use hicr::frontends::tasking::StealConfig;
+    let chaos = chaos.map(ChaosMode::parse).transpose()?;
+    if chaos.is_some() && mode != "steal" {
+        return Err(err(format!(
+            "--chaos requires the steal farm (got mode '{mode}')"
+        )));
+    }
     // Serialize this instance's device tree for the topology RPC; an
     // environment with no discoverable topology still farms (empty tree).
     let topology_json = hicr::backends::merged_topology(registry, &PluginContext::new())
@@ -556,7 +592,7 @@ fn worker_taskfarm(
             // brings a local task system.
             let cm = registry.builder().compute(compute).build()?.compute()?;
             let sys = TaskSystem::new(cm, 2, false);
-            let result = run_steal(
+            let result = run_steal_chaos(
                 im,
                 cmm,
                 topology_json,
@@ -565,6 +601,7 @@ fn worker_taskfarm(
                 Arc::clone(&sys),
                 StealConfig::default(),
                 |_| 0, // launched worlds are single-host
+                chaos,
             )?;
             sys.shutdown()?;
             result
@@ -602,8 +639,8 @@ fn worker_taskfarm(
                 .collect();
             println!(
                 "taskfarm world={} workers={} tasks={} ok checksum={:#018x} \
-                 local={} spilled={} stolen={} steal_rpcs={}/{} lazy_bytes={} \
-                 topologies={} devices={} elapsed={:.3}s",
+                 local={} spilled={} stolen={} recovered={} steal_rpcs={}/{} \
+                 lazy_bytes={} topologies={} devices={} elapsed={:.3}s",
                 report.world,
                 report.workers,
                 report.tasks,
@@ -611,6 +648,7 @@ fn worker_taskfarm(
                 report.local_tasks,
                 report.spilled_tasks,
                 report.stolen_tasks,
+                report.recovered,
                 report.steal_rpcs_attempted,
                 report.steal_rpcs_succeeded,
                 report.lazy_payload_bytes,

@@ -1,0 +1,229 @@
+//! Deterministic fault injection for the netsim substrate (DESIGN.md §9).
+//!
+//! A [`ChaosConfig`] attached to the hub perturbs the frame stream at the
+//! exact point where a real fabric would: between an instance and the
+//! switch. Three perturbations plus a crash trigger:
+//!
+//! - **delay** — hold any inbound frame for a fixed duration before
+//!   processing it. Always safe: the substrate is reliable and order-
+//!   preserving per connection, so delay only stretches time.
+//! - **duplicate** — process an *idempotent* inbound frame twice
+//!   (exchange/barrier arrivals, gets, control queries). `Put`, `PutAck`
+//!   and `Spawn` are excluded: a duplicated ack would under-count the
+//!   sender's fence and a duplicated spawn would create an extra
+//!   instance — on a reliable stream those are exactly-once by
+//!   construction, and the hub's collective bookkeeping is hardened to
+//!   absorb duplicates of everything else.
+//! - **drop** — discard an inbound frame from the configured `target`
+//!   rank. Restricted to the target because unconditional loss on a
+//!   no-retransmit substrate is unrecoverable by design; scoped to a rank
+//!   that the scenario also kills, it models the real failure shape "a
+//!   crashing node's last frames never arrived".
+//! - **kill** — close the target's hub connection when its n-th frame of
+//!   a given kind arrives (mid-barrier, mid-exchange, mid-put-stream),
+//!   driving the abnormal-departure heal + supervision path.
+//!
+//! Every decision is a pure function of `(seed, rank, frame index)` —
+//! never of cross-connection arrival order — so a fixed seed yields the
+//! same fault pattern on every run even though the hub serves each
+//! connection from its own thread.
+
+use std::time::Duration;
+
+use crate::netsim::wire::Frame;
+use crate::util::rng::SplitMix64;
+
+/// Where a [`KillRule`] triggers: which frame kind from the victim is
+/// counted toward its `nth` threshold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KillPoint {
+    /// Kill when the victim's n-th `Barrier` arrival reaches the hub
+    /// (the frame is *not* processed — the victim dies mid-barrier).
+    BarrierArrival,
+    /// Kill on the victim's n-th `Exchange` arrival (mid-exchange).
+    ExchangeArrival,
+    /// Kill on the victim's n-th `Put` (mid-RPC / mid-steal: both ride
+    /// the put datapath, so this cuts a request or response mid-stream).
+    Put,
+    /// Kill on the victim's n-th frame of any kind.
+    AnyFrame,
+}
+
+/// One crash trigger: close `rank`'s connection when its `nth` frame
+/// matching `point` arrives. At most one rule per [`KillPoint`] kind
+/// should target a given rank (counters are shared per kind).
+#[derive(Clone, Debug)]
+pub struct KillRule {
+    /// Victim rank.
+    pub rank: u32,
+    /// Frame kind counted toward the trigger.
+    pub point: KillPoint,
+    /// Trigger on the n-th matching frame (1-based).
+    pub nth: u64,
+}
+
+/// Seeded, deterministic chaos plan for a hub. `Default` is inert (no
+/// faults); set probabilities in `[0.0, 1.0]` and kill rules to taste.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosConfig {
+    /// Seed mixed into every per-frame decision.
+    pub seed: u64,
+    /// Probability of discarding an inbound frame from `target`.
+    pub drop_p: f64,
+    /// Probability of delaying an inbound frame by `delay`.
+    pub delay_p: f64,
+    /// Hold duration for delayed frames.
+    pub delay: Duration,
+    /// Probability of processing an idempotent inbound frame twice.
+    pub dup_p: f64,
+    /// Scope for `drop_p` (drops are only safe against a rank the
+    /// scenario also kills; see module docs). `None` disables drops.
+    pub target: Option<u32>,
+    /// Crash triggers.
+    pub kills: Vec<KillRule>,
+}
+
+/// Per-connection mutable chaos bookkeeping: frame index and kill-point
+/// occurrence counters, both deterministic per connection.
+#[derive(Default)]
+pub struct ChaosState {
+    /// Frames read from this connection so far.
+    pub frame_idx: u64,
+    /// Matching-frame counts per [`KillPoint`] discriminant.
+    seen: [u64; 4],
+}
+
+impl ChaosConfig {
+    /// Deterministic biased coin: pure in `(seed, salt, idx)`.
+    fn roll(&self, salt: u64, idx: u64, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        if p >= 1.0 {
+            return true;
+        }
+        let mut sm = SplitMix64::new(
+            self.seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ idx.wrapping_mul(0xD6E8_FEB8_6659_FD93),
+        );
+        (sm.next_u64() >> 11) as f64 / (1u64 << 53) as f64 < p
+    }
+
+    /// Should this inbound frame from `from` be discarded?
+    pub fn should_drop(&self, from: u32, idx: u64) -> bool {
+        match self.target {
+            Some(t) if t == from => self.roll(0x1000 | u64::from(from) << 16, idx, self.drop_p),
+            _ => false,
+        }
+    }
+
+    /// Should this inbound frame be held for [`ChaosConfig::delay`]?
+    pub fn should_delay(&self, from: u32, idx: u64) -> bool {
+        self.roll(0x2000 | u64::from(from) << 16, idx, self.delay_p)
+    }
+
+    /// Should this inbound frame be processed twice? Only idempotent
+    /// frames are eligible (module docs); `Put`/`PutAck`/`Spawn` never.
+    pub fn should_duplicate(&self, from: u32, idx: u64, frame: &Frame) -> bool {
+        let eligible = !matches!(
+            frame,
+            Frame::Put { .. } | Frame::PutAck { .. } | Frame::Spawn { .. }
+        );
+        eligible && self.roll(0x3000 | u64::from(from) << 16, idx, self.dup_p)
+    }
+
+    /// Should the connection serving `from` be killed *before* processing
+    /// this frame? Advances the per-kind occurrence counters in `st`.
+    pub fn kill_now(&self, from: u32, frame: &Frame, st: &mut ChaosState) -> bool {
+        for rule in &self.kills {
+            if rule.rank != from {
+                continue;
+            }
+            let k = match (rule.point, frame) {
+                (KillPoint::BarrierArrival, Frame::Barrier { .. }) => 0,
+                (KillPoint::ExchangeArrival, Frame::Exchange { .. }) => 1,
+                (KillPoint::Put, Frame::Put { .. }) => 2,
+                (KillPoint::AnyFrame, _) => 3,
+                _ => continue,
+            };
+            st.seen[k] += 1;
+            if st.seen[k] >= rule.nth {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_and_probability_shaped() {
+        let cfg = ChaosConfig {
+            seed: 42,
+            drop_p: 0.5,
+            delay_p: 0.25,
+            dup_p: 0.5,
+            target: Some(3),
+            ..Default::default()
+        };
+        // Pure function of (seed, rank, idx): same inputs, same answer.
+        for idx in 0..64 {
+            assert_eq!(cfg.should_drop(3, idx), cfg.should_drop(3, idx));
+            assert_eq!(cfg.should_delay(1, idx), cfg.should_delay(1, idx));
+        }
+        // Drops never hit a non-target rank.
+        assert!((0..256).all(|idx| !cfg.should_drop(2, idx)));
+        // Rates land in the right ballpark over 4096 trials.
+        let hits = (0..4096).filter(|&i| cfg.should_drop(3, i)).count();
+        assert!((1024..=3072).contains(&hits), "drop rate off: {hits}/4096");
+        // A different seed reshuffles decisions.
+        let other = ChaosConfig { seed: 43, ..cfg.clone() };
+        assert!((0..4096).any(|i| cfg.should_drop(3, i) != other.should_drop(3, i)));
+    }
+
+    #[test]
+    fn duplicate_excludes_nonidempotent_frames() {
+        let cfg = ChaosConfig {
+            seed: 7,
+            dup_p: 1.0,
+            ..Default::default()
+        };
+        let put = Frame::Put {
+            src: 0,
+            dst: 1,
+            tag: 1,
+            key: 1,
+            offset: 0,
+            op_id: 1,
+            data: vec![],
+        };
+        assert!(!cfg.should_duplicate(0, 0, &put));
+        assert!(!cfg.should_duplicate(0, 0, &Frame::PutAck { to: 0, tag: 1, op_id: 1 }));
+        assert!(cfg.should_duplicate(0, 0, &Frame::Barrier { rank: 0, epoch: 1 }));
+        assert!(cfg.should_duplicate(0, 0, &Frame::ListInstances { rank: 0 }));
+    }
+
+    #[test]
+    fn kill_rule_counts_per_kind_occurrences() {
+        let cfg = ChaosConfig {
+            seed: 0,
+            kills: vec![KillRule {
+                rank: 2,
+                point: KillPoint::BarrierArrival,
+                nth: 2,
+            }],
+            ..Default::default()
+        };
+        let mut st = ChaosState::default();
+        let barrier = Frame::Barrier { rank: 2, epoch: 1 };
+        // Other ranks and other frame kinds never trigger or count.
+        assert!(!cfg.kill_now(1, &barrier, &mut st));
+        assert!(!cfg.kill_now(2, &Frame::ListInstances { rank: 2 }, &mut st));
+        // First matching arrival: counted, below threshold.
+        assert!(!cfg.kill_now(2, &barrier, &mut st));
+        // Second: trigger.
+        assert!(cfg.kill_now(2, &Frame::Barrier { rank: 2, epoch: 2 }, &mut st));
+    }
+}

@@ -23,6 +23,12 @@ const WAIT_TIMEOUT: Duration = Duration::from_secs(60);
 struct Outstanding {
     /// tag -> number of initiated-but-unacked outgoing puts.
     puts: HashMap<u64, usize>,
+    /// op_id -> (tag, destination rank, is_get) for every op still in
+    /// flight. Lets a `Departed` announcement complete operations whose
+    /// destination died mid-flight (crash semantics: the bytes vanish
+    /// but the local completion fires), so one crash cannot wedge a
+    /// survivor's fence or get until the 60 s deadlock timeout.
+    ops: HashMap<u64, (u64, u32, bool)>,
 }
 
 struct Shared {
@@ -40,6 +46,9 @@ struct Shared {
     instance_lists: Mutex<Option<Vec<u32>>>,
     /// Barrier releases seen.
     barrier_releases: Mutex<Vec<u64>>,
+    /// Ranks the hub has announced as abnormally departed (crash
+    /// supervision signal; duplicates are deduped on insert).
+    departed: Mutex<Vec<u32>>,
     outstanding: Mutex<Outstanding>,
     /// Count of puts applied locally (inbound), per tag — observability.
     inbound_puts: Mutex<HashMap<u64, u64>>,
@@ -100,6 +109,7 @@ impl Endpoint {
             spawn_results: Mutex::new(None),
             instance_lists: Mutex::new(None),
             barrier_releases: Mutex::new(Vec::new()),
+            departed: Mutex::new(Vec::new()),
             outstanding: Mutex::new(Outstanding::default()),
             inbound_puts: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
@@ -219,6 +229,7 @@ impl Endpoint {
         {
             let mut out = self.shared.outstanding.lock().unwrap();
             *out.puts.entry(tag.0).or_insert(0) += 1;
+            out.ops.insert(op_id, (tag.0, dst_rank, false));
         }
         if let Some(flag) = flag {
             self.shared.put_flags.lock().unwrap().insert(op_id, flag);
@@ -248,6 +259,12 @@ impl Endpoint {
         let op_id = self.next_op_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx): (Sender<Vec<u8>>, Receiver<Vec<u8>>) = channel();
         self.shared.get_waiters.lock().unwrap().insert(op_id, tx);
+        self.shared
+            .outstanding
+            .lock()
+            .unwrap()
+            .ops
+            .insert(op_id, (tag.0, dst_rank, true));
         self.send(&Frame::Get {
             src: self.rank,
             dst: dst_rank,
@@ -337,6 +354,13 @@ impl Endpoint {
             .unwrap_or(0)
     }
 
+    /// Ranks the hub has announced as abnormally departed so far.
+    /// Orderly `Bye` departures are *not* reported — only crashes. The
+    /// deployment supervision layer polls this (DESIGN.md §9).
+    pub fn departed_ranks(&self) -> Vec<u32> {
+        self.shared.departed.lock().unwrap().clone()
+    }
+
     /// Orderly departure (idempotent best-effort).
     pub fn bye(&self) {
         let _ = self.send(&Frame::Bye { rank: self.rank });
@@ -394,8 +418,12 @@ fn receive(
                 flag.store(true, Ordering::Release);
             }
             let mut out = shared.outstanding.lock().unwrap();
-            if let Some(n) = out.puts.get_mut(&tag) {
-                *n = n.saturating_sub(1);
+            // Guard on the in-flight record: a duplicated or synthetic
+            // stray ack must not under-count another op's fence.
+            if out.ops.remove(&op_id).is_some() {
+                if let Some(n) = out.puts.get_mut(&tag) {
+                    *n = n.saturating_sub(1);
+                }
             }
             drop(out);
             shared.notify();
@@ -434,6 +462,7 @@ fn receive(
                 .map_err(|e| HicrError::Transport(format!("get reply: {e}")))?;
         }
         Frame::GetData { op_id, data, .. } => {
+            shared.outstanding.lock().unwrap().ops.remove(&op_id);
             if let Some(tx) = shared.get_waiters.lock().unwrap().remove(&op_id) {
                 let _ = tx.send(data);
             }
@@ -456,6 +485,47 @@ fn receive(
         }
         Frame::InstanceList { ranks } => {
             *shared.instance_lists.lock().unwrap() = Some(ranks);
+            shared.notify();
+        }
+        Frame::Departed { rank } => {
+            {
+                let mut dep = shared.departed.lock().unwrap();
+                if !dep.contains(&rank) {
+                    dep.push(rank);
+                }
+            }
+            // Complete in-flight ops destined to the dead rank locally
+            // (crash semantics): acks that died with the peer must not
+            // wedge our fences, and pending gets resolve empty.
+            let swept: Vec<(u64, u64, bool)> = {
+                let mut out = shared.outstanding.lock().unwrap();
+                let ids: Vec<u64> = out
+                    .ops
+                    .iter()
+                    .filter(|(_, (_, dst, _))| *dst == rank)
+                    .map(|(id, _)| *id)
+                    .collect();
+                ids.iter()
+                    .map(|id| {
+                        let (tag, _, is_get) = out.ops.remove(id).expect("just listed");
+                        if !is_get {
+                            if let Some(n) = out.puts.get_mut(&tag) {
+                                *n = n.saturating_sub(1);
+                            }
+                        }
+                        (*id, tag, is_get)
+                    })
+                    .collect()
+            };
+            for (id, _, is_get) in &swept {
+                if *is_get {
+                    if let Some(tx) = shared.get_waiters.lock().unwrap().remove(id) {
+                        let _ = tx.send(Vec::new());
+                    }
+                } else if let Some(flag) = shared.put_flags.lock().unwrap().remove(id) {
+                    flag.store(true, Ordering::Release);
+                }
+            }
             shared.notify();
         }
         other => {

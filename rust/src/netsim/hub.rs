@@ -14,6 +14,7 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use crate::core::error::{HicrError, Result};
+use crate::netsim::chaos::{ChaosConfig, ChaosState};
 use crate::netsim::wire::Frame;
 
 /// Callback invoked when a root instance requests runtime instance
@@ -56,6 +57,7 @@ pub struct Hub {
     state: Arc<Mutex<HubState>>,
     done_cv: Arc<std::sync::Condvar>,
     spawn_fn: Option<Arc<SpawnFn>>,
+    chaos: Option<Arc<ChaosConfig>>,
 }
 
 impl Hub {
@@ -79,7 +81,15 @@ impl Hub {
             })),
             done_cv: Arc::new(std::sync::Condvar::new()),
             spawn_fn: spawn_fn.map(Arc::new),
+            chaos: None,
         })
+    }
+
+    /// Attach a deterministic fault-injection plan (DESIGN.md §9). All
+    /// connections served by this hub pass through the chaos filter.
+    pub fn with_chaos(mut self, cfg: ChaosConfig) -> Hub {
+        self.chaos = Some(Arc::new(cfg));
+        self
     }
 
     pub fn socket_path(&self) -> &Path {
@@ -92,6 +102,7 @@ impl Hub {
         let state = Arc::clone(&self.state);
         let done_cv = Arc::clone(&self.done_cv);
         let spawn_fn = self.spawn_fn.clone();
+        let chaos = self.chaos.clone();
         let listener = self.listener;
         let accept_state = Arc::clone(&state);
         let accept_cv = Arc::clone(&done_cv);
@@ -107,8 +118,9 @@ impl Hub {
                     let st = Arc::clone(&accept_state);
                     let cv = Arc::clone(&accept_cv);
                     let sf = spawn_fn.clone();
+                    let ch = chaos.clone();
                     conn_threads.push(std::thread::spawn(move || {
-                        let _ = serve_connection(stream, st, sf);
+                        let _ = serve_connection(stream, st, sf, ch);
                         cv.notify_all();
                     }));
                 }
@@ -213,53 +225,101 @@ fn resize_pending_collectives(st: &mut HubState, departed_rank: Option<u32>) -> 
 }
 
 /// Send a frame to `rank` through the hub's routing table.
+///
+/// Traffic addressed to a **departed** rank (or one whose socket just
+/// broke) is absorbed with crash semantics rather than erroring the
+/// *sender's* connection — one death must not cascade into many
+/// (DESIGN.md §9). The data vanishes, but the local completion the
+/// sender fences on still fires: puts are ack-and-dropped (like a NIC
+/// completing a send to a dead host) and gets are answered with zeros.
+/// Routing to a rank that never existed is still a loud error.
 fn route(state: &Mutex<HubState>, rank: u32, frame: &Frame) -> Result<()> {
     let mut st = state.lock().unwrap();
-    let writer = st.writers.get_mut(&rank).ok_or_else(|| {
-        HicrError::Transport(format!("route to unknown rank {rank}"))
-    })?;
-    let bytes = frame.encode();
-    writer
-        .write_all(&bytes)
-        .map_err(|e| HicrError::Transport(format!("route to {rank}: {e}")))
-}
-
-fn broadcast(state: &Mutex<HubState>, frame: &Frame) -> Result<()> {
-    let mut st = state.lock().unwrap();
-    let bytes = frame.encode();
-    for (rank, writer) in st.writers.iter_mut() {
-        writer
-            .write_all(&bytes)
-            .map_err(|e| HicrError::Transport(format!("broadcast to {rank}: {e}")))?;
+    let delivered = match st.writers.get_mut(&rank) {
+        Some(writer) => writer.write_all(&frame.encode()).is_ok(),
+        None => {
+            if !st.departed.contains(&rank) && rank >= st.next_rank {
+                return Err(HicrError::Transport(format!("route to unknown rank {rank}")));
+            }
+            false
+        }
+    };
+    if delivered {
+        return Ok(());
+    }
+    let reply = match frame {
+        Frame::Put { src, tag, op_id, .. } => Some((
+            *src,
+            Frame::PutAck {
+                to: *src,
+                tag: *tag,
+                op_id: *op_id,
+            },
+        )),
+        Frame::Get {
+            src, tag, op_id, len, ..
+        } => Some((
+            *src,
+            Frame::GetData {
+                to: *src,
+                tag: *tag,
+                op_id: *op_id,
+                data: vec![0; *len as usize],
+            },
+        )),
+        _ => None,
+    };
+    if let Some((to, reply)) = reply {
+        if let Some(w) = st.writers.get_mut(&to) {
+            let _ = w.write_all(&reply.encode());
+        }
     }
     Ok(())
+}
+
+/// Best-effort broadcast: a single broken writer (a rank mid-crash) must
+/// not abort delivery to the healthy rest — its own serve thread accounts
+/// the departure.
+fn broadcast(state: &Mutex<HubState>, frame: &Frame) {
+    let mut st = state.lock().unwrap();
+    let bytes = frame.encode();
+    for (_rank, writer) in st.writers.iter_mut() {
+        let _ = writer.write_all(&bytes);
+    }
 }
 
 fn serve_connection(
     stream: UnixStream,
     state: Arc<Mutex<HubState>>,
     spawn_fn: Option<Arc<SpawnFn>>,
+    chaos: Option<Arc<ChaosConfig>>,
 ) -> Result<()> {
     let mut my_rank: Option<u32> = None;
-    let result = serve_frames(&stream, &state, &spawn_fn, &mut my_rank);
-    // Abnormal exit — an error (e.g. a rejected spawn) or EOF without a
-    // Bye (crashed instance): account the departure anyway, so pending
-    // collectives heal and Hub::run's completion condition can still be
-    // met instead of wedging the launcher forever. A clean Bye already
-    // recorded the departure; this is a no-op then.
+    let result = serve_frames(&stream, &state, &spawn_fn, &chaos, &mut my_rank);
+    // Abnormal exit — an error (e.g. a rejected spawn, a chaos kill) or
+    // EOF without a Bye (crashed instance): account the departure anyway,
+    // so pending collectives heal and Hub::run's completion condition can
+    // still be met instead of wedging the launcher forever. A clean Bye
+    // already recorded the departure; this is a no-op then.
     if let Some(rank) = my_rank {
         let frames = {
             let mut st = state.lock().unwrap();
             if st.departed.contains(&rank) {
-                Vec::new()
+                None
             } else {
                 st.departed.push(rank);
                 st.writers.remove(&rank);
-                resize_pending_collectives(&mut st, Some(rank))
+                Some(resize_pending_collectives(&mut st, Some(rank)))
             }
         };
-        for frame in &frames {
-            let _ = broadcast(&state, frame);
+        if let Some(frames) = frames {
+            for frame in &frames {
+                broadcast(&state, frame);
+            }
+            // Announce the crash to survivors (only abnormal departures:
+            // an orderly Bye is intentional and not announced). This is
+            // the root's supervision signal (DESIGN.md §9).
+            broadcast(&state, &Frame::Departed { rank });
         }
     }
     result
@@ -269,14 +329,59 @@ fn serve_frames(
     stream: &UnixStream,
     state: &Arc<Mutex<HubState>>,
     spawn_fn: &Option<Arc<SpawnFn>>,
+    chaos: &Option<Arc<ChaosConfig>>,
     my_rank: &mut Option<u32>,
 ) -> Result<()> {
     let mut reader = stream
         .try_clone()
         .map_err(|e| HicrError::Transport(format!("clone stream: {e}")))?;
+    let mut chaos_st = ChaosState::default();
     while let Some(frame) = Frame::read_from(&mut reader)? {
+        if let Some(cfg) = chaos {
+            let from = my_rank.unwrap_or(u32::MAX);
+            let idx = chaos_st.frame_idx;
+            chaos_st.frame_idx += 1;
+            if cfg.kill_now(from, &frame, &mut chaos_st) {
+                // Erroring out closes this connection: the victim's
+                // frames stop mid-stream and serve_connection records an
+                // abnormal departure — exactly a crash at this point.
+                return Err(HicrError::Transport(format!(
+                    "chaos: killed rank {from} at frame {idx}"
+                )));
+            }
+            if cfg.should_delay(from, idx) {
+                std::thread::sleep(cfg.delay);
+            }
+            if cfg.should_drop(from, idx) {
+                continue;
+            }
+            if cfg.should_duplicate(from, idx, &frame)
+                && handle_frame(frame.clone(), stream, state, spawn_fn, my_rank)?
+            {
+                break;
+            }
+        }
+        if handle_frame(frame, stream, state, spawn_fn, my_rank)? {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Process one inbound frame. Returns `Ok(true)` when the connection
+/// should close (orderly Bye).
+fn handle_frame(
+    frame: Frame,
+    stream: &UnixStream,
+    state: &Arc<Mutex<HubState>>,
+    spawn_fn: &Option<Arc<SpawnFn>>,
+    my_rank: &mut Option<u32>,
+) -> Result<bool> {
+    {
         match frame {
             Frame::Register { rank } => {
+                // Idempotent (a chaos-duplicated Register re-inserts the
+                // same writer and the dedup below keeps the roster exact).
                 *my_rank = Some(rank);
                 let writer = stream
                     .try_clone()
@@ -313,7 +418,7 @@ fn serve_frames(
                     }
                 };
                 if let Some(ex) = complete {
-                    broadcast(state, &exchange_result_frame(tag, &ex))?;
+                    broadcast(state, &exchange_result_frame(tag, &ex));
                 }
             }
             // Collective: barrier.
@@ -326,7 +431,12 @@ fn serve_frames(
                         .barriers
                         .entry(epoch)
                         .or_insert_with(|| (Vec::new(), n_instances));
-                    entry.0.push(rank);
+                    // Deduplicated arrival: a duplicated (chaos) or
+                    // zombie-resent Barrier frame must not count twice
+                    // toward the release threshold.
+                    if !entry.0.contains(&rank) {
+                        entry.0.push(rank);
+                    }
                     if entry.0.len() >= entry.1 {
                         st.barriers.remove(&epoch);
                         // Counted inside this critical section: a Spawn
@@ -339,7 +449,7 @@ fn serve_frames(
                     }
                 };
                 if release {
-                    broadcast(state, &Frame::BarrierRelease { epoch })?;
+                    broadcast(state, &Frame::BarrierRelease { epoch });
                 }
             }
             // Runtime instance creation.
@@ -420,16 +530,22 @@ fn serve_frames(
                 // Leave path: re-size pending barriers to the shrunken
                 // live count, deduct this rank from exchange cohorts it
                 // had not entered, and release anything now complete.
+                // Deduplicated so a chaos-duplicated Bye cannot inflate
+                // the departed roster (that count gates Hub::run exit).
                 let frames = {
                     let mut st = state.lock().unwrap();
-                    st.departed.push(rank);
-                    st.writers.remove(&rank);
-                    resize_pending_collectives(&mut st, Some(rank))
+                    if st.departed.contains(&rank) {
+                        Vec::new()
+                    } else {
+                        st.departed.push(rank);
+                        st.writers.remove(&rank);
+                        resize_pending_collectives(&mut st, Some(rank))
+                    }
                 };
                 for frame in &frames {
-                    broadcast(state, frame)?;
+                    broadcast(state, frame);
                 }
-                break;
+                return Ok(true);
             }
             other => {
                 return Err(HicrError::Transport(format!(
@@ -438,5 +554,5 @@ fn serve_frames(
             }
         }
     }
-    Ok(())
+    Ok(false)
 }

@@ -10,7 +10,11 @@
 //! - [`fabric`] — calibrated interconnect cost models (LPF-over-IBverbs
 //!   vs MPI-RMA-over-EDR) used to report paper-shaped performance while
 //!   the real byte movement runs over sockets for correctness.
+//! - [`chaos`] — seeded deterministic fault injection (drop/delay/
+//!   duplicate frames, kill connections at programmable points) for the
+//!   fault-matrix suite (DESIGN.md §9).
 
+pub mod chaos;
 pub mod endpoint;
 pub mod fabric;
 pub mod hub;

@@ -73,6 +73,11 @@ pub enum Frame {
     InstanceList { ranks: Vec<u32> },
     /// Orderly goodbye.
     Bye { rank: u32 },
+    /// Hub broadcast: `rank` departed *abnormally* (connection died
+    /// without an orderly [`Frame::Bye`]). Survivors feed this into the
+    /// deployment supervision layer (DESIGN.md §9). Orderly shutdown is
+    /// deliberately not announced.
+    Departed { rank: u32 },
 }
 
 impl Frame {
@@ -92,6 +97,7 @@ impl Frame {
             Frame::ListInstances { .. } => 12,
             Frame::InstanceList { .. } => 13,
             Frame::Bye { .. } => 14,
+            Frame::Departed { .. } => 15,
         }
     }
 
@@ -194,6 +200,7 @@ impl Frame {
                 }
             }
             Frame::Bye { rank } => put_u32(&mut body, *rank),
+            Frame::Departed { rank } => put_u32(&mut body, *rank),
         }
         let mut out = Vec::with_capacity(body.len() + 5);
         put_u32(&mut out, (body.len() + 1) as u32);
@@ -284,6 +291,7 @@ impl Frame {
                 Frame::InstanceList { ranks }
             }
             14 => Frame::Bye { rank: c.u32()? },
+            15 => Frame::Departed { rank: c.u32()? },
             other => {
                 return Err(HicrError::Transport(format!("unknown opcode {other}")))
             }
@@ -439,6 +447,7 @@ mod tests {
             ranks: vec![0, 1, 2],
         });
         roundtrip(Frame::Bye { rank: 0 });
+        roundtrip(Frame::Departed { rank: 3 });
     }
 
     #[test]
