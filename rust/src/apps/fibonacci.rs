@@ -45,10 +45,12 @@ fn fib_task(ctx: &TaskCtx, n: u64) -> u64 {
     let (l2, r2) = (Arc::clone(&left), Arc::clone(&right));
     ctx.spawn("fib", move |c| {
         let v = fib_task(c, n - 1);
+        // relaxed-ok: result cell; the task-system join (wait_children/wait_idle) orders this against the worker
         l2.store(v, Ordering::Relaxed);
     });
     ctx.spawn("fib", move |c| {
         let v = fib_task(c, n - 2);
+        // relaxed-ok: result cell; the task-system join (wait_children/wait_idle) orders this against the worker
         r2.store(v, Ordering::Relaxed);
     });
     ctx.wait_children();
@@ -76,11 +78,13 @@ pub fn run(system: &TaskSystem, n: u64) -> Result<FibonacciRun> {
     let t0 = std::time::Instant::now();
     system.run("fib-root", move |ctx| {
         let v = fib_task(ctx, n);
+        // relaxed-ok: result cell; the task-system join (wait_children/wait_idle) orders this against the worker
         r.store(v, Ordering::Relaxed);
     })?;
     let elapsed_s = t0.elapsed().as_secs_f64();
     Ok(FibonacciRun {
         n,
+        // relaxed-ok: result cell; the task-system join (wait_children/wait_idle) orders this against the worker
         value: result.load(Ordering::Relaxed),
         tasks_executed: system.tasks_executed() - before,
         elapsed_s,
@@ -94,6 +98,7 @@ pub fn run(system: &TaskSystem, n: u64) -> Result<FibonacciRun> {
 /// into `out`.
 fn build_fib_dag(ctx: &TaskCtx, n: u64, out: Arc<AtomicU64>) -> TaskHandle {
     if n < 2 {
+        // relaxed-ok: result cell; the task-system join (wait_children/wait_idle) orders this against the worker
         return ctx.spawn("fib-leaf", move |_| out.store(n, Ordering::Relaxed));
     }
     let left = Arc::new(AtomicU64::new(0));
@@ -102,6 +107,7 @@ fn build_fib_dag(ctx: &TaskCtx, n: u64, out: Arc<AtomicU64>) -> TaskHandle {
     let rh = build_fib_dag(ctx, n - 2, Arc::clone(&right));
     ctx.spawn_after(&[lh, rh], "fib-sum", move |_| {
         out.store(
+            // relaxed-ok: result cell; the task-system join (wait_children/wait_idle) orders this against the worker
             left.load(Ordering::Relaxed) + right.load(Ordering::Relaxed),
             Ordering::Relaxed,
         );
@@ -126,6 +132,7 @@ pub fn run_dag(system: &TaskSystem, n: u64) -> Result<FibonacciRun> {
     let elapsed_s = t0.elapsed().as_secs_f64();
     Ok(FibonacciRun {
         n,
+        // relaxed-ok: result cell; the task-system join (wait_children/wait_idle) orders this against the worker
         value: result.load(Ordering::Relaxed),
         tasks_executed: system.tasks_executed() - before,
         elapsed_s,

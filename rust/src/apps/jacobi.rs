@@ -27,7 +27,11 @@ pub struct GridBuf {
     data: std::cell::UnsafeCell<Vec<f64>>,
 }
 
+// SAFETY: access goes through slice()/slice_mut(), whose callers uphold
+// the disjoint-writes contract below; the type hands out no references
+// on its own. Same rationale as core::memory::SlotBuffer.
 unsafe impl Send for GridBuf {}
+// SAFETY: see the Send impl above.
 unsafe impl Sync for GridBuf {}
 
 impl GridBuf {
@@ -45,6 +49,9 @@ impl GridBuf {
     }
 
     fn slice(&self) -> &[f64] {
+        // SAFETY: readers only look at regions no concurrent task writes
+        // (stencil reads prev while tasks write next; DAG edges order the
+        // cross-iteration swap).
         unsafe { &*self.data.get() }
     }
 }
@@ -54,6 +61,8 @@ impl Grid {
     pub fn new(n: usize) -> Grid {
         let bufs = [GridBuf::new(n * n * n), GridBuf::new(n * n * n)];
         {
+            // SAFETY: the buffers were just created; no other reference
+            // exists before Grid::new returns.
             let b0 = unsafe { bufs[0].slice_mut() };
             let b1 = unsafe { bufs[1].slice_mut() };
             for y in 0..n {
@@ -186,6 +195,7 @@ pub fn run_local(
                                 z0,
                                 z1,
                             );
+                            // relaxed-ok: telemetry counter; no data is published through this atomic
                             updates.fetch_add(u, std::sync::atomic::Ordering::Relaxed);
                         });
                     }
@@ -195,6 +205,7 @@ pub fn run_local(
         })?;
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
+    // relaxed-ok: telemetry counter; no data is published through this atomic
     let flops = total_updates.load(std::sync::atomic::Ordering::Relaxed) * FLOPS_PER_POINT;
     Ok(JacobiRun {
         n,
@@ -297,6 +308,7 @@ pub fn run_local_dag(
                                 z0,
                                 z1,
                             );
+                            // relaxed-ok: telemetry counter; no data is published through this atomic
                             updates.fetch_add(u, std::sync::atomic::Ordering::Relaxed);
                         }));
                     }
@@ -308,6 +320,7 @@ pub fn run_local_dag(
     })?;
     let elapsed_s = t0.elapsed().as_secs_f64();
     let flops =
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         total_updates.load(std::sync::atomic::Ordering::Relaxed) * FLOPS_PER_POINT;
     Ok(JacobiRun {
         n,
@@ -333,6 +346,8 @@ pub fn run_sequential(grid: &mut Grid, iterations: usize) -> f64 {
     for it in 0..iterations {
         let prev = Arc::clone(&grid.bufs[it % 2]);
         let next = Arc::clone(&grid.bufs[(it + 1) % 2]);
+        // SAFETY: sequential reference path — &mut Grid guarantees
+        // exclusive access to both buffers.
         let next_mut = unsafe { next.slice_mut() };
         stencil_block(prev.slice(), next_mut, n, 0, n, 0, n, 0, n);
     }
@@ -437,6 +452,7 @@ pub fn run_distributed(
                                 for (off, v) in block.drain(..) {
                                     next[off] = v;
                                 }
+                                // relaxed-ok: telemetry counter; no data is published through this atomic
                                 u.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                             });
                         }

@@ -342,6 +342,7 @@ fn orchestrate(
             let cell = Arc::new(AtomicU64::new(0));
             let out = Arc::clone(&cell);
             sys.submit("farm-local", move |_| {
+                // relaxed-ok: result cell; the task-system join (wait_children/wait_idle) orders this against the worker
                 out.store(task_value(i), Ordering::Relaxed);
             });
             local_results.push((i, cell));
@@ -350,6 +351,7 @@ fn orchestrate(
     if let Some((sys, _)) = local {
         sys.wait_idle()?;
         for (i, cell) in &local_results {
+            // relaxed-ok: result cell; the task-system join (wait_children/wait_idle) orders this against the worker
             let (got, want) = (cell.load(Ordering::Relaxed), task_value(*i));
             if got != want {
                 return Err(HicrError::InvalidState(format!(

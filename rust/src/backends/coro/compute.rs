@@ -114,6 +114,7 @@ impl FiberPool {
         let (tx, rx): (Sender<FiberJob>, Receiver<FiberJob>) = channel();
         let pool = Arc::clone(self);
         let my_tx = tx.clone();
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         self.spawned.fetch_add(1, Ordering::Relaxed);
         std::thread::Builder::new()
             .name("hicr-fiber".into())
@@ -363,6 +364,7 @@ impl CoroComputeManager {
     /// observability for the Fig. 9 analysis (pooling keeps this near the
     /// live-fiber high-watermark, far below the task count).
     pub fn pool_threads_spawned(&self) -> usize {
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         self.pool.spawned.load(Ordering::Relaxed)
     }
 

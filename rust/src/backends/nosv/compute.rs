@@ -76,11 +76,13 @@ impl ProcessingUnit for NosvProcessingUnit {
         // Admission through the system-wide scheduler lock.
         {
             let _admit = SCHEDULER.admission.lock().unwrap();
+            // relaxed-ok: telemetry counter; no data is published through this atomic
             SCHEDULER.tasks_started.fetch_add(1, Ordering::Relaxed);
         }
         // Thread-per-task: the defining (and deliberately expensive)
         // property of this execution model.
         let thread_state = Arc::clone(&state);
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         SCHEDULER.threads_spawned.fetch_add(1, Ordering::Relaxed);
         std::thread::Builder::new()
             .name("nosv-task".into())
@@ -163,12 +165,14 @@ impl NosvComputeManager {
 
     /// Total tasks admitted through the system-wide scheduler (metrics).
     pub fn tasks_started() -> usize {
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         SCHEDULER.tasks_started.load(Ordering::Relaxed)
     }
 
     /// Total kernel threads spawned for tasks (contrast with the coro
     /// backend's pooled count — the Fig. 9 mechanism).
     pub fn threads_spawned() -> usize {
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         SCHEDULER.threads_spawned.load(Ordering::Relaxed)
     }
 }

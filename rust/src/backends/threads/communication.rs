@@ -22,7 +22,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar};
 
 use crate::core::communication::{
     validate_bounds, validate_direction, CommunicationManager, CompletionHandle,
@@ -31,6 +31,7 @@ use crate::core::communication::{
 use crate::core::error::{HicrError, Result};
 use crate::core::ids::{InstanceId, Key, Tag};
 use crate::core::memory::LocalMemorySlot;
+use crate::util::witness::{classes, Guard, Lock};
 
 /// Number of fence-accounting shards. Power of two; 64 keeps the false
 /// sharing probability of two hot tags at ~1.6%.
@@ -44,7 +45,7 @@ struct FenceShard {
     /// Fences currently blocked on this shard; completions skip the
     /// mutex + notify entirely while this is zero.
     waiters: AtomicU64,
-    mx: Mutex<()>,
+    mx: Lock<()>,
     cv: Condvar,
 }
 
@@ -53,7 +54,7 @@ impl FenceShard {
         Self {
             pending: AtomicU64::new(0),
             waiters: AtomicU64::new(0),
-            mx: Mutex::new(()),
+            mx: Lock::new(&classes::THREADS_FENCE_SHARD, ()),
             cv: Condvar::new(),
         }
     }
@@ -74,7 +75,7 @@ struct Registry {
 
 /// Intra-instance communication manager (Pthreads analogue).
 pub struct ThreadsCommunicationManager {
-    registry: Mutex<Registry>,
+    registry: Lock<Registry>,
     /// Times the registry mutex was acquired (instrumentation: the
     /// steady-state copy path must not contribute).
     registry_locks: AtomicU64,
@@ -83,7 +84,7 @@ pub struct ThreadsCommunicationManager {
     /// *accounted* as pending until [`Self::retire_deferred`], letting
     /// tests drive the sharded fence accounting honestly.
     defer_completion: bool,
-    deferred: Mutex<Vec<DeferredOp>>,
+    deferred: Lock<Vec<DeferredOp>>,
 }
 
 impl Default for ThreadsCommunicationManager {
@@ -105,23 +106,25 @@ impl ThreadsCommunicationManager {
 
     fn with_options(defer_completion: bool) -> Self {
         Self {
-            registry: Mutex::new(Registry::default()),
+            registry: Lock::new(&classes::THREADS_REGISTRY, Registry::default()),
             registry_locks: AtomicU64::new(0),
             fences: (0..FENCE_SHARDS).map(|_| FenceShard::new()).collect(),
             defer_completion,
-            deferred: Mutex::new(Vec::new()),
+            deferred: Lock::new(&classes::THREADS_DEFERRED, Vec::new()),
         }
     }
 
     /// Acquire the registry mutex, counting the acquisition.
-    fn registry(&self) -> MutexGuard<'_, Registry> {
+    fn registry(&self) -> Guard<'_, Registry> {
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         self.registry_locks.fetch_add(1, Ordering::Relaxed);
-        self.registry.lock().unwrap()
+        self.registry.lock()
     }
 
     /// Registry-mutex acquisitions so far (instrumented perf tests assert
     /// a zero delta across steady-state transfer windows).
     pub fn registry_lock_count(&self) -> u64 {
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         self.registry_locks.load(Ordering::Relaxed)
     }
 
@@ -153,7 +156,7 @@ impl ThreadsCommunicationManager {
             {
                 // Lock/unlock pairs with the waiter's re-check under the
                 // same mutex, closing the check-then-sleep race.
-                let _g = sh.mx.lock().unwrap();
+                let _g = sh.mx.lock();
                 sh.cv.notify_all();
             }
         }
@@ -164,7 +167,7 @@ impl ThreadsCommunicationManager {
     /// number retired. No-op outside deferred-completion mode.
     pub fn retire_deferred(&self, max: usize) -> usize {
         let drained: Vec<DeferredOp> = {
-            let mut d = self.deferred.lock().unwrap();
+            let mut d = self.deferred.lock();
             let n = max.min(d.len());
             d.drain(..n).collect()
         };
@@ -289,7 +292,7 @@ impl CommunicationManager for ThreadsCommunicationManager {
             Ok(()) => {
                 if self.defer_completion {
                     let flag = Arc::new(AtomicBool::new(false));
-                    self.deferred.lock().unwrap().push(DeferredOp {
+                    self.deferred.lock().push(DeferredOp {
                         shards,
                         flag: Arc::clone(&flag),
                     });
@@ -309,12 +312,12 @@ impl CommunicationManager for ThreadsCommunicationManager {
             return Ok(());
         }
         sh.waiters.fetch_add(1, Ordering::SeqCst);
-        let mut guard = sh.mx.lock().unwrap();
+        let mut guard = sh.mx.lock();
         // Re-check under the mutex: a completer that saw waiters == 0
         // before our increment is ordered (SeqCst) before this load, so
         // its drain-to-zero is visible here and we never sleep on it.
         while sh.pending.load(Ordering::SeqCst) > 0 {
-            guard = sh.cv.wait(guard).unwrap();
+            guard = guard.wait(&sh.cv);
         }
         drop(guard);
         sh.waiters.fetch_sub(1, Ordering::SeqCst);

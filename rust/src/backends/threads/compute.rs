@@ -4,7 +4,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::thread::JoinHandle;
 
 use crate::core::compute::{
@@ -13,6 +13,7 @@ use crate::core::compute::{
 };
 use crate::core::error::{HicrError, Result};
 use crate::core::topology::ComputeResource;
+use crate::util::witness::{classes, Lock};
 
 // Pinning moved to `util::affinity` so the tasking frontend can pin its
 // scheduler workers without importing a backend; re-exported here for
@@ -23,7 +24,7 @@ pub use crate::util::affinity::pin_to_core;
 /// (or Failed on panic) with condvar-based blocking waits.
 pub struct HostExecutionState {
     unit: Arc<FnExecutionUnit>,
-    status: Mutex<ExecStatus>,
+    status: Lock<ExecStatus>,
     cv: Condvar,
 }
 
@@ -31,13 +32,13 @@ impl HostExecutionState {
     pub fn new(unit: Arc<FnExecutionUnit>) -> Arc<Self> {
         Arc::new(Self {
             unit,
-            status: Mutex::new(ExecStatus::Ready),
+            status: Lock::new(&classes::THREADS_EXEC_STATUS, ExecStatus::Ready),
             cv: Condvar::new(),
         })
     }
 
     fn set_status(&self, s: ExecStatus) {
-        *self.status.lock().unwrap() = s;
+        *self.status.lock() = s;
         self.cv.notify_all();
     }
 
@@ -59,13 +60,13 @@ impl HostExecutionState {
 
 impl ExecutionState for HostExecutionState {
     fn status(&self) -> ExecStatus {
-        *self.status.lock().unwrap()
+        *self.status.lock()
     }
 
     fn wait(&self) -> Result<()> {
-        let mut st = self.status.lock().unwrap();
+        let mut st = self.status.lock();
         while !matches!(*st, ExecStatus::Finished | ExecStatus::Failed) {
-            st = self.cv.wait(st).unwrap();
+            st = st.wait(&self.cv);
         }
         if *st == ExecStatus::Failed {
             return Err(HicrError::InvalidState(format!(
@@ -93,14 +94,14 @@ enum Job {
 struct PuShared {
     pending: AtomicUsize,
     idle_cv: Condvar,
-    idle_mx: Mutex<()>,
+    idle_mx: Lock<()>,
 }
 
 /// A persistent worker thread bound (best effort) to one compute resource.
 pub struct ThreadProcessingUnit {
     resource: ComputeResource,
-    tx: Mutex<Option<Sender<Job>>>,
-    handle: Mutex<Option<JoinHandle<()>>>,
+    tx: Lock<Option<Sender<Job>>>,
+    handle: Lock<Option<JoinHandle<()>>>,
     shared: Arc<PuShared>,
 }
 
@@ -110,7 +111,7 @@ impl ThreadProcessingUnit {
         let shared = Arc::new(PuShared {
             pending: AtomicUsize::new(0),
             idle_cv: Condvar::new(),
-            idle_mx: Mutex::new(()),
+            idle_mx: Lock::new(&classes::THREADS_IDLE, ()),
         });
         let worker_shared = Arc::clone(&shared);
         let core = resource.os_index;
@@ -125,7 +126,7 @@ impl ThreadProcessingUnit {
                         Job::Run(state) => {
                             state.run_to_completion();
                             if worker_shared.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
-                                let _g = worker_shared.idle_mx.lock().unwrap();
+                                let _g = worker_shared.idle_mx.lock();
                                 worker_shared.idle_cv.notify_all();
                             }
                         }
@@ -136,8 +137,8 @@ impl ThreadProcessingUnit {
             .expect("spawn processing unit thread");
         Arc::new(Self {
             resource,
-            tx: Mutex::new(Some(tx)),
-            handle: Mutex::new(Some(handle)),
+            tx: Lock::new(&classes::THREADS_PU_TX, Some(tx)),
+            handle: Lock::new(&classes::THREADS_PU_HANDLE, Some(handle)),
             shared,
         })
     }
@@ -162,7 +163,7 @@ impl ProcessingUnit for ThreadProcessingUnit {
                 "execution state already started (states are single-use)".into(),
             ));
         }
-        let tx = self.tx.lock().unwrap();
+        let tx = self.tx.lock();
         let tx = tx
             .as_ref()
             .ok_or_else(|| HicrError::InvalidState("processing unit terminated".into()))?;
@@ -173,19 +174,19 @@ impl ProcessingUnit for ThreadProcessingUnit {
     }
 
     fn await_all(&self) -> Result<()> {
-        let mut guard = self.shared.idle_mx.lock().unwrap();
+        let mut guard = self.shared.idle_mx.lock();
         while self.shared.pending.load(Ordering::Acquire) != 0 {
-            guard = self.shared.idle_cv.wait(guard).unwrap();
+            guard = guard.wait(&self.shared.idle_cv);
         }
         Ok(())
     }
 
     fn terminate(&self) -> Result<()> {
         self.await_all()?;
-        if let Some(tx) = self.tx.lock().unwrap().take() {
+        if let Some(tx) = self.tx.lock().take() {
             let _ = tx.send(Job::Shutdown);
         }
-        if let Some(h) = self.handle.lock().unwrap().take() {
+        if let Some(h) = self.handle.lock().take() {
             h.join()
                 .map_err(|_| HicrError::InvalidState("worker panicked".into()))?;
         }
@@ -193,7 +194,7 @@ impl ProcessingUnit for ThreadProcessingUnit {
     }
 
     fn status(&self) -> ExecStatus {
-        if self.tx.lock().unwrap().is_none() {
+        if self.tx.lock().is_none() {
             ExecStatus::Finished
         } else if self.shared.pending.load(Ordering::Acquire) > 0 {
             ExecStatus::Running
@@ -258,6 +259,7 @@ impl ComputeManager for ThreadsComputeManager {
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU32;
+    use std::sync::Mutex;
 
     fn resource(i: u64) -> ComputeResource {
         ComputeResource {

@@ -72,6 +72,7 @@ impl LocalMemorySlot {
         }
         THREAD_SLOT_ALLOCS.with(|c| c.set(c.get() + 1));
         Ok(Self {
+            // relaxed-ok: unique-id allocation; only atomicity matters, no payload is published
             id: NEXT_SLOT_ID.fetch_add(1, Ordering::Relaxed),
             space,
             buf: Arc::new(SlotBuffer {
@@ -91,6 +92,7 @@ impl LocalMemorySlot {
         THREAD_SLOT_ALLOCS.with(|c| c.set(c.get() + 1));
         let len = data.len();
         Ok(Self {
+            // relaxed-ok: unique-id allocation; only atomicity matters, no payload is published
             id: NEXT_SLOT_ID.fetch_add(1, Ordering::Relaxed),
             space,
             buf: Arc::new(SlotBuffer {
@@ -134,6 +136,9 @@ impl LocalMemorySlot {
     /// Copy bytes out of the slot.
     pub fn read_at(&self, offset: usize, dst: &mut [u8]) -> Result<()> {
         self.check_bounds(offset, dst.len())?;
+        // SAFETY: check_bounds proved [offset, offset+len) lies inside the
+        // buffer; dst is a caller-owned exclusive borrow. Racing one-sided
+        // writers are the application's contract (module docs).
         unsafe {
             let src = (*self.buf.data.get()).as_ptr().add(offset);
             std::ptr::copy_nonoverlapping(src, dst.as_mut_ptr(), dst.len());
@@ -144,6 +149,8 @@ impl LocalMemorySlot {
     /// Copy bytes into the slot.
     pub fn write_at(&self, offset: usize, src: &[u8]) -> Result<()> {
         self.check_bounds(offset, src.len())?;
+        // SAFETY: bounds proven above; src is a shared borrow we only
+        // read. One-sided race semantics per the module docs.
         unsafe {
             let dst = (*self.buf.data.get()).as_mut_ptr().add(offset);
             std::ptr::copy_nonoverlapping(src.as_ptr(), dst, src.len());
@@ -163,6 +170,8 @@ impl LocalMemorySlot {
     ) -> Result<()> {
         self.check_bounds(dst_off, len)?;
         src.check_bounds(src_off, len)?;
+        // SAFETY: both ranges bounds-checked above; when the two slots
+        // share a buffer the copy uses the overlap-tolerant memmove.
         unsafe {
             let s = (*src.buf.data.get()).as_ptr().add(src_off);
             let d = (*self.buf.data.get()).as_mut_ptr().add(dst_off);
@@ -199,6 +208,8 @@ impl LocalMemorySlot {
     /// rejected loudly instead (callers probe once at channel creation).
     fn atomic_u64_at(&self, offset: usize) -> Result<*const AtomicU64> {
         self.check_bounds(offset, 8)?;
+        // SAFETY: check_bounds proved offset+8 is in range; we only form
+        // a pointer here, alignment is validated before it is ever used.
         let p = unsafe { (*self.buf.data.get()).as_ptr().add(offset) };
         if p as usize % 8 != 0 {
             return Err(HicrError::Bounds(format!(
@@ -218,6 +229,8 @@ impl LocalMemorySlot {
     /// Errors if the word is not 8-byte aligned.
     pub fn read_u64_acquire(&self, offset: usize) -> Result<u64> {
         let a = self.atomic_u64_at(offset)?;
+        // SAFETY: atomic_u64_at returned an in-bounds, 8-aligned pointer;
+        // AtomicU64 loads are valid on any such location.
         Ok(u64::from_le(unsafe { (*a).load(Ordering::Acquire) }))
     }
 
@@ -225,6 +238,8 @@ impl LocalMemorySlot {
     /// ordering (see [`Self::read_u64_acquire`]).
     pub fn write_u64_release(&self, offset: usize, v: u64) -> Result<()> {
         let a = self.atomic_u64_at(offset)?;
+        // SAFETY: in-bounds, 8-aligned pointer (see read_u64_acquire);
+        // the store-side of the doorbell pair.
         unsafe { (*a).store(v.to_le(), Ordering::Release) };
         Ok(())
     }

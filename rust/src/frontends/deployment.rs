@@ -24,9 +24,10 @@
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::core::communication::CommunicationManager;
+use crate::util::witness::{classes, Lock};
 use crate::core::error::{HicrError, Result};
 use crate::core::instance::{ensure_world, InstanceManager, InstanceTemplate};
 use crate::core::memory::LocalMemorySlot;
@@ -80,7 +81,7 @@ pub struct WorkerLost {
 /// the deployment's shared lost set, which the shutdown paths consult.
 pub struct Supervisor {
     seen: HashSet<u32>,
-    lost: Arc<Mutex<HashSet<u32>>>,
+    lost: Arc<Lock<HashSet<u32>>>,
 }
 
 impl Supervisor {
@@ -93,7 +94,7 @@ impl Supervisor {
         let mut events = Vec::new();
         for rank in im.departed_instances()? {
             if self.seen.insert(rank) {
-                self.lost.lock().unwrap().insert(rank);
+                self.lost.lock().insert(rank);
                 events.push(WorkerLost { rank });
             }
         }
@@ -115,7 +116,7 @@ pub struct Deployment {
     /// Members known to have departed abnormally (fed by [`Supervisor`]
     /// polls and [`Deployment::note_worker_lost`]); the shutdown paths
     /// skip these instead of timing out against dead peers.
-    lost: Arc<Mutex<HashSet<u32>>>,
+    lost: Arc<Lock<HashSet<u32>>>,
 }
 
 /// Deploy this instance into a world of (at least) `desired` instances:
@@ -185,7 +186,7 @@ pub fn deploy(
         ranks,
         mesh,
         shutdown,
-        lost: Arc::new(Mutex::new(HashSet::new())),
+        lost: Arc::new(Lock::new(&classes::DEPLOYMENT_LOST, HashSet::new())),
     })
 }
 
@@ -226,13 +227,13 @@ impl Deployment {
     /// calls fail fast with [`HicrError::PeerLost`] instead of timing
     /// out — and excludes it from the shutdown paths. Idempotent.
     pub fn note_worker_lost(&mut self, rank: u32) {
-        self.lost.lock().unwrap().insert(rank);
+        self.lost.lock().insert(rank);
         self.mesh.mark_peer_lost(rank);
     }
 
     /// Sorted ranks known to have departed abnormally.
     pub fn lost_ranks(&self) -> Vec<u32> {
-        let mut v: Vec<u32> = self.lost.lock().unwrap().iter().copied().collect();
+        let mut v: Vec<u32> = self.lost.lock().iter().copied().collect();
         v.sort_unstable();
         v
     }
@@ -274,7 +275,7 @@ impl Deployment {
     pub fn shutdown_workers(&mut self) -> Result<()> {
         let mut first_err = None;
         for rank in self.workers() {
-            if self.lost.lock().unwrap().contains(&rank) {
+            if self.lost.lock().contains(&rank) {
                 continue;
             }
             let attempt = self
@@ -300,7 +301,7 @@ impl Deployment {
         let RpcMesh {
             server, clients, ..
         } = &mut self.mesh;
-        let lost = self.lost.lock().unwrap().clone();
+        let lost = self.lost.lock().clone();
         let workers: Vec<u32> = self
             .ranks
             .iter()

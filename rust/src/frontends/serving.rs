@@ -282,6 +282,7 @@ impl ElasticController {
     /// (scale-out events, scale-in events) so far.
     pub fn scale_events(&self) -> (u64, u64) {
         (
+            // relaxed-ok: telemetry counter; no data is published through this atomic
             self.scale_out_events.load(Ordering::Relaxed),
             self.scale_in_events.load(Ordering::Relaxed),
         )
@@ -291,12 +292,14 @@ impl ElasticController {
     /// rescale step. Lock-free and allocation-free — safe on the router
     /// hot path.
     pub fn observe(&self, slot: usize, in_flight: usize) {
+        // relaxed-ok: load hint for scale decisions; staleness is tolerated by design
         self.depths[slot].store(in_flight, Ordering::Relaxed);
         let agg: usize = self.depths.iter().map(|d| d.load(Ordering::Relaxed)).sum();
         let a = self.active.load(Ordering::Acquire);
         if agg > self.high * a && a < self.total {
             if self
                 .active
+                // relaxed-ok: CAS failure ordering; on failure the loop re-reads, success uses AcqRel
                 .compare_exchange(a, a + 1, Ordering::AcqRel, Ordering::Relaxed)
                 .is_ok()
             {
@@ -305,6 +308,7 @@ impl ElasticController {
         } else if a > self.min_active && agg <= self.low * (a - 1) {
             if self
                 .active
+                // relaxed-ok: CAS failure ordering; on failure the loop re-reads, success uses AcqRel
                 .compare_exchange(a, a - 1, Ordering::AcqRel, Ordering::Relaxed)
                 .is_ok()
             {

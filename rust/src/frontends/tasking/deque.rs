@@ -14,8 +14,10 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::Condvar;
 use std::time::Duration;
+
+use crate::util::witness::{classes, Lock};
 
 /// A per-worker double-ended work queue.
 ///
@@ -27,14 +29,14 @@ use std::time::Duration;
 /// push (see the parking protocol note in DESIGN.md §5).
 pub(super) struct WorkDeque<T> {
     len: AtomicUsize,
-    items: Mutex<VecDeque<T>>,
+    items: Lock<VecDeque<T>>,
 }
 
 impl<T> WorkDeque<T> {
     pub(super) fn new() -> Self {
         Self {
             len: AtomicUsize::new(0),
-            items: Mutex::new(VecDeque::new()),
+            items: Lock::new(&classes::TASKING_DEQUE, VecDeque::new()),
         }
     }
 
@@ -45,7 +47,7 @@ impl<T> WorkDeque<T> {
 
     /// Owner-side push at the bottom.
     pub(super) fn push_bottom(&self, item: T) {
-        let mut q = self.items.lock().unwrap();
+        let mut q = self.items.lock();
         q.push_back(item);
         self.len.store(q.len(), Ordering::SeqCst);
     }
@@ -55,7 +57,7 @@ impl<T> WorkDeque<T> {
         if self.len() == 0 {
             return None;
         }
-        let mut q = self.items.lock().unwrap();
+        let mut q = self.items.lock();
         let item = q.pop_back();
         self.len.store(q.len(), Ordering::SeqCst);
         item
@@ -68,7 +70,7 @@ impl<T> WorkDeque<T> {
         if self.len() == 0 {
             return None;
         }
-        let mut q = self.items.lock().unwrap();
+        let mut q = self.items.lock();
         let item = q.pop_front();
         self.len.store(q.len(), Ordering::SeqCst);
         item
@@ -83,7 +85,7 @@ impl<T> WorkDeque<T> {
 pub(super) struct Injector<T> {
     len: AtomicUsize,
     locks: AtomicU64,
-    items: Mutex<VecDeque<T>>,
+    items: Lock<VecDeque<T>>,
 }
 
 impl<T> Injector<T> {
@@ -91,7 +93,7 @@ impl<T> Injector<T> {
         Self {
             len: AtomicUsize::new(0),
             locks: AtomicU64::new(0),
-            items: Mutex::new(VecDeque::new()),
+            items: Lock::new(&classes::TASKING_INJECTOR, VecDeque::new()),
         }
     }
 
@@ -102,12 +104,14 @@ impl<T> Injector<T> {
 
     /// Total mutex acquisitions so far (push + non-empty pop).
     pub(super) fn lock_count(&self) -> u64 {
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         self.locks.load(Ordering::Relaxed)
     }
 
     pub(super) fn push(&self, item: T) {
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         self.locks.fetch_add(1, Ordering::Relaxed);
-        let mut q = self.items.lock().unwrap();
+        let mut q = self.items.lock();
         q.push_back(item);
         self.len.store(q.len(), Ordering::SeqCst);
     }
@@ -118,8 +122,9 @@ impl<T> Injector<T> {
         if self.len() == 0 {
             return None;
         }
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         self.locks.fetch_add(1, Ordering::Relaxed);
-        let mut q = self.items.lock().unwrap();
+        let mut q = self.items.lock();
         let item = q.pop_front();
         self.len.store(q.len(), Ordering::SeqCst);
         item
@@ -134,7 +139,7 @@ impl<T> Injector<T> {
 /// milliseconds) as a belt-and-braces bound: a theoretically missed wake
 /// degrades to one re-scan of the queues, never to a hang.
 pub(super) struct Parker {
-    permit: Mutex<bool>,
+    permit: Lock<bool>,
     cv: Condvar,
 }
 
@@ -147,7 +152,7 @@ const PARK_TIMEOUT: Duration = Duration::from_millis(50);
 impl Parker {
     pub(super) fn new() -> Self {
         Self {
-            permit: Mutex::new(false),
+            permit: Lock::new(&classes::TASKING_PARKER, false),
             cv: Condvar::new(),
         }
     }
@@ -155,12 +160,9 @@ impl Parker {
     /// Block until unparked (or the safety timeout elapses), consuming
     /// the permit if one is present.
     pub(super) fn park(&self) {
-        let mut permit = self.permit.lock().unwrap();
+        let mut permit = self.permit.lock();
         if !*permit {
-            let (guard, _timeout) = self
-                .cv
-                .wait_timeout(permit, PARK_TIMEOUT)
-                .unwrap();
+            let (guard, _timeout) = permit.wait_timeout(&self.cv, PARK_TIMEOUT);
             permit = guard;
         }
         *permit = false;
@@ -168,7 +170,7 @@ impl Parker {
 
     /// Store a permit and wake the parked worker, if any.
     pub(super) fn unpark(&self) {
-        let mut permit = self.permit.lock().unwrap();
+        let mut permit = self.permit.lock();
         *permit = true;
         self.cv.notify_one();
     }
@@ -250,7 +252,8 @@ mod tests {
         // 1 owner pushing, 3 thieves stealing: every item surfaces
         // exactly once across pop/steal.
         let d = Arc::new(WorkDeque::new());
-        let total = 10_000u64;
+        // Miri runs the same interleaving logic at a tractable size.
+        let total: u64 = if cfg!(miri) { 300 } else { 10_000 };
         let seen = Arc::new(AtomicU64::new(0));
         let mut handles = Vec::new();
         for _ in 0..3 {

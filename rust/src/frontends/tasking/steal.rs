@@ -53,13 +53,14 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::core::error::{HicrError, Result};
 use crate::frontends::dataobject::{PayloadStore, FN_FETCH};
 use crate::frontends::rpc::{fn_id, RpcMesh, RpcServer};
 use crate::frontends::tasking::{SchedStats, TaskSystem};
 use crate::util::backoff::Backoff;
+use crate::util::witness::{classes, Lock};
 
 /// Steal RPC: hand the caller up to half of the victim's remote-ready
 /// lane. Request `[u32 max_tasks][u32 thief]`; response `[u32 count]`
@@ -336,32 +337,32 @@ struct Shared {
     /// The remote-ready lane: descriptor tasks runnable here or
     /// stealable by peers. Owner side dispatches newest-first (back),
     /// thieves take oldest-first (front) — the deque discipline.
-    lane: Mutex<VecDeque<DescTask>>,
+    lane: Lock<VecDeque<DescTask>>,
     /// Lock-free mirror of `lane.len()` for the drive loop's idle check.
     lane_len: AtomicUsize,
     /// Parked lazy payloads served point-to-point via `FN_FETCH`.
     store: PayloadStore,
     /// `fn_id → (name, handler)` — the pre-registered task bodies.
-    handlers: Mutex<HashMap<u64, (String, StealHandler)>>,
+    handlers: Lock<HashMap<u64, (String, StealHandler)>>,
     /// Tasks *this* instance originated: retained args + result slot.
     /// Doubles as the lost/duplicated-task detector.
-    outstanding: Mutex<HashMap<u64, Retained>>,
+    outstanding: Lock<HashMap<u64, Retained>>,
     /// Originated tasks not yet completed.
     pending: AtomicUsize,
     /// Finished-here results awaiting delivery to their origins.
-    completions: Mutex<VecDeque<Completion>>,
+    completions: Lock<VecDeque<Completion>>,
     /// Descriptor tasks currently inside the local [`TaskSystem`].
     inflight: AtomicUsize,
     next_seq: AtomicU64,
     /// Tasks completed per executor rank (origin-side attribution).
-    completed_by: Mutex<HashMap<u32, u64>>,
+    completed_by: Lock<HashMap<u32, u64>>,
     /// Victim-side crash ledger: thief rank → descriptors handed out and
     /// not yet seen completed. [`Shared::note_peer_lost`] drains a dead
     /// thief's entry back onto the lane.
-    handed: Mutex<HashMap<u32, HashMap<u64, DescTask>>>,
+    handed: Lock<HashMap<u32, HashMap<u64, DescTask>>>,
     /// Peers supervision has declared dead: never stolen from, never
     /// handed work, their queued completions dropped.
-    dead: Mutex<HashSet<u32>>,
+    dead: Lock<HashSet<u32>>,
     // Remote-steal telemetry (SchedStats growth).
     attempts: AtomicU64,
     successes: AtomicU64,
@@ -384,10 +385,10 @@ impl Shared {
     /// thief already declared dead (a zombie whose request was in flight
     /// when supervision caught up) gets an empty batch.
     fn take_batch(&self, max_tasks: usize, thief: u32, budget: usize) -> Result<Vec<u8>> {
-        if self.dead.lock().unwrap().contains(&thief) {
+        if self.dead.lock().contains(&thief) {
             return Ok(vec![0u8; 4]);
         }
-        let mut lane = self.lane.lock().unwrap();
+        let mut lane = self.lane.lock();
         let want = lane.len().div_ceil(2).min(max_tasks);
         let mut out = vec![0u8; 4];
         let mut taken = 0u32;
@@ -419,15 +420,16 @@ impl Shared {
             // Count lazy bytes on the victim side, when the task is
             // actually handed out: these are the bytes the steal response
             // deferred, which the thief will pull at dispatch time.
+            // relaxed-ok: telemetry counter; no data is published through this atomic
             self.lazy_bytes.fetch_add(parked, Ordering::Relaxed);
             self.handed
                 .lock()
-                .unwrap()
                 .entry(thief)
                 .or_default()
                 .insert(t.id, t);
             taken += 1;
         }
+        // relaxed-ok: advisory mirror of lane.len(); the authoritative length is read under the lane lock
         self.lane_len.store(lane.len(), Ordering::Relaxed);
         drop(lane);
         self.migrated_out.fetch_add(taken as u64, Ordering::Relaxed);
@@ -448,10 +450,11 @@ impl Shared {
             self.respawn_from_retained(id);
             return;
         }
-        let mut out = self.outstanding.lock().unwrap();
+        let mut out = self.outstanding.lock();
         match out.get_mut(&id) {
             None | Some(Retained { outcome: Some(_), .. }) => {
                 drop(out);
+                // relaxed-ok: telemetry counter; no data is published through this atomic
                 self.discarded.fetch_add(1, Ordering::Relaxed);
             }
             Some(r) => {
@@ -461,12 +464,11 @@ impl Shared {
                 *self
                     .completed_by
                     .lock()
-                    .unwrap()
                     .entry(executor)
                     .or_insert(0) += 1;
                 // The task is done: drop it from every crash ledger so a
                 // later peer loss cannot re-enqueue it.
-                let mut handed = self.handed.lock().unwrap();
+                let mut handed = self.handed.lock();
                 for ledger in handed.values_mut() {
                     ledger.remove(&id);
                 }
@@ -480,7 +482,7 @@ impl Shared {
     /// loss report raced a zombie's result — is discarded instead.
     fn respawn_from_retained(&self, id: u64) {
         let rebuilt = {
-            let out = self.outstanding.lock().unwrap();
+            let out = self.outstanding.lock();
             match out.get(&id) {
                 Some(Retained { outcome: None, fn_id, args }) => Some(DescTask {
                     id,
@@ -494,10 +496,12 @@ impl Shared {
         };
         match rebuilt {
             Some(t) => {
+                // relaxed-ok: telemetry counter; no data is published through this atomic
                 self.recovered.fetch_add(1, Ordering::Relaxed);
                 self.push_lane_back(vec![t]);
             }
             None => {
+                // relaxed-ok: telemetry counter; no data is published through this atomic
                 self.discarded.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -519,13 +523,12 @@ impl Shared {
     /// forward unchanged; if the owner has also lost the bytes the fetch
     /// at dispatch time degrades into the same [`PAYLOAD_LOST`] report.
     fn note_peer_lost(&self, rank: u32) -> u64 {
-        if !self.dead.lock().unwrap().insert(rank) {
+        if !self.dead.lock().insert(rank) {
             return 0;
         }
         let ledger = self
             .handed
             .lock()
-            .unwrap()
             .remove(&rank)
             .unwrap_or_default();
         let mut requeue = Vec::new();
@@ -539,7 +542,7 @@ impl Shared {
                     } else if t.origin == self.me {
                         self.respawn_from_retained(t.id);
                     } else {
-                        self.completions.lock().unwrap().push_back(Completion {
+                        self.completions.lock().push_back(Completion {
                             id: t.id,
                             origin: t.origin,
                             executor: self.me,
@@ -556,14 +559,16 @@ impl Shared {
             }
         }
         let n = requeue.len() as u64;
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         self.recovered.fetch_add(n, Ordering::Relaxed);
         self.push_lane_back(requeue);
         n
     }
 
     fn push_lane_back(&self, tasks: Vec<DescTask>) {
-        let mut lane = self.lane.lock().unwrap();
+        let mut lane = self.lane.lock();
         lane.extend(tasks);
+        // relaxed-ok: advisory mirror of lane.len(); the authoritative length is read under the lane lock
         self.lane_len.store(lane.len(), Ordering::Relaxed);
     }
 }
@@ -598,18 +603,18 @@ impl StealPool {
             shared: Arc::new(Shared {
                 me: topo.me,
                 lazy_threshold: config.lazy_threshold,
-                lane: Mutex::new(VecDeque::new()),
+                lane: Lock::new(&classes::STEAL_LANE, VecDeque::new()),
                 lane_len: AtomicUsize::new(0),
                 store: PayloadStore::new(),
-                handlers: Mutex::new(HashMap::new()),
-                outstanding: Mutex::new(HashMap::new()),
+                handlers: Lock::new(&classes::STEAL_HANDLERS, HashMap::new()),
+                outstanding: Lock::new(&classes::STEAL_OUTSTANDING, HashMap::new()),
                 pending: AtomicUsize::new(0),
-                completions: Mutex::new(VecDeque::new()),
+                completions: Lock::new(&classes::STEAL_COMPLETIONS, VecDeque::new()),
                 inflight: AtomicUsize::new(0),
                 next_seq: AtomicU64::new(0),
-                completed_by: Mutex::new(HashMap::new()),
-                handed: Mutex::new(HashMap::new()),
-                dead: Mutex::new(HashSet::new()),
+                completed_by: Lock::new(&classes::STEAL_COMPLETED_BY, HashMap::new()),
+                handed: Lock::new(&classes::STEAL_HANDED, HashMap::new()),
+                dead: Lock::new(&classes::STEAL_DEAD, HashSet::new()),
                 attempts: AtomicU64::new(0),
                 successes: AtomicU64::new(0),
                 migrated_in: AtomicU64::new(0),
@@ -634,7 +639,7 @@ impl StealPool {
         f: impl Fn(&[u8]) -> Result<Vec<u8>> + Send + Sync + 'static,
     ) -> Result<()> {
         let id = fn_id(name);
-        let mut handlers = self.shared.handlers.lock().unwrap();
+        let mut handlers = self.shared.handlers.lock();
         if let Some((existing, _)) = handlers.get(&id) {
             return Err(HicrError::Rejected(if existing == name {
                 format!("steal task '{name}' already registered")
@@ -682,16 +687,17 @@ impl StealPool {
     /// [`StealPool::take_result`] after driving.
     pub fn spawn(&self, name: &str, args: Vec<u8>) -> Result<u64> {
         let fid = fn_id(name);
-        if !self.shared.handlers.lock().unwrap().contains_key(&fid) {
+        if !self.shared.handlers.lock().contains_key(&fid) {
             return Err(HicrError::Rejected(format!(
                 "steal task '{name}' spawned before registration"
             )));
         }
+        // relaxed-ok: unique-id allocation; only atomicity matters, no payload is published
         let seq = self.shared.next_seq.fetch_add(1, Ordering::Relaxed);
         let id = (self.shared.me as u64) << 32 | seq;
         // Retain the args until the completion lands: the raw material
         // for re-spawning if every in-flight copy dies (DESIGN.md §9).
-        self.shared.outstanding.lock().unwrap().insert(
+        self.shared.outstanding.lock().insert(
             id,
             Retained {
                 fn_id: fid,
@@ -730,11 +736,13 @@ impl StealPool {
     /// replays and [`PAYLOAD_LOST`] re-spawns) — the `recovered=` figure
     /// the taskfarm summary reports.
     pub fn recovered(&self) -> u64 {
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         self.shared.recovered.load(Ordering::Relaxed)
     }
 
     /// Descriptor tasks currently queued on the remote-ready lane.
     pub fn lane_len(&self) -> usize {
+        // relaxed-ok: advisory mirror of lane.len(); the authoritative length is read under the lane lock
         self.shared.lane_len.load(Ordering::Relaxed)
     }
 
@@ -742,7 +750,7 @@ impl StealPool {
     /// still running (or for an unknown/already-taken id); a task whose
     /// body failed surfaces its error.
     pub fn take_result(&self, id: u64) -> Result<Option<Vec<u8>>> {
-        let mut out = self.shared.outstanding.lock().unwrap();
+        let mut out = self.shared.outstanding.lock();
         match out.get(&id) {
             None | Some(Retained { outcome: None, .. }) => Ok(None),
             Some(Retained { outcome: Some(_), .. }) => {
@@ -764,7 +772,6 @@ impl StealPool {
             .shared
             .completed_by
             .lock()
-            .unwrap()
             .iter()
             .map(|(&r, &c)| (r, c))
             .collect();
@@ -777,10 +784,12 @@ impl StealPool {
     pub fn sched_stats(&self) -> SchedStats {
         let s = &self.shared;
         SchedStats {
+            // relaxed-ok: telemetry counter; no data is published through this atomic
             remote_steal_attempts: s.attempts.load(Ordering::Relaxed),
             remote_steals: s.successes.load(Ordering::Relaxed),
             tasks_migrated_in: s.migrated_in.load(Ordering::Relaxed),
             tasks_migrated_out: s.migrated_out.load(Ordering::Relaxed),
+            // relaxed-ok: telemetry counter; no data is published through this atomic
             lazy_payload_bytes: s.lazy_bytes.load(Ordering::Relaxed),
             tasks_recovered: s.recovered.load(Ordering::Relaxed),
             completions_discarded: s.discarded.load(Ordering::Relaxed),
@@ -820,6 +829,7 @@ impl StealPool {
             }
             // Escalation: local lane and in-flight set empty — try the
             // victims in topology order before parking.
+            // relaxed-ok: advisory mirror of lane.len(); the authoritative length is read under the lane lock
             if self.shared.lane_len.load(Ordering::Relaxed) == 0
                 && self.shared.inflight.load(Ordering::Acquire) == 0
                 && !self.victims.is_empty()
@@ -845,9 +855,10 @@ impl StealPool {
     /// feeds [`StealPool::note_peer_lost`].
     pub fn drained(&self) -> bool {
         self.shared.pending.load(Ordering::Acquire) == 0
+            // relaxed-ok: advisory mirror of lane.len(); the authoritative length is read under the lane lock
             && self.shared.lane_len.load(Ordering::Relaxed) == 0
             && self.shared.inflight.load(Ordering::Acquire) == 0
-            && self.shared.completions.lock().unwrap().is_empty()
+            && self.shared.completions.lock().is_empty()
     }
 
     /// Drive until every task this instance originated has completed
@@ -873,11 +884,12 @@ impl StealPool {
         loop {
             // Popped in its own statement so the lane lock never spans
             // the pumped delivery call below.
-            let next = self.shared.completions.lock().unwrap().pop_front();
+            let next = self.shared.completions.lock().pop_front();
             let Some(c) = next else { break };
             if c.origin == self.shared.me {
                 self.shared.fulfill(c.id, c.executor, c.outcome);
-            } else if self.shared.dead.lock().unwrap().contains(&c.origin) {
+            } else if self.shared.dead.lock().contains(&c.origin) {
+                // relaxed-ok: telemetry counter; no data is published through this atomic
                 self.shared.discarded.fetch_add(1, Ordering::Relaxed);
             } else {
                 let payload = encode_complete(&c);
@@ -900,7 +912,7 @@ impl StealPool {
                         // In doubt: requeue and stop flushing this round.
                         // If the origin really is dead, supervision will
                         // mark it and the retry drops the result instead.
-                        self.shared.completions.lock().unwrap().push_back(c);
+                        self.shared.completions.lock().push_back(c);
                         break;
                     }
                     Err(e) => return Err(e),
@@ -922,8 +934,9 @@ impl StealPool {
         let mut progress = false;
         while self.shared.inflight.load(Ordering::Acquire) < self.max_inflight {
             let task = {
-                let mut lane = self.shared.lane.lock().unwrap();
+                let mut lane = self.shared.lane.lock();
                 let t = lane.pop_back();
+                // relaxed-ok: advisory mirror of lane.len(); the authoritative length is read under the lane lock
                 self.shared.lane_len.store(lane.len(), Ordering::Relaxed);
                 t
             };
@@ -938,7 +951,7 @@ impl StealPool {
                                 t.id
                             ))
                         })
-                    } else if self.shared.dead.lock().unwrap().contains(&t.owner) {
+                    } else if self.shared.dead.lock().contains(&t.owner) {
                         Err(HicrError::PeerLost(format!(
                             "payload owner {} of task {:#x} is dead",
                             t.owner, t.id
@@ -976,7 +989,7 @@ impl StealPool {
                         // from here: report it home so the origin
                         // re-spawns the task from its retained args.
                         Err(e) if t.owner != self.shared.me => {
-                            self.shared.completions.lock().unwrap().push_back(
+                            self.shared.completions.lock().push_back(
                                 Completion {
                                     id: t.id,
                                     origin: t.origin,
@@ -996,7 +1009,7 @@ impl StealPool {
                 }
             };
             let handler = {
-                let handlers = self.shared.handlers.lock().unwrap();
+                let handlers = self.shared.handlers.lock();
                 let (_, h) = handlers.get(&t.fn_id).ok_or_else(|| {
                     HicrError::Rejected(format!(
                         "stolen task {:#x} references unregistered fn \
@@ -1011,7 +1024,7 @@ impl StealPool {
             self.shared.inflight.fetch_add(1, Ordering::AcqRel);
             self.sys.submit("steal-task", move |_| {
                 let outcome = handler(&args).map_err(|e| e.to_string());
-                shared.completions.lock().unwrap().push_back(Completion {
+                shared.completions.lock().push_back(Completion {
                     id,
                     origin,
                     executor: shared.me,
@@ -1040,9 +1053,10 @@ impl StealPool {
         req[0..4].copy_from_slice(&self.max_batch.to_le_bytes());
         req[4..8].copy_from_slice(&self.shared.me.to_le_bytes());
         for &victim in &self.victims {
-            if self.shared.dead.lock().unwrap().contains(&victim) {
+            if self.shared.dead.lock().contains(&victim) {
                 continue;
             }
+            // relaxed-ok: telemetry counter; no data is published through this atomic
             self.shared.attempts.fetch_add(1, Ordering::Relaxed);
             let client = clients.get_mut(&victim).ok_or_else(|| {
                 HicrError::Rejected(format!("no RPC link to victim {victim}"))
@@ -1060,6 +1074,7 @@ impl StealPool {
             };
             let tasks = decode_tasks(&resp)?;
             if !tasks.is_empty() {
+                // relaxed-ok: telemetry counter; no data is published through this atomic
                 self.shared.successes.fetch_add(1, Ordering::Relaxed);
                 self.shared
                     .migrated_in
@@ -1273,7 +1288,7 @@ mod tests {
         let empty = pool.shared.take_batch(16, 1, 32 * 1024).unwrap();
         assert!(decode_tasks(&empty).unwrap().is_empty());
         // The requeued lazy task is inline again, payload intact.
-        let lane = pool.shared.lane.lock().unwrap();
+        let lane = pool.shared.lane.lock();
         assert!(lane
             .iter()
             .any(|t| t.payload == TaskPayload::Inline(vec![9u8; 32])));
@@ -1305,7 +1320,7 @@ mod tests {
         // The thief fetches the payload… then dies.
         assert_eq!(pool.shared.store.take(id).unwrap(), vec![5u8; 64]);
         pool.note_peer_lost(1);
-        let lane = pool.shared.lane.lock().unwrap();
+        let lane = pool.shared.lane.lock();
         assert!(lane
             .iter()
             .any(|t| t.id == id && t.payload == TaskPayload::Inline(vec![5u8; 64])));

@@ -54,7 +54,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 
 use crate::core::compute::{
     ComputeManager, ExecStatus, ExecutionState, ExecutionUnit, FnExecutionUnit,
@@ -66,6 +66,7 @@ use crate::core::topology::{ComputeResource, Topology};
 use crate::frontends::tasking::deque::{Injector, Parker, SchedCounters, WorkDeque};
 use crate::frontends::tasking::trace::{EventKind, Trace};
 use crate::util::backoff::Backoff;
+use crate::util::witness::{classes, Lock};
 
 /// Which scheduling engine drives the tasks — derived from the compute
 /// manager's capabilities, not chosen by the caller.
@@ -184,11 +185,11 @@ struct TaskNode {
     id: u64,
     label: String,
     parent: Option<Arc<TaskNode>>,
-    sync: Mutex<TaskSync>,
+    sync: Lock<TaskSync>,
     /// Blocking engine: parents block here awaiting children.
     cv: Condvar,
     /// Completion broadcast for `spawn_after` dependents.
-    dep: Mutex<DepState>,
+    dep: Lock<DepState>,
     /// Worker this task last executed on: the push target for its spawns
     /// (kept fresh across steals/resumes by the executing worker).
     home: AtomicUsize,
@@ -205,7 +206,7 @@ struct TaskNode {
 /// exactly once.
 struct Pending {
     remaining: AtomicUsize,
-    slot: Mutex<Option<(TaskBody, Arc<TaskNode>)>>,
+    slot: Lock<Option<(TaskBody, Arc<TaskNode>)>>,
 }
 
 /// A task bound to a suspendable execution state (parking engine).
@@ -235,7 +236,7 @@ impl TaskHandle {
     /// True once the task has run to completion (its dependents have been
     /// released).
     pub fn is_finished(&self) -> bool {
-        self.node.dep.lock().unwrap().finished
+        self.node.dep.lock().finished
     }
 }
 
@@ -269,7 +270,7 @@ struct Sched {
     policy: SchedPolicy,
     counters: SchedCounters,
     pin_workers: bool,
-    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    handles: Lock<Vec<std::thread::JoinHandle<()>>>,
 }
 
 struct Inner {
@@ -278,16 +279,16 @@ struct Inner {
     trace: Arc<Trace>,
     next_task_id: AtomicU64,
     outstanding: AtomicUsize,
-    done_mx: Mutex<()>,
+    done_mx: Lock<()>,
     done_cv: Condvar,
     tasks_executed: AtomicU64,
     /// First task the backend rejected (wrong unit format, terminated
     /// unit) or that panicked: surfaced as the error of the enclosing
     /// `run()` so a mis-selected backend fails loudly instead of
     /// reporting wrong results.
-    first_error: Mutex<Option<HicrError>>,
+    first_error: Lock<Option<HicrError>>,
     sched: Sched,
-    keys: Mutex<HashMap<u64, KeyState>>,
+    keys: Lock<HashMap<u64, KeyState>>,
 }
 
 /// One-shot gate the blocking engine's worker waits on per started task:
@@ -295,7 +296,7 @@ struct Inner {
 /// and retires the task's processing unit) or with `Done` when the body
 /// returns. Only the first fire counts.
 struct StartGate {
-    state: Mutex<Option<GateEvent>>,
+    state: Lock<Option<GateEvent>>,
     cv: Condvar,
 }
 
@@ -308,13 +309,13 @@ enum GateEvent {
 impl StartGate {
     fn new() -> Self {
         Self {
-            state: Mutex::new(None),
+            state: Lock::new(&classes::TASKING_START_GATE, None),
             cv: Condvar::new(),
         }
     }
 
     fn fire(&self, ev: GateEvent) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         if s.is_none() {
             *s = Some(ev);
             self.cv.notify_all();
@@ -322,12 +323,12 @@ impl StartGate {
     }
 
     fn wait(&self) -> GateEvent {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         loop {
             if let Some(ev) = *s {
                 return ev;
             }
-            s = self.cv.wait(s).unwrap();
+            s = s.wait(&self.cv);
         }
     }
 }
@@ -467,17 +468,17 @@ impl<'a> TaskCtx<'a> {
             // The +1 sentinel is released after registration, so deps
             // finishing concurrently cannot double-enqueue.
             remaining: AtomicUsize::new(1),
-            slot: Mutex::new(Some((body, node))),
+            slot: Lock::new(&classes::TASKING_PENDING_SLOT, Some((body, node))),
         });
         for dep in deps {
-            let mut d = dep.node.dep.lock().unwrap();
+            let mut d = dep.node.dep.lock();
             if !d.finished {
                 pending.remaining.fetch_add(1, Ordering::AcqRel);
                 d.waiters.push(Arc::clone(&pending));
             }
         }
         if !consumes.is_empty() {
-            let mut keys = self.inner.keys.lock().unwrap();
+            let mut keys = self.inner.keys.lock();
             for &key in consumes {
                 match keys.entry(key).or_insert_with(|| KeyState::Waiting(Vec::new())) {
                     KeyState::Produced => {}
@@ -499,7 +500,7 @@ impl<'a> TaskCtx<'a> {
                 // Park the state; child completion re-enqueues us.
                 loop {
                     {
-                        let mut sync = self.node.sync.lock().unwrap();
+                        let mut sync = self.node.sync.lock();
                         if sync.pending_children == 0 {
                             return;
                         }
@@ -512,7 +513,7 @@ impl<'a> TaskCtx<'a> {
             }
             EngineKind::Blocking => {
                 {
-                    let sync = self.node.sync.lock().unwrap();
+                    let sync = self.node.sync.lock();
                     if sync.pending_children == 0 {
                         return;
                     }
@@ -525,9 +526,9 @@ impl<'a> TaskCtx<'a> {
                         gate.fire(GateEvent::Blocked);
                     }
                 }
-                let mut sync = self.node.sync.lock().unwrap();
+                let mut sync = self.node.sync.lock();
                 while sync.pending_children > 0 {
-                    sync = self.node.cv.wait(sync).unwrap();
+                    sync = sync.wait(&self.node.cv);
                 }
             }
         }
@@ -535,6 +536,7 @@ impl<'a> TaskCtx<'a> {
 
     /// The worker this task last executed on (its spawn push target).
     fn home(&self) -> Option<usize> {
+        // relaxed-ok: worker-affinity hint; a stale value only degrades victim choice
         let h = self.node.home.load(Ordering::Relaxed);
         (h != usize::MAX).then_some(h)
     }
@@ -627,10 +629,10 @@ impl TaskSystem {
             trace,
             next_task_id: AtomicU64::new(1),
             outstanding: AtomicUsize::new(0),
-            done_mx: Mutex::new(()),
+            done_mx: Lock::new(&classes::TASKING_DONE, ()),
             done_cv: Condvar::new(),
             tasks_executed: AtomicU64::new(0),
-            first_error: Mutex::new(None),
+            first_error: Lock::new(&classes::TASKING_FIRST_ERROR, None),
             sched: Sched {
                 workers,
                 injector: Injector::new(),
@@ -639,12 +641,12 @@ impl TaskSystem {
                 policy: config.policy,
                 counters: SchedCounters::default(),
                 pin_workers: config.pin_workers,
-                handles: Mutex::new(Vec::new()),
+                handles: Lock::new(&classes::TASKING_HANDLES, Vec::new()),
             },
-            keys: Mutex::new(HashMap::new()),
+            keys: Lock::new(&classes::TASKING_KEYS, HashMap::new()),
         });
         {
-            let mut handles = inner.sched.handles.lock().unwrap();
+            let mut handles = inner.sched.handles.lock();
             for w in 0..n_workers {
                 let inner2 = Arc::clone(&inner);
                 handles.push(
@@ -684,6 +686,7 @@ impl TaskSystem {
 
     /// Tasks executed to completion so far.
     pub fn tasks_executed(&self) -> u64 {
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         self.inner.tasks_executed.load(Ordering::Relaxed)
     }
 
@@ -691,10 +694,12 @@ impl TaskSystem {
     pub fn sched_stats(&self) -> SchedStats {
         let c = &self.inner.sched.counters;
         SchedStats {
+            // relaxed-ok: telemetry counter; no data is published through this atomic
             local_pushes: c.local_pushes.load(Ordering::Relaxed),
             injection_pushes: c.injection_pushes.load(Ordering::Relaxed),
             injection_locks: self.inner.sched.injector.lock_count(),
             steals: c.steals.load(Ordering::Relaxed),
+            // relaxed-ok: telemetry counter; no data is published through this atomic
             steal_failures: c.steal_failures.load(Ordering::Relaxed),
             parks: c.parks.load(Ordering::Relaxed),
             wakes: c.wakes.load(Ordering::Relaxed),
@@ -737,12 +742,12 @@ impl TaskSystem {
     /// Block until every outstanding task (including dep-gated ones) has
     /// completed; surfaces the first backend rejection or task panic.
     pub fn wait_idle(&self) -> Result<()> {
-        let mut guard = self.inner.done_mx.lock().unwrap();
+        let mut guard = self.inner.done_mx.lock();
         while self.inner.outstanding.load(Ordering::Acquire) != 0 {
-            guard = self.inner.done_cv.wait(guard).unwrap();
+            guard = guard.wait(&self.inner.done_cv);
         }
         drop(guard);
-        if let Some(e) = self.inner.first_error.lock().unwrap().take() {
+        if let Some(e) = self.inner.first_error.lock().take() {
             return Err(e);
         }
         Ok(())
@@ -771,7 +776,7 @@ impl TaskSystem {
         for w in &sched.workers {
             w.parker.unpark();
         }
-        let mut handles = sched.handles.lock().unwrap();
+        let mut handles = sched.handles.lock();
         for h in handles.drain(..) {
             h.join()
                 .map_err(|_| HicrError::InvalidState("task worker panicked".into()))?;
@@ -807,21 +812,22 @@ fn create_node(
     produces: Vec<u64>,
 ) -> Arc<TaskNode> {
     if let Some(p) = &parent {
-        p.sync.lock().unwrap().pending_children += 1;
+        p.sync.lock().pending_children += 1;
     }
     inner.outstanding.fetch_add(1, Ordering::AcqRel);
     Arc::new(TaskNode {
+        // relaxed-ok: unique-id allocation; only atomicity matters, no payload is published
         id: inner.next_task_id.fetch_add(1, Ordering::Relaxed),
         label,
         parent,
-        sync: Mutex::new(TaskSync {
+        sync: Lock::new(&classes::TASKING_NODE_SYNC, TaskSync {
             pending_children: 0,
             waiting: false,
             ready_now: false,
             parked: None,
         }),
         cv: Condvar::new(),
-        dep: Mutex::new(DepState {
+        dep: Lock::new(&classes::TASKING_NODE_DEP, DepState {
             finished: false,
             waiters: Vec::new(),
         }),
@@ -839,6 +845,7 @@ fn schedule(inner: &Arc<Inner>, worker: Option<usize>, runnable: Runnable) {
     match (sched.policy, worker) {
         (SchedPolicy::WorkStealing, Some(w)) => {
             sched.workers[w].deque.push_bottom(runnable);
+            // relaxed-ok: telemetry counter; no data is published through this atomic
             sched.counters.local_pushes.fetch_add(1, Ordering::Relaxed);
         }
         _ => {
@@ -846,6 +853,7 @@ fn schedule(inner: &Arc<Inner>, worker: Option<usize>, runnable: Runnable) {
             sched
                 .counters
                 .injection_pushes
+                // relaxed-ok: telemetry counter; no data is published through this atomic
                 .fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -866,6 +874,7 @@ fn wake_one(sched: &Sched) {
             .compare_exchange(true, false, Ordering::SeqCst, Ordering::SeqCst)
             .is_ok()
         {
+            // relaxed-ok: telemetry counter; no data is published through this atomic
             sched.counters.wakes.fetch_add(1, Ordering::Relaxed);
             w.parker.unpark();
             return;
@@ -877,7 +886,7 @@ fn wake_one(sched: &Sched) {
 /// to zero schedules it (near the releasing worker when known).
 fn release_pending(inner: &Arc<Inner>, pending: &Arc<Pending>, worker: Option<usize>) {
     if pending.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-        if let Some((body, node)) = pending.slot.lock().unwrap().take() {
+        if let Some((body, node)) = pending.slot.lock().take() {
             schedule(inner, worker, Runnable::Fresh(body, node));
         }
     }
@@ -887,7 +896,7 @@ fn release_pending(inner: &Arc<Inner>, pending: &Arc<Pending>, worker: Option<us
 /// production is a no-op.
 fn produce_key(inner: &Arc<Inner>, key: u64, worker: Option<usize>) {
     let waiters = {
-        let mut keys = inner.keys.lock().unwrap();
+        let mut keys = inner.keys.lock();
         match keys.insert(key, KeyState::Produced) {
             Some(KeyState::Waiting(v)) => v,
             _ => Vec::new(),
@@ -901,7 +910,7 @@ fn produce_key(inner: &Arc<Inner>, key: u64, worker: Option<usize>) {
 /// Keep only the *first* failure: it is the root cause surfaced by
 /// `run()`; later failures are usually fallout.
 fn record_first_error(inner: &Arc<Inner>, e: HicrError) {
-    let mut first = inner.first_error.lock().unwrap();
+    let mut first = inner.first_error.lock();
     if first.is_none() {
         *first = Some(e);
     }
@@ -922,10 +931,11 @@ fn record_rejection(inner: &Arc<Inner>, node: &TaskNode, e: &HicrError) {
 /// produced keys, and signal quiescence. `worker` is the completing
 /// worker — released work is scheduled near it.
 fn finish_task(inner: &Arc<Inner>, node: &Arc<TaskNode>, worker: Option<usize>) {
+    // relaxed-ok: telemetry counter; no data is published through this atomic
     inner.tasks_executed.fetch_add(1, Ordering::Relaxed);
     if let Some(parent) = &node.parent {
         let to_enqueue = {
-            let mut sync = parent.sync.lock().unwrap();
+            let mut sync = parent.sync.lock();
             sync.pending_children -= 1;
             if sync.pending_children == 0 && sync.waiting {
                 sync.waiting = false;
@@ -948,7 +958,7 @@ fn finish_task(inner: &Arc<Inner>, node: &Arc<TaskNode>, worker: Option<usize>) 
         }
     }
     let waiters = {
-        let mut dep = node.dep.lock().unwrap();
+        let mut dep = node.dep.lock();
         dep.finished = true;
         std::mem::take(&mut dep.waiters)
     };
@@ -959,7 +969,7 @@ fn finish_task(inner: &Arc<Inner>, node: &Arc<TaskNode>, worker: Option<usize>) 
         produce_key(inner, key, worker);
     }
     if inner.outstanding.fetch_sub(1, Ordering::AcqRel) == 1 {
-        let _g = inner.done_mx.lock().unwrap();
+        let _g = inner.done_mx.lock();
         inner.done_cv.notify_all();
     }
 }
@@ -995,6 +1005,7 @@ fn next_runnable(
             }
             match stolen {
                 Some(r) => {
+                    // relaxed-ok: telemetry counter; no data is published through this atomic
                     sched.counters.steals.fetch_add(1, Ordering::Relaxed);
                     return Some(r);
                 }
@@ -1002,6 +1013,7 @@ fn next_runnable(
                     sched
                         .counters
                         .steal_failures
+                        // relaxed-ok: telemetry counter; no data is published through this atomic
                         .fetch_add(1, Ordering::Relaxed);
                 }
             }
@@ -1019,6 +1031,7 @@ fn next_runnable(
             // interval instead of re-running the whole spin/yield
             // escalation
             on_idle();
+            // relaxed-ok: telemetry counter; no data is published through this atomic
             sched.counters.parks.fetch_add(1, Ordering::Relaxed);
             me.parked.store(true, Ordering::SeqCst);
             sched.idle.fetch_add(1, Ordering::SeqCst);
@@ -1082,6 +1095,7 @@ fn blocking_worker_loop(inner: Arc<Inner>, w: usize) {
                 continue;
             }
         };
+        // relaxed-ok: worker-affinity hint; a stale value only degrades victim choice
         node.home.store(w, Ordering::Relaxed);
         // Reap retired units whose (previously blocked) tasks finished
         // (also done in the idle path, so a quiesced system does not
@@ -1104,7 +1118,7 @@ fn blocking_worker_loop(inner: Arc<Inner>, w: usize) {
         let inner2 = Arc::clone(&inner);
         let node2 = Arc::clone(&node);
         let gate2 = Arc::clone(&gate);
-        let body_cell = Mutex::new(Some(body));
+        let body_cell = std::sync::Mutex::new(Some(body));
         let unit = FnExecutionUnit::new(node.label.clone(), move |ctx| {
             let body = body_cell.lock().unwrap().take().expect("body runs once");
             let t0 = inner2.trace.now_ns();
@@ -1126,11 +1140,13 @@ fn blocking_worker_loop(inner: Arc<Inner>, w: usize) {
                 );
             }
             inner2.trace.record(
+                // relaxed-ok: worker-affinity hint; a stale value only degrades victim choice
                 node2.home.load(Ordering::Relaxed),
                 EventKind::Run,
                 &node2.label,
                 t0,
             );
+            // relaxed-ok: worker-affinity hint; a stale value only degrades victim choice
             finish_task(&inner2, &node2, Some(node2.home.load(Ordering::Relaxed)));
             gate2.fire(GateEvent::Done);
         });
@@ -1198,7 +1214,7 @@ fn suspending_worker_loop(inner: Arc<Inner>, w: usize) {
             Runnable::Fresh(body, node) => {
                 let inner2 = Arc::clone(&inner);
                 let node2 = Arc::clone(&node);
-                let body_cell = Mutex::new(Some(body));
+                let body_cell = std::sync::Mutex::new(Some(body));
                 let unit = FnExecutionUnit::new(node.label.clone(), move |ctx| {
                     let body =
                         body_cell.lock().unwrap().take().expect("body runs once");
@@ -1225,6 +1241,7 @@ fn suspending_worker_loop(inner: Arc<Inner>, w: usize) {
                 }
             }
         };
+        // relaxed-ok: worker-affinity hint; a stale value only degrades victim choice
         task.node.home.store(w, Ordering::Relaxed);
         let t0 = inner.trace.now_ns();
         let status = match task.state.resume() {
@@ -1261,7 +1278,7 @@ fn suspending_worker_loop(inner: Arc<Inner>, w: usize) {
                 finish_task(&inner, &task.node, Some(w));
             }
             ExecStatus::Suspended => {
-                let mut sync = task.node.sync.lock().unwrap();
+                let mut sync = task.node.sync.lock();
                 if sync.ready_now {
                     // Children finished before we could park.
                     sync.ready_now = false;
@@ -1287,6 +1304,7 @@ fn suspending_worker_loop(inner: Arc<Inner>, w: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
     use crate::backends::coro::CoroComputeManager;
     use crate::backends::nosv::NosvComputeManager;
     use crate::backends::threads::ThreadsComputeManager;
@@ -1600,6 +1618,7 @@ mod tests {
             for _ in 0..n {
                 let t = Arc::clone(&t);
                 ctx.spawn("leaf", move |_| {
+                    // relaxed-ok: telemetry counter; no data is published through this atomic
                     t.fetch_add(1, Ordering::Relaxed);
                 });
             }
@@ -1608,6 +1627,7 @@ mod tests {
         .unwrap();
         let after = sys.sched_stats();
         sys.shutdown().unwrap();
+        // relaxed-ok: telemetry counter; no data is published through this atomic
         assert_eq!(total.load(Ordering::Relaxed), n);
         assert_eq!(
             after.local_pushes - before.local_pushes,

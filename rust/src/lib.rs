@@ -72,16 +72,22 @@ mod test_alloc {
 
     struct CountingAlloc;
 
+    // SAFETY: pure pass-through to the System allocator; the only extra
+    // work is bumping a const-initialized thread-local Cell, which never
+    // allocates or unwinds, so GlobalAlloc's contract is System's own.
     unsafe impl GlobalAlloc for CountingAlloc {
+        // SAFETY: delegates to System.alloc under the same layout.
         unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
             THREAD_HEAP_ALLOCS.with(|c| c.set(c.get() + 1));
             System.alloc(layout)
         }
 
+        // SAFETY: delegates to System.dealloc under the same layout.
         unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
             System.dealloc(ptr, layout)
         }
 
+        // SAFETY: delegates to System.realloc under the same layout.
         unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
             THREAD_HEAP_ALLOCS.with(|c| c.set(c.get() + 1));
             System.realloc(ptr, layout, new_size)

@@ -8,13 +8,14 @@ use std::os::unix::net::UnixStream;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::Duration;
 
 use crate::core::error::{HicrError, Result};
 use crate::core::ids::{Key, Tag};
 use crate::core::memory::LocalMemorySlot;
 use crate::netsim::wire::Frame;
+use crate::util::witness::{classes, Lock};
 
 /// How long collective/blocking waits poll before declaring deadlock.
 const WAIT_TIMEOUT: Duration = Duration::from_secs(60);
@@ -33,39 +34,39 @@ struct Outstanding {
 
 struct Shared {
     /// (tag, key) -> local slot backing an exchanged window we own.
-    windows: Mutex<HashMap<(u64, u64), LocalMemorySlot>>,
+    windows: Lock<HashMap<(u64, u64), LocalMemorySlot>>,
     /// Exchange results by tag, as delivered by the hub.
-    exchange_results: Mutex<HashMap<u64, Vec<(u64, u32, u64)>>>,
+    exchange_results: Lock<HashMap<u64, Vec<(u64, u32, u64)>>>,
     /// Pending get replies: op_id -> sender.
-    get_waiters: Mutex<HashMap<u64, Sender<Vec<u8>>>>,
+    get_waiters: Lock<HashMap<u64, Sender<Vec<u8>>>>,
     /// Completion flags of tracked puts: op_id -> flag set on PutAck.
-    put_flags: Mutex<HashMap<u64, Arc<AtomicBool>>>,
+    put_flags: Lock<HashMap<u64, Arc<AtomicBool>>>,
     /// Spawn replies.
-    spawn_results: Mutex<Option<Vec<u32>>>,
+    spawn_results: Lock<Option<Vec<u32>>>,
     /// Instance-list replies.
-    instance_lists: Mutex<Option<Vec<u32>>>,
+    instance_lists: Lock<Option<Vec<u32>>>,
     /// Barrier releases seen.
-    barrier_releases: Mutex<Vec<u64>>,
+    barrier_releases: Lock<Vec<u64>>,
     /// Ranks the hub has announced as abnormally departed (crash
     /// supervision signal; duplicates are deduped on insert).
-    departed: Mutex<Vec<u32>>,
-    outstanding: Mutex<Outstanding>,
+    departed: Lock<Vec<u32>>,
+    outstanding: Lock<Outstanding>,
     /// Count of puts applied locally (inbound), per tag — observability.
-    inbound_puts: Mutex<HashMap<u64, u64>>,
+    inbound_puts: Lock<HashMap<u64, u64>>,
     cv: Condvar,
-    cv_mx: Mutex<()>,
+    cv_mx: Lock<()>,
 }
 
 impl Shared {
     fn notify(&self) {
-        let _g = self.cv_mx.lock().unwrap();
+        let _g = self.cv_mx.lock();
         self.cv.notify_all();
     }
 
     /// Wait (with timeout) until `pred` returns Some(v).
     fn wait_until<T>(&self, mut pred: impl FnMut() -> Option<T>) -> Result<T> {
         let deadline = std::time::Instant::now() + WAIT_TIMEOUT;
-        let mut guard = self.cv_mx.lock().unwrap();
+        let mut guard = self.cv_mx.lock();
         loop {
             if let Some(v) = pred() {
                 return Ok(v);
@@ -76,10 +77,7 @@ impl Shared {
                     "timed out waiting for remote completion (possible deadlock)".into(),
                 ));
             }
-            let (g, _timeout) = self
-                .cv
-                .wait_timeout(guard, deadline - now)
-                .unwrap();
+            let (g, _timeout) = guard.wait_timeout(&self.cv, deadline - now);
             guard = g;
         }
     }
@@ -90,7 +88,7 @@ impl Shared {
 #[derive(Clone)]
 pub struct Endpoint {
     rank: u32,
-    writer: Arc<Mutex<UnixStream>>,
+    writer: Arc<Lock<UnixStream>>,
     shared: Arc<Shared>,
     next_op_id: Arc<AtomicU64>,
     next_barrier_epoch: Arc<AtomicU64>,
@@ -102,22 +100,22 @@ impl Endpoint {
         let stream = UnixStream::connect(path)
             .map_err(|e| HicrError::Transport(format!("connect {path:?}: {e}")))?;
         let shared = Arc::new(Shared {
-            windows: Mutex::new(HashMap::new()),
-            exchange_results: Mutex::new(HashMap::new()),
-            get_waiters: Mutex::new(HashMap::new()),
-            put_flags: Mutex::new(HashMap::new()),
-            spawn_results: Mutex::new(None),
-            instance_lists: Mutex::new(None),
-            barrier_releases: Mutex::new(Vec::new()),
-            departed: Mutex::new(Vec::new()),
-            outstanding: Mutex::new(Outstanding::default()),
-            inbound_puts: Mutex::new(HashMap::new()),
+            windows: Lock::new(&classes::ENDPOINT_WINDOWS, HashMap::new()),
+            exchange_results: Lock::new(&classes::ENDPOINT_EXCHANGE_RESULTS, HashMap::new()),
+            get_waiters: Lock::new(&classes::ENDPOINT_GET_WAITERS, HashMap::new()),
+            put_flags: Lock::new(&classes::ENDPOINT_PUT_FLAGS, HashMap::new()),
+            spawn_results: Lock::new(&classes::ENDPOINT_SPAWN_RESULTS, None),
+            instance_lists: Lock::new(&classes::ENDPOINT_INSTANCE_LISTS, None),
+            barrier_releases: Lock::new(&classes::ENDPOINT_BARRIER_RELEASES, Vec::new()),
+            departed: Lock::new(&classes::ENDPOINT_DEPARTED, Vec::new()),
+            outstanding: Lock::new(&classes::ENDPOINT_OUTSTANDING, Outstanding::default()),
+            inbound_puts: Lock::new(&classes::ENDPOINT_INBOUND_PUTS, HashMap::new()),
             cv: Condvar::new(),
-            cv_mx: Mutex::new(()),
+            cv_mx: Lock::new(&classes::ENDPOINT_CV, ()),
         });
         let ep = Endpoint {
             rank,
-            writer: Arc::new(Mutex::new(stream.try_clone().map_err(|e| {
+            writer: Arc::new(Lock::new(&classes::ENDPOINT_WRITER, stream.try_clone().map_err(|e| {
                 HicrError::Transport(format!("clone stream: {e}"))
             })?)),
             shared: Arc::clone(&shared),
@@ -150,7 +148,7 @@ impl Endpoint {
 
     fn send(&self, frame: &Frame) -> Result<()> {
         let bytes = frame.encode();
-        let mut w = self.writer.lock().unwrap();
+        let mut w = self.writer.lock();
         w.write_all(&bytes)
             .map_err(|e| HicrError::Transport(format!("send: {e}")))
     }
@@ -161,7 +159,6 @@ impl Endpoint {
         self.shared
             .windows
             .lock()
-            .unwrap()
             .insert((tag.0, key.0), slot);
     }
 
@@ -182,7 +179,6 @@ impl Endpoint {
             self.shared
                 .exchange_results
                 .lock()
-                .unwrap()
                 .get(&t)
                 .cloned()
         })
@@ -225,14 +221,15 @@ impl Endpoint {
         data: Vec<u8>,
         flag: Option<Arc<AtomicBool>>,
     ) -> Result<u64> {
+        // relaxed-ok: unique-id allocation; only atomicity matters, no payload is published
         let op_id = self.next_op_id.fetch_add(1, Ordering::Relaxed);
         {
-            let mut out = self.shared.outstanding.lock().unwrap();
+            let mut out = self.shared.outstanding.lock();
             *out.puts.entry(tag.0).or_insert(0) += 1;
             out.ops.insert(op_id, (tag.0, dst_rank, false));
         }
         if let Some(flag) = flag {
-            self.shared.put_flags.lock().unwrap().insert(op_id, flag);
+            self.shared.put_flags.lock().insert(op_id, flag);
         }
         self.send(&Frame::Put {
             src: self.rank,
@@ -256,13 +253,13 @@ impl Endpoint {
         offset: usize,
         len: usize,
     ) -> Result<Vec<u8>> {
+        // relaxed-ok: unique-id allocation; only atomicity matters, no payload is published
         let op_id = self.next_op_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx): (Sender<Vec<u8>>, Receiver<Vec<u8>>) = channel();
-        self.shared.get_waiters.lock().unwrap().insert(op_id, tx);
+        self.shared.get_waiters.lock().insert(op_id, tx);
         self.shared
             .outstanding
             .lock()
-            .unwrap()
             .ops
             .insert(op_id, (tag.0, dst_rank, true));
         self.send(&Frame::Get {
@@ -282,7 +279,7 @@ impl Endpoint {
     pub fn fence(&self, tag: Tag) -> Result<()> {
         let shared = Arc::clone(&self.shared);
         shared.wait_until(|| {
-            let out = self.shared.outstanding.lock().unwrap();
+            let out = self.shared.outstanding.lock();
             if out.puts.get(&tag.0).copied().unwrap_or(0) == 0 {
                 Some(())
             } else {
@@ -293,6 +290,7 @@ impl Endpoint {
 
     /// Collective barrier across all registered instances.
     pub fn barrier(&self) -> Result<()> {
+        // relaxed-ok: unique-id allocation; only atomicity matters, no payload is published
         let epoch = self.next_barrier_epoch.fetch_add(1, Ordering::Relaxed);
         self.send(&Frame::Barrier {
             rank: self.rank,
@@ -304,7 +302,6 @@ impl Endpoint {
                 .shared
                 .barrier_releases
                 .lock()
-                .unwrap()
                 .contains(&epoch)
             {
                 Some(())
@@ -320,26 +317,27 @@ impl Endpoint {
     /// only well-defined while no barrier has been performed yet (the
     /// join barrier must be the world's first).
     pub fn barrier_epochs_used(&self) -> u64 {
+        // relaxed-ok: unique-id allocation; only atomicity matters, no payload is published
         self.next_barrier_epoch.load(Ordering::Relaxed) - 1
     }
 
     /// Ask the hub to create new instances at runtime.
     pub fn spawn_instances(&self, count: u32, template_json: &str) -> Result<Vec<u32>> {
-        self.shared.spawn_results.lock().unwrap().take();
+        self.shared.spawn_results.lock().take();
         self.send(&Frame::Spawn {
             count,
             template_json: template_json.to_string(),
         })?;
         let shared = Arc::clone(&self.shared);
-        shared.wait_until(|| self.shared.spawn_results.lock().unwrap().take())
+        shared.wait_until(|| self.shared.spawn_results.lock().take())
     }
 
     /// Query the hub's instance list.
     pub fn list_instances(&self) -> Result<Vec<u32>> {
-        self.shared.instance_lists.lock().unwrap().take();
+        self.shared.instance_lists.lock().take();
         self.send(&Frame::ListInstances { rank: self.rank })?;
         let shared = Arc::clone(&self.shared);
-        shared.wait_until(|| self.shared.instance_lists.lock().unwrap().take())
+        shared.wait_until(|| self.shared.instance_lists.lock().take())
     }
 
     /// Inbound puts applied under `tag` so far (progress polling, e.g. by
@@ -348,7 +346,6 @@ impl Endpoint {
         self.shared
             .inbound_puts
             .lock()
-            .unwrap()
             .get(&tag.0)
             .copied()
             .unwrap_or(0)
@@ -358,7 +355,7 @@ impl Endpoint {
     /// Orderly `Bye` departures are *not* reported — only crashes. The
     /// deployment supervision layer polls this (DESIGN.md §9).
     pub fn departed_ranks(&self) -> Vec<u32> {
-        self.shared.departed.lock().unwrap().clone()
+        self.shared.departed.lock().clone()
     }
 
     /// Orderly departure (idempotent best-effort).
@@ -371,7 +368,7 @@ impl Endpoint {
 fn receive(
     frame: Frame,
     shared: &Arc<Shared>,
-    writer: &Arc<Mutex<UnixStream>>,
+    writer: &Arc<Lock<UnixStream>>,
     _my_rank: u32,
 ) -> Result<()> {
     match frame {
@@ -386,7 +383,7 @@ fn receive(
         } => {
             // Apply to the bound window, then ack to the origin.
             {
-                let windows = shared.windows.lock().unwrap();
+                let windows = shared.windows.lock();
                 if let Some(slot) = windows.get(&(tag, key)) {
                     let _ = slot.write_at(offset as usize, &data);
                 }
@@ -397,7 +394,6 @@ fn receive(
             *shared
                 .inbound_puts
                 .lock()
-                .unwrap()
                 .entry(tag)
                 .or_insert(0) += 1;
             let ack = Frame::PutAck {
@@ -408,16 +404,15 @@ fn receive(
             let bytes = ack.encode();
             writer
                 .lock()
-                .unwrap()
                 .write_all(&bytes)
                 .map_err(|e| HicrError::Transport(format!("ack: {e}")))?;
             shared.notify();
         }
         Frame::PutAck { tag, op_id, .. } => {
-            if let Some(flag) = shared.put_flags.lock().unwrap().remove(&op_id) {
+            if let Some(flag) = shared.put_flags.lock().remove(&op_id) {
                 flag.store(true, Ordering::Release);
             }
-            let mut out = shared.outstanding.lock().unwrap();
+            let mut out = shared.outstanding.lock();
             // Guard on the in-flight record: a duplicated or synthetic
             // stray ack must not under-count another op's fence.
             if out.ops.remove(&op_id).is_some() {
@@ -438,7 +433,7 @@ fn receive(
             ..
         } => {
             let data = {
-                let windows = shared.windows.lock().unwrap();
+                let windows = shared.windows.lock();
                 match windows.get(&(tag, key)) {
                     Some(slot) => {
                         let mut buf = vec![0u8; len as usize];
@@ -457,13 +452,12 @@ fn receive(
             let bytes = reply.encode();
             writer
                 .lock()
-                .unwrap()
                 .write_all(&bytes)
                 .map_err(|e| HicrError::Transport(format!("get reply: {e}")))?;
         }
         Frame::GetData { op_id, data, .. } => {
-            shared.outstanding.lock().unwrap().ops.remove(&op_id);
-            if let Some(tx) = shared.get_waiters.lock().unwrap().remove(&op_id) {
+            shared.outstanding.lock().ops.remove(&op_id);
+            if let Some(tx) = shared.get_waiters.lock().remove(&op_id) {
                 let _ = tx.send(data);
             }
         }
@@ -471,25 +465,24 @@ fn receive(
             shared
                 .exchange_results
                 .lock()
-                .unwrap()
                 .insert(tag, slots);
             shared.notify();
         }
         Frame::BarrierRelease { epoch } => {
-            shared.barrier_releases.lock().unwrap().push(epoch);
+            shared.barrier_releases.lock().push(epoch);
             shared.notify();
         }
         Frame::SpawnResult { new_ranks } => {
-            *shared.spawn_results.lock().unwrap() = Some(new_ranks);
+            *shared.spawn_results.lock() = Some(new_ranks);
             shared.notify();
         }
         Frame::InstanceList { ranks } => {
-            *shared.instance_lists.lock().unwrap() = Some(ranks);
+            *shared.instance_lists.lock() = Some(ranks);
             shared.notify();
         }
         Frame::Departed { rank } => {
             {
-                let mut dep = shared.departed.lock().unwrap();
+                let mut dep = shared.departed.lock();
                 if !dep.contains(&rank) {
                     dep.push(rank);
                 }
@@ -498,7 +491,7 @@ fn receive(
             // (crash semantics): acks that died with the peer must not
             // wedge our fences, and pending gets resolve empty.
             let swept: Vec<(u64, u64, bool)> = {
-                let mut out = shared.outstanding.lock().unwrap();
+                let mut out = shared.outstanding.lock();
                 let ids: Vec<u64> = out
                     .ops
                     .iter()
@@ -519,10 +512,10 @@ fn receive(
             };
             for (id, _, is_get) in &swept {
                 if *is_get {
-                    if let Some(tx) = shared.get_waiters.lock().unwrap().remove(id) {
+                    if let Some(tx) = shared.get_waiters.lock().remove(id) {
                         let _ = tx.send(Vec::new());
                     }
-                } else if let Some(flag) = shared.put_flags.lock().unwrap().remove(id) {
+                } else if let Some(flag) = shared.put_flags.lock().remove(id) {
                     flag.store(true, Ordering::Release);
                 }
             }

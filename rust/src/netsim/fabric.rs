@@ -107,15 +107,18 @@ impl VirtualClock {
     pub fn advance(&self, seconds: f64) {
         self.nanos.fetch_add(
             (seconds * 1e9) as u64,
+            // relaxed-ok: telemetry counter; no data is published through this atomic
             std::sync::atomic::Ordering::Relaxed,
         );
     }
 
     pub fn elapsed_s(&self) -> f64 {
+        // relaxed-ok: modeled fabric clock; single logical writer, reads are observational
         self.nanos.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e9
     }
 
     pub fn reset(&self) {
+        // relaxed-ok: modeled fabric clock; single logical writer, reads are observational
         self.nanos.store(0, std::sync::atomic::Ordering::Relaxed);
     }
 }

@@ -11,11 +11,12 @@ use std::collections::{BTreeMap, HashMap};
 use std::io::Write;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::core::error::{HicrError, Result};
 use crate::netsim::chaos::{ChaosConfig, ChaosState};
 use crate::netsim::wire::Frame;
+use crate::util::witness::{classes, Lock};
 
 /// Callback invoked when a root instance requests runtime instance
 /// creation: receives (new_rank, template_json) and must start a process
@@ -54,7 +55,7 @@ struct HubState {
 pub struct Hub {
     listener: UnixListener,
     path: PathBuf,
-    state: Arc<Mutex<HubState>>,
+    state: Arc<Lock<HubState>>,
     done_cv: Arc<std::sync::Condvar>,
     spawn_fn: Option<Arc<SpawnFn>>,
     chaos: Option<Arc<ChaosConfig>>,
@@ -69,7 +70,7 @@ impl Hub {
         Ok(Hub {
             listener,
             path: path.to_path_buf(),
-            state: Arc::new(Mutex::new(HubState {
+            state: Arc::new(Lock::new(&classes::HUB_STATE, HubState {
                 writers: HashMap::new(),
                 exchanges: HashMap::new(),
                 barriers: HashMap::new(),
@@ -111,7 +112,7 @@ impl Hub {
             .spawn(move || {
                 let mut conn_threads = Vec::new();
                 for conn in listener.incoming() {
-                    if accept_state.lock().unwrap().shutdown {
+                    if accept_state.lock().shutdown {
                         break;
                     }
                     let Ok(stream) = conn else { break };
@@ -132,14 +133,14 @@ impl Hub {
 
         // Wait until all expected instances registered and departed.
         {
-            let mut st = state.lock().unwrap();
+            let mut st = state.lock();
             loop {
                 let expected = st.next_rank as usize;
                 if st.registered.len() >= expected && st.departed.len() >= expected {
                     st.shutdown = true;
                     break;
                 }
-                st = done_cv.wait(st).unwrap();
+                st = st.wait(&done_cv);
             }
         }
         // Unblock the accept loop with a dummy connection.
@@ -233,8 +234,8 @@ fn resize_pending_collectives(st: &mut HubState, departed_rank: Option<u32>) -> 
 /// sender fences on still fires: puts are ack-and-dropped (like a NIC
 /// completing a send to a dead host) and gets are answered with zeros.
 /// Routing to a rank that never existed is still a loud error.
-fn route(state: &Mutex<HubState>, rank: u32, frame: &Frame) -> Result<()> {
-    let mut st = state.lock().unwrap();
+fn route(state: &Lock<HubState>, rank: u32, frame: &Frame) -> Result<()> {
+    let mut st = state.lock();
     let delivered = match st.writers.get_mut(&rank) {
         Some(writer) => writer.write_all(&frame.encode()).is_ok(),
         None => {
@@ -280,8 +281,8 @@ fn route(state: &Mutex<HubState>, rank: u32, frame: &Frame) -> Result<()> {
 /// Best-effort broadcast: a single broken writer (a rank mid-crash) must
 /// not abort delivery to the healthy rest — its own serve thread accounts
 /// the departure.
-fn broadcast(state: &Mutex<HubState>, frame: &Frame) {
-    let mut st = state.lock().unwrap();
+fn broadcast(state: &Lock<HubState>, frame: &Frame) {
+    let mut st = state.lock();
     let bytes = frame.encode();
     for (_rank, writer) in st.writers.iter_mut() {
         let _ = writer.write_all(&bytes);
@@ -290,7 +291,7 @@ fn broadcast(state: &Mutex<HubState>, frame: &Frame) {
 
 fn serve_connection(
     stream: UnixStream,
-    state: Arc<Mutex<HubState>>,
+    state: Arc<Lock<HubState>>,
     spawn_fn: Option<Arc<SpawnFn>>,
     chaos: Option<Arc<ChaosConfig>>,
 ) -> Result<()> {
@@ -303,7 +304,7 @@ fn serve_connection(
     // already recorded the departure; this is a no-op then.
     if let Some(rank) = my_rank {
         let frames = {
-            let mut st = state.lock().unwrap();
+            let mut st = state.lock();
             if st.departed.contains(&rank) {
                 None
             } else {
@@ -327,7 +328,7 @@ fn serve_connection(
 
 fn serve_frames(
     stream: &UnixStream,
-    state: &Arc<Mutex<HubState>>,
+    state: &Arc<Lock<HubState>>,
     spawn_fn: &Option<Arc<SpawnFn>>,
     chaos: &Option<Arc<ChaosConfig>>,
     my_rank: &mut Option<u32>,
@@ -373,7 +374,7 @@ fn serve_frames(
 fn handle_frame(
     frame: Frame,
     stream: &UnixStream,
-    state: &Arc<Mutex<HubState>>,
+    state: &Arc<Lock<HubState>>,
     spawn_fn: &Option<Arc<SpawnFn>>,
     my_rank: &mut Option<u32>,
 ) -> Result<bool> {
@@ -386,7 +387,7 @@ fn handle_frame(
                 let writer = stream
                     .try_clone()
                     .map_err(|e| HicrError::Transport(format!("clone: {e}")))?;
-                let mut st = state.lock().unwrap();
+                let mut st = state.lock();
                 st.writers.insert(rank, writer);
                 if !st.registered.contains(&rank) {
                     st.registered.push(rank);
@@ -400,7 +401,7 @@ fn handle_frame(
             // Collective: exchange.
             Frame::Exchange { rank, tag, entries } => {
                 let complete = {
-                    let mut st = state.lock().unwrap();
+                    let mut st = state.lock();
                     // Collectives involve every live instance (paper
                     // §3.1.4): size by the known world, not by who has
                     // happened to register yet (avoids a launch race).
@@ -424,7 +425,7 @@ fn handle_frame(
             // Collective: barrier.
             Frame::Barrier { rank, epoch } => {
                 let release = {
-                    let mut st = state.lock().unwrap();
+                    let mut st = state.lock();
                     let n_instances =
                         (st.next_rank as usize).saturating_sub(st.departed.len());
                     let entry = st
@@ -460,7 +461,7 @@ fn handle_frame(
                 let from = (*my_rank)
                     .ok_or_else(|| HicrError::Transport("spawn before register".into()))?;
                 let new_ranks: Vec<u32> = {
-                    let mut st = state.lock().unwrap();
+                    let mut st = state.lock();
                     if st.barriers_completed > 0 {
                         // Hub-side defense of the join invariant (the
                         // mpisim instance manager rejects this earlier
@@ -512,7 +513,7 @@ fn handle_frame(
             }
             Frame::ListInstances { rank } => {
                 let ranks: Vec<u32> = {
-                    let st = state.lock().unwrap();
+                    let st = state.lock();
                     let mut r: Vec<u32> = st.writers.keys().copied().collect();
                     // Include spawned-but-not-yet-connected ranks so the
                     // creator can address them after SpawnResult.
@@ -533,7 +534,7 @@ fn handle_frame(
                 // Deduplicated so a chaos-duplicated Bye cannot inflate
                 // the departed roster (that count gates Hub::run exit).
                 let frames = {
-                    let mut st = state.lock().unwrap();
+                    let mut st = state.lock();
                     if st.departed.contains(&rank) {
                         Vec::new()
                     } else {

@@ -29,10 +29,11 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 use crate::core::error::{HicrError, Result};
+use crate::util::witness::{classes, Lock};
 
 /// What every accepted request resolves to: the per-request output slice
 /// and its queue latency, or a typed error.
@@ -87,11 +88,11 @@ struct Queue {
 
 /// Dynamic batcher: `submit` from any thread; a worker thread flushes.
 pub struct Batcher {
-    queue: Arc<(Mutex<Queue>, Condvar)>,
-    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+    queue: Arc<(Lock<Queue>, Condvar)>,
+    worker: Lock<Option<std::thread::JoinHandle<()>>>,
     cfg: BatcherConfig,
     /// Batches executed / examples padded (observability).
-    stats: Arc<Mutex<BatchStats>>,
+    stats: Arc<Lock<BatchStats>>,
 }
 
 /// Counters for batching efficiency reporting.
@@ -108,16 +109,16 @@ pub struct BatchStats {
 impl Batcher {
     pub fn start(cfg: BatcherConfig, exec: BatchExecutor) -> Arc<Batcher> {
         let queue = Arc::new((
-            Mutex::new(Queue {
+            Lock::new(&classes::BATCHER_QUEUE, Queue {
                 pending: VecDeque::new(),
                 closed: false,
             }),
             Condvar::new(),
         ));
-        let stats = Arc::new(Mutex::new(BatchStats::default()));
+        let stats = Arc::new(Lock::new(&classes::BATCHER_STATS, BatchStats::default()));
         let b = Arc::new(Batcher {
             queue: Arc::clone(&queue),
-            worker: Mutex::new(None),
+            worker: Lock::new(&classes::BATCHER_WORKER, None),
             cfg: cfg.clone(),
             stats: Arc::clone(&stats),
         });
@@ -125,7 +126,7 @@ impl Batcher {
             .name("hicr-batcher".into())
             .spawn(move || batch_loop(cfg, queue, exec, stats))
             .expect("spawn batcher");
-        *b.worker.lock().unwrap() = Some(worker);
+        *b.worker.lock() = Some(worker);
         b
     }
 
@@ -138,7 +139,7 @@ impl Batcher {
             )));
         }
         let (q, cv) = &*self.queue;
-        let mut queue = q.lock().unwrap();
+        let mut queue = q.lock();
         if queue.closed {
             return Err(HicrError::InvalidState("batcher shut down".into()));
         }
@@ -179,7 +180,7 @@ impl Batcher {
     }
 
     pub fn stats(&self) -> BatchStats {
-        self.stats.lock().unwrap().clone()
+        self.stats.lock().clone()
     }
 
     /// Drain and stop the worker. Requests already queued are executed
@@ -188,10 +189,10 @@ impl Batcher {
     pub fn shutdown(&self) {
         {
             let (q, cv) = &*self.queue;
-            q.lock().unwrap().closed = true;
+            q.lock().closed = true;
             cv.notify_all();
         }
-        if let Some(h) = self.worker.lock().unwrap().take() {
+        if let Some(h) = self.worker.lock().take() {
             let _ = h.join();
         }
     }
@@ -199,9 +200,9 @@ impl Batcher {
 
 fn batch_loop(
     cfg: BatcherConfig,
-    queue: Arc<(Mutex<Queue>, Condvar)>,
+    queue: Arc<(Lock<Queue>, Condvar)>,
     exec: BatchExecutor,
-    stats: Arc<Mutex<BatchStats>>,
+    stats: Arc<Lock<BatchStats>>,
 ) {
     let (q, cv) = &*queue;
     loop {
@@ -210,7 +211,7 @@ fn batch_loop(
         // queued in immediate (possibly partial) batches until empty.
         let mut batch: Vec<BatchRequest> = Vec::new();
         {
-            let mut queue = q.lock().unwrap();
+            let mut queue = q.lock();
             loop {
                 while let Some(r) = queue.pending.pop_front() {
                     batch.push(r);
@@ -228,10 +229,10 @@ fn batch_loop(
                     if now >= deadline {
                         break;
                     }
-                    let (g, _t) = cv.wait_timeout(queue, deadline - now).unwrap();
+                    let (g, _t) = queue.wait_timeout(cv, deadline - now);
                     queue = g;
                 } else {
-                    queue = cv.wait(queue).unwrap();
+                    queue = queue.wait(cv);
                 }
             }
             if queue.closed && batch.is_empty() {
@@ -265,7 +266,7 @@ fn batch_loop(
             }
         });
         {
-            let mut s = stats.lock().unwrap();
+            let mut s = stats.lock();
             s.batches += 1;
             s.requests += n as u64;
             s.padded_slots += (cfg.max_batch - n) as u64;

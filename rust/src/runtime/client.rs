@@ -24,10 +24,15 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
 }
 
-// The xla crate wraps C++ objects behind pointers without Send/Sync
-// markers; PJRT CPU executables and clients are thread-safe to *invoke*
-// (PJRT guarantees concurrent Execute calls are legal).
+// SAFETY: the xla crate wraps C++ objects behind pointers without
+// Send/Sync markers; PJRT CPU executables are thread-safe to *invoke*
+// (PJRT guarantees concurrent Execute calls are legal). Without the
+// feature the type is plain data and the auto impls apply, so the
+// default build carries no unsafe here.
+#[cfg(feature = "xla")]
 unsafe impl Send for Executable {}
+// SAFETY: see the Send impl above.
+#[cfg(feature = "xla")]
 unsafe impl Sync for Executable {}
 
 impl Executable {
@@ -77,7 +82,13 @@ pub struct XlaRuntime {
     cache: Mutex<HashMap<String, Arc<Executable>>>,
 }
 
+// SAFETY: PjRtClient is a thread-safe C++ client behind a pointer (see
+// the Executable impls); the cache is an ordinary Mutex. Feature-gated
+// for the same reason as Executable.
+#[cfg(feature = "xla")]
 unsafe impl Send for XlaRuntime {}
+// SAFETY: see the Send impl above.
+#[cfg(feature = "xla")]
 unsafe impl Sync for XlaRuntime {}
 
 impl XlaRuntime {

@@ -13,6 +13,9 @@
 /// placement is a performance hint, not a semantic.
 pub fn pin_to_core(core: u32) {
     #[cfg(all(feature = "affinity", target_os = "linux"))]
+    // SAFETY: cpu_set_t is a plain bitmask so zeroed() is a valid value;
+    // CPU_ZERO/CPU_SET write within the set we own; sched_setaffinity(0)
+    // only reads the set and affects the calling thread.
     unsafe {
         let mut set: libc::cpu_set_t = std::mem::zeroed();
         libc::CPU_ZERO(&mut set);

@@ -93,45 +93,9 @@ fn fibonacci_identical_across_compute_plugins() {
     }
 }
 
-/// The apps and frontends layers must consume backends exclusively
-/// through the plugin registry: no `crate::backends::` import outside
-/// `#[cfg(test)]` blocks (tests may use concrete types for setup). The
-/// repo convention keeps test modules at the end of each file, so
-/// everything before the first `#[cfg(test)]` is production code.
-#[test]
-fn apps_and_frontends_are_backend_agnostic() {
-    fn visit(dir: &std::path::Path, violations: &mut Vec<String>) {
-        for entry in std::fs::read_dir(dir).unwrap() {
-            let path = entry.unwrap().path();
-            if path.is_dir() {
-                visit(&path, violations);
-            } else if path.extension().map_or(false, |e| e == "rs") {
-                let text = std::fs::read_to_string(&path).unwrap();
-                let cut = text.find("#[cfg(test)]").unwrap_or(text.len());
-                for (ln, line) in text[..cut].lines().enumerate() {
-                    if line.contains("crate::backends::") {
-                        violations.push(format!(
-                            "{}:{}: {}",
-                            path.display(),
-                            ln + 1,
-                            line.trim()
-                        ));
-                    }
-                }
-            }
-        }
-    }
-    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
-    let mut violations = Vec::new();
-    for layer in ["apps", "frontends"] {
-        visit(&src.join(layer), &mut violations);
-    }
-    assert!(
-        violations.is_empty(),
-        "concrete backend imports outside #[cfg(test)]:\n{}",
-        violations.join("\n")
-    );
-}
+// The backend-agnosticism grep test that lived here moved into
+// `tests/xlint.rs` (lint 4), alongside the rest of the source
+// invariants (DESIGN.md §10).
 
 /// `hicr backends` must print exactly the derived coverage matrix.
 #[test]

@@ -1,0 +1,596 @@
+//! Source-invariant linter (tier-1 gate; DESIGN.md §10).
+//!
+//! Dependency-free, std-only checks over `src/` and the ARCHITECTURE.md
+//! lock tables. Everything here is written as pure functions over source
+//! *strings* so the same logic self-tests against small fixtures at the
+//! bottom of the file. The five lints:
+//!
+//! 1. `unsafe-needs-safety-comment` — every `unsafe` block/fn/impl has a
+//!    `// SAFETY:` comment (or a `# Safety` doc section) close above it.
+//! 2. `relaxed-needs-tag` — every `Ordering::Relaxed` site carries a
+//!    `// relaxed-ok:` justification on the same or a nearby prior line.
+//! 3. `tag-namespaces-disjoint` — the frontend tag bases parsed from
+//!    source claim pairwise-disjoint bit ranges above the app space.
+//! 4. `backend-agnosticism` — apps/frontends never import
+//!    `crate::backends::` outside `#[cfg(test)]` (absorbs the PR 1 grep
+//!    test that used to live in `tests/integration.rs`).
+//! 5. `lock-table-drift` — every `Mutex<`/`Lock<` struct field has a row
+//!    in ARCHITECTURE.md §3, and the witnessed (name, rank) pairs match
+//!    `util::witness::classes` in both directions.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// How many lines above an `unsafe` token a SAFETY comment may sit
+/// (multi-line comments + attributes between comment and item).
+const SAFETY_WINDOW: usize = 6;
+/// How many lines above an `Ordering::Relaxed` site a `relaxed-ok:` tag
+/// may sit (one tag may cover a small adjacent cluster).
+const RELAXED_WINDOW: usize = 4;
+
+// ---------------------------------------------------------------------
+// line helpers
+// ---------------------------------------------------------------------
+
+/// True for `//`, `///`, `//!` and block-comment continuation lines.
+fn is_comment_line(line: &str) -> bool {
+    let t = line.trim_start();
+    t.starts_with("//") || t.starts_with('*') || t.starts_with("/*")
+}
+
+/// The code portion of a line: everything before a `//` that is not
+/// inside a string literal (good enough for this codebase — no raw
+/// strings containing `//` on lint-relevant lines).
+fn code_portion(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' if in_str => i += 1, // skip escaped char
+            b'"' => in_str = !in_str,
+            b'/' if !in_str && i + 1 < bytes.len() && bytes[i + 1] == b'/' => {
+                return &line[..i];
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+/// True if the code portion of `line` contains `unsafe` as a whole word
+/// (so `unsafe_code` / `unsafe_op_in_unsafe_fn` attributes don't match).
+fn has_unsafe_token(line: &str) -> bool {
+    let code = code_portion(line);
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("unsafe") {
+        let s = from + pos;
+        let e = s + "unsafe".len();
+        let ok_before = s == 0 || !(b[s - 1].is_ascii_alphanumeric() || b[s - 1] == b'_');
+        let ok_after = e == b.len() || !(b[e].is_ascii_alphanumeric() || b[e] == b'_');
+        if ok_before && ok_after {
+            return true;
+        }
+        from = e;
+    }
+    false
+}
+
+/// Index of the first line that is exactly a `#[cfg(test)]` attribute —
+/// by repo convention everything after it is test code (test modules sit
+/// at the end of each file).
+fn production_cut(src: &str) -> usize {
+    for (i, line) in src.lines().enumerate() {
+        if line.trim() == "#[cfg(test)]" {
+            return i;
+        }
+    }
+    src.lines().count()
+}
+
+// ---------------------------------------------------------------------
+// lint 1: unsafe needs a SAFETY comment
+// ---------------------------------------------------------------------
+
+fn check_unsafe(path: &str, src: &str, out: &mut Vec<String>) {
+    let lines: Vec<&str> = src.lines().collect();
+    for (i, line) in lines.iter().enumerate() {
+        if is_comment_line(line) || !has_unsafe_token(line) {
+            continue;
+        }
+        let lo = i.saturating_sub(SAFETY_WINDOW);
+        let justified = lines[lo..=i]
+            .iter()
+            .any(|l| l.contains("SAFETY:") || l.contains("# Safety"));
+        if !justified {
+            out.push(format!(
+                "{path}:{}: unsafe without a `// SAFETY:` comment within \
+                 {SAFETY_WINDOW} lines: {}",
+                i + 1,
+                line.trim()
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// lint 2: Ordering::Relaxed needs a relaxed-ok tag
+// ---------------------------------------------------------------------
+
+fn check_relaxed(path: &str, src: &str, out: &mut Vec<String>) {
+    let lines: Vec<&str> = src.lines().collect();
+    for (i, line) in lines.iter().enumerate() {
+        if is_comment_line(line) || !line.contains("Ordering::Relaxed") {
+            continue;
+        }
+        let lo = i.saturating_sub(RELAXED_WINDOW);
+        let justified = lines[lo..=i].iter().any(|l| l.contains("relaxed-ok:"));
+        if !justified {
+            out.push(format!(
+                "{path}:{}: Ordering::Relaxed without a `// relaxed-ok:` tag \
+                 within {RELAXED_WINDOW} lines (doorbell/fence/credit words \
+                 must be Acquire/Release): {}",
+                i + 1,
+                line.trim()
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// lint 3: tag namespaces pairwise disjoint
+// ---------------------------------------------------------------------
+
+/// Parse `pub const NAME_TAG_BASE: u64 = 0xHEX << SHIFT;` from one line.
+fn parse_tag_base(line: &str) -> Option<(String, u64, u32)> {
+    let code = code_portion(line);
+    let const_pos = code.find("const ")?;
+    let rest = &code[const_pos + "const ".len()..];
+    let colon = rest.find(':')?;
+    let name = rest[..colon].trim().to_string();
+    if !name.ends_with("_TAG_BASE") {
+        return None;
+    }
+    let hex_start = rest.find("0x")?;
+    let after_hex = &rest[hex_start + 2..];
+    let hex: String = after_hex
+        .chars()
+        .take_while(|c| c.is_ascii_hexdigit())
+        .collect();
+    let value = u64::from_str_radix(&hex, 16).ok()?;
+    let shift_pos = rest.find("<<")?;
+    let shift_str: String = rest[shift_pos + 2..]
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    let shift: u32 = shift_str.parse().ok()?;
+    Some((name, value, shift))
+}
+
+/// Each base claims the interval `[value << shift, (value+1) << shift)`.
+/// All intervals must be pairwise disjoint and above the `< 2^32` app
+/// space (ARCHITECTURE.md §2).
+fn check_tag_disjoint(bases: &[(String, u64, u32)], out: &mut Vec<String>) {
+    for (name, v, s) in bases {
+        if v << s < 1u64 << 32 {
+            out.push(format!(
+                "tag namespace {name} starts below 2^32 — collides with the \
+                 application tag space"
+            ));
+        }
+    }
+    for (i, (an, av, ash)) in bases.iter().enumerate() {
+        for (bn, bv, bsh) in &bases[i + 1..] {
+            let (a0, a1) = (av << ash, (av + 1) << ash);
+            let (b0, b1) = (bv << bsh, (bv + 1) << bsh);
+            if a0 < b1 && b0 < a1 {
+                out.push(format!(
+                    "tag namespaces overlap: {an} [{a0:#x}, {a1:#x}) vs \
+                     {bn} [{b0:#x}, {b1:#x})"
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// lint 4: backend-agnosticism (absorbed PR 1 grep test)
+// ---------------------------------------------------------------------
+
+fn check_backend_imports(path: &str, src: &str, out: &mut Vec<String>) {
+    let cut = production_cut(src);
+    for (i, line) in src.lines().take(cut).enumerate() {
+        if line.contains("crate::backends::") {
+            out.push(format!(
+                "{path}:{}: concrete backend import outside #[cfg(test)]: {}",
+                i + 1,
+                line.trim()
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// lint 5: lock-table drift (code ↔ ARCHITECTURE.md §3 ↔ witness ranks)
+// ---------------------------------------------------------------------
+
+/// `Struct.field` for every struct field whose type mentions `Mutex<` or
+/// `Lock<` in the production region of one file.
+fn extract_lock_fields(src: &str) -> Vec<(usize, String)> {
+    let cut = production_cut(src);
+    let mut fields = Vec::new();
+    let mut depth: i32 = 0;
+    let mut cur: Option<(String, i32)> = None; // (struct name, depth at decl)
+    for (i, raw) in src.lines().take(cut).enumerate() {
+        if is_comment_line(raw) {
+            continue;
+        }
+        let line = code_portion(raw);
+        let t = line.trim_start();
+        let decl = t
+            .strip_prefix("pub ")
+            .or_else(|| t.strip_prefix("pub(crate) "))
+            .or_else(|| t.strip_prefix("pub(super) "))
+            .unwrap_or(t);
+        if decl.starts_with("struct ") && line.contains('{') {
+            let name: String = decl["struct ".len()..]
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            cur = Some((name, depth));
+        }
+        depth += line.matches('{').count() as i32 - line.matches('}').count() as i32;
+        if let Some((_, d)) = &cur {
+            if depth <= *d && !line.contains("struct") {
+                cur = None;
+            }
+        }
+        if let Some((sname, _)) = &cur {
+            if let Some(colon) = t.find(':') {
+                let (head, ty) = t.split_at(colon);
+                let fname = head
+                    .strip_prefix("pub ")
+                    .or_else(|| head.strip_prefix("pub(crate) "))
+                    .or_else(|| head.strip_prefix("pub(super) "))
+                    .unwrap_or(head)
+                    .trim();
+                let is_ident = !fname.is_empty()
+                    && fname
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_');
+                if is_ident && (ty.contains("Mutex<") || ty.contains("Lock<")) {
+                    fields.push((i + 1, format!("{sname}.{fname}")));
+                }
+            }
+        }
+    }
+    fields
+}
+
+/// `(name, rank)` for every `LockClass` literal in the production region
+/// of `util/witness.rs`.
+fn extract_witness_classes(src: &str) -> Vec<(String, u32)> {
+    let cut = production_cut(src);
+    let mut pairs = Vec::new();
+    for line in src.lines().take(cut) {
+        let Some(npos) = line.find("name: \"") else {
+            continue;
+        };
+        let rest = &line[npos + "name: \"".len()..];
+        let Some(endq) = rest.find('"') else { continue };
+        let name = rest[..endq].to_string();
+        let Some(rpos) = rest.find("rank: ") else {
+            continue;
+        };
+        let digits: String = rest[rpos + "rank: ".len()..]
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        if let Ok(rank) = digits.parse() {
+            pairs.push((name, rank));
+        }
+    }
+    pairs
+}
+
+/// The `## 3.` section of ARCHITECTURE.md.
+fn doc_section3(doc: &str) -> String {
+    let mut in_sec = false;
+    let mut out = String::new();
+    for line in doc.lines() {
+        if line.starts_with("## 3.") {
+            in_sec = true;
+        } else if in_sec && line.starts_with("## ") {
+            break;
+        }
+        if in_sec {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// All backticked `Struct.field`-shaped names anywhere in the section.
+fn doc_lock_names(section: &str) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for part in section.split('`').skip(1).step_by(2) {
+        let dotted = part.contains('.')
+            && part
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.');
+        if dotted {
+            names.insert(part.to_string());
+        }
+    }
+    names
+}
+
+/// Per table row (`|`-prefixed line): the first backticked dotted name
+/// paired with the row's `rank N` annotation, if both are present.
+fn doc_rank_pairs(section: &str) -> Vec<(String, u32)> {
+    let mut pairs = Vec::new();
+    for line in section.lines() {
+        if !line.trim_start().starts_with('|') {
+            continue;
+        }
+        let Some(name) = doc_lock_names(line).into_iter().next() else {
+            continue;
+        };
+        // first backticked name in line order, not BTreeSet order:
+        let first = line
+            .split('`')
+            .skip(1)
+            .step_by(2)
+            .find(|p| {
+                p.contains('.')
+                    && p.chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.')
+            })
+            .map(str::to_string)
+            .unwrap_or(name);
+        let Some(rpos) = line.find("rank ") else {
+            continue;
+        };
+        let digits: String = line[rpos + "rank ".len()..]
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        if let Ok(rank) = digits.parse() {
+            pairs.push((first, rank));
+        }
+    }
+    pairs
+}
+
+fn check_lock_tables(
+    fields: &[(String, usize, String)], // (path, line, Struct.field)
+    witness: &[(String, u32)],
+    doc: &str,
+    out: &mut Vec<String>,
+) {
+    let section = doc_section3(doc);
+    if section.is_empty() {
+        out.push("ARCHITECTURE.md has no `## 3.` lock-table section".into());
+        return;
+    }
+    let names = doc_lock_names(&section);
+    for (path, line, field) in fields {
+        if !names.contains(field) {
+            out.push(format!(
+                "{path}:{line}: lock field `{field}` has no row in the \
+                 ARCHITECTURE.md §3 lock tables"
+            ));
+        }
+    }
+    let doc_pairs: BTreeSet<(String, u32)> = doc_rank_pairs(&section).into_iter().collect();
+    let wit_pairs: BTreeSet<(String, u32)> = witness.iter().cloned().collect();
+    for (n, r) in wit_pairs.difference(&doc_pairs) {
+        out.push(format!(
+            "witness class `{n}` (rank {r}) has no matching `rank {r}` row \
+             in ARCHITECTURE.md §3"
+        ));
+    }
+    for (n, r) in doc_pairs.difference(&wit_pairs) {
+        out.push(format!(
+            "ARCHITECTURE.md §3 row `{n}` · rank {r} matches no LockClass \
+             in util::witness::classes"
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------
+// driver
+// ---------------------------------------------------------------------
+
+fn rust_sources(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).expect("readable src dir") {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            rust_sources(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// The tier-1 gate: every source invariant, over the whole tree.
+#[test]
+fn source_invariants_hold() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let src = root.join("src");
+    let mut files = Vec::new();
+    rust_sources(&src, &mut files);
+    files.sort();
+    assert!(files.len() > 40, "src walk found too few files — wrong cwd?");
+
+    let mut violations = Vec::new();
+    let mut tag_bases = Vec::new();
+    let mut lock_fields = Vec::new();
+    let mut witness_classes = Vec::new();
+
+    for path in &files {
+        let text = std::fs::read_to_string(path).expect("readable source");
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .display()
+            .to_string();
+        check_unsafe(&rel, &text, &mut violations);
+        check_relaxed(&rel, &text, &mut violations);
+        if rel.starts_with("src/apps") || rel.starts_with("src/frontends") {
+            check_backend_imports(&rel, &text, &mut violations);
+        }
+        for line in text.lines() {
+            if let Some(b) = parse_tag_base(line) {
+                tag_bases.push(b);
+            }
+        }
+        if rel.ends_with("util/witness.rs") {
+            witness_classes = extract_witness_classes(&text);
+        } else {
+            for (ln, f) in extract_lock_fields(&text) {
+                lock_fields.push((rel.clone(), ln, f));
+            }
+        }
+    }
+
+    assert!(
+        tag_bases.len() >= 3,
+        "expected at least RPC/serving/dataobject tag bases, parsed: {tag_bases:?}"
+    );
+    check_tag_disjoint(&tag_bases, &mut violations);
+
+    assert!(
+        witness_classes.len() >= 40,
+        "witness class parse looks broken: {witness_classes:?}"
+    );
+    assert!(
+        lock_fields.len() >= 60,
+        "lock-field extraction looks broken: found {}",
+        lock_fields.len()
+    );
+    let doc = std::fs::read_to_string(root.join("../docs/ARCHITECTURE.md"))
+        .expect("docs/ARCHITECTURE.md readable");
+    check_lock_tables(&lock_fields, &witness_classes, &doc, &mut violations);
+
+    assert!(
+        violations.is_empty(),
+        "xlint: {} source-invariant violation(s):\n{}",
+        violations.len(),
+        violations.join("\n")
+    );
+}
+
+// ---------------------------------------------------------------------
+// self-tests over fixtures (the lint logic must itself be trustworthy)
+// ---------------------------------------------------------------------
+
+#[test]
+fn xlint_flags_unsafe_without_safety_comment() {
+    let bad = "fn f() {\n    unsafe { do_it() }\n}\n";
+    let mut v = Vec::new();
+    check_unsafe("fixture.rs", bad, &mut v);
+    assert_eq!(v.len(), 1, "{v:?}");
+
+    let good = "fn f() {\n    // SAFETY: fixture is sound by construction.\n    unsafe { do_it() }\n}\n";
+    let mut v = Vec::new();
+    check_unsafe("fixture.rs", good, &mut v);
+    assert!(v.is_empty(), "{v:?}");
+
+    let doc_style = "/// # Safety\n/// Caller upholds X.\npub unsafe fn g() {}\n";
+    let mut v = Vec::new();
+    check_unsafe("fixture.rs", doc_style, &mut v);
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn xlint_ignores_unsafe_in_comments_and_attributes() {
+    let src = "// unsafe is discussed here\n#![deny(unsafe_op_in_unsafe_fn)]\nfn f() {}\n";
+    let mut v = Vec::new();
+    check_unsafe("fixture.rs", src, &mut v);
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn xlint_flags_untagged_relaxed() {
+    let bad = "fn f(a: &AtomicU64) {\n    a.store(1, Ordering::Relaxed);\n}\n";
+    let mut v = Vec::new();
+    check_relaxed("fixture.rs", bad, &mut v);
+    assert_eq!(v.len(), 1, "{v:?}");
+
+    let good = "fn f(a: &AtomicU64) {\n    // relaxed-ok: fixture counter\n    a.store(1, Ordering::Relaxed);\n}\n";
+    let mut v = Vec::new();
+    check_relaxed("fixture.rs", good, &mut v);
+    assert!(v.is_empty(), "{v:?}");
+
+    // a doc-comment mention is not a site
+    let doc = "/// t.fetch_add(1, Ordering::Relaxed);\nfn f() {}\n";
+    let mut v = Vec::new();
+    check_relaxed("fixture.rs", doc, &mut v);
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn xlint_flags_overlapping_tag_namespaces() {
+    let a = parse_tag_base("pub const A_TAG_BASE: u64 = 0xA9C << 52;").unwrap();
+    assert_eq!(a, ("A_TAG_BASE".into(), 0xA9C, 52));
+    // 0xA9C0 << 48 lands inside [0xA9C << 52, 0xA9D << 52)
+    let b = parse_tag_base("pub const B_TAG_BASE: u64 = 0xA9C0 << 48;").unwrap();
+    let mut v = Vec::new();
+    check_tag_disjoint(&[a.clone(), b], &mut v);
+    assert_eq!(v.len(), 1, "{v:?}");
+
+    let c = parse_tag_base("pub const C_TAG_BASE: u64 = 0x5EB << 52;").unwrap();
+    let mut v = Vec::new();
+    check_tag_disjoint(&[a, c], &mut v);
+    assert!(v.is_empty(), "{v:?}");
+
+    let low = parse_tag_base("pub const LOW_TAG_BASE: u64 = 0x1 << 8;").unwrap();
+    let mut v = Vec::new();
+    check_tag_disjoint(&[low], &mut v);
+    assert_eq!(v.len(), 1, "below-2^32 base must be rejected: {v:?}");
+}
+
+#[test]
+fn xlint_flags_backend_imports_only_before_cfg_test() {
+    let bad = "use crate::backends::threads::X;\nfn f() {}\n";
+    let mut v = Vec::new();
+    check_backend_imports("fixture.rs", bad, &mut v);
+    assert_eq!(v.len(), 1, "{v:?}");
+
+    let test_only = "fn f() {}\n#[cfg(test)]\nmod tests {\n    use crate::backends::threads::X;\n}\n";
+    let mut v = Vec::new();
+    check_backend_imports("fixture.rs", test_only, &mut v);
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn xlint_extracts_lock_fields_and_detects_drift() {
+    let src = "pub struct Pool {\n    lane: Lock<Vec<u32>>,\n    blobs: Mutex<Vec<u8>>,\n    len: usize,\n}\n#[cfg(test)]\nmod tests {\n    struct T { m: Mutex<()> }\n}\n";
+    let fields = extract_lock_fields(src);
+    let names: Vec<&str> = fields.iter().map(|(_, f)| f.as_str()).collect();
+    assert_eq!(names, ["Pool.lane", "Pool.blobs"], "{fields:?}");
+
+    let witness = vec![("Pool.lane".to_string(), 55u32)];
+    let doc_good = "## 3. Locks\n\n| lock | protects |\n|---|---|\n| `Pool.lane` · rank 55 | lane |\n| `Pool.blobs` — plain | blobs |\n\n## 4. Next\n";
+    let located: Vec<(String, usize, String)> = fields
+        .iter()
+        .map(|(l, f)| ("fixture.rs".to_string(), *l, f.clone()))
+        .collect();
+    let mut v = Vec::new();
+    check_lock_tables(&located, &witness, doc_good, &mut v);
+    assert!(v.is_empty(), "{v:?}");
+
+    // missing row, wrong rank, and stale doc row must all be flagged
+    let doc_bad = "## 3. Locks\n\n| `Pool.lane` · rank 60 | lane |\n| `Ghost.lock` · rank 99 | gone |\n\n## 4. Next\n";
+    let mut v = Vec::new();
+    check_lock_tables(&located, &witness, doc_bad, &mut v);
+    assert!(
+        v.len() >= 3,
+        "expected missing-row + both-direction rank drift, got: {v:?}"
+    );
+}
