@@ -1,0 +1,158 @@
+//! Tree collectives + derived halo sweeps — the hdarray datapath.
+//!
+//! Worlds of {2, 4, 8} in-process instances (quick: {2, 4}) over the
+//! threads backend, two series per world size:
+//!
+//! - `allreduce/N` — rounds/s of a 64-double Sum allreduce over the
+//!   binomial-tree overlay (reduce up + broadcast down: 2·log₂N hops of
+//!   latency per round, the replacement for hub-barrier aggregation).
+//! - `halo-sweep/N` — sweeps/s of a block-distributed hdarray stencil
+//!   (radius 8 box kernel over 32 768 f32), where the frontend derives
+//!   the halo channel pairs and per-sweep dataflow edges; every rep is
+//!   bitwise-verified against the sequential reference, so a silent
+//!   halo corruption fails the bench rather than the trajectory.
+//!
+//! Exports `BENCH_collectives.json` for the CI bench-smoke gate;
+//! measured rows land in EXPERIMENTS.md.
+
+use std::sync::Arc;
+
+use hicr::apps::stencil::{default_init, BoxKernel};
+use hicr::backends::threads::ThreadsCommunicationManager;
+use hicr::core::instance::testworld::local_world;
+use hicr::core::instance::InstanceManager;
+use hicr::frontends::collectives::{Collectives, ReduceOp};
+use hicr::frontends::hdarray::{sequential_sweeps, Distribution, HdArray, Layout};
+use hicr::frontends::tasking::TaskSystem;
+use hicr::util::bench::{BenchArgs, Measurement, Report};
+use hicr::{CommunicationManager, LocalMemorySlot, MemorySpaceId};
+
+fn task_system() -> Arc<TaskSystem> {
+    let cm = hicr::backends::registry()
+        .builder()
+        .compute("threads")
+        .build()
+        .expect("resolve threads plugin")
+        .compute()
+        .expect("compute manager");
+    TaskSystem::new(cm, 2, false)
+}
+
+fn alloc(len: usize) -> hicr::Result<LocalMemorySlot> {
+    LocalMemorySlot::alloc(MemorySpaceId(1), len)
+}
+
+/// One allreduce world: `rounds` Sum reductions of a 64-double vector.
+/// Returns the root's wall-clock for the round loop.
+fn allreduce_world(n: usize, rounds: usize) -> f64 {
+    let cmm: Arc<dyn CommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
+    let ranks: Vec<u32> = (0..n as u32).collect();
+    let mut joins = Vec::new();
+    for (pos, im) in local_world(n).into_iter().enumerate() {
+        let cmm = Arc::clone(&cmm);
+        let ranks = ranks.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut coll = Collectives::build(cmm, 1, pos, &ranks, 1024, alloc)
+                .expect("collective bring-up");
+            let vals: Vec<f64> = (0..64).map(|i| (pos * 64 + i) as f64).collect();
+            let t0 = std::time::Instant::now();
+            for _ in 0..rounds {
+                let sum = coll.allreduce(&vals, ReduceOp::Sum).expect("allreduce");
+                assert_eq!(sum.len(), 64);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            im.barrier().expect("world barrier");
+            dt
+        }));
+    }
+    joins
+        .into_iter()
+        .map(|j| j.join().expect("world thread"))
+        .next()
+        .expect("root time")
+}
+
+/// One halo-sweep world: a block-distributed radius-8 box stencil, the
+/// gathered result bitwise-checked against the sequential reference.
+/// Returns the root's wall-clock for the sweep phase.
+fn halo_world(n: usize, len: usize, radius: usize, sweeps: usize) -> f64 {
+    let cmm: Arc<dyn CommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
+    let ranks: Vec<u32> = (0..n as u32).collect();
+    let layout = Layout {
+        len,
+        parts: n,
+        dist: Distribution::Block,
+        radius,
+    };
+    let mut joins = Vec::new();
+    for (pos, im) in local_world(n).into_iter().enumerate() {
+        let cmm = Arc::clone(&cmm);
+        let ranks = ranks.clone();
+        joins.push(std::thread::spawn(move || {
+            let sys = task_system();
+            let mut arr = HdArray::build(cmm, 1, pos, &ranks, layout, default_init, alloc)
+                .expect("array bring-up");
+            let t0 = std::time::Instant::now();
+            arr.run_sweeps(&sys, Arc::new(BoxKernel { len, radius }), sweeps, 4)
+                .expect("sweeps");
+            let dt = t0.elapsed().as_secs_f64();
+            let gathered = arr.gather_global().expect("gather");
+            if let Some(global) = gathered {
+                let want = sequential_sweeps(len, &BoxKernel { len, radius }, default_init, sweeps);
+                assert_eq!(global, want, "halo sweep drifted from the reference");
+            }
+            sys.shutdown().expect("shutdown");
+            im.barrier().expect("world barrier");
+            dt
+        }));
+    }
+    joins
+        .into_iter()
+        .map(|j| j.join().expect("world thread"))
+        .next()
+        .expect("root time")
+}
+
+fn main() {
+    let args = BenchArgs::parse(3);
+    let sizes: &[usize] = if args.quick { &[2, 4] } else { &[2, 4, 8] };
+    let rounds = if args.quick { 200 } else { 1000 };
+    let (len, radius, sweeps) = if args.quick {
+        (8192, 8, 8)
+    } else {
+        (32768, 8, 16)
+    };
+    println!("== Tree collectives + derived halo sweeps ==");
+
+    let mut report = Report::named("Tree collectives + hdarray halo sweeps", "collectives");
+    for &n in sizes {
+        let mut samples = Vec::new();
+        for _ in 0..args.reps {
+            samples.push(allreduce_world(n, rounds));
+        }
+        println!("allreduce/{n}i: {rounds} rounds, last {:.4}s", samples[samples.len() - 1]);
+        report.push(Measurement {
+            label: format!("allreduce/{n}i"),
+            samples_s: samples.clone(),
+            derived: samples.iter().map(|s| rounds as f64 / s).collect(),
+            derived_unit: "rounds/s",
+        });
+    }
+    for &n in sizes {
+        let mut samples = Vec::new();
+        for _ in 0..args.reps {
+            samples.push(halo_world(n, len, radius, sweeps));
+        }
+        println!(
+            "halo-sweep/{n}i: {sweeps} sweeps over {len} f32 (radius {radius}), last {:.4}s",
+            samples[samples.len() - 1]
+        );
+        report.push(Measurement {
+            label: format!("halo-sweep/{n}i"),
+            samples_s: samples.clone(),
+            derived: samples.iter().map(|s| sweeps as f64 / s).collect(),
+            derived_unit: "sweeps/s",
+        });
+    }
+    report.finish(&args);
+}

@@ -8,8 +8,9 @@ use std::sync::Arc;
 
 use crate::core::communication::{CommunicationManager, DataEndpoint};
 use crate::core::error::{HicrError, Result};
-use crate::core::ids::{Key, Tag};
+use crate::core::ids::{Key, MemorySpaceId, Tag};
 use crate::core::memory::LocalMemorySlot;
+use crate::frontends::hdarray;
 use crate::frontends::tasking::{TaskHandle, TaskSystem};
 
 /// Flops per updated grid point: 12 adds + 1 multiply.
@@ -590,6 +591,92 @@ fn dist_stencil(
     out
 }
 
+// ---------------------------------------------------------------------
+// HDArray client: the same solver as a declared distribution — the
+// hand-rolled pipeline above survives as the ablation baseline
+// (`launch -- jacobi … pipeline`).
+// ---------------------------------------------------------------------
+
+/// The 13-point kernel as an [`hdarray::Stencil`] over the flattened
+/// x-major grid: radius `2·n²` reaches two x-planes either side, so a
+/// block distribution is exactly the Fig. 11 slab decomposition — but
+/// the owner maps, halo channels and per-sweep DAG edges are all
+/// derived by the frontend instead of hand-rolled.
+pub struct Jacobi13 {
+    /// Grid side length.
+    pub n: usize,
+}
+
+impl hdarray::Stencil for Jacobi13 {
+    fn radius(&self) -> usize {
+        2 * self.n * self.n
+    }
+
+    fn apply(&self, prev: &[f32], base: usize, lo: usize, hi: usize, out: &mut [f32]) {
+        let n = self.n;
+        let nn = n * n;
+        let inv = 1.0f32 / 13.0;
+        for g in lo..hi {
+            let (x, y, z) = (g / nn, (g % nn) / n, g % n);
+            let c = g - base;
+            out[g - lo] = if x < 2 || x >= n - 2 || y < 2 || y >= n - 2 || z < 2 || z >= n - 2 {
+                prev[c]
+            } else {
+                (prev[c]
+                    + prev[c - 1]
+                    + prev[c + 1]
+                    + prev[c - 2]
+                    + prev[c + 2]
+                    + prev[c - n]
+                    + prev[c + n]
+                    + prev[c - 2 * n]
+                    + prev[c + 2 * n]
+                    + prev[c - nn]
+                    + prev[c + nn]
+                    + prev[c - 2 * nn]
+                    + prev[c + 2 * nn])
+                    * inv
+            };
+        }
+    }
+}
+
+/// The initial condition of [`Grid::new`] as a pure global function
+/// (hot plane at x = 0).
+pub fn jacobi_init(n: usize) -> impl Fn(usize) -> f32 + Clone {
+    let nn = n * n;
+    move |g| if g < nn { 1.0 } else { 0.0 }
+}
+
+/// Distributed Jacobi as an hdarray client: declare the distribution,
+/// run the sweeps, gather on the root. The whole halo machinery of
+/// [`run_distributed`] reduces to these few lines. Returns the global
+/// checksum on the root (tree position 0), `None` elsewhere.
+pub fn run_hdarray(
+    cmm: Arc<dyn CommunicationManager>,
+    system: &TaskSystem,
+    me_pos: usize,
+    ranks: &[u32],
+    dist: hdarray::Distribution,
+    n: usize,
+    iterations: usize,
+) -> Result<Option<f64>> {
+    let kernel = Arc::new(Jacobi13 { n });
+    let layout = hdarray::Layout {
+        len: n * n * n,
+        parts: ranks.len(),
+        dist,
+        radius: 2 * n * n,
+    };
+    let alloc = |len| LocalMemorySlot::alloc(MemorySpaceId(1), len);
+    let mut arr =
+        hdarray::HdArray::build(cmm, 0xA11, me_pos, ranks, layout, jacobi_init(n), alloc)?;
+    arr.run_sweeps(system, kernel, iterations, 4)?;
+    Ok(arr
+        .gather_global()?
+        .map(|global| global.iter().map(|&v| v as f64).sum()))
+}
+
 fn slot_as_f64(slot: &LocalMemorySlot, count: usize) -> Vec<f64> {
     let mut bytes = vec![0u8; count * 8];
     slot.read_at(0, &mut bytes).expect("in-bounds");
@@ -703,6 +790,57 @@ mod tests {
             "temperature should decay away from the source"
         );
         assert!(near_source > 0.0);
+    }
+
+    /// Satellite 2: hdarray jacobi ≡ sequential reference ≡ the
+    /// retained hand-rolled DAG, across all three compute backends and
+    /// both distributions. The hdarray result must equal the shared-
+    /// kernel f32 reference *bitwise*; the f64 paths agree to rounding.
+    #[test]
+    fn hdarray_matches_dag_and_sequential() {
+        use crate::backends::threads::ThreadsCommunicationManager;
+        use crate::core::instance::testworld::local_world;
+        use crate::core::instance::InstanceManager;
+        use crate::frontends::hdarray::Distribution;
+        let n = 8;
+        let iters = 4;
+        let world = 2;
+        let mut seq = Grid::new(n);
+        let want = run_sequential(&mut seq, iters);
+        let ref32 =
+            hdarray::sequential_sweeps(n * n * n, &Jacobi13 { n }, jacobi_init(n), iters);
+        let want32: f64 = ref32.iter().map(|&v| v as f64).sum();
+        assert!((want32 - want).abs() < 1e-2, "f32 reference drifted: {want32} vs {want}");
+        for backend in ["coro", "nosv", "threads"] {
+            let sys = system_for(backend);
+            let mut grid = Grid::new(n);
+            let dag = run_local_dag(&sys, &mut grid, iters, (2, 2, 2)).unwrap();
+            sys.shutdown().unwrap();
+            assert!((dag.checksum - want).abs() < 1e-9, "{backend}: ablation DAG drifted");
+            for dist in [Distribution::Block, Distribution::Cyclic] {
+                let cmm: Arc<dyn CommunicationManager> =
+                    Arc::new(ThreadsCommunicationManager::new());
+                let mut handles = Vec::new();
+                for (pos, im) in local_world(world).into_iter().enumerate() {
+                    let cmm = cmm.clone();
+                    let backend = backend.to_string();
+                    handles.push(std::thread::spawn(move || {
+                        let sys = system_for(&backend);
+                        let ranks: Vec<u32> = (0..world as u32).collect();
+                        let got =
+                            run_hdarray(cmm, &sys, pos, &ranks, dist, n, iters).unwrap();
+                        sys.shutdown().unwrap();
+                        im.barrier().unwrap();
+                        got
+                    }));
+                }
+                let sums: Vec<Option<f64>> =
+                    handles.into_iter().map(|h| h.join().unwrap()).collect();
+                assert!(sums[1].is_none(), "non-root must not gather");
+                let got = sums[0].expect("root assembles the global array");
+                assert_eq!(got, want32, "{backend}/{dist:?}: not bitwise-equal to reference");
+            }
+        }
     }
 
     #[test]

@@ -14,10 +14,14 @@
 //! - [`serve`] — the ROADMAP north-star composition: a multi-instance
 //!   inference serving tier (sharded router + continuous-batching
 //!   workers) with a built-in verifying closed-loop client.
+//! - [`stencil`] — arbitrary-radius 1-D stencil over the hdarray
+//!   frontend: declared distribution, derived halos, bitwise-verified
+//!   against the sequential reference.
 
 pub mod fibonacci;
 pub mod inference;
 pub mod jacobi;
 pub mod pingpong;
 pub mod serve;
+pub mod stencil;
 pub mod taskfarm;

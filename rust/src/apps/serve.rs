@@ -30,10 +30,11 @@ use crate::core::ids::MemorySpaceId;
 use crate::core::instance::{InstanceManager, InstanceTemplate};
 use crate::core::memory::LocalMemorySlot;
 use crate::core::topology::TopologyRequirements;
+use crate::frontends::collectives::ReduceOp;
 use crate::frontends::deployment::{deploy, Deployment, DeploymentConfig};
 use crate::frontends::serving::{
     build_mesh, payload_f32, ElasticController, RouterShard, ServingConfig, ServingNode,
-    ServingRole, ServingWorker, ST_OK,
+    ServingRole, ServingWorker, WorkerStats, ST_OK,
 };
 use crate::runtime::batcher::BatchExecutor;
 use crate::util::backoff::Backoff;
@@ -92,6 +93,12 @@ pub struct ServeReport {
     /// Elastic activation events (scale-out, scale-in).
     pub scale_out_events: u64,
     pub scale_in_events: u64,
+    /// Mesh-wide worker counters, tree-allreduced at teardown (the
+    /// distributed reduction the ROADMAP names for the router's stats).
+    pub mesh_requests: u64,
+    pub mesh_responses: u64,
+    pub mesh_malformed: u64,
+    pub mesh_exec_errors: u64,
     /// Wall-clock seconds for this instance's whole run.
     pub elapsed_s: f64,
 }
@@ -154,6 +161,10 @@ pub fn run(
             "serving needs at least one worker (launch with --np 2 or more)".into(),
         ));
     }
+    // Tree overlay for the teardown stats allreduce — built here, at the
+    // same program point on every member (collective bring-up), and wired
+    // to the deployment quarantine so a dead rank is a typed error.
+    let mut coll = d.collectives(Arc::clone(cmm), 0x5E, 4096, alloc)?;
 
     if !d.is_root {
         let node = build_mesh(
@@ -170,7 +181,18 @@ pub fn run(
                 "worker role resolved to a non-worker node".into(),
             ));
         };
-        worker_loop(&mut d, worker)?;
+        let wstats = worker_loop(&mut d, worker)?;
+        // Fold this worker's counters into the mesh totals (the root
+        // contributes zeros); every member learns the same sums.
+        coll.allreduce(
+            &[
+                wstats.requests as f64,
+                wstats.responses as f64,
+                wstats.malformed as f64,
+                wstats.exec_errors as f64,
+            ],
+            ReduceOp::Sum,
+        )?;
         // Exit in lockstep with the root's post-shutdown barrier.
         im.barrier()?;
         return Ok(None);
@@ -211,6 +233,9 @@ pub fn run(
     match closed_loop(&mut router, params) {
         Ok(client) => {
             d.shutdown_workers()?;
+            // Workers enter the stats allreduce once released from their
+            // serve loops; the root contributes zeros and reads the sums.
+            let mesh = coll.allreduce(&[0.0; 4], ReduceOp::Sum)?;
             im.barrier()?;
             let rs = router.stats();
             let (scale_out_events, scale_in_events) = elastic
@@ -228,6 +253,10 @@ pub fn run(
                 goodput_rps: client.goodput_rps,
                 scale_out_events,
                 scale_in_events,
+                mesh_requests: mesh[0] as u64,
+                mesh_responses: mesh[1] as u64,
+                mesh_malformed: mesh[2] as u64,
+                mesh_exec_errors: mesh[3] as u64,
                 elapsed_s: t0.elapsed().as_secs_f64(),
             }))
         }
@@ -240,6 +269,10 @@ pub fn run(
             // being silently swallowed.
             match d.shutdown_workers() {
                 Ok(()) => {
+                    // Released workers still enter the stats allreduce;
+                    // join it best-effort so they are not left waiting
+                    // out their collective deadline.
+                    let _ = coll.allreduce(&[0.0; 4], ReduceOp::Sum);
                     let _ = im.barrier();
                     Err(e)
                 }
@@ -254,7 +287,8 @@ pub fn run(
 
 /// Worker side: interleave the RPC control plane (so the shutdown call
 /// is observed) with the serving data plane, then drain the batcher.
-fn worker_loop(d: &mut Deployment, mut worker: ServingWorker) -> Result<()> {
+/// Returns the final worker counters (for the mesh stats allreduce).
+fn worker_loop(d: &mut Deployment, mut worker: ServingWorker) -> Result<WorkerStats> {
     let mut backoff = Backoff::new();
     loop {
         let served = d.mesh.server.try_serve_one()?;
@@ -268,8 +302,7 @@ fn worker_loop(d: &mut Deployment, mut worker: ServingWorker) -> Result<()> {
             backoff.reset();
         }
     }
-    worker.shutdown()?;
-    Ok(())
+    worker.shutdown()
 }
 
 struct ClientOutcome {
@@ -389,5 +422,11 @@ mod tests {
         assert_eq!(r.checksum_failures, 0);
         assert!(r.goodput_rps > 0.0);
         assert!(r.p50_ms >= 0.0 && r.p99_ms >= r.p50_ms);
+        // The allreduced mesh totals must account for every completed
+        // request: each was ingested and answered by exactly one worker.
+        assert_eq!(r.mesh_requests, 96);
+        assert_eq!(r.mesh_responses, 96);
+        assert_eq!(r.mesh_malformed, 0);
+        assert_eq!(r.mesh_exec_errors, 0);
     }
 }

@@ -1,0 +1,862 @@
+//! Tree collectives over the instance mesh (DESIGN.md §11).
+//!
+//! Allreduce / broadcast / gather as **binomial-tree overlays**: every
+//! tree edge is a private SPSC channel pair (one up-link, one down-link)
+//! created collectively at build time under the reserved
+//! [`COLLECTIVES_TAG_BASE`] namespace. No hub barrier is involved in the
+//! data path — a reduction over N ranks is `O(log N)` channel hops, the
+//! same overlay shape HPC runtimes use over point-to-point transports.
+//!
+//! **Tree shape.** Positions are indices into the caller-supplied rank
+//! list (position 0 is the root). The parent of position `i > 0` is
+//! `i & (i - 1)` (clear the lowest set bit); the children of `i` are
+//! `i + 2^j` for `2^j` below `i`'s lowest set bit (unbounded for the
+//! root), clipped to the world size. Every instance walks **all** edges
+//! in one canonical order at build time — slot exchanges are collective,
+//! so bystanders participate in each edge's exchange with zero slots.
+//!
+//! **Never a hang.** Every blocking point (ring full on push, ring empty
+//! on pop) spins with escalating [`Backoff`] under a deadline and an
+//! optional *liveness probe* (the deployment quarantine from DESIGN.md
+//! §9). A departed participant turns the wait into a typed
+//! [`HicrError::PeerLost`]; deadline expiry turns it into a typed
+//! [`HicrError::Timeout`]. Once a participant is known dead the failure
+//! is sticky: subsequent operations fail fast without touching rings.
+//!
+//! Frames are self-describing (`seq`, op word, payload length) and
+//! validated on receipt, so a desynchronised peer produces a loud
+//! [`HicrError::Transport`] instead of silent corruption.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::core::communication::CommunicationManager;
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::Tag;
+use crate::core::memory::LocalMemorySlot;
+use crate::frontends::channels::{SpscConsumer, SpscProducer};
+use crate::util::backoff::Backoff;
+
+/// Reserved high-bit tag namespace for collective tree edges
+/// (ARCHITECTURE.md §2; disjointness is xlint-enforced).
+pub const COLLECTIVES_TAG_BASE: u64 = 0xC01 << 52;
+
+/// Positions must fit the 8-bit fields of the edge-tag layout.
+pub const MAX_COLLECTIVE_POS: usize = 0xFF;
+
+/// Ring depth per tree edge. Two slots absorb the root's pipelined
+/// down-phase while a child is still draining the previous op.
+const RING_CAPACITY: u64 = 2;
+
+/// Frame header: `seq: u64` · `op: u32` · `payload_len: u32`.
+const HEADER_BYTES: usize = 16;
+
+/// How many backoff waits between liveness probes while blocked.
+const PROBE_EVERY: u32 = 32;
+
+/// Op words (validated on receipt; reduce ops are encoded in bits 8..).
+const OP_REDUCE_UP: u32 = 1;
+const OP_REDUCE_DOWN: u32 = 2;
+const OP_BCAST: u32 = 3;
+const OP_GATHER: u32 = 4;
+
+/// Combining operator for [`Collectives::allreduce`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// Elementwise sum.
+    Sum,
+    /// Elementwise minimum.
+    Min,
+    /// Elementwise maximum.
+    Max,
+}
+
+impl ReduceOp {
+    fn code(self) -> u32 {
+        match self {
+            ReduceOp::Sum => 0,
+            ReduceOp::Min => 1,
+            ReduceOp::Max => 2,
+        }
+    }
+
+    fn combine(self, acc: &mut [f64], other: &[f64]) {
+        for (a, b) in acc.iter_mut().zip(other) {
+            match self {
+                ReduceOp::Sum => *a += *b,
+                ReduceOp::Min => *a = a.min(*b),
+                ReduceOp::Max => *a = a.max(*b),
+            }
+        }
+    }
+}
+
+/// Parent position of `pos` in the binomial tree (`None` for the root).
+pub fn tree_parent(pos: usize) -> Option<usize> {
+    if pos == 0 {
+        None
+    } else {
+        Some(pos & (pos - 1))
+    }
+}
+
+/// Children of `pos` in an `n`-position binomial tree, ascending.
+pub fn tree_children(pos: usize, n: usize) -> Vec<usize> {
+    let limit = if pos == 0 { n } else { pos & pos.wrapping_neg() };
+    let mut out = Vec::new();
+    let mut step = 1usize;
+    while step < limit {
+        let c = pos + step;
+        if c >= n {
+            break;
+        }
+        out.push(c);
+        step <<= 1;
+    }
+    out
+}
+
+/// Tag for one directed edge channel. Layout inside the namespace:
+/// comm id (16 b at 20) · parent pos (8 b at 12) · child pos (8 b at 4)
+/// · lane bit at 0 (0 = up toward the parent, 1 = down toward the
+/// child). Injective for positions ≤ [`MAX_COLLECTIVE_POS`].
+fn edge_tag(comm_id: u16, parent: usize, child: usize, down: bool) -> Tag {
+    Tag(COLLECTIVES_TAG_BASE
+        | (comm_id as u64) << 20
+        | (parent as u64) << 12
+        | (child as u64) << 4
+        | down as u64)
+}
+
+/// One directed inbound edge: the consumer end plus the peer's position
+/// (for liveness attribution in error messages).
+struct InEdge {
+    peer: usize,
+    rx: SpscConsumer,
+}
+
+/// One directed outbound edge: the producer end plus the peer position.
+struct OutEdge {
+    peer: usize,
+    tx: SpscProducer,
+}
+
+/// Liveness state shared by every blocking wait: the sticky lost set,
+/// the optional probe, the participant ranks, and the wait deadline.
+/// Grouped in one struct so wait helpers can borrow it disjointly from
+/// the channel ends (`&mut self.up_rx[i]` + `&mut self.guard`).
+struct LiveGuard {
+    ranks: Vec<u32>,
+    lost: HashSet<u32>,
+    probe: Option<Box<dyn FnMut() -> Result<Vec<u32>> + Send>>,
+    deadline: Duration,
+}
+
+impl LiveGuard {
+    /// Fail fast if any participant is already quarantined.
+    fn check(&self) -> Result<()> {
+        if let Some(dead) = self.ranks.iter().find(|r| self.lost.contains(r)) {
+            return Err(HicrError::PeerLost(format!(
+                "collective participant rank {dead} is quarantined"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Run the probe (if any) and merge departures into the sticky set;
+    /// returns the typed error if a participant died.
+    fn probe(&mut self) -> Result<()> {
+        if let Some(p) = self.probe.as_mut() {
+            for r in p()? {
+                self.lost.insert(r);
+            }
+        }
+        self.check()
+    }
+}
+
+/// Binomial-tree collectives over one ordered rank list.
+///
+/// Build is collective: every instance in `ranks` must call
+/// [`Collectives::build`] with the same `comm_id`, rank list and
+/// `max_payload` at the same program point (slot exchanges pair up
+/// positionally). Operations are collective too — every live rank must
+/// call the same op in the same order; sequence numbers in the frames
+/// catch drift loudly.
+pub struct Collectives {
+    me: usize,
+    world: usize,
+    /// Toward the parent (absent on the root).
+    up_tx: Option<OutEdge>,
+    /// From the parent (absent on the root).
+    down_rx: Option<InEdge>,
+    /// From each child, ascending child position.
+    up_rx: Vec<InEdge>,
+    /// Toward each child, ascending child position.
+    down_tx: Vec<OutEdge>,
+    guard: LiveGuard,
+    max_payload: usize,
+    msg_size: usize,
+    seq: u64,
+    scratch: Vec<u8>,
+}
+
+impl Collectives {
+    /// Collectively build the tree overlay for `comm_id` over `ranks`.
+    /// `me_pos` indexes this instance in `ranks`; `alloc` provides the
+    /// ring memory (consumer-owned, per DESIGN.md §3).
+    pub fn build(
+        cmm: Arc<dyn CommunicationManager>,
+        comm_id: u16,
+        me_pos: usize,
+        ranks: &[u32],
+        max_payload: usize,
+        mut alloc: impl FnMut(usize) -> Result<LocalMemorySlot>,
+    ) -> Result<Collectives> {
+        let n = ranks.len();
+        if n == 0 || me_pos >= n {
+            return Err(HicrError::InvalidState(format!(
+                "position {me_pos} outside a {n}-rank collective world"
+            )));
+        }
+        if n - 1 > MAX_COLLECTIVE_POS {
+            return Err(HicrError::Bounds(format!(
+                "collective world of {n} exceeds {} positions",
+                MAX_COLLECTIVE_POS + 1
+            )));
+        }
+        let msg_size = HEADER_BYTES + max_payload;
+        let mut up_tx = None;
+        let mut down_rx = None;
+        let mut up_rx = Vec::new();
+        let mut down_tx = Vec::new();
+        // Canonical edge walk: ascending child position, up-lane before
+        // down-lane. Every instance performs the same exchanges in the
+        // same order; non-parties volunteer zero slots.
+        for child in 1..n {
+            let parent = child & (child - 1);
+            let up = edge_tag(comm_id, parent, child, false);
+            let down = edge_tag(comm_id, parent, child, true);
+            if me_pos == parent {
+                let rx = SpscConsumer::create(
+                    cmm.as_ref(),
+                    alloc(RING_CAPACITY as usize * msg_size)?,
+                    alloc(16)?,
+                    up,
+                    0,
+                    msg_size,
+                    RING_CAPACITY,
+                )?;
+                up_rx.push(InEdge { peer: child, rx });
+                let tx =
+                    SpscProducer::create(cmm.clone(), down, 0, msg_size, RING_CAPACITY, alloc(8)?)?;
+                down_tx.push(OutEdge { peer: child, tx });
+            } else if me_pos == child {
+                let tx =
+                    SpscProducer::create(cmm.clone(), up, 0, msg_size, RING_CAPACITY, alloc(8)?)?;
+                up_tx = Some(OutEdge { peer: parent, tx });
+                let rx = SpscConsumer::create(
+                    cmm.as_ref(),
+                    alloc(RING_CAPACITY as usize * msg_size)?,
+                    alloc(16)?,
+                    down,
+                    0,
+                    msg_size,
+                    RING_CAPACITY,
+                )?;
+                down_rx = Some(InEdge { peer: parent, rx });
+            } else {
+                cmm.exchange_global_slots(up, &[])?;
+                cmm.exchange_global_slots(down, &[])?;
+            }
+        }
+        Ok(Collectives {
+            me: me_pos,
+            world: n,
+            up_tx,
+            down_rx,
+            up_rx,
+            down_tx,
+            guard: LiveGuard {
+                ranks: ranks.to_vec(),
+                lost: HashSet::new(),
+                probe: None,
+                deadline: Duration::from_secs(30),
+            },
+            max_payload,
+            msg_size,
+            seq: 0,
+            scratch: vec![0u8; msg_size],
+        })
+    }
+
+    /// This instance's position in the tree (0 = root).
+    pub fn position(&self) -> usize {
+        self.me
+    }
+
+    /// Number of participants.
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Replace the default 30 s wait deadline.
+    pub fn set_deadline(&mut self, d: Duration) {
+        self.guard.deadline = d;
+    }
+
+    /// Install a liveness probe consulted while a wait is blocked; it
+    /// returns the ranks known to have departed (e.g.
+    /// `InstanceManager::departed_instances` or the deployment
+    /// quarantine set).
+    pub fn set_liveness(&mut self, probe: Box<dyn FnMut() -> Result<Vec<u32>> + Send>) {
+        self.guard.probe = Some(probe);
+    }
+
+    /// Quarantine `rank` out of band: every subsequent operation fails
+    /// fast with [`HicrError::PeerLost`] if it participates here.
+    pub fn note_lost(&mut self, rank: u32) {
+        self.guard.lost.insert(rank);
+    }
+
+    /// Elementwise tree allreduce. Returns the combined vector —
+    /// bitwise identical on every rank (the root alone combines, in
+    /// ascending child order, then broadcasts the result down).
+    pub fn allreduce(&mut self, vals: &[f64], op: ReduceOp) -> Result<Vec<f64>> {
+        let bytes = vals.len() * 8;
+        if bytes > self.max_payload {
+            return Err(HicrError::Bounds(format!(
+                "allreduce of {bytes} B exceeds max_payload {}",
+                self.max_payload
+            )));
+        }
+        self.guard.check()?;
+        self.seq += 1;
+        let seq = self.seq;
+        let up_op = OP_REDUCE_UP | op.code() << 8;
+        let down_op = OP_REDUCE_DOWN | op.code() << 8;
+
+        // Reduce up: combine children's subtree sums into ours.
+        let mut acc = vals.to_vec();
+        for e in &mut self.up_rx {
+            let payload =
+                recv_frame(&mut e.rx, e.peer, seq, up_op, &mut self.guard, &mut self.scratch)?;
+            if payload.len() != bytes {
+                return Err(HicrError::Transport(format!(
+                    "allreduce frame from pos {}: {} B payload, expected {bytes}",
+                    e.peer,
+                    payload.len()
+                )));
+            }
+            let other = decode_f64s(payload);
+            op.combine(&mut acc, &other);
+        }
+        let result = if let Some(up) = self.up_tx.as_mut() {
+            let frame = encode_frame(seq, up_op, &encode_f64s(&acc));
+            send_frame(&mut up.tx, up.peer, &frame, &mut self.guard)?;
+            let down = self.down_rx.as_mut().expect("non-root has a parent edge");
+            let payload = recv_frame(
+                &mut down.rx,
+                down.peer,
+                seq,
+                down_op,
+                &mut self.guard,
+                &mut self.scratch,
+            )?;
+            if payload.len() != bytes {
+                return Err(HicrError::Transport(format!(
+                    "allreduce result from pos {}: {} B payload, expected {bytes}",
+                    down.peer,
+                    payload.len()
+                )));
+            }
+            decode_f64s(payload)
+        } else {
+            acc
+        };
+        let frame = encode_frame(seq, down_op, &encode_f64s(&result));
+        for e in &mut self.down_tx {
+            send_frame(&mut e.tx, e.peer, &frame, &mut self.guard)?;
+        }
+        Ok(result)
+    }
+
+    /// Tree broadcast of the root's `payload`. Every rank passes the
+    /// root's bytes (non-root callers' `payload` is ignored); returns
+    /// the broadcast bytes on every rank.
+    pub fn broadcast(&mut self, payload: &[u8]) -> Result<Vec<u8>> {
+        if payload.len() > self.max_payload {
+            return Err(HicrError::Bounds(format!(
+                "broadcast of {} B exceeds max_payload {}",
+                payload.len(),
+                self.max_payload
+            )));
+        }
+        self.guard.check()?;
+        self.seq += 1;
+        let seq = self.seq;
+        let bytes = if let Some(down) = self.down_rx.as_mut() {
+            recv_frame(
+                &mut down.rx,
+                down.peer,
+                seq,
+                OP_BCAST,
+                &mut self.guard,
+                &mut self.scratch,
+            )?
+            .to_vec()
+        } else {
+            payload.to_vec()
+        };
+        let frame = encode_frame(seq, OP_BCAST, &bytes);
+        for e in &mut self.down_tx {
+            send_frame(&mut e.tx, e.peer, &frame, &mut self.guard)?;
+        }
+        Ok(bytes)
+    }
+
+    /// Tree gather: every rank contributes `local`; the root returns
+    /// `Some(entries)` ordered by position, everyone else `None`.
+    /// Cardinality and position sets are validated — a missing or
+    /// duplicated contribution is a typed [`HicrError::Collective`].
+    pub fn gather(&mut self, local: &[u8]) -> Result<Option<Vec<Vec<u8>>>> {
+        self.guard.check()?;
+        self.seq += 1;
+        let seq = self.seq;
+        let mut entries: Vec<(u32, Vec<u8>)> = vec![(self.me as u32, local.to_vec())];
+        for e in &mut self.up_rx {
+            let payload = recv_frame(
+                &mut e.rx,
+                e.peer,
+                seq,
+                OP_GATHER,
+                &mut self.guard,
+                &mut self.scratch,
+            )?;
+            entries.extend(decode_entries(payload)?);
+        }
+        if let Some(up) = self.up_tx.as_mut() {
+            let blob = encode_entries(&entries);
+            if blob.len() > self.max_payload {
+                return Err(HicrError::Bounds(format!(
+                    "gather subtree blob of {} B exceeds max_payload {}",
+                    blob.len(),
+                    self.max_payload
+                )));
+            }
+            let frame = encode_frame(seq, OP_GATHER, &blob);
+            send_frame(&mut up.tx, up.peer, &frame, &mut self.guard)?;
+            return Ok(None);
+        }
+        if entries.len() != self.world {
+            return Err(HicrError::Collective(format!(
+                "gather produced {} entries for a {}-rank world",
+                entries.len(),
+                self.world
+            )));
+        }
+        entries.sort_by_key(|(pos, _)| *pos);
+        for (i, (pos, _)) in entries.iter().enumerate() {
+            if *pos as usize != i {
+                return Err(HicrError::Collective(format!(
+                    "gather entry {i} came from position {pos}"
+                )));
+            }
+        }
+        Ok(Some(entries.into_iter().map(|(_, b)| b).collect()))
+    }
+
+    /// Gather to the root, then broadcast the assembled entries back
+    /// down: every rank returns all contributions ordered by position.
+    pub fn allgather(&mut self, local: &[u8]) -> Result<Vec<Vec<u8>>> {
+        let blob = match self.gather(local)? {
+            Some(entries) => {
+                let tagged: Vec<(u32, Vec<u8>)> = entries
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, b)| (i as u32, b))
+                    .collect();
+                encode_entries(&tagged)
+            }
+            None => Vec::new(),
+        };
+        let blob = self.broadcast(&blob)?;
+        let mut entries = decode_entries(&blob)?;
+        entries.sort_by_key(|(pos, _)| *pos);
+        if entries.len() != self.world {
+            return Err(HicrError::Collective(format!(
+                "allgather decoded {} entries for a {}-rank world",
+                entries.len(),
+                self.world
+            )));
+        }
+        Ok(entries.into_iter().map(|(_, b)| b).collect())
+    }
+}
+
+/// Blocking-with-deadline push of one framed message.
+fn send_frame(
+    tx: &mut SpscProducer,
+    peer: usize,
+    frame: &[u8],
+    guard: &mut LiveGuard,
+) -> Result<()> {
+    let start = Instant::now();
+    let mut backoff = Backoff::new();
+    let mut since_probe = 0u32;
+    loop {
+        if tx.push(frame)? {
+            return Ok(());
+        }
+        since_probe += 1;
+        if since_probe >= PROBE_EVERY {
+            since_probe = 0;
+            guard.probe()?;
+        }
+        if start.elapsed() > guard.deadline {
+            return Err(HicrError::Timeout(format!(
+                "collective send to pos {peer} stalled past {:?} (ring full)",
+                guard.deadline
+            )));
+        }
+        backoff.wait();
+    }
+}
+
+/// Blocking-with-deadline pop of one framed message into `scratch`;
+/// validates `seq`/`op` and returns the payload slice.
+fn recv_frame<'s>(
+    rx: &mut SpscConsumer,
+    peer: usize,
+    seq: u64,
+    op: u32,
+    guard: &mut LiveGuard,
+    scratch: &'s mut [u8],
+) -> Result<&'s [u8]> {
+    let start = Instant::now();
+    let mut backoff = Backoff::new();
+    let mut since_probe = 0u32;
+    loop {
+        if rx.pop(scratch)? {
+            break;
+        }
+        since_probe += 1;
+        if since_probe >= PROBE_EVERY {
+            since_probe = 0;
+            guard.probe()?;
+        }
+        if start.elapsed() > guard.deadline {
+            return Err(HicrError::Timeout(format!(
+                "collective receive from pos {peer} stalled past {:?}",
+                guard.deadline
+            )));
+        }
+        backoff.wait();
+    }
+    let (got_seq, got_op, payload_len) = decode_header(scratch)?;
+    if got_seq != seq || got_op != op {
+        return Err(HicrError::Transport(format!(
+            "collective frame from pos {peer} out of step: \
+             seq {got_seq} op {got_op:#x}, expected seq {seq} op {op:#x}"
+        )));
+    }
+    Ok(&scratch[HEADER_BYTES..HEADER_BYTES + payload_len])
+}
+
+fn encode_frame(seq: u64, op: u32, payload: &[u8]) -> Vec<u8> {
+    let mut frame = Vec::with_capacity(HEADER_BYTES + payload.len());
+    frame.extend_from_slice(&seq.to_le_bytes());
+    frame.extend_from_slice(&op.to_le_bytes());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(payload);
+    frame
+}
+
+fn decode_header(frame: &[u8]) -> Result<(u64, u32, usize)> {
+    if frame.len() < HEADER_BYTES {
+        return Err(HicrError::Transport(format!(
+            "collective frame of {} B is shorter than its header",
+            frame.len()
+        )));
+    }
+    let seq = u64::from_le_bytes(frame[0..8].try_into().expect("8-byte slice"));
+    let op = u32::from_le_bytes(frame[8..12].try_into().expect("4-byte slice"));
+    let len = u32::from_le_bytes(frame[12..16].try_into().expect("4-byte slice")) as usize;
+    if HEADER_BYTES + len > frame.len() {
+        return Err(HicrError::Transport(format!(
+            "collective frame declares {len} B payload beyond its {} B buffer",
+            frame.len()
+        )));
+    }
+    Ok((seq, op, len))
+}
+
+fn encode_f64s(vals: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn decode_f64s(bytes: &[u8]) -> Vec<f64> {
+    bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+        .collect()
+}
+
+/// Gather wire form: `count: u32` then per entry
+/// `pos: u32 · len: u32 · bytes`.
+fn encode_entries(entries: &[(u32, Vec<u8>)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for (pos, bytes) in entries {
+        out.extend_from_slice(&pos.to_le_bytes());
+        out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(bytes);
+    }
+    out
+}
+
+fn decode_entries(blob: &[u8]) -> Result<Vec<(u32, Vec<u8>)>> {
+    fn take<'a>(blob: &'a [u8], at: &mut usize, n: usize) -> Result<&'a [u8]> {
+        let end = at
+            .checked_add(n)
+            .filter(|e| *e <= blob.len())
+            .ok_or_else(|| HicrError::Transport("gather blob truncated".into()))?;
+        let s = &blob[*at..end];
+        *at = end;
+        Ok(s)
+    }
+    let mut at = 0usize;
+    let count =
+        u32::from_le_bytes(take(blob, &mut at, 4)?.try_into().expect("4-byte slice")) as usize;
+    let mut out = Vec::with_capacity(count.min(1024));
+    for _ in 0..count {
+        let pos = u32::from_le_bytes(take(blob, &mut at, 4)?.try_into().expect("4-byte slice"));
+        let len =
+            u32::from_le_bytes(take(blob, &mut at, 4)?.try_into().expect("4-byte slice")) as usize;
+        out.push((pos, take(blob, &mut at, len)?.to_vec()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::threads::ThreadsCommunicationManager;
+    use crate::core::ids::MemorySpaceId;
+    use crate::core::instance::testworld::local_world;
+    use crate::core::instance::InstanceManager;
+    use crate::util::rng::Rng;
+
+    fn alloc(len: usize) -> Result<LocalMemorySlot> {
+        LocalMemorySlot::alloc(MemorySpaceId(1), len)
+    }
+
+    /// Tree shape sanity: parent/children agree, every non-root has a
+    /// parent that lists it as a child.
+    #[test]
+    fn binomial_tree_is_consistent() {
+        for n in 1..=32 {
+            for pos in 0..n {
+                for c in tree_children(pos, n) {
+                    assert_eq!(tree_parent(c), Some(pos), "child {c} of {pos} (n={n})");
+                }
+                if let Some(p) = tree_parent(pos) {
+                    assert!(
+                        tree_children(p, n).contains(&pos),
+                        "{pos} missing from children of {p} (n={n})"
+                    );
+                }
+            }
+            // Every position is reached exactly once from the root.
+            let mut seen = vec![false; n];
+            let mut stack = vec![0usize];
+            while let Some(p) = stack.pop() {
+                assert!(!seen[p]);
+                seen[p] = true;
+                stack.extend(tree_children(p, n));
+            }
+            assert!(seen.iter().all(|s| *s), "tree over {n} does not span");
+        }
+    }
+
+    /// Run `body(world, pos, collectives)` on every rank of an
+    /// `n`-instance shared-memory testworld.
+    fn with_world<F>(n: usize, comm_id: u16, max_payload: usize, body: F)
+    where
+        F: Fn(usize, usize, &mut Collectives) + Send + Sync + 'static,
+    {
+        let cmm: Arc<dyn CommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
+        let ranks: Vec<u32> = (0..n as u32).collect();
+        let body = Arc::new(body);
+        let mut handles = Vec::new();
+        for (pos, im) in local_world(n).into_iter().enumerate() {
+            let cmm = cmm.clone();
+            let ranks = ranks.clone();
+            let body = body.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut coll =
+                    Collectives::build(cmm, comm_id, pos, &ranks, max_payload, alloc).unwrap();
+                body(n, pos, &mut coll);
+                im.barrier().unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    /// Allreduce vs a local oracle on 2/4/8-instance worlds, all ops,
+    /// several rounds (exercises frame sequencing), seeded values.
+    #[test]
+    fn allreduce_matches_oracle() {
+        for &n in &[2usize, 4, 8] {
+            with_world(n, 10 + n as u16, 1024, move |world, pos, coll| {
+                let mut rng = Rng::new(0xA11E_EDCE + pos as u64);
+                for round in 0..4u64 {
+                    let vals: Vec<f64> = (0..16).map(|_| rng.f32() as f64).collect();
+                    // The oracle every rank can compute: contributions
+                    // are a pure function of (pos, round, draw index).
+                    let mut oracle = vec![0.0f64; 16];
+                    for p in 0..world {
+                        let mut r = Rng::new(0xA11E_EDCE + p as u64);
+                        for rd in 0..=round {
+                            let draw: Vec<f64> = (0..16).map(|_| r.f32() as f64).collect();
+                            if rd == round {
+                                for (o, d) in oracle.iter_mut().zip(&draw) {
+                                    *o += d;
+                                }
+                            }
+                        }
+                    }
+                    let sum = coll.allreduce(&vals, ReduceOp::Sum).unwrap();
+                    for (got, want) in sum.iter().zip(&oracle) {
+                        assert!(
+                            (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                            "sum {got} vs oracle {want} (n={world} pos={pos})"
+                        );
+                    }
+                    // Min/Max over injectively-coded values are exact.
+                    let coded = vec![pos as f64 * 10.0 + round as f64];
+                    let min = coll.allreduce(&coded, ReduceOp::Min).unwrap();
+                    let max = coll.allreduce(&coded, ReduceOp::Max).unwrap();
+                    assert_eq!(min[0], round as f64);
+                    assert_eq!(max[0], (world - 1) as f64 * 10.0 + round as f64);
+                }
+            });
+        }
+    }
+
+    /// Broadcast and gather round-trip exact bytes on 2/4/8 worlds.
+    #[test]
+    fn broadcast_and_gather_match_oracle() {
+        for &n in &[2usize, 4, 8] {
+            with_world(n, 40 + n as u16, 4096, move |world, pos, coll| {
+                for round in 0..3u8 {
+                    let root_msg: Vec<u8> = (0..63).map(|i| i ^ round).collect();
+                    let got = coll
+                        .broadcast(if pos == 0 { &root_msg } else { &[] })
+                        .unwrap();
+                    assert_eq!(got, root_msg, "broadcast n={world} pos={pos}");
+
+                    let mine: Vec<u8> = vec![pos as u8; pos + 1];
+                    let gathered = coll.gather(&mine).unwrap();
+                    if pos == 0 {
+                        let entries = gathered.expect("root gets the gather");
+                        assert_eq!(entries.len(), world);
+                        for (p, e) in entries.iter().enumerate() {
+                            assert_eq!(e, &vec![p as u8; p + 1], "gather entry {p}");
+                        }
+                    } else {
+                        assert!(gathered.is_none(), "non-root must not assemble");
+                    }
+
+                    let all = coll.allgather(&mine).unwrap();
+                    assert_eq!(all.len(), world);
+                    for (p, e) in all.iter().enumerate() {
+                        assert_eq!(e, &vec![p as u8; p + 1], "allgather entry {p}");
+                    }
+                }
+            });
+        }
+    }
+
+    /// A silent peer turns into a typed Timeout, never a hang: rank 1
+    /// builds the overlay and then walks away; rank 0's allreduce hits
+    /// its 200 ms deadline.
+    #[test]
+    fn silent_peer_is_a_typed_timeout() {
+        let cmm: Arc<dyn CommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
+        let ranks = vec![0u32, 1];
+        let mut handles = Vec::new();
+        for (pos, im) in local_world(2).into_iter().enumerate() {
+            let cmm = cmm.clone();
+            let ranks = ranks.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut coll = Collectives::build(cmm, 77, pos, &ranks, 256, alloc).unwrap();
+                if pos == 0 {
+                    coll.set_deadline(Duration::from_millis(200));
+                    let err = coll.allreduce(&[1.0], ReduceOp::Sum).unwrap_err();
+                    assert!(
+                        matches!(err, HicrError::Timeout(_)),
+                        "expected Timeout, got {err:?}"
+                    );
+                }
+                im.barrier().unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    /// The liveness probe converts a stall into a typed PeerLost, and
+    /// the quarantine is sticky: the next op fails fast.
+    #[test]
+    fn departed_peer_is_typed_and_sticky() {
+        let cmm: Arc<dyn CommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
+        let ranks = vec![0u32, 1];
+        let mut handles = Vec::new();
+        for (pos, im) in local_world(2).into_iter().enumerate() {
+            let cmm = cmm.clone();
+            let ranks = ranks.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut coll = Collectives::build(cmm, 78, pos, &ranks, 256, alloc).unwrap();
+                if pos == 0 {
+                    coll.set_liveness(Box::new(|| Ok(vec![1])));
+                    let err = coll.allreduce(&[1.0], ReduceOp::Sum).unwrap_err();
+                    assert!(
+                        matches!(err, HicrError::PeerLost(_)),
+                        "expected PeerLost, got {err:?}"
+                    );
+                    let again = coll.broadcast(&[0]).unwrap_err();
+                    assert!(
+                        matches!(again, HicrError::PeerLost(_)),
+                        "quarantine must be sticky, got {again:?}"
+                    );
+                }
+                im.barrier().unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    /// Frame validation: a desynchronised op word is a loud Transport
+    /// error, not silent reinterpretation.
+    #[test]
+    fn frame_validation_rejects_desync() {
+        let frame = encode_frame(7, OP_BCAST, &[1, 2, 3]);
+        let (seq, op, len) = decode_header(&frame).unwrap();
+        assert_eq!((seq, op, len), (7, OP_BCAST, 3));
+        assert!(decode_header(&frame[..8]).is_err());
+        let entries = vec![(0u32, vec![9u8]), (3u32, vec![])];
+        assert_eq!(decode_entries(&encode_entries(&entries)).unwrap(), entries);
+        assert!(decode_entries(&encode_entries(&entries)[..6]).is_err());
+    }
+}

@@ -41,6 +41,18 @@ fn tag_for(id: u64) -> Result<Tag> {
     Ok(Tag(DATAOBJECT_TAG_BASE | id))
 }
 
+/// Derive an object id inside a reserved *family* of the 48-bit id
+/// space: `family (8 b at 40) · a (16 b at 24) · b (16 b at 8) ·
+/// c (8 b at 0)` — injective by construction, always within
+/// [`MAX_DATAOBJECT_ID`]. Frontends that gate dataflow tasks on
+/// generated keys (e.g. hdarray halo messages, keyed per
+/// `(array, sweep, link)`) carve their keys from here so a derived key
+/// can never alias a user-published object in another family. Family
+/// `0x00` is reserved for plain user-chosen ids.
+pub fn derived_id(family: u8, a: u16, b: u16, c: u8) -> u64 {
+    (family as u64) << 40 | (a as u64) << 24 | (b as u64) << 8 | c as u64
+}
+
 /// A published local data object (publisher side).
 pub struct DataObject {
     pub id: u64,
@@ -223,6 +235,18 @@ mod tests {
 
     fn slot_with(data: &[u8]) -> LocalMemorySlot {
         LocalMemorySlot::register_vec(MemorySpaceId(1), data.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn derived_ids_stay_in_range_and_injective() {
+        assert!(derived_id(u8::MAX, u16::MAX, u16::MAX, u8::MAX) <= MAX_DATAOBJECT_ID);
+        // Field boundaries don't bleed into each other.
+        assert_ne!(derived_id(1, 0, 0, 0), derived_id(0, u16::MAX, u16::MAX, u8::MAX));
+        assert_ne!(derived_id(0, 1, 0, 0), derived_id(0, 0, u16::MAX, u8::MAX));
+        assert_ne!(derived_id(0, 0, 1, 0), derived_id(0, 0, 0, u8::MAX));
+        // Family 0 with zero coordinates is the plain id 0.
+        assert_eq!(derived_id(0, 0, 0, 7), 7);
+        assert!(tag_for(derived_id(0xDA, 3, 9, 1)).is_ok());
     }
 
     #[test]

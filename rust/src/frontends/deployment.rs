@@ -231,6 +231,47 @@ impl Deployment {
         self.mesh.mark_peer_lost(rank);
     }
 
+    /// Build a tree-collective overlay over this deployment's
+    /// membership (a distinct `comm_id` per overlay; app overlays use
+    /// ids `< 0x8000` — the high bit is reserved for hdarray-internal
+    /// trees). **Collective**: every member must call at the same
+    /// program point with identical arguments. The overlay is wired to
+    /// the deployment's quarantine: ranks already lost are pre-seeded
+    /// and later losses surface as typed
+    /// [`HicrError::PeerLost`](crate::core::error::HicrError) through
+    /// the shared lost set, never a hang.
+    pub fn collectives(
+        &self,
+        cmm: Arc<dyn CommunicationManager>,
+        comm_id: u16,
+        max_payload: usize,
+        mut alloc: impl FnMut(usize) -> Result<LocalMemorySlot>,
+    ) -> Result<crate::frontends::collectives::Collectives> {
+        let me_pos = self
+            .ranks
+            .iter()
+            .position(|&r| r == self.me)
+            .ok_or_else(|| HicrError::Instance(format!("rank {} not in membership", self.me)))?;
+        let mut coll = crate::frontends::collectives::Collectives::build(
+            cmm,
+            comm_id,
+            me_pos,
+            &self.ranks,
+            max_payload,
+            &mut alloc,
+        )?;
+        for rank in self.lost_ranks() {
+            coll.note_lost(rank);
+        }
+        let lost = Arc::clone(&self.lost);
+        coll.set_liveness(Box::new(move || {
+            let mut v: Vec<u32> = lost.lock().iter().copied().collect();
+            v.sort_unstable();
+            Ok(v)
+        }));
+        Ok(coll)
+    }
+
     /// Sorted ranks known to have departed abnormally.
     pub fn lost_ranks(&self) -> Vec<u32> {
         let mut v: Vec<u32> = self.lost.lock().iter().copied().collect();

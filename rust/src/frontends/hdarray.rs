@@ -1,0 +1,1147 @@
+//! Partitioned global `f32` array (HDArray-style; DESIGN.md §11).
+//!
+//! The user declares a [`Distribution`] over the instance mesh plus a
+//! halo `radius`; the frontend derives everything the hand-rolled jacobi
+//! pipeline used to spell out by hand:
+//!
+//! - **owner maps** — closed-form `global ↔ (part, local)` translation
+//!   for block and cyclic layouts, property-tested against brute-force
+//!   oracles below;
+//! - **halo-exchange channel pairs** — for block layouts, one SPSC link
+//!   per directed partition edge whose radius-`r` ghost region crosses
+//!   the boundary (multi-hop when `r` exceeds a neighbour's width),
+//!   created collectively under the reserved [`HDARRAY_TAG_BASE`]
+//!   namespace;
+//! - **producer/consumer DAG edges per sweep** — each sweep×block task
+//!   is gated (`spawn_dataflow` keys) on the previous sweep's blocks in
+//!   its footprint plus the halo messages covering its ghost reads, and
+//!   per-link send tasks fire as soon as the blocks feeding an outgoing
+//!   slice complete — the halo pipeline, derived instead of hand-rolled.
+//!
+//! Dataflow keys are carved from the dataobject id space via
+//! [`dataobject::derived_id`] (families `0xDA`/`0xDB`), so a generated
+//! key can never alias a user-published object. Cyclic layouts have no
+//! contiguous boundary; they synchronize sweeps with a tree
+//! [`Collectives::allgather`] instead of point-to-point halos — same
+//! kernel, same results, different derived communication plan.
+//!
+//! The double-buffer safety argument (why a halo message may overwrite
+//! a ghost region the *previous-parity* sweep read) is the
+//! producers-⊆-consumers lemma, spelled out in DESIGN.md §11.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::core::communication::CommunicationManager;
+use crate::core::error::{HicrError, Result};
+use crate::core::ids::Tag;
+use crate::core::memory::LocalMemorySlot;
+use crate::frontends::channels::{SpscConsumer, SpscProducer};
+use crate::frontends::collectives::Collectives;
+use crate::frontends::dataobject;
+use crate::frontends::tasking::TaskSystem;
+use crate::util::backoff::Backoff;
+use crate::util::witness::{classes, Lock};
+
+/// Reserved high-bit tag namespace for halo-exchange links
+/// (ARCHITECTURE.md §2; disjointness is xlint-enforced).
+pub const HDARRAY_TAG_BASE: u64 = 0x4DA << 52;
+
+/// Parts must fit the 8-bit fields of the link-tag layout.
+pub const MAX_HDARRAY_PARTS: usize = 0x100;
+
+/// Halo ring depth: at most two sweeps of skew between neighbours
+/// (matching the two buffer parities).
+const RING_CAPACITY: u64 = 2;
+
+/// Dataflow-key family for halo messages (`derived_id(0xDA, array,
+/// sweep, link)`).
+const KEY_FAMILY_HALO: u8 = 0xDA;
+/// Dataflow-key family for per-sweep block completions.
+const KEY_FAMILY_BLOCK: u8 = 0xDB;
+
+/// How the global index space maps onto parts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Distribution {
+    /// Contiguous even ranges (first `len % parts` parts one longer).
+    Block,
+    /// Round-robin: global `g` lives on part `g % parts`.
+    Cyclic,
+}
+
+/// A declared distribution: length, part count, layout, halo radius.
+#[derive(Debug, Clone, Copy)]
+pub struct Layout {
+    /// Global element count.
+    pub len: usize,
+    /// Number of parts (= participating instances).
+    pub parts: usize,
+    /// Block or cyclic placement.
+    pub dist: Distribution,
+    /// Halo radius: every sweep may read up to `radius` neighbours.
+    pub radius: usize,
+}
+
+/// One derived halo transfer: part `src` sends globals `[lo, hi)` to
+/// part `dst` (always a single contiguous slice per directed pair for
+/// block layouts — parts are ordered, so a part can only intersect one
+/// side of another part's ghost region).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HaloSlice {
+    /// Sending part.
+    pub src: usize,
+    /// Receiving part.
+    pub dst: usize,
+    /// First global index of the slice.
+    pub lo: usize,
+    /// One past the last global index.
+    pub hi: usize,
+}
+
+/// Even split of `n` into `parts`: the `i`-th range.
+fn even_split(n: usize, parts: usize, i: usize) -> (usize, usize) {
+    let base = n / parts;
+    let rem = n % parts;
+    let start = i * base + i.min(rem);
+    (start, start + base + usize::from(i < rem))
+}
+
+impl Layout {
+    fn validate(&self) -> Result<()> {
+        if self.len == 0 || self.parts == 0 || self.parts > MAX_HDARRAY_PARTS {
+            return Err(HicrError::Rejected(format!(
+                "layout needs 1..={} parts over a non-empty array, got {self:?}",
+                MAX_HDARRAY_PARTS
+            )));
+        }
+        Ok(())
+    }
+
+    /// The owning part of global index `g`.
+    pub fn owner(&self, g: usize) -> usize {
+        debug_assert!(g < self.len);
+        match self.dist {
+            Distribution::Cyclic => g % self.parts,
+            Distribution::Block => {
+                let base = self.len / self.parts;
+                let rem = self.len % self.parts;
+                let fat = rem * (base + 1);
+                if g < fat {
+                    g / (base + 1)
+                } else {
+                    rem + (g - fat) / base
+                }
+            }
+        }
+    }
+
+    /// `(part, local index)` of global `g`.
+    pub fn to_local(&self, g: usize) -> (usize, usize) {
+        match self.dist {
+            Distribution::Cyclic => (g % self.parts, g / self.parts),
+            Distribution::Block => {
+                let p = self.owner(g);
+                (p, g - even_split(self.len, self.parts, p).0)
+            }
+        }
+    }
+
+    /// Global index of local `l` on part `p`.
+    pub fn to_global(&self, p: usize, l: usize) -> usize {
+        match self.dist {
+            Distribution::Cyclic => l * self.parts + p,
+            Distribution::Block => even_split(self.len, self.parts, p).0 + l,
+        }
+    }
+
+    /// Number of elements owned by part `p`.
+    pub fn local_len(&self, p: usize) -> usize {
+        match self.dist {
+            Distribution::Cyclic => (self.len + self.parts).saturating_sub(p + 1) / self.parts,
+            Distribution::Block => {
+                let (a, b) = even_split(self.len, self.parts, p);
+                b - a
+            }
+        }
+    }
+
+    /// Owned contiguous range of part `p` (block layouts).
+    fn block_range(&self, p: usize) -> (usize, usize) {
+        even_split(self.len, self.parts, p)
+    }
+
+    /// The derived halo footprint of part `p`: every global index that
+    /// is not owned by `p` but lies within `radius` of an owned index —
+    /// sorted ascending. For block layouts this is the clipped
+    /// `[start-r, start) ∪ [end, end+r)`; for cyclic layouts it is
+    /// computed from the closed-form distance to the nearest owned
+    /// index. Property-tested against the brute-force dilation oracle.
+    pub fn halo_footprint(&self, p: usize) -> Vec<usize> {
+        let r = self.radius;
+        if r == 0 || self.local_len(p) == 0 {
+            return Vec::new();
+        }
+        match self.dist {
+            Distribution::Block => {
+                let (start, end) = self.block_range(p);
+                let mut out: Vec<usize> = (start.saturating_sub(r)..start).collect();
+                out.extend(end..(end + r).min(self.len));
+                out
+            }
+            Distribution::Cyclic => {
+                // Owned indices are p, p+parts, …, max_own; the distance
+                // from any g to the nearest owned index follows from the
+                // residue of (g - p) mod parts, clamped at the ends.
+                let max_own = p + ((self.len - 1 - p) / self.parts) * self.parts;
+                (0..self.len)
+                    .filter(|&g| {
+                        let dist = if g <= p {
+                            p - g
+                        } else if g >= max_own {
+                            g - max_own
+                        } else {
+                            let below = g - (g - p) % self.parts;
+                            (g - below).min(below + self.parts - g)
+                        };
+                        dist != 0 && dist <= r
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Every halo transfer the layout requires, in canonical
+    /// `(src, dst)` order — one contiguous slice per directed partition
+    /// edge whose ghost region crosses the boundary. Block layouts
+    /// only; cyclic layouts return an empty plan (they synchronize via
+    /// allgather instead — no contiguous boundary to exchange).
+    pub fn halo_links(&self) -> Vec<HaloSlice> {
+        if self.dist == Distribution::Cyclic || self.radius == 0 {
+            return Vec::new();
+        }
+        let r = self.radius;
+        let mut out = Vec::new();
+        for src in 0..self.parts {
+            let (s0, s1) = self.block_range(src);
+            if s0 == s1 {
+                continue;
+            }
+            for dst in 0..self.parts {
+                if src == dst {
+                    continue;
+                }
+                let (d0, d1) = self.block_range(dst);
+                if d0 == d1 {
+                    continue;
+                }
+                // Ghost intervals of dst: [d0-r, d0) and [d1, d1+r).
+                let left = (d0.saturating_sub(r).max(s0), d0.min(s1));
+                let right = (d1.max(s0), (d1 + r).min(self.len).min(s1));
+                for (lo, hi) in [left, right] {
+                    if lo < hi {
+                        out.push(HaloSlice { src, dst, lo, hi });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A stencil kernel applied per sweep. `apply` must be a pure function
+/// of the `prev` window so every execution plan (sequential, block
+/// halos, cyclic allgather) produces **bitwise identical** results.
+pub trait Stencil: Send + Sync + 'static {
+    /// How many neighbours each output element reads on either side —
+    /// must be ≤ the layout's declared radius for block layouts.
+    fn radius(&self) -> usize;
+
+    /// Compute outputs for globals `[lo, hi)` into `out` (length
+    /// `hi - lo`). `prev` holds globals `[base, base + prev.len())` and
+    /// is guaranteed to cover `[lo - radius, hi + radius)` clipped to
+    /// the array; handling of the global array boundary is the kernel's
+    /// business.
+    fn apply(&self, prev: &[f32], base: usize, lo: usize, hi: usize, out: &mut [f32]);
+}
+
+/// Sequential reference: run `sweeps` applications of `kernel` over the
+/// whole array (the oracle for the equivalence suite and apps).
+pub fn sequential_sweeps(
+    len: usize,
+    kernel: &dyn Stencil,
+    init: impl Fn(usize) -> f32,
+    sweeps: usize,
+) -> Vec<f32> {
+    let mut prev: Vec<f32> = (0..len).map(init).collect();
+    let mut next = vec![0.0f32; len];
+    for _ in 0..sweeps {
+        kernel.apply(&prev, 0, 0, len, &mut next);
+        std::mem::swap(&mut prev, &mut next);
+    }
+    prev
+}
+
+/// Interior-mutable f32 buffer: disjoint regions are written by
+/// concurrent block tasks and the halo driver (same rationale as
+/// jacobi's `GridBuf` / `core::memory::SlotBuffer`).
+struct ExtBuf {
+    data: std::cell::UnsafeCell<Vec<f32>>,
+}
+
+// SAFETY: access goes through slice()/slice_mut(), whose callers uphold
+// the disjoint-region contract (one task per block, driver writes only
+// ghost regions whose readers are ordered by dataflow keys).
+unsafe impl Send for ExtBuf {}
+// SAFETY: see the Send impl above.
+unsafe impl Sync for ExtBuf {}
+
+impl ExtBuf {
+    fn new(len: usize) -> Arc<Self> {
+        Arc::new(Self {
+            data: std::cell::UnsafeCell::new(vec![0.0; len]),
+        })
+    }
+
+    /// # Safety
+    /// Callers must touch only regions no concurrent task writes; the
+    /// sweep DAG's key edges order every cross-sweep access.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice_mut(&self) -> &mut [f32] {
+        &mut *self.data.get()
+    }
+
+    fn slice(&self) -> &[f32] {
+        // SAFETY: readers only look at regions whose writers completed
+        // earlier in the DAG (key/handle edges).
+        unsafe { &*self.data.get() }
+    }
+}
+
+/// Outbound halo link: send tasks (worker threads) share the producer
+/// through a witnessed lock — rank 210, in the band between tasking and
+/// deployment so a holder may still take endpoint/threads locks below.
+struct HaloLink {
+    /// Global link index (canonical order; keys derive from it).
+    idx: usize,
+    /// Destination part (panic messages only).
+    dst: usize,
+    /// Global slice bounds.
+    lo: usize,
+    hi: usize,
+    tx: Arc<Lock<SpscProducer>>,
+}
+
+/// Inbound halo link, pumped by the sweep driver on the caller thread.
+struct InHalo {
+    idx: usize,
+    src: usize,
+    lo: usize,
+    hi: usize,
+    rx: SpscConsumer,
+    /// Next expected message sequence number (sweep it gates).
+    next_seq: u64,
+}
+
+fn halo_key(array_id: u16, sweep: usize, link: usize) -> u64 {
+    dataobject::derived_id(KEY_FAMILY_HALO, array_id, sweep as u16, link as u8)
+}
+
+fn block_key(array_id: u16, sweep: usize, block: usize) -> u64 {
+    dataobject::derived_id(KEY_FAMILY_BLOCK, array_id, sweep as u16, block as u8)
+}
+
+/// Tag for one directed halo link: array id (16 b at 20) · src part
+/// (8 b at 12) · dst part (8 b at 4). Injective within the namespace.
+fn link_tag(array_id: u16, src: usize, dst: usize) -> Tag {
+    Tag(HDARRAY_TAG_BASE | (array_id as u64) << 20 | (src as u64) << 12 | (dst as u64) << 4)
+}
+
+/// A partitioned global `f32` array bound to one instance mesh.
+///
+/// Build is collective across `ranks` (channel and collective
+/// bring-up); [`HdArray::run_sweeps`] then executes the derived sweep
+/// DAG, and [`HdArray::gather_global`] assembles the result on the
+/// root. One shot: an array runs one sweep batch (rebuild for another —
+/// channel sequence numbers are not resettable mid-flight).
+pub struct HdArray {
+    layout: Layout,
+    me: usize,
+    array_id: u16,
+    /// Owned global range (block; `start == end` means an empty part).
+    start: usize,
+    end: usize,
+    /// Global index of extended-buffer element 0 (block: `start - r`
+    /// clipped; cyclic: 0 — the whole array is mirrored).
+    base: usize,
+    ext: [Arc<ExtBuf>; 2],
+    out_links: Vec<HaloLink>,
+    in_links: Vec<InHalo>,
+    coll: Collectives,
+    ranks: Vec<u32>,
+    probe: Option<Arc<dyn Fn() -> Result<Vec<u32>> + Send + Sync>>,
+    lost: HashSet<u32>,
+    deadline: Duration,
+    sweeps_done: usize,
+    ran: bool,
+}
+
+impl HdArray {
+    /// Collectively build the array over `ranks` (`me_pos` indexes this
+    /// instance; `layout.parts` must equal `ranks.len()`). `init` is the
+    /// pure global initializer — every instance evaluates it for its own
+    /// extended window, so sweep 0 needs no priming messages.
+    pub fn build(
+        cmm: Arc<dyn CommunicationManager>,
+        array_id: u16,
+        me_pos: usize,
+        ranks: &[u32],
+        layout: Layout,
+        init: impl Fn(usize) -> f32,
+        mut alloc: impl FnMut(usize) -> Result<LocalMemorySlot>,
+    ) -> Result<HdArray> {
+        layout.validate()?;
+        if layout.parts != ranks.len() || me_pos >= ranks.len() {
+            return Err(HicrError::Rejected(format!(
+                "layout of {} parts over {} ranks (me {me_pos})",
+                layout.parts,
+                ranks.len()
+            )));
+        }
+        // Internal collectives first (canonical bring-up order). High
+        // comm-id bit set so app-level overlays (< 0x8000) never clash.
+        let coll_payload = 4 * layout.len + 16 * layout.parts + 64;
+        let coll = Collectives::build(
+            cmm.clone(),
+            0x8000 | (array_id & 0x7FFF),
+            me_pos,
+            ranks,
+            coll_payload,
+            &mut alloc,
+        )?;
+
+        let (start, end, base, ext_len) = match layout.dist {
+            Distribution::Cyclic => (0, 0, 0, layout.len),
+            Distribution::Block => {
+                let (s, e) = layout.block_range(me_pos);
+                let b = s.saturating_sub(layout.radius);
+                let hi = (e + layout.radius).min(layout.len);
+                (s, e, b, hi.saturating_sub(b))
+            }
+        };
+        let ext = [ExtBuf::new(ext_len), ExtBuf::new(ext_len)];
+        {
+            // SAFETY: the buffer was just created; no other reference
+            // exists before build returns.
+            let e0 = unsafe { ext[0].slice_mut() };
+            for (i, v) in e0.iter_mut().enumerate() {
+                *v = init(base + i);
+            }
+        }
+
+        // Canonical walk over the full halo plan: parties create their
+        // channel end, bystanders enter the collective exchange empty.
+        let mut out_links = Vec::new();
+        let mut in_links = Vec::new();
+        for (idx, hs) in layout.halo_links().into_iter().enumerate() {
+            if idx > u8::MAX as usize {
+                return Err(HicrError::Bounds(format!(
+                    "halo plan of {idx}+ links exceeds the key space"
+                )));
+            }
+            let tag = link_tag(array_id, hs.src, hs.dst);
+            let msg_size = 8 + 4 * (hs.hi - hs.lo);
+            if hs.src == me_pos {
+                let tx = SpscProducer::create(
+                    cmm.clone(),
+                    tag,
+                    0,
+                    msg_size,
+                    RING_CAPACITY,
+                    alloc(8)?,
+                )?;
+                out_links.push(HaloLink {
+                    idx,
+                    dst: hs.dst,
+                    lo: hs.lo,
+                    hi: hs.hi,
+                    tx: Arc::new(Lock::new(&classes::HDARRAY_HALO_TX, tx)),
+                });
+            } else if hs.dst == me_pos {
+                let rx = SpscConsumer::create(
+                    cmm.as_ref(),
+                    alloc(RING_CAPACITY as usize * msg_size)?,
+                    alloc(16)?,
+                    tag,
+                    0,
+                    msg_size,
+                    RING_CAPACITY,
+                )?;
+                in_links.push(InHalo {
+                    idx,
+                    src: hs.src,
+                    lo: hs.lo,
+                    hi: hs.hi,
+                    rx,
+                    next_seq: 1,
+                });
+            } else {
+                cmm.exchange_global_slots(tag, &[])?;
+            }
+        }
+
+        Ok(HdArray {
+            layout,
+            me: me_pos,
+            array_id,
+            start,
+            end,
+            base,
+            ext,
+            out_links,
+            in_links,
+            coll,
+            ranks: ranks.to_vec(),
+            probe: None,
+            lost: HashSet::new(),
+            deadline: Duration::from_secs(30),
+            sweeps_done: 0,
+            ran: false,
+        })
+    }
+
+    /// The declared layout.
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// Replace the default 30 s halo/collective wait deadline.
+    pub fn set_deadline(&mut self, d: Duration) {
+        self.deadline = d;
+        self.coll.set_deadline(d);
+    }
+
+    /// Install a liveness probe (e.g. the deployment quarantine set):
+    /// stalled halo or collective waits turn into typed
+    /// [`HicrError::PeerLost`] instead of running out the deadline.
+    pub fn set_liveness(&mut self, probe: Arc<dyn Fn() -> Result<Vec<u32>> + Send + Sync>) {
+        let p = Arc::clone(&probe);
+        self.coll.set_liveness(Box::new(move || p()));
+        self.probe = Some(probe);
+    }
+
+    /// Execute `sweeps` applications of `kernel`, the owned range split
+    /// into up to `blocks` tasks per sweep on `sys`. One shot per array.
+    pub fn run_sweeps(
+        &mut self,
+        sys: &TaskSystem,
+        kernel: Arc<dyn Stencil>,
+        sweeps: usize,
+        blocks: usize,
+    ) -> Result<()> {
+        if self.ran {
+            return Err(HicrError::InvalidState(
+                "run_sweeps may run once per array (rebuild for another batch)".into(),
+            ));
+        }
+        self.ran = true;
+        if sweeps == 0 {
+            return Ok(());
+        }
+        if sweeps > u16::MAX as usize {
+            return Err(HicrError::Bounds(format!(
+                "{sweeps} sweeps exceed the 16-bit key field"
+            )));
+        }
+        if self.layout.dist == Distribution::Block && kernel.radius() > self.layout.radius {
+            return Err(HicrError::Rejected(format!(
+                "kernel radius {} exceeds the declared halo radius {}",
+                kernel.radius(),
+                self.layout.radius
+            )));
+        }
+        match self.layout.dist {
+            Distribution::Block => self.run_block(sys, kernel, sweeps, blocks),
+            Distribution::Cyclic => self.run_cyclic(sys, kernel, sweeps, blocks),
+        }?;
+        self.sweeps_done = sweeps;
+        Ok(())
+    }
+
+    /// Block plan: spawn the whole sweeps×blocks dataflow graph, then
+    /// pump inbound halo links on the caller thread, marking each
+    /// message's key as it lands. See the module docs for the safety
+    /// argument ordering ghost overwrites against prior-parity readers.
+    fn run_block(
+        &mut self,
+        sys: &TaskSystem,
+        kernel: Arc<dyn Stencil>,
+        sweeps: usize,
+        blocks: usize,
+    ) -> Result<()> {
+        let width = self.end - self.start;
+        let r = self.layout.radius;
+        let array_id = self.array_id;
+        if width > 0 {
+            let nblocks = blocks.clamp(1, width.min(u8::MAX as usize + 1));
+            let ranges: Vec<(usize, usize)> = (0..nblocks)
+                .map(|i| {
+                    let (a, b) = even_split(width, nblocks, i);
+                    (self.start + a, self.start + b)
+                })
+                .collect();
+            // Block b's sweep-k task depends on the sweep-(k-1) tasks in
+            // its radius footprint — both the cells it reads (RAW) and
+            // the prior readers of the parity buffer it overwrites (WAR).
+            let deps: Vec<Vec<usize>> = ranges
+                .iter()
+                .map(|&(blo, bhi)| {
+                    ranges
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &(clo, chi))| clo < bhi + r && chi > blo.saturating_sub(r))
+                        .map(|(i, _)| i)
+                        .collect()
+                })
+                .collect();
+            // Inbound halo keys gating block b: links whose slice
+            // intersects b's radius footprint.
+            let gates: Vec<Vec<usize>> = ranges
+                .iter()
+                .map(|&(blo, bhi)| {
+                    self.in_links
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, il)| il.lo < bhi + r && il.hi > blo.saturating_sub(r))
+                        .map(|(i, _)| i)
+                        .collect()
+                })
+                .collect();
+            let in_link_ids: Vec<usize> = self.in_links.iter().map(|il| il.idx).collect();
+            // Send tasks: link s-message fires once the sweep-(s-1)
+            // blocks covering the outgoing slice complete.
+            let senders: Vec<(usize, usize, usize, usize, Arc<Lock<SpscProducer>>, Vec<usize>)> =
+                self.out_links
+                    .iter()
+                    .map(|ol| {
+                        let feeding: Vec<usize> = ranges
+                            .iter()
+                            .enumerate()
+                            .filter(|&(_, &(blo, bhi))| blo < ol.hi && bhi > ol.lo)
+                            .map(|(i, _)| i)
+                            .collect();
+                        (ol.idx, ol.dst, ol.lo, ol.hi, Arc::clone(&ol.tx), feeding)
+                    })
+                    .collect();
+            let ext = [Arc::clone(&self.ext[0]), Arc::clone(&self.ext[1])];
+            let base = self.base;
+            let deadline = self.deadline;
+
+            sys.submit("hdarray-graph", move |ctx| {
+                for k in 0..sweeps {
+                    for (b, &(blo, bhi)) in ranges.iter().enumerate() {
+                        let mut consumes = Vec::new();
+                        if k > 0 {
+                            consumes.extend(deps[b].iter().map(|&d| block_key(array_id, k - 1, d)));
+                            consumes.extend(
+                                gates[b].iter().map(|&g| halo_key(array_id, k, in_link_ids[g])),
+                            );
+                        }
+                        let prev = Arc::clone(&ext[k % 2]);
+                        let next = Arc::clone(&ext[(k + 1) % 2]);
+                        let kern = Arc::clone(&kernel);
+                        ctx.spawn_dataflow(
+                            "hd-block",
+                            &consumes,
+                            &[block_key(array_id, k, b)],
+                            move |_| {
+                                // SAFETY: each sweep's blocks write
+                                // disjoint owned regions of `next`; every
+                                // cross-sweep read/write on the shared
+                                // double buffers is ordered by the key
+                                // edges above (WAR/RAW in `deps`/`gates`).
+                                let out = unsafe { next.slice_mut() };
+                                kern.apply(
+                                    prev.slice(),
+                                    base,
+                                    blo,
+                                    bhi,
+                                    &mut out[blo - base..bhi - base],
+                                );
+                            },
+                        );
+                    }
+                    // Message s = k+1 carries this sweep's output.
+                    let s = k + 1;
+                    if s >= sweeps {
+                        continue;
+                    }
+                    for (idx, dst, lo, hi, tx, feeding) in &senders {
+                        let consumes: Vec<u64> =
+                            feeding.iter().map(|&b| block_key(array_id, k, b)).collect();
+                        let (idx, dst, lo, hi) = (*idx, *dst, *lo, *hi);
+                        let tx = Arc::clone(tx);
+                        let src_buf = Arc::clone(&ext[s % 2]);
+                        ctx.spawn_dataflow("hd-halo-send", &consumes, &[], move |_| {
+                            let mut frame = Vec::with_capacity(8 + 4 * (hi - lo));
+                            frame.extend_from_slice(&(s as u64).to_le_bytes());
+                            for v in &src_buf.slice()[lo - base..hi - base] {
+                                frame.extend_from_slice(&v.to_le_bytes());
+                            }
+                            let mut tx = tx.lock();
+                            let t0 = Instant::now();
+                            let mut backoff = Backoff::new();
+                            loop {
+                                match tx.push(&frame) {
+                                    Ok(true) => break,
+                                    Ok(false) => {
+                                        // Last resort: a wedged consumer
+                                        // surfaces as a typed task error
+                                        // via wait_idle, never a hang.
+                                        assert!(
+                                            t0.elapsed() <= deadline,
+                                            "halo link {idx}→part {dst} wedged past {deadline:?}"
+                                        );
+                                        backoff.wait();
+                                    }
+                                    Err(e) => panic!("halo link {idx} push failed: {e}"),
+                                }
+                            }
+                        });
+                    }
+                }
+            });
+
+            self.drive_inbound(sys, sweeps)?;
+        }
+        sys.wait_idle()
+    }
+
+    /// Pump every inbound link in seq order, writing ghost regions and
+    /// releasing the keyed tasks. On error, release all outstanding
+    /// keys first so the spawned graph always terminates (the results
+    /// are discarded — the typed error is what the caller sees).
+    fn drive_inbound(&mut self, sys: &TaskSystem, sweeps: usize) -> Result<()> {
+        let last_seq = (sweeps - 1) as u64;
+        let res = self.pump_links(sys, last_seq);
+        if res.is_err() {
+            for il in &self.in_links {
+                for s in il.next_seq..=last_seq {
+                    sys.mark_produced(halo_key(self.array_id, s as usize, il.idx));
+                }
+            }
+            let _ = sys.wait_idle();
+        }
+        res
+    }
+
+    fn pump_links(&mut self, sys: &TaskSystem, last_seq: u64) -> Result<()> {
+        let mut remaining: usize = self
+            .in_links
+            .iter()
+            .map(|il| (last_seq + 1 - il.next_seq) as usize)
+            .sum();
+        let mut scratch: Vec<Vec<u8>> =
+            self.in_links.iter().map(|il| vec![0u8; 8 + 4 * (il.hi - il.lo)]).collect();
+        let mut backoff = Backoff::new();
+        let mut last_progress = Instant::now();
+        let mut since_probe = 0u32;
+        while remaining > 0 {
+            let mut progressed = false;
+            for (i, il) in self.in_links.iter_mut().enumerate() {
+                if il.next_seq > last_seq {
+                    continue;
+                }
+                let buf = &mut scratch[i];
+                if !il.rx.pop(buf)? {
+                    continue;
+                }
+                let seq = u64::from_le_bytes(buf[0..8].try_into().expect("8-byte slice"));
+                if seq != il.next_seq {
+                    return Err(HicrError::Transport(format!(
+                        "halo link {} (part {}): message seq {seq}, expected {}",
+                        il.idx, il.src, il.next_seq
+                    )));
+                }
+                // SAFETY: the ghost region [lo, hi) of parity seq%2 is
+                // written only here; its sweep-seq readers are gated on
+                // the key marked below, and its prior-parity readers
+                // (sweep seq-2) finished before the sender could emit
+                // this message (producers-⊆-consumers, DESIGN.md §11).
+                let ghosts = unsafe { self.ext[(seq % 2) as usize].slice_mut() };
+                for (j, c) in buf[8..].chunks_exact(4).enumerate() {
+                    ghosts[il.lo - self.base + j] =
+                        f32::from_le_bytes(c.try_into().expect("4-byte chunk"));
+                }
+                sys.mark_produced(halo_key(self.array_id, seq as usize, il.idx));
+                il.next_seq += 1;
+                remaining -= 1;
+                progressed = true;
+            }
+            if progressed {
+                backoff.reset();
+                last_progress = Instant::now();
+                continue;
+            }
+            since_probe += 1;
+            if since_probe >= 32 {
+                since_probe = 0;
+                if let Some(p) = &self.probe {
+                    for rank in p()? {
+                        self.lost.insert(rank);
+                    }
+                    if let Some(dead) = self.ranks.iter().find(|r| self.lost.contains(r)) {
+                        self.coll.note_lost(*dead);
+                        return Err(HicrError::PeerLost(format!(
+                            "halo peer rank {dead} departed mid-sweep"
+                        )));
+                    }
+                }
+            }
+            if last_progress.elapsed() > self.deadline {
+                return Err(HicrError::Timeout(format!(
+                    "halo exchange stalled past {:?} ({remaining} messages outstanding)",
+                    self.deadline
+                )));
+            }
+            backoff.wait();
+        }
+        Ok(())
+    }
+
+    /// Cyclic plan: owned elements are computed in parallel tasks, then
+    /// every sweep synchronizes with a tree allgather that rebuilds the
+    /// full mirrored array on every rank.
+    fn run_cyclic(
+        &mut self,
+        sys: &TaskSystem,
+        kernel: Arc<dyn Stencil>,
+        sweeps: usize,
+        blocks: usize,
+    ) -> Result<()> {
+        let mine = self.layout.local_len(self.me);
+        let parts = self.layout.parts;
+        let me = self.me;
+        for k in 0..sweeps {
+            if mine > 0 {
+                let nblocks = blocks.clamp(1, mine);
+                let prev_buf = Arc::clone(&self.ext[k % 2]);
+                let next_buf = Arc::clone(&self.ext[(k + 1) % 2]);
+                let kern = Arc::clone(&kernel);
+                sys.run("hd-cyclic-sweep", move |ctx| {
+                    for bi in 0..nblocks {
+                        let (l0, l1) = even_split(mine, nblocks, bi);
+                        let prev = Arc::clone(&prev_buf);
+                        let next = Arc::clone(&next_buf);
+                        let kern = Arc::clone(&kern);
+                        ctx.spawn("hd-cyclic-block", move |_| {
+                            // SAFETY: tasks write disjoint strided owned
+                            // elements of `next`; `run` joins the whole
+                            // graph before anyone reads them.
+                            let out = unsafe { next.slice_mut() };
+                            for l in l0..l1 {
+                                let g = l * parts + me;
+                                kern.apply(prev.slice(), 0, g, g + 1, &mut out[g..g + 1]);
+                            }
+                        });
+                    }
+                    ctx.wait_children();
+                })?;
+            }
+            // Allgather this sweep's owned values; every rank rebuilds
+            // the full next-parity mirror.
+            let next = self.ext[(k + 1) % 2].slice();
+            let mut bytes = Vec::with_capacity(4 * mine);
+            for l in 0..mine {
+                bytes.extend_from_slice(&next[l * parts + me].to_le_bytes());
+            }
+            let entries = self.coll.allgather(&bytes)?;
+            // SAFETY: the sweep's tasks were joined above; the caller
+            // thread is the only accessor until the next sweep spawns.
+            let out = unsafe { self.ext[(k + 1) % 2].slice_mut() };
+            for (p, entry) in entries.iter().enumerate() {
+                for (l, c) in entry.chunks_exact(4).enumerate() {
+                    out[l * parts + p] = f32::from_le_bytes(c.try_into().expect("4-byte chunk"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// This instance's owned values after the last sweep batch, in
+    /// local-index order.
+    pub fn local(&self) -> Vec<f32> {
+        let cur = self.ext[self.sweeps_done % 2].slice();
+        match self.layout.dist {
+            Distribution::Block => cur[self.start - self.base..self.end - self.base].to_vec(),
+            Distribution::Cyclic => (0..self.layout.local_len(self.me))
+                .map(|l| cur[l * self.layout.parts + self.me])
+                .collect(),
+        }
+    }
+
+    /// Collectively gather the full array: the root (tree position 0)
+    /// returns `Some(global)`, everyone else `None`.
+    pub fn gather_global(&mut self) -> Result<Option<Vec<f32>>> {
+        let local = self.local();
+        let mut bytes = Vec::with_capacity(4 * local.len());
+        for v in &local {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let Some(entries) = self.coll.gather(&bytes)? else {
+            return Ok(None);
+        };
+        let mut global = vec![0.0f32; self.layout.len];
+        for (p, entry) in entries.iter().enumerate() {
+            if entry.len() != 4 * self.layout.local_len(p) {
+                return Err(HicrError::Collective(format!(
+                    "gathered {} B from part {p}, expected {}",
+                    entry.len(),
+                    4 * self.layout.local_len(p)
+                )));
+            }
+            for (l, c) in entry.chunks_exact(4).enumerate() {
+                global[self.layout.to_global(p, l)] =
+                    f32::from_le_bytes(c.try_into().expect("4-byte chunk"));
+            }
+        }
+        Ok(Some(global))
+    }
+
+    /// Borrow the array's internal tree overlay (e.g. to allreduce a
+    /// residual after the sweeps with no extra bring-up).
+    pub fn collectives(&mut self) -> &mut Collectives {
+        &mut self.coll
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::threads::ThreadsCommunicationManager;
+    use crate::core::ids::MemorySpaceId;
+    use crate::core::instance::testworld::local_world;
+    use crate::core::instance::InstanceManager;
+    use crate::util::rng::Rng;
+
+    fn alloc(len: usize) -> Result<LocalMemorySlot> {
+        LocalMemorySlot::alloc(MemorySpaceId(1), len)
+    }
+
+    fn random_layout(rng: &mut Rng) -> Layout {
+        let len = rng.range_usize(1, 200);
+        Layout {
+            len,
+            parts: rng.range_usize(1, 12.min(len + 4)),
+            dist: if rng.bool() {
+                Distribution::Block
+            } else {
+                Distribution::Cyclic
+            },
+            radius: rng.range_usize(0, 8),
+        }
+    }
+
+    /// Satellite 1a: every global index maps to exactly one owner and
+    /// the owner maps round-trip global↔local (seeded draws).
+    #[test]
+    fn ownership_partitions_and_round_trips() {
+        let mut rng = Rng::new(0x4DA_0001);
+        for _ in 0..300 {
+            let layout = random_layout(&mut rng);
+            let mut per_part = vec![0usize; layout.parts];
+            for g in 0..layout.len {
+                let p = layout.owner(g);
+                assert!(p < layout.parts, "{layout:?}: owner({g}) = {p}");
+                per_part[p] += 1;
+                let (lp, l) = layout.to_local(g);
+                assert_eq!(lp, p, "{layout:?}: to_local({g}) disagrees with owner");
+                assert!(l < layout.local_len(p), "{layout:?}: local {l} out of range");
+                assert_eq!(layout.to_global(p, l), g, "{layout:?}: round trip of {g}");
+            }
+            for p in 0..layout.parts {
+                assert_eq!(per_part[p], layout.local_len(p), "{layout:?}: part {p} count");
+                for l in 0..layout.local_len(p) {
+                    let g = layout.to_global(p, l);
+                    assert!(g < layout.len, "{layout:?}: to_global({p},{l}) = {g}");
+                    assert_eq!(layout.to_local(g), (p, l), "{layout:?}: inverse of {g}");
+                }
+            }
+            assert_eq!(per_part.iter().sum::<usize>(), layout.len);
+        }
+    }
+
+    /// Satellite 1b: the derived halo footprint exactly equals the
+    /// brute-force radius-r dilation of the owned set, minus the owned
+    /// set (seeded draws, both distributions).
+    #[test]
+    fn halo_footprint_matches_dilation_oracle() {
+        let mut rng = Rng::new(0x4DA_0002);
+        for _ in 0..300 {
+            let layout = random_layout(&mut rng);
+            for p in 0..layout.parts {
+                let mut marked = vec![false; layout.len];
+                for g in 0..layout.len {
+                    if layout.owner(g) == p {
+                        let hi = (g + layout.radius + 1).min(layout.len);
+                        for d in g.saturating_sub(layout.radius)..hi {
+                            marked[d] = true;
+                        }
+                    }
+                }
+                let oracle: Vec<usize> = (0..layout.len)
+                    .filter(|&g| marked[g] && layout.owner(g) != p)
+                    .collect();
+                assert_eq!(layout.halo_footprint(p), oracle, "{layout:?} part {p}");
+            }
+        }
+    }
+
+    /// Satellite 1c: for block layouts the halo link plan is exactly the
+    /// footprint, sliced by owner — disjoint, covering, each slice owned
+    /// by its source.
+    #[test]
+    fn halo_links_cover_footprints_exactly() {
+        let mut rng = Rng::new(0x4DA_0003);
+        for _ in 0..300 {
+            let mut layout = random_layout(&mut rng);
+            layout.dist = Distribution::Block;
+            let links = layout.halo_links();
+            for hs in &links {
+                assert!(hs.lo < hs.hi, "{layout:?}: empty slice {hs:?}");
+                let (s0, s1) = even_split(layout.len, layout.parts, hs.src);
+                assert!(hs.lo >= s0 && hs.hi <= s1, "{layout:?}: {hs:?} not owned by src");
+            }
+            for p in 0..layout.parts {
+                let mut got: Vec<usize> = links
+                    .iter()
+                    .filter(|hs| hs.dst == p)
+                    .flat_map(|hs| hs.lo..hs.hi)
+                    .collect();
+                let before = got.len();
+                got.sort_unstable();
+                got.dedup();
+                assert_eq!(got.len(), before, "{layout:?}: overlapping slices for {p}");
+                assert_eq!(got, layout.halo_footprint(p), "{layout:?}: plan for part {p}");
+            }
+        }
+    }
+
+    /// Clipped box-average kernel: pure, order-deterministic, arbitrary
+    /// radius — the equivalence workhorse.
+    struct BoxAvg {
+        len: usize,
+        radius: usize,
+    }
+
+    impl Stencil for BoxAvg {
+        fn radius(&self) -> usize {
+            self.radius
+        }
+
+        fn apply(&self, prev: &[f32], base: usize, lo: usize, hi: usize, out: &mut [f32]) {
+            for g in lo..hi {
+                let a = g.saturating_sub(self.radius);
+                let b = (g + self.radius + 1).min(self.len);
+                let mut sum = 0.0f32;
+                for i in a..b {
+                    sum += prev[i - base];
+                }
+                out[g - lo] = sum / (b - a) as f32;
+            }
+        }
+    }
+
+    fn init(g: usize) -> f32 {
+        (g % 17) as f32 * 0.25 - 1.0
+    }
+
+    /// Distributed sweeps (both distributions) are bitwise identical to
+    /// the sequential reference: same kernel, same windows, different
+    /// derived communication plan.
+    #[test]
+    fn sweeps_match_sequential_bitwise() {
+        for (n, dist, radius, sweeps, blocks) in [
+            (3usize, Distribution::Block, 3usize, 4usize, 3usize),
+            (3, Distribution::Cyclic, 3, 4, 3),
+            (2, Distribution::Block, 7, 3, 2),
+        ] {
+            let len = 64;
+            let want = sequential_sweeps(len, &BoxAvg { len, radius }, init, sweeps);
+            let cmm: Arc<dyn CommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
+            let ranks: Vec<u32> = (0..n as u32).collect();
+            let mut handles = Vec::new();
+            for (pos, im) in local_world(n).into_iter().enumerate() {
+                let cmm = cmm.clone();
+                let ranks = ranks.clone();
+                let want = want.clone();
+                handles.push(std::thread::spawn(move || {
+                    let layout = Layout { len, parts: n, dist, radius };
+                    let mut arr =
+                        HdArray::build(cmm, 7, pos, &ranks, layout, init, alloc).unwrap();
+                    let cm = crate::backends::registry()
+                        .builder()
+                        .compute("threads")
+                        .build()
+                        .unwrap()
+                        .compute()
+                        .unwrap();
+                    let sys = crate::frontends::tasking::TaskSystem::new(cm, 2, false);
+                    arr.run_sweeps(&sys, Arc::new(BoxAvg { len, radius }), sweeps, blocks)
+                        .unwrap();
+                    let gathered = arr.gather_global().unwrap();
+                    if pos == 0 {
+                        let got = gathered.expect("root assembles");
+                        assert_eq!(got, want, "{dist:?} n={n} drifted from sequential");
+                    } else {
+                        assert!(gathered.is_none());
+                    }
+                    sys.shutdown().unwrap();
+                    im.barrier().unwrap();
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+    }
+
+    /// A second batch on the same array is rejected (one-shot contract),
+    /// and a kernel wider than the declared radius is rejected up front.
+    #[test]
+    fn misuse_is_typed() {
+        let cmm: Arc<dyn CommunicationManager> = Arc::new(ThreadsCommunicationManager::new());
+        let layout = Layout { len: 16, parts: 1, dist: Distribution::Block, radius: 1 };
+        let mut arr = HdArray::build(cmm, 9, 0, &[0], layout, init, alloc).unwrap();
+        let cm = crate::backends::registry()
+            .builder()
+            .compute("threads")
+            .build()
+            .unwrap()
+            .compute()
+            .unwrap();
+        let sys = crate::frontends::tasking::TaskSystem::new(cm, 2, false);
+        let fat = Arc::new(BoxAvg { len: 16, radius: 2 });
+        assert!(matches!(
+            arr.run_sweeps(&sys, fat, 2, 2).unwrap_err(),
+            HicrError::InvalidState(_) | HicrError::Rejected(_)
+        ));
+        let mut arr2 = HdArray::build(
+            Arc::new(ThreadsCommunicationManager::new()),
+            9,
+            0,
+            &[0],
+            layout,
+            init,
+            alloc,
+        )
+        .unwrap();
+        let thin = Arc::new(BoxAvg { len: 16, radius: 1 });
+        arr2.run_sweeps(&sys, Arc::clone(&thin) as Arc<dyn Stencil>, 2, 2).unwrap();
+        assert!(matches!(
+            arr2.run_sweeps(&sys, thin, 1, 2).unwrap_err(),
+            HicrError::InvalidState(_)
+        ));
+        sys.shutdown().unwrap();
+    }
+}

@@ -5,7 +5,12 @@
 //!
 //! - [`channels`] — circular-buffer channels for frequent small messages
 //!   (SPSC + MPSC in locking / non-locking modes).
+//! - [`collectives`] — allreduce/broadcast/gather as binomial-tree
+//!   overlays of SPSC channel edges, with typed liveness errors.
 //! - [`dataobject`] — publish/get of sporadic large data blocks.
+//! - [`hdarray`] — partitioned global `f32` array: declared
+//!   block/cyclic distributions with derived owner maps, halo-exchange
+//!   channels and per-sweep dataflow edges.
 //! - [`deployment`] — the Fig. 7 idiom: elastic instance ramp-up, join
 //!   barrier, RPC mesh assembly, topology gathering and orchestration.
 //! - [`kernels`] — the device-agnostic kernel-provider interface apps
@@ -20,8 +25,10 @@
 //!   OVNI-style execution tracer).
 
 pub mod channels;
+pub mod collectives;
 pub mod dataobject;
 pub mod deployment;
+pub mod hdarray;
 pub mod kernels;
 pub mod rpc;
 pub mod serving;

@@ -25,7 +25,9 @@
 //! trait objects.
 //!
 //! Distributed apps available under `launch`: `pingpong` (Test Case 1
-//! measured mode), `jacobi` (Fig. 11 halo-exchange solver), `spawntest`
+//! measured mode), `jacobi` (the Fig. 11 solver — hdarray-frontend mode
+//! by default, hand-rolled `pipeline` mode as the ablation), `stencil`
+//! (arbitrary-radius 1-D hdarray sweep, bitwise-verified), `spawntest`
 //! (Fig. 7 runtime instance creation), and `taskfarm [total] [tasks]`
 //! (the full Fig. 7 deployment: root elastically ensures `total`
 //! instances — spawning the difference at runtime when `total` exceeds
@@ -70,9 +72,13 @@ fn main() -> Result<()> {
                  [--requests R] [--window W]>\n\
                  run apps:    fibonacci [--n N] | jacobi [--n N --iters I] | \
                  inference [--images M]   (+ --compute <name> --workers W)\n\
-                 launch apps: pingpong | jacobi [n iters] | spawntest | \
+                 launch apps: pingpong | jacobi [n iters hdarray|pipeline] | \
+                 stencil [len iters radius block|cyclic] | spawntest | \
                  taskfarm [total] [tasks] [steal|spill] [--chaos kill-one] | \
                  serve [total] [requests] [window]\n\
+                 stencil: arbitrary-radius 1-D sweep over the hdarray \
+                 frontend; the root bitwise-verifies against the \
+                 sequential reference (verified=ok)\n\
                  serve: root runs a sharded request router, every other \
                  instance a continuous-batching inference worker; the root's \
                  closed-loop client verifies each response payload and \
@@ -429,7 +435,15 @@ fn cmd_worker() -> Result<()> {
         Some("jacobi") => {
             let n: usize = words.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
             let iters: usize = words.get(2).and_then(|s| s.parse().ok()).unwrap_or(20);
-            worker_jacobi(im.as_ref(), &cmm, &registry, &compute, n, iters)
+            let mode = words.get(3).copied().unwrap_or("hdarray");
+            worker_jacobi(im.as_ref(), &cmm, &registry, &compute, n, iters, mode)
+        }
+        Some("stencil") => {
+            let len: usize = words.get(1).and_then(|s| s.parse().ok()).unwrap_or(4096);
+            let iters: usize = words.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+            let radius: usize = words.get(3).and_then(|s| s.parse().ok()).unwrap_or(3);
+            let dist = words.get(4).copied().unwrap_or("block");
+            worker_stencil(&im, &cmm, &registry, &compute, len, iters, radius, dist)
         }
         Some("spawntest") => worker_spawntest(im.as_ref()),
         Some("taskfarm") => {
@@ -519,8 +533,11 @@ fn worker_pingpong(im: &dyn InstanceManager, cmm: &Arc<dyn CommunicationManager>
     Ok(())
 }
 
-/// Fig. 11 worker: distributed Jacobi over the selected communication
-/// backend, tasking over the selected compute backend.
+/// Distributed Jacobi worker. The default `hdarray` mode declares a
+/// distribution and lets the array frontend derive the halo pipeline;
+/// `pipeline` keeps the hand-rolled Fig. 11 halo exchange as the
+/// ablation baseline.
+#[allow(clippy::too_many_arguments)]
 fn worker_jacobi(
     im: &dyn InstanceManager,
     cmm: &Arc<dyn CommunicationManager>,
@@ -528,26 +545,111 @@ fn worker_jacobi(
     compute: &str,
     n: usize,
     iters: usize,
+    mode: &str,
 ) -> Result<()> {
     let rank = im.current_instance().id.0;
-    let world = im.instances()?.len() as u32;
     let cm = registry.builder().compute(compute).build()?.compute()?;
     let sys = TaskSystem::new(cm, 2, false);
-    let run = jacobi::run_distributed(
-        cmm,
+    match mode {
+        "hdarray" => {
+            let mut ranks: Vec<u32> = im.instances()?.iter().map(|i| i.id.0).collect();
+            ranks.sort_unstable();
+            let me_pos = ranks
+                .iter()
+                .position(|&r| r == rank)
+                .ok_or_else(|| err(format!("rank {rank} not in the world")))?;
+            use hicr::frontends::hdarray::Distribution;
+            let checksum = jacobi::run_hdarray(
+                Arc::clone(cmm),
+                &sys,
+                me_pos,
+                &ranks,
+                Distribution::Block,
+                n,
+                iters,
+            )?;
+            sys.shutdown()?;
+            if let Some(sum) = checksum {
+                println!("jacobi world={} n={n} iters={iters} checksum={sum:.6}", ranks.len());
+            }
+        }
+        "pipeline" => {
+            let world = im.instances()?.len() as u32;
+            let run = jacobi::run_distributed(
+                cmm,
+                &sys,
+                rank,
+                world,
+                n,
+                iters,
+                (1, 2, 2),
+                jacobi::CommWaitMode::Blocking,
+            )?;
+            sys.shutdown()?;
+            println!(
+                "rank {rank}: jacobi n={n} iters={iters} {:.3}s {:.3} GFlop/s checksum={:.6}",
+                run.elapsed_s, run.gflops, run.checksum
+            );
+        }
+        other => return Err(err(format!("unknown jacobi mode '{other}'"))),
+    }
+    im.barrier()?;
+    Ok(())
+}
+
+/// Arbitrary-radius stencil worker over the hdarray frontend: the root
+/// bitwise-verifies the gathered array against the sequential reference
+/// and prints the grep-able `verified=ok` line the CI smoke gates on.
+#[allow(clippy::too_many_arguments)]
+fn worker_stencil(
+    im: &Arc<dyn InstanceManager>,
+    cmm: &Arc<dyn CommunicationManager>,
+    registry: &Registry,
+    compute: &str,
+    len: usize,
+    iters: usize,
+    radius: usize,
+    dist: &str,
+) -> Result<()> {
+    use hicr::apps::stencil;
+    use hicr::frontends::hdarray::Distribution;
+    let dist = match dist {
+        "cyclic" => Distribution::Cyclic,
+        _ => Distribution::Block,
+    };
+    let rank = im.current_instance().id.0;
+    let mut ranks: Vec<u32> = im.instances()?.iter().map(|i| i.id.0).collect();
+    ranks.sort_unstable();
+    let me_pos = ranks
+        .iter()
+        .position(|&r| r == rank)
+        .ok_or_else(|| err(format!("rank {rank} not in the world")))?;
+    let cm = registry.builder().compute(compute).build()?.compute()?;
+    let sys = TaskSystem::new(cm, 2, false);
+    let probe_im = Arc::clone(im);
+    let report = stencil::run_distributed(
+        Arc::clone(cmm),
         &sys,
-        rank,
-        world,
-        n,
+        me_pos,
+        &ranks,
+        dist,
+        len,
         iters,
-        (1, 2, 2),
-        jacobi::CommWaitMode::Blocking,
+        radius,
+        Some(Arc::new(move || probe_im.departed_instances())),
     )?;
     sys.shutdown()?;
-    println!(
-        "rank {rank}: jacobi n={n} iters={iters} {:.3}s {:.3} GFlop/s checksum={:.6}",
-        run.elapsed_s, run.gflops, run.checksum
-    );
+    if let Some(r) = report {
+        println!(
+            "stencil world={} len={} iters={} radius={} dist={dist:?} residual={:.3e} verified={}",
+            ranks.len(),
+            r.len,
+            r.iters,
+            r.radius,
+            r.residual,
+            if r.verified { "ok" } else { "FAIL" }
+        );
+    }
     im.barrier()?;
     Ok(())
 }
@@ -694,7 +796,8 @@ fn worker_serve(
             }
             println!(
                 "serve world={} workers={} requests={} ok p50={:.3}ms p99={:.3}ms \
-                 goodput={:.0}req/s rejected={} shed={} scale=+{}/-{} elapsed={:.3}s",
+                 goodput={:.0}req/s rejected={} shed={} scale=+{}/-{} \
+                 mesh_requests={} mesh_responses={} mesh_errors={} elapsed={:.3}s",
                 r.world,
                 r.workers,
                 r.requests,
@@ -705,6 +808,9 @@ fn worker_serve(
                 r.shed,
                 r.scale_out_events,
                 r.scale_in_events,
+                r.mesh_requests,
+                r.mesh_responses,
+                r.mesh_malformed + r.mesh_exec_errors,
                 r.elapsed_s
             );
             Ok(())

@@ -100,6 +100,13 @@ pub mod classes {
     /// `Inner.done_mx` — quiescence wait in `run`/`wait_idle`.
     pub static TASKING_DONE: LockClass = LockClass { name: "Inner.done_mx", rank: 195 };
 
+    // ---- HdArray halo links (200–239) ----
+    /// `HaloLink.tx` — per-link outbound SPSC producer, shared by the
+    /// send tasks of successive sweeps; ranks above the tasking band
+    /// because worker task bodies take it while the scheduler's locks
+    /// are long released.
+    pub static HDARRAY_HALO_TX: LockClass = LockClass { name: "HaloLink.tx", rank: 210 };
+
     // ---- Deployment supervision (240s) ----
     /// `Deployment.lost` — ranks declared dead.
     pub static DEPLOYMENT_LOST: LockClass = LockClass { name: "Deployment.lost", rank: 240 };

@@ -244,6 +244,71 @@ fn dropped_frames_on_doomed_rank_then_kill_mid_put_stream() {
     hub.join().unwrap().unwrap();
 }
 
+/// Kill a rank mid-allreduce (its first data put dies in the hub, so
+/// its tree contribution never lands): both survivors must come back
+/// with a typed `PeerLost` — the never-hang contract of the collectives
+/// frontend — via the liveness probe wired to the departure broadcast.
+#[test]
+fn mid_allreduce_kill_is_a_typed_peer_lost_for_survivors() {
+    use hicr::backends::mpisim;
+    use hicr::frontends::collectives::{Collectives, ReduceOp};
+    use hicr::CommunicationManager;
+    use std::sync::Arc;
+
+    let sock = temp_sock("allreduce-kill");
+    let hub = Hub::bind(&sock, 3, None)
+        .unwrap()
+        .with_chaos(ChaosConfig {
+            seed: 6,
+            kills: vec![KillRule {
+                rank: 2,
+                point: KillPoint::Put,
+                nth: 1,
+            }],
+            ..Default::default()
+        })
+        .spawn();
+    // Collective bring-up happens over exchange frames (no puts), so the
+    // kill strikes deterministically inside the allreduce itself.
+    fn build(ep: Endpoint, pos: usize) -> Collectives {
+        let cmm: Arc<dyn CommunicationManager> = Arc::new(mpisim::communication_manager(ep));
+        Collectives::build(cmm, 0x77, pos, &[0, 1, 2], 256, |len| {
+            LocalMemorySlot::alloc(MemorySpaceId(1), len)
+        })
+        .unwrap()
+    }
+    let survivor = |rank: u32| {
+        let sock = sock.clone();
+        std::thread::spawn(move || {
+            let ep = Endpoint::connect(&sock, rank).unwrap();
+            let probe_ep = ep.clone();
+            let mut coll = build(ep.clone(), rank as usize);
+            coll.set_deadline(Duration::from_secs(20));
+            coll.set_liveness(Box::new(move || Ok(probe_ep.departed_ranks())));
+            let err = coll
+                .allreduce(&[rank as f64], ReduceOp::Sum)
+                .expect_err("a dead child cannot yield a full reduction");
+            assert!(
+                matches!(err, hicr::HicrError::PeerLost(_)),
+                "survivor {rank} got {err:?}, wanted PeerLost"
+            );
+            ep.bye();
+        })
+    };
+    let s0 = survivor(0);
+    let s1 = survivor(1);
+    // The victim participates in bring-up, then dies on its first push.
+    std::thread::spawn(move || {
+        let ep = Endpoint::connect(&sock, 2).unwrap();
+        let mut coll = build(ep, 2);
+        coll.set_deadline(Duration::from_secs(5));
+        let _ = coll.allreduce(&[2.0], ReduceOp::Sum);
+    });
+    s0.join().unwrap();
+    s1.join().unwrap();
+    hub.join().unwrap().unwrap();
+}
+
 /// The tentpole acceptance scenario end to end over real OS processes:
 /// `hicr launch --np 4 -- taskfarm ... --chaos kill-one` crashes the
 /// highest-rank worker after its first successful steal — mid-drain,
